@@ -1,0 +1,66 @@
+//! Real-engine microbenchmarks (`cargo bench --bench engine_hotpath`):
+//! decode-step latency per architecture on the tiny model, collective
+//! throughput, and the host-side overhead split — the measured counterpart
+//! of the perfmodel numbers and the input to the §Perf optimization log.
+
+use std::rc::Rc;
+
+use ladder_infer::comm::{CollectiveEngine, Fabric, Interconnect};
+use ladder_infer::engine::TpEngine;
+use ladder_infer::model::{Arch, HostTensor, WeightStore};
+use ladder_infer::runtime::ExecCache;
+use ladder_infer::util::bench::{time_it, Table};
+
+fn main() -> anyhow::Result<()> {
+    let exec = Rc::new(ExecCache::open("tiny")?);
+    let cfg = exec.artifacts().config.clone();
+    let flat = exec.artifacts().read_f32("testvec_weights.f32")?;
+    let weights = WeightStore::from_flat(&flat, exec.artifacts().packing()?, cfg.layers)?;
+
+    // -- collective microbench ------------------------------------------------
+    println!("== collective engine ==");
+    for tp in [2usize, 4, 8] {
+        let ce = CollectiveEngine::new(tp, Interconnect::new(Fabric::Local));
+        let parts: Vec<HostTensor> = (0..tp)
+            .map(|_| HostTensor::new(vec![4, 64, 256], vec![1.0; 4 * 64 * 256]))
+            .collect();
+        time_it(&format!("allreduce 256KiB x tp{tp}"), 3, 20, || {
+            let p = parts.clone();
+            let _ = ce.allreduce(p).unwrap().wait();
+        });
+    }
+
+    // -- decode-step latency per architecture ---------------------------------
+    println!("\n== decode step (tiny model, tp=2, real modules) ==");
+    let mut table = Table::new("decode-step latency", &["arch", "mean ms", "p50 ms"]);
+    for arch in [
+        Arch::Standard,
+        Arch::Parallel,
+        Arch::Ladder,
+        Arch::Desync(2),
+        Arch::Desync(4),
+        Arch::Upperbound,
+    ] {
+        let mut engine = TpEngine::new(
+            exec.clone(),
+            &weights,
+            2,
+            arch,
+            2,
+            Interconnect::new(Fabric::Pcie),
+        )?;
+        // prime: prefill 16 tokens
+        let tokens = vec![1i32; 2 * 16];
+        engine.prefill(&tokens, 16, &[16, 16])?;
+        let s = time_it(&format!("decode step [{}]", arch.name()), 3, 15, || {
+            let _ = engine.decode(&[1, 2]).unwrap();
+        });
+        table.row(&[
+            arch.name(),
+            format!("{:.2}", s.mean() * 1e3),
+            format!("{:.2}", s.p50() * 1e3),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

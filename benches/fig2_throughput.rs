@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig2_throughput` — regenerates the paper's Figure 2 throughput grid
+//! from the performance model (see DESIGN.md experiment index).
+
+use ladder_infer::perfmodel::tables;
+use ladder_infer::util::bench::time_it;
+
+fn main() {
+    for t in tables::fig2() { t.print(); }
+    time_it("regen", 1, 3, || { let _ = tables::fig2(); });
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig3_crossnode` — regenerates the paper's Figure 3 405B cross-node
+//! from the performance model (see DESIGN.md experiment index).
+
+use ladder_infer::perfmodel::tables;
+use ladder_infer::util::bench::time_it;
+
+fn main() {
+    tables::fig3().print();
+    time_it("regen", 1, 3, || { let _ = tables::fig3(); });
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig4_pareto` — regenerates the paper's Figure 4 pareto frontier
+//! from the performance model (see DESIGN.md experiment index).
+
+use ladder_infer::perfmodel::tables;
+use ladder_infer::util::bench::time_it;
+
+fn main() {
+    tables::fig4().print();
+    println!("pareto counts: {:?}", tables::fig4_pareto_counts());
+    time_it("regen", 1, 3, || { let _ = tables::fig4(); });
+}

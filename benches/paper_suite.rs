@@ -1,0 +1,55 @@
+//! `cargo bench --bench paper_suite` — regenerates every paper table/figure
+//! via the performance model and times the generators (criterion is
+//! unavailable offline; this is a `harness = false` custom bench).
+//!
+//! Individual tables: `cargo bench --bench paper_suite -- table1 fig4 ...`
+
+use ladder_infer::perfmodel::tables;
+use ladder_infer::util::bench::time_it;
+
+fn main() {
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let want = |n: &str| filter.is_empty() || filter.iter().any(|f| f == n);
+
+    println!("paper reproduction suite (perfmodel)\n");
+    if want("table1") {
+        let t = tables::table1();
+        t.print();
+        time_it("regen: table1 (size sweep)", 1, 3, || {
+            let _ = tables::table1();
+        });
+    }
+    if want("table2") {
+        let t = tables::table2();
+        t.print();
+        time_it("regen: table2 (70B breakdown)", 1, 3, || {
+            let _ = tables::table2();
+        });
+    }
+    if want("fig2") {
+        for t in tables::fig2() {
+            t.print();
+        }
+        time_it("regen: fig2 (throughput grid)", 1, 3, || {
+            let _ = tables::fig2();
+        });
+    }
+    if want("fig3") {
+        tables::fig3().print();
+        time_it("regen: fig3 (405B cross-node)", 1, 3, || {
+            let _ = tables::fig3();
+        });
+    }
+    if want("fig4") {
+        tables::fig4().print();
+        time_it("regen: fig4 (pareto sweep)", 1, 3, || {
+            let _ = tables::fig4();
+        });
+    }
+    if want("table6") {
+        tables::table6().print();
+        time_it("regen: table6 (desync breakdown)", 1, 3, || {
+            let _ = tables::table6();
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench table1_speedup` — regenerates the paper's Table 1 size sweep
+//! from the performance model (see DESIGN.md experiment index).
+
+use ladder_infer::perfmodel::tables;
+use ladder_infer::util::bench::time_it;
+
+fn main() {
+    tables::table1().print();
+    time_it("regen", 1, 3, || { let _ = tables::table1(); });
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench table2_breakdown` — regenerates the paper's Table 2 70B breakdown
+//! from the performance model (see DESIGN.md experiment index).
+
+use ladder_infer::perfmodel::tables;
+use ladder_infer::util::bench::time_it;
+
+fn main() {
+    tables::table2().print();
+    time_it("regen", 1, 3, || { let _ = tables::table2(); });
+}

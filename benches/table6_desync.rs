@@ -1,0 +1,10 @@
+//! `cargo bench --bench table6_desync` — regenerates the paper's Table 6 desync breakdown
+//! from the performance model (see DESIGN.md experiment index).
+
+use ladder_infer::perfmodel::tables;
+use ladder_infer::util::bench::time_it;
+
+fn main() {
+    tables::table6().print();
+    time_it("regen", 1, 3, || { let _ = tables::table6(); });
+}

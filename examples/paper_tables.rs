@@ -1,0 +1,50 @@
+//! Regenerate every table and figure of the paper's evaluation section from
+//! the performance model (DESIGN.md maps each to its generator).
+//!
+//!   cargo run --release --example paper_tables            # all tables
+//!   cargo run --release --example paper_tables -- --trace # + Fig 6 traces
+
+use ladder_infer::perfmodel::tables;
+use ladder_infer::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("paper_tables", "regenerate the paper's tables/figures")
+        .flag("trace", "also dump Figure 6 chrome traces to /tmp")
+        .opt("only", Some(""), "comma list: table1,table2,fig2,fig3,fig4,table6")
+        .parse_env()?;
+    let only = args.get("only")?;
+    let want = |name: &str| only.is_empty() || only.split(',').any(|s| s == name);
+
+    if want("table1") {
+        tables::table1().print();
+    }
+    if want("table2") {
+        tables::table2().print();
+    }
+    if want("fig2") {
+        for t in tables::fig2() {
+            t.print();
+        }
+    }
+    if want("fig3") {
+        tables::fig3().print();
+    }
+    if want("fig4") {
+        tables::fig4().print();
+        println!("\npareto-point counts per architecture: {:?}", tables::fig4_pareto_counts());
+    }
+    if want("table6") {
+        tables::table6().print();
+    }
+    if want("training") {
+        tables::training_speedup().print();
+    }
+
+    if args.has_flag("trace") {
+        let (std_trace, ladder_trace) = tables::fig6_traces();
+        std::fs::write("/tmp/fig6_standard_trace.json", std_trace.to_string())?;
+        std::fs::write("/tmp/fig6_ladder_trace.json", ladder_trace.to_string())?;
+        println!("\nFig 6 chrome traces written to /tmp/fig6_{{standard,ladder}}_trace.json");
+    }
+    Ok(())
+}

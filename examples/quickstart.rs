@@ -1,0 +1,67 @@
+//! Quickstart: load the tiny artifact config, build a TP=2 Ladder engine,
+//! generate a few tokens, and print throughput + comm-overlap stats.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::rc::Rc;
+
+use ladder_infer::comm::Interconnect;
+use ladder_infer::engine::{generate, Sampler, TpEngine};
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::runtime::ExecCache;
+use ladder_infer::tokenizer::Tokenizer;
+use ladder_infer::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("quickstart", "generate tokens with the tiny model")
+        .opt("arch", Some("ladder"), "standard|ladder|parallel|desync2|desync4|upperbound")
+        .opt("tp", Some("2"), "tensor-parallel degree")
+        .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local")
+        .opt("gen", Some("24"), "tokens to generate")
+        .parse_env()?;
+
+    let arch = Arch::parse(&args.get("arch")?)?;
+    let exec = Rc::new(ExecCache::open("tiny")?);
+    let cfg = exec.artifacts().config.clone();
+    println!(
+        "model '{}': {} layers, hidden {}, vocab {} ({} params)",
+        cfg.name, cfg.layers, cfg.hidden, cfg.vocab, cfg.params
+    );
+
+    // The tiny config ships seeded test weights; it is an untrained model,
+    // so the text is gibberish — the point is the full pipeline.
+    let flat = exec.artifacts().read_f32("testvec_weights.f32")?;
+    let weights = WeightStore::from_flat(&flat, exec.artifacts().packing()?, cfg.layers)?;
+
+    let tp = args.get_usize("tp")?;
+    let fabric = Interconnect::parse(&args.get("fabric")?)?;
+    let mut engine = TpEngine::new(exec.clone(), &weights, tp, arch, 2, fabric)?;
+    println!("engine: arch={} tp={tp} fabric={}", arch.name(), engine.comm.interconnect.name());
+
+    let tok = Tokenizer::bytes_only(cfg.vocab);
+    let prompts: Vec<Vec<i32>> = vec![
+        tok.encode("ladder residual "),
+        tok.encode("tensor parallel "),
+    ];
+    let gen_len = args.get_usize("gen")?;
+    let report = generate::generate(&mut engine, &prompts, gen_len, &Sampler::Greedy)?;
+
+    for (i, toks) in report.tokens.iter().enumerate() {
+        println!("  sample {i}: {:?}", tok.decode(toks));
+    }
+    println!(
+        "prefill {:.1}ms | decode {:.1}ms ({} steps) | {:.1} tok/s",
+        report.prefill_time.as_secs_f64() * 1e3,
+        report.decode_time.as_secs_f64() * 1e3,
+        report.decode_steps,
+        report.tokens_per_sec(),
+    );
+    println!(
+        "comm: {} allreduces, {:.2}ms modeled, {:.2}ms exposed ({:.0}% hidden)",
+        report.comm.allreduce_count,
+        report.comm.modeled_total.as_secs_f64() * 1e3,
+        report.comm.exposed_total.as_secs_f64() * 1e3,
+        report.comm.hidden_fraction() * 100.0,
+    );
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! End-to-end serving driver (the mandated full-system workload): boot the
+//! continuous-batching server on the `small` model, replay a Poisson
+//! request trace through every architecture, and report throughput /
+//! latency / comm-overlap — the real-engine counterpart of the paper's
+//! benchmarks.
+//!
+//!   cargo run --release --example serve_e2e -- --requests 12 --tp 2
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use ladder_infer::comm::Interconnect;
+use ladder_infer::engine::TpEngine;
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::runtime::ExecCache;
+use ladder_infer::server::{Batcher, BatcherConfig, Request};
+use ladder_infer::util::args::Args;
+use ladder_infer::util::bench::Table;
+use ladder_infer::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("serve_e2e", "end-to-end serving comparison across architectures")
+        .opt("model", Some("small"), "artifact config")
+        .opt("tp", Some("2"), "tensor-parallel degree")
+        .opt("batch", Some("4"), "decode batch slots")
+        .opt("requests", Some("12"), "requests in the trace")
+        .opt("gen", Some("24"), "tokens per request")
+        .opt("fabric", Some("slow"), "nvlink|pcie|infiniband|local|slow (slow: ms-scale latency, proportionate to CPU-testbed module times)")
+        .opt("arches", Some("standard,parallel,ladder,desync2,desync4,upperbound"), "comma list")
+        .parse_env()?;
+
+    let exec = Rc::new(ExecCache::open(&args.get("model")?)?);
+    let cfg = exec.artifacts().config.clone();
+    let weights = WeightStore::random(&cfg, 42);
+    let tp = args.get_usize("tp")?;
+    let batch = args.get_usize("batch")?;
+    let n_requests = args.get_usize("requests")?;
+    let gen = args.get_usize("gen")?;
+    let fabric = Interconnect::parse(&args.get("fabric")?)?;
+
+    println!(
+        "serve_e2e: model={} ({} params) tp={tp} batch={batch} fabric={} requests={n_requests} gen={gen}",
+        cfg.name, cfg.params, fabric.name(),
+    );
+
+    // shared request trace: Poisson arrivals are simulated by submitting in
+    // waves (the batcher is synchronous, so think "burst arrivals")
+    let mut rng = Rng::new(7);
+    let prompts: Vec<Vec<i32>> = (0..n_requests)
+        .map(|_| {
+            let len = rng.range(8, 30);
+            (0..len).map(|_| rng.below(cfg.vocab) as i32).collect()
+        })
+        .collect();
+
+    let mut table = Table::new(
+        "serve_e2e: real-engine serving comparison",
+        &["arch", "wall (s)", "tok/s", "ttft p50 (ms)", "e2e p99 (ms)", "comm hidden %"],
+    );
+    let mut baseline_tps = None;
+    for arch_name in args.get("arches")?.split(',') {
+        let arch = Arch::parse(arch_name)?;
+        let engine = TpEngine::new(exec.clone(), &weights, tp, arch, batch, fabric)?;
+        let mut batcher = Batcher::new(engine, BatcherConfig::default());
+        for (i, p) in prompts.iter().enumerate() {
+            batcher.submit(Request::new(i as u64, p.clone(), gen));
+        }
+        let t0 = Instant::now();
+        let results = batcher.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(results.len(), n_requests);
+        let report = batcher.metrics.report(wall);
+        let tps = report.get("throughput_tok_per_s")?.as_f64()?;
+        let comm = batcher.engine.comm.stats();
+        table.row(&[
+            arch.name(),
+            format!("{wall:.2}"),
+            format!(
+                "{tps:.1}{}",
+                baseline_tps
+                    .map(|b: f64| format!(" ({:+.0}%)", (tps / b - 1.0) * 100.0))
+                    .unwrap_or_default()
+            ),
+            format!("{:.1}", report.get("ttft_p50_ms")?.as_f64()?),
+            format!("{:.1}", report.get("e2e_p99_ms")?.as_f64()?),
+            format!("{:.0}", comm.hidden_fraction() * 100.0),
+        ]);
+        if arch == Arch::Standard {
+            baseline_tps = Some(tps);
+        }
+    }
+    table.print();
+    println!("\n(ladder should beat standard; gaps grow as the fabric slows — try --fabric infiniband)");
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Full-loop e2e: **train in Rust, then serve the trained weights through
+//! the TP engine** — proving the flat-vector packing, the sharding rules and
+//! the serving modules all compose (python only ever ran at `make
+//! artifacts` time).
+//!
+//! 1. train the `parity` model (ladder arch) on the synthetic corpus;
+//! 2. slice the trained flat vector into per-rank shards;
+//! 3. serve greedy generation on the TP=2 Ladder engine;
+//! 4. verify the model has learned: the engine's continuations score far
+//!    better under the corpus' Markov table than random tokens would.
+//!
+//!   cargo run --release --example train_then_serve -- --steps 120
+
+use std::rc::Rc;
+
+use ladder_infer::comm::Interconnect;
+use ladder_infer::engine::{generate, Sampler, TpEngine};
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::runtime::ExecCache;
+use ladder_infer::trainer::{Corpus, Trainer};
+use ladder_infer::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("train_then_serve", "train in rust, serve the result")
+        .opt("steps", Some("120"), "training steps")
+        .opt("lr", Some("0.0015"), "peak learning rate")
+        .opt("arch", Some("ladder"), "architecture to train AND serve")
+        .parse_env()?;
+    let arch_name = args.get("arch")?;
+    let steps = args.get_usize("steps")?;
+
+    let exec = Rc::new(ExecCache::open("parity")?);
+    let cfg = exec.artifacts().config.clone();
+
+    // -- 1. train ---------------------------------------------------------
+    println!("training '{arch_name}' ({} params) for {steps} steps...", cfg.params);
+    let mut trainer = Trainer::new(&exec)?;
+    let mut corpus = Corpus::new(cfg.vocab, 4, 11);
+    let run = trainer.run(&arch_name, steps, args.get_f64("lr")? as f32, &mut corpus, 77, 4)?;
+    println!(
+        "  loss {:.3} -> {:.3} | held-out ppl {:.1} (uniform would be {})",
+        run.losses.first().unwrap(),
+        run.losses.last().unwrap(),
+        run.final_eval.perplexity,
+        cfg.vocab
+    );
+
+    // -- 2. shard the trained flat vector --------------------------------
+    let weights = WeightStore::from_flat(&trainer.w, exec.artifacts().packing()?, cfg.layers)?;
+
+    // -- 3. serve ---------------------------------------------------------
+    let arch = Arch::parse(&arch_name)?;
+    let mut engine = TpEngine::new(
+        exec.clone(),
+        &weights,
+        2,
+        arch,
+        2,
+        Interconnect::parse("pcie")?,
+    )?;
+    let mut prompt_src = Corpus::new(cfg.vocab, 4, 500);
+    let prompts = vec![prompt_src.sequence(12), prompt_src.sequence(12)];
+    let report = generate::generate(&mut engine, &prompts, 16, &Sampler::Greedy)?;
+    println!(
+        "served {} tokens at {:.1} tok/s (comm hidden {:.0}%)",
+        report.tokens.len() * report.tokens[0].len(),
+        report.tokens_per_sec(),
+        report.comm.hidden_fraction() * 100.0
+    );
+
+    // -- 4. the continuations must follow the corpus' Markov structure ----
+    // score: fraction of generated tokens that are among the branching
+    // candidates of their context (random tokens would land ~branching/V).
+    let scorer = Corpus::new(cfg.vocab, 4, 0);
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for (p, gen) in prompts.iter().zip(&report.tokens) {
+        let mut seq = p.clone();
+        seq.extend(gen);
+        for w in seq.windows(2).skip(p.len().saturating_sub(1)) {
+            if scorer.successors(w[0]).contains(&w[1]) {
+                hits += 1;
+            }
+            total += 1;
+        }
+    }
+    let frac = hits as f64 / total as f64;
+    let chance = 4.0 / cfg.vocab as f64;
+    println!(
+        "generated tokens following the corpus structure: {:.0}% (chance {:.1}%)",
+        frac * 100.0,
+        chance * 100.0
+    );
+    // Only gate on structure-following once training has actually converged
+    // (held-out ppl well below uniform); a short demo run just reports.
+    if run.final_eval.perplexity < cfg.vocab as f64 / 4.0 {
+        assert!(
+            frac > 10.0 * chance,
+            "converged model should follow the corpus structure ({frac} vs {chance})"
+        );
+    } else {
+        println!(
+            "(ppl {:.0} still far from converged — rerun with --steps 400+ to see \
+             structure-following generation)",
+            run.final_eval.perplexity
+        );
+    }
+    println!("train -> shard -> serve loop OK");
+    Ok(())
+}

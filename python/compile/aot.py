@@ -1,0 +1,318 @@
+"""AOT exporter: lower every L2 module to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly.
+
+Layout:
+
+    artifacts/<config>/manifest.json
+    artifacts/<config>/<module>.hlo.txt
+
+Module naming: ``<kind>__tp<T>__b<B>__s<S>`` (serving) and
+``train_<arch>`` / ``eval_<arch>`` (parity training). ``make artifacts`` is
+incremental: a content stamp of the compile/ sources + export parameters
+skips re-export when nothing changed.
+
+Run from python/:  python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import archs, model, train
+from .model import CONFIGS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _spec_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+class Exporter:
+    def __init__(self, out_dir: str, cfg: ModelConfig):
+        self.out_dir = os.path.join(out_dir, cfg.name)
+        os.makedirs(self.out_dir, exist_ok=True)
+        self.cfg = cfg
+        self.modules: dict[str, dict] = {}
+
+    def export(self, name: str, fn, specs: list, arg_names: list[str]):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        out_shape = jax.eval_shape(fn, *specs)
+        outs = jax.tree_util.tree_leaves(out_shape)
+        self.modules[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [dict(_spec_json(s), name=n) for n, s in zip(arg_names, specs)],
+            "outputs": [_spec_json(s) for s in outs],
+        }
+        print(f"  [{self.cfg.name}] {name}: {len(text)//1024}KiB")
+
+    def write_manifest(self, extra: dict):
+        cfg = self.cfg
+        table = train.packing_table(cfg)
+        offsets = []
+        off = 0
+        for name, shape in table:
+            n = 1
+            for s in shape:
+                n *= s
+            offsets.append({"name": name, "shape": list(shape), "offset": off})
+            off += n
+        manifest = {
+            "config": {
+                "name": cfg.name, "vocab": cfg.vocab, "hidden": cfg.hidden,
+                "layers": cfg.layers, "heads": cfg.heads, "kv_heads": cfg.kv_heads,
+                "head_dim": cfg.head_dim, "ffn": cfg.ffn, "max_seq": cfg.max_seq,
+                "rope_theta": cfg.rope_theta, "norm_eps": cfg.norm_eps,
+                "kernels": cfg.kernels, "params": cfg.params(),
+            },
+            "packing": {"total": off, "tensors": offsets},
+            "modules": self.modules,
+            **extra,
+        }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as fh:
+            json.dump(manifest, fh, indent=1)
+
+
+def export_serving(ex: Exporter, tps: list[int], batches: list[int], buckets: list[int]):
+    """Per-rank serving modules, split at every AllReduce edge."""
+    cfg = ex.cfg
+    h, d, m_cache, v = cfg.hidden, cfg.head_dim, cfg.max_seq, cfg.vocab
+
+    for b in batches:
+        for s in buckets:
+            ex.export(
+                f"embed__b{b}__s{s}", model.make_embed(cfg),
+                [i32(b, s), f32(v, h)], ["tokens", "emb"],
+            )
+        ex.export(
+            f"embed__b{b}__s1", model.make_embed(cfg),
+            [i32(b, 1), f32(v, h)], ["tokens", "emb"],
+        )
+
+    for tp in tps:
+        sc = cfg.shard(tp)
+        qdl, kvl, fl, vl = sc.q_dim_l, sc.kv_heads_l, sc.ffn_l, sc.vocab_l
+        kvdl = sc.kv_dim_l
+        for b in batches:
+            cache = f32(b, kvl, m_cache, d)
+            # prefill modules per bucket
+            for s in buckets:
+                ex.export(
+                    f"attn_prefill__tp{tp}__b{b}__s{s}", model.make_attn_prefill(sc),
+                    [f32(b, s, h), f32(h), f32(h, qdl), f32(h, kvdl), f32(h, kvdl),
+                     f32(qdl, h), cache, cache],
+                    ["x", "norm_w", "wq", "wk", "wv", "wo", "k_cache", "v_cache"],
+                )
+                ex.export(
+                    f"mlp__tp{tp}__b{b}__s{s}", model.make_mlp(sc),
+                    [f32(b, s, h), f32(h), f32(h, fl), f32(h, fl), f32(fl, h)],
+                    ["x", "norm_w", "w_gate", "w_up", "w_down"],
+                )
+                ex.export(
+                    f"fused_prefill__tp{tp}__b{b}__s{s}", model.make_fused_prefill(sc),
+                    [f32(b, s, h), f32(h), f32(h, qdl), f32(h, kvdl), f32(h, kvdl),
+                     f32(qdl, h), f32(h, fl), f32(h, fl), f32(fl, h), cache, cache],
+                    ["x", "norm_w", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                     "k_cache", "v_cache"],
+                )
+            # decode modules (S=1)
+            ex.export(
+                f"attn_decode__tp{tp}__b{b}", model.make_attn_decode(sc),
+                [f32(b, 1, h), f32(h), f32(h, qdl), f32(h, kvdl), f32(h, kvdl),
+                 f32(qdl, h), cache, cache, i32(b)],
+                ["x", "norm_w", "wq", "wk", "wv", "wo", "k_cache", "v_cache", "lens"],
+            )
+            ex.export(
+                f"mlp__tp{tp}__b{b}__s1", model.make_mlp(sc),
+                [f32(b, 1, h), f32(h), f32(h, fl), f32(h, fl), f32(fl, h)],
+                ["x", "norm_w", "w_gate", "w_up", "w_down"],
+            )
+            ex.export(
+                f"fused_decode__tp{tp}__b{b}", model.make_fused_decode(sc),
+                [f32(b, 1, h), f32(h), f32(h, qdl), f32(h, kvdl), f32(h, kvdl),
+                 f32(qdl, h), f32(h, fl), f32(h, fl), f32(fl, h), cache, cache, i32(b)],
+                ["x", "norm_w", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                 "k_cache", "v_cache", "lens"],
+            )
+            ex.export(
+                f"lm_head__tp{tp}__b{b}", model.make_lm_head(sc),
+                [f32(b, h), f32(h), f32(h, vl)],
+                ["x", "norm_w", "w_lm"],
+            )
+    return {"tps": tps, "batches": batches, "buckets": buckets}
+
+
+def export_training(ex: Exporter, arches: list[str], train_b: int, train_s: int,
+                    eval_b: int, eval_s: int):
+    """Parity-experiment graphs: AdamW train step + eval metrics per arch."""
+    cfg = ex.cfg
+    n = train.packed_size(cfg)
+    for arch in arches:
+        ex.export(
+            f"train_{arch}", train.make_train_step(cfg, arch),
+            [f32(n), f32(n), f32(n), i32(), f32(), i32(train_b, train_s)],
+            ["w", "m", "v", "step", "lr", "tokens"],
+        )
+        ex.export(
+            f"eval_{arch}", train.make_eval_metrics(cfg, arch),
+            [f32(n), i32(eval_b, eval_s)],
+            ["w", "tokens"],
+        )
+    # seeded initial weights, shipped flat so Rust starts from the same point
+    w0 = train.pack(cfg, archs.init_weights(cfg, seed=0))
+    import numpy as np
+
+    np.asarray(w0, dtype=np.float32).tofile(os.path.join(ex.out_dir, "init_weights.f32"))
+    return {
+        "training": {
+            "arches": arches, "train_batch": train_b, "train_seq": train_s,
+            "eval_batch": eval_b, "eval_seq": eval_s, "train_tp": train.TRAIN_TP,
+            "init_weights": "init_weights.f32",
+        }
+    }
+
+
+def export_testvectors(ex: Exporter, tp: int, batch: int, prompt: int, steps: int):
+    """Golden vectors for the Rust engine integration tests.
+
+    For each architecture: teacher-forced logits for the prefill and `steps`
+    decode steps, computed by the python SimEngine (the executable L3 spec,
+    ref kernels) on seeded weights/tokens. Rust runs the exported HLO modules
+    with its own scheduler and must match to kernel tolerance.
+    """
+    import numpy as np
+
+    from . import engine_sim, train
+    from .archs import ARCH_NAMES, init_weights
+
+    cfg = ex.cfg
+    weights = init_weights(cfg, seed=0)
+    ref_cfg = cfg if cfg.kernels == "ref" else model.ModelConfig(**{**cfg.__dict__, "kernels": "ref"})
+    np.asarray(train.pack(cfg, weights), dtype=np.float32).tofile(
+        os.path.join(ex.out_dir, "testvec_weights.f32")
+    )
+    rng = np.random.default_rng(99)
+    seq = rng.integers(0, cfg.vocab, (batch, prompt + steps)).astype(np.int32)
+    seq.tofile(os.path.join(ex.out_dir, "testvec_tokens.i32"))
+
+    arches = [a for a in ARCH_NAMES if a != "upperbound"]
+    for arch in arches:
+        eng = engine_sim.SimEngine(ref_cfg, weights, tp=tp, arch=arch, batch=batch)
+        outs = [np.asarray(eng.prefill(jnp.asarray(seq[:, :prompt])))]
+        for t in range(steps):
+            lens = jnp.full((batch,), prompt + t, jnp.int32)
+            outs.append(np.asarray(eng.decode(jnp.asarray(seq[:, prompt + t : prompt + t + 1]), lens)))
+        np.stack(outs).astype(np.float32).tofile(
+            os.path.join(ex.out_dir, f"testvec_logits_{arch}.f32")
+        )
+        print(f"  [{cfg.name}] testvec {arch}: {len(outs)} step logits")
+    return {
+        "testvec": {
+            "tp": tp, "batch": batch, "prompt": prompt, "steps": steps,
+            "weights": "testvec_weights.f32", "tokens": "testvec_tokens.i32",
+            "arches": arches,
+        }
+    }
+
+
+def export_tiny(ex: Exporter):
+    extra = export_serving(ex, tps=[1, 2], batches=[1, 2], buckets=[16, 32])
+    extra.update(export_testvectors(ex, tp=2, batch=2, prompt=16, steps=4))
+    return extra
+
+
+EXPORTS = {
+    "tiny": export_tiny,
+    "small": lambda ex: export_serving(ex, tps=[1, 2, 4], batches=[1, 4], buckets=[32, 128]),
+    "parity": lambda ex: export_parity(ex),
+}
+
+
+def export_parity(ex: Exporter):
+    """Training graphs (incl. the desync-placement ablation) + serving
+    modules, so a Rust-trained parity model can be served by the TP engine
+    (examples/train_then_serve.rs)."""
+    extra = export_serving(ex, tps=[1, 2], batches=[1, 2], buckets=[16, 32])
+    extra.update(
+        export_training(
+            ex,
+            arches=["standard", "ladder", "parallel", "desync2", "desync4", "hybrid", "desync2m"],
+            train_b=8, train_s=64, eval_b=16, eval_s=64,
+        )
+    )
+    return extra
+
+
+def _stamp(names: list[str]) -> str:
+    h = hashlib.sha256()
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    for fname in sorted(os.listdir(src_dir)) + sorted(os.listdir(os.path.join(src_dir, "kernels"))):
+        path = os.path.join(src_dir, fname)
+        if os.path.isfile(path) and fname.endswith(".py"):
+            h.update(open(path, "rb").read())
+        kpath = os.path.join(src_dir, "kernels", fname)
+        if os.path.isfile(kpath) and fname.endswith(".py"):
+            h.update(open(kpath, "rb").read())
+    h.update(",".join(names).encode())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,parity")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    names = [n for n in args.configs.split(",") if n]
+    os.makedirs(args.out, exist_ok=True)
+    stamp_path = os.path.join(args.out, ".stamp")
+    stamp = _stamp(names)
+    if not args.force and os.path.exists(stamp_path) and open(stamp_path).read() == stamp:
+        print("artifacts up to date (stamp match); skipping export")
+        return
+
+    for name in names:
+        cfg = CONFIGS[name]
+        print(f"exporting config '{name}' ({cfg.params():,} params, kernels={cfg.kernels})")
+        ex = Exporter(args.out, cfg)
+        extra = EXPORTS[name](ex)
+        ex.write_manifest(extra or {})
+
+    with open(stamp_path, "w") as fh:
+        fh.write(stamp)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

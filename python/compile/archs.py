@@ -1,0 +1,264 @@
+"""Monolithic per-architecture forward passes (the semantic oracles).
+
+Each function computes the *full* model forward for one architecture with TP
+semantics simulated in-graph by explicit weight sharding: partial outputs per
+shard, an explicit sum where the architecture performs an AllReduce, and
+per-shard residual streams where it does not (Desync). These graphs serve as
+
+1. the ground truth the Rust TP engine is tested against (same weights, same
+   tokens => same logits), and
+2. the bodies of the training / eval graphs (train.py) for the paper's
+   quality-parity experiments (Tables 3, 4, 5).
+
+Architectures (paper §3.3.1, §5):
+
+- ``standard``   x_i   = AR(h_i(x_{i-1})) + x_{i-1}
+- ``ladder``     x_i   = AR(h_i(x_{i-2})) + x_{i-1}            (paper eq. 2)
+- ``parallel``   x_i   = AR(attn(n(x)) + mlp(n(x))) + x        (PaLM fusion)
+- ``desync{n}``  keep every n-th AllReduce; dropped ones add the *local*
+                 partial to a per-device residual. A retained AllReduce
+                 carries ``partial_t + r_t / T`` so the streams re-synchronize
+                 exactly at that point (our reading of paper §5 "the residual
+                 stream ... is re-synchronized at the next AllReduce"; one
+                 collective of unchanged message size). Dropping attention's
+                 AR (keeping MLP's) follows the paper's reported choice.
+- ``hybrid``     lower half standard, upper half ladder (paper §4.2).
+- ``upperbound`` all AllReduces deleted (wrong numerics; speed ceiling) —
+                 provided for engine tests only.
+
+All math uses the ref kernels (pure jnp): these graphs exist for semantics
+and training speed; the Pallas kernels are exercised by the per-rank serving
+modules in model.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .model import ModelConfig
+
+ARCH_NAMES = ("standard", "ladder", "parallel", "desync2", "desync4", "hybrid", "upperbound")
+
+# ablation variants (exported for training only): desync2m drops the *MLP*
+# AllReduce instead of attention's — the paper reports drop-attention gives
+# lower Wikitext perplexity (§5), which the ablation reproduces.
+ABLATION_NAMES = ("desync2m",)
+
+
+# ---------------------------------------------------------------------------
+# weights: one pytree; shard views are created lazily per use
+# ---------------------------------------------------------------------------
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Seeded init matching Llama conventions (scaled normal)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 + cfg.layers)
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    std = h**-0.5
+
+    def norm01(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    layers = []
+    for i in range(cfg.layers):
+        lk = jax.random.split(ks[2 + i], 7)
+        layers.append(
+            dict(
+                attn_norm=jnp.ones((h,), jnp.float32),
+                wq=norm01(lk[0], (h, qd), std),
+                wk=norm01(lk[1], (h, kvd), std),
+                wv=norm01(lk[2], (h, kvd), std),
+                wo=norm01(lk[3], (qd, h), std / (2 * cfg.layers) ** 0.5),
+                mlp_norm=jnp.ones((h,), jnp.float32),
+                wg=norm01(lk[4], (h, f), std),
+                wu=norm01(lk[5], (h, f), std),
+                wd=norm01(lk[6], (f, h), f**-0.5 / (2 * cfg.layers) ** 0.5),
+            )
+        )
+    return dict(
+        emb=norm01(ks[0], (v, h), 1.0),
+        layers=layers,
+        final_norm=jnp.ones((h,), jnp.float32),
+        lm=norm01(ks[1], (h, v), std),
+    )
+
+
+def _shard_cols(w: jnp.ndarray, t: int, tp: int) -> jnp.ndarray:
+    n = w.shape[1] // tp
+    return w[:, t * n : (t + 1) * n]
+
+
+def _shard_rows(w: jnp.ndarray, t: int, tp: int) -> jnp.ndarray:
+    n = w.shape[0] // tp
+    return w[t * n : (t + 1) * n, :]
+
+
+# ---------------------------------------------------------------------------
+# per-shard module partials (TP math: column-split in, row-split out)
+# ---------------------------------------------------------------------------
+
+
+def attn_partial(cfg: ModelConfig, lw: dict, x: jnp.ndarray, t: int, tp: int) -> jnp.ndarray:
+    """Rank-t partial of the attention block (norm fused in). x: [B,S,H]."""
+    b, s, h = x.shape
+    d = cfg.head_dim
+    hl, kvl = cfg.heads // tp, cfg.kv_heads // tp
+    y = ref.rmsnorm(x, lw["attn_norm"], cfg.norm_eps)
+    y2 = y.reshape(b * s, h)
+    q = (y2 @ _shard_cols(lw["wq"], t, tp)).reshape(b, s, hl, d).transpose(0, 2, 1, 3)
+    k = (y2 @ _shard_cols(lw["wk"], t, tp)).reshape(b, s, kvl, d).transpose(0, 2, 1, 3)
+    v = (y2 @ _shard_cols(lw["wv"], t, tp)).reshape(b, s, kvl, d).transpose(0, 2, 1, 3)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    q = ref.rope(q, pos, cfg.rope_theta)
+    k = ref.rope(k, pos, cfg.rope_theta)
+    o = ref.attention(q, k, v, causal=True)
+    o2 = o.transpose(0, 2, 1, 3).reshape(b * s, hl * d)
+    return (o2 @ _shard_rows(lw["wo"], t, tp)).reshape(b, s, h)
+
+
+def mlp_partial(cfg: ModelConfig, lw: dict, x: jnp.ndarray, t: int, tp: int) -> jnp.ndarray:
+    """Rank-t partial of the SwiGLU MLP block (norm fused in)."""
+    b, s, h = x.shape
+    y = ref.rmsnorm(x, lw["mlp_norm"], cfg.norm_eps).reshape(b * s, h)
+    gate = y @ _shard_cols(lw["wg"], t, tp)
+    up = y @ _shard_cols(lw["wu"], t, tp)
+    act = ref.swiglu(gate, up)
+    return (act @ _shard_rows(lw["wd"], t, tp)).reshape(b, s, h)
+
+
+def _allreduce(partials: list[jnp.ndarray]) -> jnp.ndarray:
+    """Fixed-order sum — matches the Rust collective's deterministic order."""
+    acc = partials[0]
+    for p in partials[1:]:
+        acc = acc + p
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# architecture forwards: tokens -> logits
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, weights: dict, tokens: jnp.ndarray, arch: str, tp: int = 2) -> jnp.ndarray:
+    """Full forward: tokens [B,S] int32 -> logits [B,S,V]."""
+    if arch == "standard":
+        return _forward_synced(cfg, weights, tokens, tp, ladder_from=cfg.layers)
+    if arch == "ladder":
+        return _forward_synced(cfg, weights, tokens, tp, ladder_from=0)
+    if arch == "hybrid":
+        return _forward_synced(cfg, weights, tokens, tp, ladder_from=cfg.layers // 2)
+    if arch == "parallel":
+        return _forward_parallel(cfg, weights, tokens, tp)
+    if arch == "desync2":
+        return _forward_desync(cfg, weights, tokens, tp, n=2)
+    if arch == "desync4":
+        return _forward_desync(cfg, weights, tokens, tp, n=4)
+    if arch == "desync2m":
+        return _forward_desync(cfg, weights, tokens, tp, n=2, phase_shift=1)
+    if arch == "upperbound":
+        return _forward_upperbound(cfg, weights, tokens, tp)
+    raise ValueError(f"unknown arch {arch!r}")
+
+
+def _embed(weights: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(weights["emb"], tokens, axis=0)
+
+
+def _head(cfg: ModelConfig, weights: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = ref.rmsnorm(x, weights["final_norm"], cfg.norm_eps)
+    return y @ weights["lm"]
+
+
+def _forward_synced(cfg, weights, tokens, tp, ladder_from: int) -> jnp.ndarray:
+    """Standard / Ladder / Hybrid share one loop.
+
+    Layers < ladder_from run standard (residual add before the module);
+    layers >= ladder_from run ladder (module sees the stale residual, the
+    AllReduce result lands one module later). ladder_from==layers is pure
+    standard; ==0 is pure ladder; ==layers//2 is the paper's hybrid.
+    """
+    x = _embed(weights, tokens)
+    pend_attn = None  # ladder: reduced attn output not yet in the residual
+    pend_mlp = None
+    for i, lw in enumerate(weights["layers"]):
+        if i >= ladder_from:
+            # ladder block (paper Alg. 1): add *previous* module outputs
+            if pend_attn is not None:
+                x = x + pend_attn
+            attn = _allreduce([attn_partial(cfg, lw, x, t, tp) for t in range(tp)])
+            if pend_mlp is not None:
+                x = x + pend_mlp
+            mlp = _allreduce([mlp_partial(cfg, lw, x, t, tp) for t in range(tp)])
+            pend_attn, pend_mlp = attn, mlp
+        else:
+            x = x + _allreduce([attn_partial(cfg, lw, x, t, tp) for t in range(tp)])
+            x = x + _allreduce([mlp_partial(cfg, lw, x, t, tp) for t in range(tp)])
+    if pend_attn is not None:
+        x = x + pend_attn
+    if pend_mlp is not None:
+        x = x + pend_mlp
+    return _head(cfg, weights, x)
+
+
+def _forward_parallel(cfg, weights, tokens, tp) -> jnp.ndarray:
+    """PaLM parallel attn+MLP: one shared pre-norm, one AllReduce per layer."""
+    x = _embed(weights, tokens)
+    for lw in weights["layers"]:
+        # shared norm: reuse attn_norm for both branches (PaLM style)
+        lw_shared = dict(lw, mlp_norm=lw["attn_norm"])
+        partials = [
+            attn_partial(cfg, lw_shared, x, t, tp) + mlp_partial(cfg, lw_shared, x, t, tp)
+            for t in range(tp)
+        ]
+        x = x + _allreduce(partials)
+    return _head(cfg, weights, x)
+
+
+def _forward_desync(cfg, weights, tokens, tp, n: int, phase_shift: int = 0) -> jnp.ndarray:
+    """Desync-nx: keep the last AllReduce in each group of n; drop the rest.
+
+    Dropped AR => each device adds its local partial to its own residual.
+    Retained AR => one collective carrying (partial_t + r_t / tp); the sum
+    yields AR(partials) + mean(residuals), re-synchronizing all streams.
+    A trailing resync is appended if the final module's AR was dropped (the
+    head needs a single residual).
+
+    ``phase_shift`` rotates which comm points are retained: 0 retains the
+    MLP reduces (drops attention's — the paper's preferred placement), 1
+    retains attention's instead (the ablation the paper reports as worse).
+    """
+    x0 = _embed(weights, tokens)
+    rs = [x0 for _ in range(tp)]  # per-device residuals
+    synced = True
+    c = 0  # global comm-point counter (2 per layer: attn, mlp)
+    for lw in weights["layers"]:
+        for kind in ("attn", "mlp"):
+            part = attn_partial if kind == "attn" else mlp_partial
+            partials = [part(cfg, lw, rs[t], t, tp) for t in range(tp)]
+            c += 1
+            if (c + phase_shift) % n == 0:  # retained AllReduce: resync
+                msg = [partials[t] + rs[t] / tp for t in range(tp)]
+                x = _allreduce(msg)
+                rs = [x for _ in range(tp)]
+                synced = True
+            else:  # dropped: local residual add
+                rs = [rs[t] + partials[t] for t in range(tp)]
+                synced = False
+    if not synced:
+        x = _allreduce([r / tp for r in rs])  # final resync (mean)
+    else:
+        x = rs[0]
+    return _head(cfg, weights, x)
+
+
+def _forward_upperbound(cfg, weights, tokens, tp) -> jnp.ndarray:
+    """Comm deleted entirely: rank 0's partials only (wrong numerics)."""
+    x = _embed(weights, tokens)
+    for lw in weights["layers"]:
+        x = x + attn_partial(cfg, lw, x, 0, tp)
+        x = x + mlp_partial(cfg, lw, x, 0, tp)
+    return _head(cfg, weights, x)

@@ -1,0 +1,206 @@
+"""Reference TP engine simulator (python twin of the Rust L3 engine).
+
+Drives the *per-rank* L2 modules (model.py) with host-side AllReduces and
+per-architecture residual scheduling — exactly the contract the Rust
+coordinator implements. Tested against the monolithic archs.forward oracles;
+serves as the executable specification for rust/src/engine/.
+
+No Pallas/HLO here at test time if cfg.kernels == "ref"; with "pallas" the
+same code paths exercise the interpret-mode kernels end to end.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .model import ModelConfig, ShardConfig
+
+
+def shard_weights(cfg: ModelConfig, weights: dict, tp: int) -> list[dict]:
+    """Slice the full pytree into per-rank shards (column/row split)."""
+    ranks = []
+    for t in range(tp):
+        def cols(w):
+            n = w.shape[1] // tp
+            return w[:, t * n : (t + 1) * n]
+
+        def rows(w):
+            n = w.shape[0] // tp
+            return w[t * n : (t + 1) * n, :]
+
+        layers = []
+        for lw in weights["layers"]:
+            layers.append(
+                dict(
+                    attn_norm=lw["attn_norm"],
+                    wq=cols(lw["wq"]), wk=cols(lw["wk"]), wv=cols(lw["wv"]),
+                    wo=rows(lw["wo"]),
+                    mlp_norm=lw["mlp_norm"],
+                    wg=cols(lw["wg"]), wu=cols(lw["wu"]), wd=rows(lw["wd"]),
+                )
+            )
+        ranks.append(
+            dict(emb=weights["emb"], layers=layers,
+                 final_norm=weights["final_norm"], lm=cols(weights["lm"]))
+        )
+    return ranks
+
+
+class SimEngine:
+    """Architecture-scheduled TP forward over per-rank modules + KV caches."""
+
+    def __init__(self, cfg: ModelConfig, weights: dict, tp: int, arch: str, batch: int):
+        self.cfg = cfg
+        self.tp = tp
+        self.arch = arch
+        self.sc = cfg.shard(tp)
+        self.ranks = shard_weights(cfg, weights, tp)
+        self.batch = batch
+        kvl, m, d = self.sc.kv_heads_l, cfg.max_seq, cfg.head_dim
+        self.k_cache = [
+            [jnp.zeros((batch, kvl, m, d), jnp.float32) for _ in range(cfg.layers)]
+            for _ in range(tp)
+        ]
+        self.v_cache = [
+            [jnp.zeros((batch, kvl, m, d), jnp.float32) for _ in range(cfg.layers)]
+            for _ in range(tp)
+        ]
+        self.embed = model.make_embed(cfg)
+        self.attn_prefill = model.make_attn_prefill(self.sc)
+        self.attn_decode = model.make_attn_decode(self.sc)
+        self.mlp = model.make_mlp(self.sc)
+        self.fused_prefill = model.make_fused_prefill(self.sc)
+        self.fused_decode = model.make_fused_decode(self.sc)
+        self.lm_head = model.make_lm_head(self.sc)
+
+    # -- module partials over all ranks --------------------------------------
+
+    def _attn(self, xs: list, layer: int, phase: str, lens=None) -> list:
+        outs = []
+        for t in range(self.tp):
+            lw = self.ranks[t]["layers"][layer]
+            args = (xs[t], lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+                    self.k_cache[t][layer], self.v_cache[t][layer])
+            if phase == "prefill":
+                p, kc, vc = self.attn_prefill(*args)
+            else:
+                p, kc, vc = self.attn_decode(*args, lens)
+            self.k_cache[t][layer] = kc
+            self.v_cache[t][layer] = vc
+            outs.append(p)
+        return outs
+
+    def _mlp(self, xs: list, layer: int) -> list:
+        outs = []
+        for t in range(self.tp):
+            lw = self.ranks[t]["layers"][layer]
+            outs.append(self.mlp(xs[t], lw["mlp_norm"], lw["wg"], lw["wu"], lw["wd"]))
+        return outs
+
+    def _fused(self, xs: list, layer: int, phase: str, lens=None) -> list:
+        outs = []
+        for t in range(self.tp):
+            lw = self.ranks[t]["layers"][layer]
+            # PaLM shared norm: attn_norm used for both branches
+            args = (xs[t], lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+                    lw["wg"], lw["wu"], lw["wd"],
+                    self.k_cache[t][layer], self.v_cache[t][layer])
+            if phase == "prefill":
+                p, kc, vc = self.fused_prefill(*args)
+            else:
+                p, kc, vc = self.fused_decode(*args, lens)
+            self.k_cache[t][layer] = kc
+            self.v_cache[t][layer] = vc
+            outs.append(p)
+        return outs
+
+    @staticmethod
+    def _allreduce(partials: list) -> jnp.ndarray:
+        acc = partials[0]
+        for p in partials[1:]:
+            acc = acc + p
+        return acc
+
+    # -- one forward (prefill or decode), scheduled per architecture ---------
+
+    def forward(self, tokens: jnp.ndarray, phase: str, lens=None) -> jnp.ndarray:
+        """tokens: [B,S] (prefill) or [B,1] (decode). Returns logits [B,V]."""
+        cfg = self.cfg
+        x = self.embed(tokens, self.ranks[0]["emb"])
+        arch = self.arch
+
+        if arch in ("standard", "ladder", "hybrid", "upperbound"):
+            ladder_from = {
+                "standard": cfg.layers, "ladder": 0,
+                "hybrid": cfg.layers // 2, "upperbound": cfg.layers,
+            }[arch]
+            pend_attn = pend_mlp = None
+            for i in range(cfg.layers):
+                if arch == "upperbound":
+                    # comm deleted: rank-0 partial only (speed ceiling semantics)
+                    x = x + self._attn([x] * self.tp, i, phase, lens)[0]
+                    x = x + self._mlp([x] * self.tp, i)[0]
+                    continue
+                if i >= ladder_from:
+                    if pend_attn is not None:
+                        x = x + pend_attn
+                    attn = self._allreduce(self._attn([x] * self.tp, i, phase, lens))
+                    if pend_mlp is not None:
+                        x = x + pend_mlp
+                    mlp = self._allreduce(self._mlp([x] * self.tp, i))
+                    pend_attn, pend_mlp = attn, mlp
+                else:
+                    x = x + self._allreduce(self._attn([x] * self.tp, i, phase, lens))
+                    x = x + self._allreduce(self._mlp([x] * self.tp, i))
+            if pend_attn is not None:
+                x = x + pend_attn
+            if pend_mlp is not None:
+                x = x + pend_mlp
+            xs_final = [x] * self.tp
+
+        elif arch == "parallel":
+            for i in range(cfg.layers):
+                x = x + self._allreduce(self._fused([x] * self.tp, i, phase, lens))
+            xs_final = [x] * self.tp
+
+        elif arch in ("desync2", "desync4"):
+            n = 2 if arch == "desync2" else 4
+            rs = [x for _ in range(self.tp)]
+            c = 0
+            synced = True
+            for i in range(cfg.layers):
+                for kind in ("attn", "mlp"):
+                    partials = (
+                        self._attn(rs, i, phase, lens) if kind == "attn" else self._mlp(rs, i)
+                    )
+                    c += 1
+                    if c % n == 0:
+                        msg = [partials[t] + rs[t] / self.tp for t in range(self.tp)]
+                        xs = self._allreduce(msg)
+                        rs = [xs for _ in range(self.tp)]
+                        synced = True
+                    else:
+                        rs = [rs[t] + partials[t] for t in range(self.tp)]
+                        synced = False
+            if not synced:
+                xs = self._allreduce([r / self.tp for r in rs])
+                rs = [xs for _ in range(self.tp)]
+            xs_final = rs
+        else:
+            raise ValueError(arch)
+
+        # lm head on the last position, vocab shards AllGathered
+        last = xs_final[0].shape[1] - 1
+        pieces = []
+        for t in range(self.tp):
+            xt = xs_final[t][:, last, :]
+            pieces.append(self.lm_head(xt, self.ranks[t]["final_norm"], self.ranks[t]["lm"]))
+        return jnp.concatenate(pieces, axis=-1)
+
+    def prefill(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        return self.forward(tokens, "prefill")
+
+    def decode(self, tokens: jnp.ndarray, lens: jnp.ndarray) -> jnp.ndarray:
+        return self.forward(tokens, "decode", lens)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref).
+
+``get_kernels(flavor)`` returns the kernel namespace the L2 model uses:
+``"pallas"`` (default artifact set; Pallas interpret-mode kernels) or
+``"ref"`` (pure-jnp oracles, used for large sweep configs).
+"""
+
+from types import SimpleNamespace
+
+from . import ref
+from .attention import decode_attention, flash_attention
+from .matmul import matmul
+from .rmsnorm import rmsnorm
+from .rope import rope
+from .swiglu import swiglu
+
+__all__ = [
+    "ref",
+    "flash_attention",
+    "decode_attention",
+    "matmul",
+    "rmsnorm",
+    "rope",
+    "swiglu",
+    "get_kernels",
+]
+
+
+def get_kernels(flavor: str):
+    if flavor == "pallas":
+        return SimpleNamespace(
+            rmsnorm=rmsnorm,
+            rope=rope,
+            attention=flash_attention,
+            decode_attention=decode_attention,
+            swiglu=swiglu,
+            matmul=matmul,
+        )
+    if flavor == "ref":
+        return SimpleNamespace(
+            rmsnorm=ref.rmsnorm,
+            rope=ref.rope,
+            attention=ref.attention,
+            decode_attention=ref.decode_attention,
+            swiglu=ref.swiglu,
+            matmul=ref.matmul,
+        )
+    raise ValueError(f"unknown kernel flavor: {flavor!r} (want 'pallas' or 'ref')")

@@ -1,0 +1,190 @@
+"""Pallas attention kernels: causal flash attention (prefill) and single-query
+cache attention (decode).
+
+TPU adaptation of the paper's CUDA setting (gpt-fast + torch.compile fused
+attention): instead of a threadblock-per-(head, q-tile) schedule over shared
+memory, we use a Pallas grid over (batch*q-head, q-tile) with the KV sequence
+streamed through VMEM in tiles via an inner loop, maintaining the online
+softmax running max/denominator in f32 — the classic flash schedule expressed
+with BlockSpec. interpret=True for CPU-PJRT execution; on real TPU the same
+structure tiles cleanly onto the MXU (D and KV tiles padded to 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_tile: int, scale: float, causal: bool, q_tile: int):
+    """One grid step: all KV tiles for one (bh, q-tile) pair, online softmax.
+
+    q_ref: [1, q_tile, D]; k_ref, v_ref: [1, S, D] (full KV for this bh);
+    o_ref: [1, q_tile, D]. Leading unit dim is the grid-selected bh slice.
+    """
+    q = q_ref[0].astype(jnp.float32) * scale
+    s_total = k_ref.shape[1]
+    d = q_ref.shape[-1]
+    qi = pl.program_id(1)  # q-tile index within the sequence
+
+    m0 = jnp.full((q_tile, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_tile, 1), jnp.float32)
+    acc0 = jnp.zeros((q_tile, d), jnp.float32)
+
+    def body(t, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], t * kv_tile, kv_tile, axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], t * kv_tile, kv_tile, axis=0).astype(jnp.float32)
+        logits = q @ k.T  # [q_tile, kv_tile]
+        if causal:
+            q_pos = qi * q_tile + jnp.arange(q_tile)[:, None]
+            k_pos = t * kv_tile + jnp.arange(kv_tile)[None, :]
+            logits = jnp.where(k_pos <= q_pos, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ v
+        return m_new, l_new, acc_new
+
+    num_kv_tiles = s_total // kv_tile
+    if causal:
+        # Only tiles that intersect the causal triangle for this q-tile.
+        num_live = (qi * q_tile + q_tile + kv_tile - 1) // kv_tile
+        num_live = jnp.minimum(num_live, num_kv_tiles)
+        m, l, acc = jax.lax.fori_loop(0, num_live, body, (m0, l0, acc0))
+    else:
+        m, l, acc = jax.lax.fori_loop(0, num_kv_tiles, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    scale: float | None = None,
+    q_tile: int = 16,
+    kv_tile: int = 16,
+) -> jnp.ndarray:
+    """Causal flash attention with GQA. q: [B,Hq,S,D]; k,v: [B,Hkv,S,D]."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    q_tile = min(q_tile, s)
+    while s % q_tile != 0:
+        q_tile -= 1
+    kv_tile = min(kv_tile, s)
+    while s % kv_tile != 0:
+        kv_tile -= 1
+
+    q3 = q.reshape(b * hq, s, d)
+    # Expand KV to one slice per q head (GQA): index map selects kv head.
+    k3 = k.reshape(b * hkv, s, d)
+    v3 = v.reshape(b * hkv, s, d)
+
+    def q_index(bh, qi):
+        return (bh, qi, 0)
+
+    def kv_index(bh, qi):
+        # bh runs over b*hq; map to the owning kv head slice.
+        return (bh // group, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, kv_tile=kv_tile, scale=scale, causal=causal, q_tile=q_tile
+        ),
+        grid=(b * hq, s // q_tile),
+        in_specs=[
+            pl.BlockSpec((1, q_tile, d), q_index),
+            pl.BlockSpec((1, s, d), kv_index),
+            pl.BlockSpec((1, s, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, q_tile, d), q_index),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        interpret=True,
+    )(q3, k3, v3)
+    return out.reshape(b, hq, s, d)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, kv_tile: int, scale: float):
+    """One grid step: one (b, q-head); stream the cache in tiles.
+
+    q_ref: [1, 1, D]; k_ref, v_ref: [1, M, D]; len_ref: [1] int32 valid length.
+    """
+    q = q_ref[0].astype(jnp.float32) * scale  # [1, D]
+    d = q_ref.shape[-1]
+    length = len_ref[0]
+
+    m0 = jnp.full((1, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1, 1), jnp.float32)
+    acc0 = jnp.zeros((1, d), jnp.float32)
+
+    def body(t, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], t * kv_tile, kv_tile, axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], t * kv_tile, kv_tile, axis=0).astype(jnp.float32)
+        logits = q @ k.T  # [1, kv_tile]
+        k_pos = t * kv_tile + jnp.arange(kv_tile)[None, :]
+        logits = jnp.where(k_pos < length, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m - m_new)
+        return m_new, l * alpha + jnp.sum(p, axis=-1, keepdims=True), acc * alpha + p @ v
+
+    # Only tiles holding valid slots contribute; bound the loop by length.
+    num_live = (length + kv_tile - 1) // kv_tile
+    m, l, acc = jax.lax.fori_loop(0, num_live, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray | int,
+    scale: float | None = None,
+    kv_tile: int = 16,
+) -> jnp.ndarray:
+    """Single-token attention vs KV cache. q: [B,Hq,1,D]; caches [B,Hkv,M,D].
+
+    ``length`` is a scalar or a [B] int32 vector (continuous batching: one
+    valid-length per batch row; the BlockSpec routes row b's length to every
+    grid step owned by batch row b).
+    """
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    m_cache = k_cache.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    kv_tile = min(kv_tile, m_cache)
+    while m_cache % kv_tile != 0:
+        kv_tile -= 1
+
+    q3 = q.reshape(b * hq, 1, d)
+    k3 = k_cache.reshape(b * hkv, m_cache, d)
+    v3 = v_cache.reshape(b * hkv, m_cache, d)
+    len_arr = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, kv_tile=kv_tile, scale=scale),
+        grid=(b * hq,),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, m_cache, d), lambda bh, g=group: (bh // g, 0, 0)),
+            pl.BlockSpec((1, m_cache, d), lambda bh, g=group: (bh // g, 0, 0)),
+            pl.BlockSpec((1,), lambda bh, h=hq: (bh // h,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bh: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        interpret=True,
+    )(q3, k3, v3, len_arr)
+    return out.reshape(b, hq, 1, d)

@@ -1,0 +1,125 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness signal).
+
+Each function here is the semantic definition of the corresponding kernel in
+this package. pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with
+hypothesis and asserts allclose(kernel, ref). The L2 model can also be lowered
+against these refs (``kernels="ref"``) for large sweep configs where
+interpret-mode Pallas while-loops would dominate CPU time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis: x / rms(x) * w, computed in f32."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary position embedding, Llama-style rotate-half pairing.
+
+    x: [B, H, S, D] with D even. positions: [S] int32 (shared across the
+    batch, prefill) or [B, S] (per-row positions, continuous-batching decode).
+    Pairs channel d with channel d + D/2.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., :, None] * freqs[None, :]
+    if positions.ndim == 1:
+        cos = jnp.cos(angles)[None, None]  # [1,1,S,half]
+        sin = jnp.sin(angles)[None, None]
+    else:
+        cos = jnp.cos(angles)[:, None]  # [B,1,S,half]
+        sin = jnp.sin(angles)[:, None]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Multi-head attention with GQA. q: [B,Hq,S,D]; k,v: [B,Hkv,S,D]."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = softmax(logits)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray | int,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Single-token attention against a KV cache.
+
+    q: [B,Hq,1,D]; caches: [B,Hkv,M,D]; length: number of valid cache slots —
+    either a scalar (all rows) or a [B] vector (continuous batching: each
+    batch row has its own sequence length). Positions >= length are masked.
+    """
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    m = k_cache.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    k = jnp.repeat(k_cache, group, axis=1)
+    v = jnp.repeat(v_cache, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    pos = jnp.arange(m)
+    length = jnp.broadcast_to(jnp.asarray(length), (b,))
+    mask = pos[None, None, None, :] < length[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = softmax(logits)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU activation: silu(gate) * up, f32 internally."""
+    g = gate.astype(jnp.float32)
+    return (g * sigmoid(g) * up.astype(jnp.float32)).astype(gate.dtype)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul with f32 accumulation: [M,K] @ [K,N] -> [M,N]."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# -- small numerics helpers (kept explicit so the oracles have zero magic) ----
+
+
+def softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    # Guard fully-masked rows (all -inf): shift by 0 there instead of nan.
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def sigmoid(x: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 / (1.0 + jnp.exp(-x))

@@ -1,0 +1,63 @@
+"""Pallas rotary-embedding kernel (Llama rotate-half pairing).
+
+Grid is over (batch*head); each step rotates a full [S, D] slice in VMEM.
+cos/sin tables are precomputed on the host side of the graph (they depend
+only on positions) and streamed in, so the kernel is a pure fused
+multiply-add — the same structure the paper's CUDA-graph decode path uses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)  # [S, D] (unit leading dim = grid bh slice)
+    d = x.shape[-1]
+    half = d // 2
+    cos = cos_ref[0]  # [S, half] f32
+    sin = sin_ref[0]
+    x1 = x[..., :half]
+    x2 = x[..., half:]
+    o_ref[0] = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(o_ref.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Apply rotary embedding. x: [B,H,S,D] (D even).
+
+    positions: [S] int32 (shared, prefill) or [B,S] (per-row, decode). The
+    cos/sin tables are computed graph-side; the kernel is the fused rotate.
+    """
+    b, h, s, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    pos2 = jnp.broadcast_to(
+        positions.astype(jnp.float32).reshape((-1, s)), (b if positions.ndim == 2 else 1, s)
+    )
+    angles = pos2[:, :, None] * freqs[None, None, :]  # [Bp, S, half]
+    bp = angles.shape[0]
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x3 = x.reshape(b * h, s, d)
+
+    def tab_index(i, h=h, bp=bp):
+        # Shared table (bp=1) or per-batch-row table (bp=b).
+        return (0, 0, 0) if bp == 1 else (i // h, 0, 0)
+
+    out = pl.pallas_call(
+        _rope_kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, half), tab_index),
+            pl.BlockSpec((1, s, half), tab_index),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), x.dtype),
+        interpret=True,
+    )(x3, cos, sin)
+    return out.reshape(b, h, s, d)

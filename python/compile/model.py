@@ -1,0 +1,280 @@
+"""L2: the Llama-style transformer, written per-TP-rank and split at every
+AllReduce edge.
+
+The paper's whole point is that the architecture (Standard vs Ladder vs
+Parallel vs Desync) differs only in *when* the AllReduce results re-enter the
+residual stream. We therefore export the model as a small set of HLO modules
+whose boundaries are exactly the communication points; the Rust coordinator
+(L3) owns the residual stream, the collectives, and the per-architecture
+schedule (paper Alg. 1). One executable per (module, phase) is shared across
+all layers — only the weight buffers differ per layer.
+
+Modules (all per-rank; shapes in the manifest):
+
+- ``embed``          tokens[B,S] i32, emb[V,H]                    -> h[B,S,H]
+- ``attn_prefill``   x[B,S,H], nw[H], wq,wk,wv,wo shards,
+                     kc,vc[B,KVl,M,D], pos0[]                     -> (partial[B,S,H], kc', vc')
+- ``attn_decode``    x[B,1,H], nw, shards, kc,vc, lens[B]         -> (partial[B,1,H], kc', vc')
+- ``mlp``            x[B,S,H], nw[H], wg,wu[H,Fl], wd[Fl,H]       -> partial[B,S,H]
+- ``fused_prefill``  Parallel-attn-MLP: one shared norm, attn+mlp
+                     partials summed                              -> (partial, kc', vc')
+- ``fused_decode``   likewise at S=1
+- ``lm_head``        x[B,H], nw[H], wlm[H,Vl]                     -> logits[B,Vl]
+
+Suffix ``l`` = local (TP-sharded) dim: Hql = Hq/tp heads, Fl = F/tp,
+Vl = V/tp. Residual adds and AllReduces are NOT in these graphs — Rust does
+them, which is what lets the same compiled modules serve every architecture.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import get_kernels
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Llama-style transformer configuration (full, unsharded sizes)."""
+
+    name: str = "tiny"
+    vocab: int = 256
+    hidden: int = 64
+    layers: int = 4
+    heads: int = 4
+    kv_heads: int = 2
+    head_dim: int = 16
+    ffn: int = 192
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    kernels: str = "pallas"  # "pallas" | "ref"
+    dtype: str = "f32"
+
+    @property
+    def q_dim(self) -> int:
+        return self.heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    def shard(self, tp: int) -> "ShardConfig":
+        assert self.heads % tp == 0, f"heads {self.heads} % tp {tp} != 0"
+        assert self.kv_heads % tp == 0, f"kv_heads {self.kv_heads} % tp {tp} != 0"
+        assert self.ffn % tp == 0 and self.vocab % tp == 0
+        return ShardConfig(self, tp)
+
+    def params(self) -> int:
+        """Total parameter count (embedding + blocks + head)."""
+        h, f = self.hidden, self.ffn
+        per_layer = h * (self.q_dim + 2 * self.kv_dim) + self.q_dim * h + 3 * h * f + 2 * h
+        return self.vocab * h * 2 + self.layers * per_layer + h
+
+
+@dataclass(frozen=True)
+class ShardConfig:
+    """Per-rank view of a ModelConfig under TP sharding."""
+
+    model: ModelConfig
+    tp: int
+
+    @property
+    def heads_l(self) -> int:
+        return self.model.heads // self.tp
+
+    @property
+    def kv_heads_l(self) -> int:
+        return self.model.kv_heads // self.tp
+
+    @property
+    def ffn_l(self) -> int:
+        return self.model.ffn // self.tp
+
+    @property
+    def vocab_l(self) -> int:
+        return self.model.vocab // self.tp
+
+    @property
+    def q_dim_l(self) -> int:
+        return self.heads_l * self.model.head_dim
+
+    @property
+    def kv_dim_l(self) -> int:
+        return self.kv_heads_l * self.model.head_dim
+
+
+# ---------------------------------------------------------------------------
+# module builders — each returns a jit-able fn of concrete example shapes
+# ---------------------------------------------------------------------------
+
+
+def make_embed(cfg: ModelConfig):
+    def embed(tokens, emb_w):
+        return jnp.take(emb_w, tokens, axis=0)
+
+    return embed
+
+
+def _project(K, x2, w):
+    """[R,H] @ [H,N] with the kernel-flavored matmul."""
+    return K.matmul(x2, w)
+
+
+def make_attn_prefill(sc: ShardConfig):
+    """Prefill attention for one layer shard.
+
+    x: [B,S,H] residual input (already summed/reduced by Rust);
+    returns the rank-local partial output plus updated caches. Cache slots
+    [0,S) are written; rope positions are 0..S-1.
+    """
+    cfg = sc.model
+    K = get_kernels(cfg.kernels)
+
+    def attn_prefill(x, norm_w, wq, wk, wv, wo, k_cache, v_cache):
+        b, s, h = x.shape
+        d = cfg.head_dim
+        y = K.rmsnorm(x, norm_w, cfg.norm_eps)
+        y2 = y.reshape(b * s, h)
+        q = _project(K, y2, wq).reshape(b, s, sc.heads_l, d).transpose(0, 2, 1, 3)
+        k = _project(K, y2, wk).reshape(b, s, sc.kv_heads_l, d).transpose(0, 2, 1, 3)
+        v = _project(K, y2, wv).reshape(b, s, sc.kv_heads_l, d).transpose(0, 2, 1, 3)
+        positions = jnp.arange(s, dtype=jnp.int32)
+        q = K.rope(q, positions, cfg.rope_theta)
+        k = K.rope(k, positions, cfg.rope_theta)
+        attn = K.attention(q, k, v, causal=True)
+        out = attn.transpose(0, 2, 1, 3).reshape(b * s, sc.q_dim_l)
+        partial = _project(K, out, wo).reshape(b, s, h)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, 0, 0, 0))
+        return partial, k_cache, v_cache
+
+    return attn_prefill
+
+
+def _write_cache_rows(cache, new, lens):
+    """Per-row cache append: cache[b,:,lens[b],:] = new[b,:,0,:]."""
+
+    def write_one(c, n, p):
+        # c: [KVl,M,D], n: [KVl,1,D], p: scalar
+        return jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+
+    return jax.vmap(write_one)(cache, new, lens)
+
+
+def make_attn_decode(sc: ShardConfig):
+    """Single-token decode attention for one layer shard.
+
+    lens[B]: current sequence length per row (also the write position and the
+    rope position of the new token).
+    """
+    cfg = sc.model
+    K = get_kernels(cfg.kernels)
+
+    def attn_decode(x, norm_w, wq, wk, wv, wo, k_cache, v_cache, lens):
+        b, s, h = x.shape  # s == 1
+        d = cfg.head_dim
+        y = K.rmsnorm(x, norm_w, cfg.norm_eps)
+        y2 = y.reshape(b, h)
+        q = _project(K, y2, wq).reshape(b, 1, sc.heads_l, d).transpose(0, 2, 1, 3)
+        k = _project(K, y2, wk).reshape(b, 1, sc.kv_heads_l, d).transpose(0, 2, 1, 3)
+        v = _project(K, y2, wv).reshape(b, 1, sc.kv_heads_l, d).transpose(0, 2, 1, 3)
+        positions = lens.reshape(b, 1)
+        q = K.rope(q, positions, cfg.rope_theta)
+        k = K.rope(k, positions, cfg.rope_theta)
+        k_cache = _write_cache_rows(k_cache, k, lens)
+        v_cache = _write_cache_rows(v_cache, v, lens)
+        attn = K.decode_attention(q, k_cache, v_cache, lens + 1)
+        out = attn.transpose(0, 2, 1, 3).reshape(b, sc.q_dim_l)
+        partial = _project(K, out, wo).reshape(b, 1, h)
+        return partial, k_cache, v_cache
+
+    return attn_decode
+
+
+def make_mlp(sc: ShardConfig):
+    """SwiGLU MLP partial for one layer shard (norm fused in)."""
+    cfg = sc.model
+    K = get_kernels(cfg.kernels)
+
+    def mlp(x, norm_w, w_gate, w_up, w_down):
+        b, s, h = x.shape
+        y = K.rmsnorm(x, norm_w, cfg.norm_eps).reshape(b * s, h)
+        gate = _project(K, y, w_gate)
+        up = _project(K, y, w_up)
+        act = K.swiglu(gate, up)
+        return _project(K, act, w_down).reshape(b, s, h)
+
+    return mlp
+
+
+def make_fused_prefill(sc: ShardConfig):
+    """Parallel-attn-MLP (PaLM) prefill: one shared norm, summed partials.
+
+    This is the paper's 'Parallel' baseline — halves the AllReduce count by
+    emitting a single partial per layer.
+    """
+    cfg = sc.model
+    K = get_kernels(cfg.kernels)
+    attn_fn = make_attn_prefill(sc)
+    mlp_fn = make_mlp(sc)
+
+    def fused(x, norm_w, wq, wk, wv, wo, w_gate, w_up, w_down, k_cache, v_cache):
+        # Attention path (reuses the attn builder's norm — same norm weights,
+        # PaLM style single pre-norm for both branches).
+        attn_partial, k_cache, v_cache = attn_fn(x, norm_w, wq, wk, wv, wo, k_cache, v_cache)
+        mlp_partial = mlp_fn(x, norm_w, w_gate, w_up, w_down)
+        return attn_partial + mlp_partial, k_cache, v_cache
+
+    return fused
+
+
+def make_fused_decode(sc: ShardConfig):
+    cfg = sc.model
+    attn_fn = make_attn_decode(sc)
+    mlp_fn = make_mlp(sc)
+
+    def fused(x, norm_w, wq, wk, wv, wo, w_gate, w_up, w_down, k_cache, v_cache, lens):
+        attn_partial, k_cache, v_cache = attn_fn(x, norm_w, wq, wk, wv, wo, k_cache, v_cache, lens)
+        mlp_partial = mlp_fn(x, norm_w, w_gate, w_up, w_down)
+        return attn_partial + mlp_partial, k_cache, v_cache
+
+    return fused
+
+
+def make_lm_head(sc: ShardConfig):
+    """Final norm + vocab-sharded LM head. Rust AllGathers the vocab shards."""
+    cfg = sc.model
+    K = get_kernels(cfg.kernels)
+
+    def lm_head(x, norm_w, w_lm):
+        y = K.rmsnorm(x, norm_w, cfg.norm_eps)
+        return K.matmul(y, w_lm)
+
+    return lm_head
+
+
+# ---------------------------------------------------------------------------
+# config registry — the sizes we export + the paper's size table (perf model)
+# ---------------------------------------------------------------------------
+
+CONFIGS: dict[str, ModelConfig] = {
+    # tests + quickstart: small enough that pallas interpret mode is snappy
+    "tiny": ModelConfig(
+        name="tiny", vocab=256, hidden=64, layers=4, heads=4, kv_heads=2,
+        head_dim=16, ffn=192, max_seq=128, kernels="pallas",
+    ),
+    # serving e2e: big enough that module exec time dominates dispatch
+    "small": ModelConfig(
+        name="small", vocab=2048, hidden=256, layers=8, heads=8, kv_heads=4,
+        head_dim=32, ffn=768, max_seq=320, kernels="ref",
+    ),
+    # trainer parity experiments (Tables 3/4/5 analogs)
+    "parity": ModelConfig(
+        name="parity", vocab=512, hidden=128, layers=6, heads=4, kv_heads=4,
+        head_dim=32, ffn=384, max_seq=128, kernels="ref",
+    ),
+}

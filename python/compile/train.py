@@ -1,0 +1,143 @@
+"""Training / eval graphs for the quality-parity experiments (Tables 3/4/5).
+
+The Rust trainer drives these AOT-compiled graphs; to keep the Rust interface
+trivial, all weights live in ONE flat f32 vector. The packing table (name,
+shape, offset) is emitted into the manifest so Rust can also slice a trained
+vector into per-rank serving shards.
+
+Exported graphs per architecture (standard/ladder/parallel/desync2/desync4/
+hybrid):
+
+- ``train_step``: (w, m, v, step, lr, tokens) -> (loss, w', m', v')
+  one AdamW step on the next-token cross-entropy (fwd+bwd fused in-graph).
+- ``eval_metrics``: (w, tokens) -> (loss_sum, correct)
+  summed token NLL + greedy-argmax hits over the batch (held-out ppl and
+  probe accuracy are computed Rust-side from accumulated sums).
+
+TP semantics (including Desync's per-device residual streams) are simulated
+in-graph with tp=2 shards — see archs.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import archs
+from .model import ModelConfig
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.1
+TRAIN_TP = 2
+
+
+# ---------------------------------------------------------------------------
+# flat packing
+# ---------------------------------------------------------------------------
+
+
+def packing_table(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Fixed (name, shape) order defining the flat weight vector layout."""
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    table: list[tuple[str, tuple[int, ...]]] = [("emb", (v, h))]
+    for i in range(cfg.layers):
+        table += [
+            (f"layers.{i}.attn_norm", (h,)),
+            (f"layers.{i}.wq", (h, qd)),
+            (f"layers.{i}.wk", (h, kvd)),
+            (f"layers.{i}.wv", (h, kvd)),
+            (f"layers.{i}.wo", (qd, h)),
+            (f"layers.{i}.mlp_norm", (h,)),
+            (f"layers.{i}.wg", (h, f)),
+            (f"layers.{i}.wu", (h, f)),
+            (f"layers.{i}.wd", (f, h)),
+        ]
+    table += [("final_norm", (h,)), ("lm", (h, v))]
+    return table
+
+
+def packed_size(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in packing_table(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def pack(cfg: ModelConfig, weights: dict) -> jnp.ndarray:
+    parts = []
+    for name, shape in packing_table(cfg):
+        t = weights
+        for part in name.split("."):
+            t = t[int(part)] if part.isdigit() else t[part]
+        assert t.shape == shape, f"{name}: {t.shape} != {shape}"
+        parts.append(t.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def unpack(cfg: ModelConfig, vec: jnp.ndarray) -> dict:
+    out: dict = {"layers": [dict() for _ in range(cfg.layers)]}
+    off = 0
+    for name, shape in packing_table(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        t = jax.lax.dynamic_slice_in_dim(vec, off, n).reshape(shape)
+        off += n
+        parts = name.split(".")
+        if parts[0] == "layers":
+            out["layers"][int(parts[1])][parts[2]] = t
+        else:
+            out[parts[0]] = t
+    return out
+
+
+# ---------------------------------------------------------------------------
+# loss / train step / eval
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, arch: str, vec: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy. tokens: [B,S] int32."""
+    weights = unpack(cfg, vec)
+    logits = archs.forward(cfg, weights, tokens[:, :-1], arch, tp=TRAIN_TP)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig, arch: str):
+    """AdamW step over the flat weight vector."""
+
+    def train_step(w, m, v, step, lr, tokens):
+        loss, grad = jax.value_and_grad(lambda vec: loss_fn(cfg, arch, vec, tokens))(w)
+        step = step + 1
+        m = ADAM_B1 * m + (1 - ADAM_B1) * grad
+        v = ADAM_B2 * v + (1 - ADAM_B2) * grad * grad
+        mhat = m / (1 - ADAM_B1**step)
+        vhat = v / (1 - ADAM_B2**step)
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + WEIGHT_DECAY * w)
+        return loss, w, m, v
+
+    return train_step
+
+
+def make_eval_metrics(cfg: ModelConfig, arch: str):
+    """(w, tokens) -> (summed NLL over predicted tokens, argmax hits)."""
+
+    def eval_metrics(w, tokens):
+        weights = unpack(cfg, w)
+        logits = archs.forward(cfg, weights, tokens[:, :-1], arch, tp=TRAIN_TP)
+        targets = tokens[:, 1:]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        hits = jnp.sum((jnp.argmax(logits, axis=-1) == targets).astype(jnp.int32))
+        return jnp.sum(nll), hits
+
+    return eval_metrics

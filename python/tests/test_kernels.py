@@ -1,0 +1,206 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and the GQA group structure / tile-divisibility
+edge cases); assert_allclose against ref.py is the core correctness signal.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import get_kernels, ref
+
+K = get_kernels("pallas")
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32))
+
+
+def assert_close(a, b, atol=2e-5, rtol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# -- rmsnorm -----------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 17),
+    h=st.sampled_from([8, 32, 64, 96]),
+    eps=st.sampled_from([1e-5, 1e-6]),
+)
+def test_rmsnorm_matches_ref(rows, h, eps):
+    x = randf(rows, h)
+    w = randf(h)
+    assert_close(K.rmsnorm(x, w, eps), ref.rmsnorm(x, w, eps))
+
+
+def test_rmsnorm_3d_shape():
+    x = randf(2, 5, 32)
+    w = randf(32)
+    assert_close(K.rmsnorm(x, w), ref.rmsnorm(x, w))
+
+
+def test_rmsnorm_unit_weight_is_pure_norm():
+    x = randf(3, 16)
+    w = jnp.ones(16)
+    y = np.asarray(K.rmsnorm(x, w))
+    rms = np.sqrt((y * y).mean(axis=-1))
+    np.testing.assert_allclose(rms, np.ones(3), atol=1e-4)
+
+
+# -- rope --------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s=st.integers(1, 20),
+    d=st.sampled_from([8, 16, 32]),
+)
+def test_rope_matches_ref(b, h, s, d):
+    x = randf(b, h, s, d)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    assert_close(K.rope(x, pos), ref.rope(x, pos))
+
+
+def test_rope_per_row_positions():
+    x = randf(3, 2, 1, 16)
+    pos = jnp.asarray([[4], [0], [97]], dtype=jnp.int32)
+    assert_close(K.rope(x, pos), ref.rope(x, pos))
+
+
+def test_rope_position_zero_is_identity():
+    x = randf(1, 2, 1, 16)
+    pos = jnp.zeros((1,), jnp.int32)
+    assert_close(K.rope(x, pos), x)
+
+
+def test_rope_preserves_norm():
+    # rotation is orthogonal on each (d, d+half) pair
+    x = randf(2, 2, 6, 32)
+    pos = jnp.arange(6, dtype=jnp.int32)
+    y = K.rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+# -- flash attention ----------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    kv_heads=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([4, 16, 24, 32]),
+    d=st.sampled_from([8, 16]),
+)
+def test_flash_attention_matches_ref(b, kv_heads, group, s, d):
+    hq = kv_heads * group
+    q = randf(b, hq, s, d)
+    k = randf(b, kv_heads, s, d)
+    v = randf(b, kv_heads, s, d)
+    assert_close(K.attention(q, k, v, causal=True), ref.attention(q, k, v, causal=True), atol=1e-4, rtol=1e-4)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = randf(1, 2, 16, 8), randf(1, 2, 16, 8), randf(1, 2, 16, 8)
+    assert_close(K.attention(q, k, v, causal=False), ref.attention(q, k, v, causal=False), atol=1e-4)
+
+
+def test_flash_attention_first_token_is_v0():
+    # causal: position 0 attends only to itself
+    q, k, v = randf(1, 1, 8, 8), randf(1, 1, 8, 8), randf(1, 1, 8, 8)
+    out = np.asarray(K.attention(q, k, v, causal=True))
+    np.testing.assert_allclose(out[0, 0, 0], np.asarray(v)[0, 0, 0], atol=1e-5)
+
+
+def test_flash_attention_odd_seq_tiles():
+    # s not divisible by the default tile: exercises the tile-shrink path
+    q, k, v = randf(1, 2, 18, 8), randf(1, 2, 18, 8), randf(1, 2, 18, 8)
+    assert_close(K.attention(q, k, v), ref.attention(q, k, v), atol=1e-4)
+
+
+# -- decode attention ----------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    kv_heads=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2]),
+    m=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 16]),
+    data=st.data(),
+)
+def test_decode_attention_matches_ref(b, kv_heads, group, m, d, data):
+    hq = kv_heads * group
+    q = randf(b, hq, 1, d)
+    kc = randf(b, kv_heads, m, d)
+    vc = randf(b, kv_heads, m, d)
+    lens = jnp.asarray(
+        data.draw(st.lists(st.integers(1, m), min_size=b, max_size=b)), jnp.int32
+    )
+    assert_close(K.decode_attention(q, kc, vc, lens), ref.decode_attention(q, kc, vc, lens), atol=1e-4)
+
+
+def test_decode_attention_scalar_length():
+    q, kc, vc = randf(2, 2, 1, 8), randf(2, 1, 32, 8), randf(2, 1, 32, 8)
+    assert_close(K.decode_attention(q, kc, vc, 7), ref.decode_attention(q, kc, vc, 7), atol=1e-4)
+
+
+def test_decode_attention_length_one_returns_v0():
+    q, kc, vc = randf(1, 1, 1, 8), randf(1, 1, 16, 8), randf(1, 1, 16, 8)
+    out = np.asarray(K.decode_attention(q, kc, vc, 1))
+    np.testing.assert_allclose(out[0, 0, 0], np.asarray(vc)[0, 0, 0], atol=1e-5)
+
+
+def test_decode_attention_ignores_garbage_beyond_length():
+    q = randf(1, 1, 1, 8)
+    kc, vc = randf(1, 1, 16, 8), randf(1, 1, 16, 8)
+    out1 = K.decode_attention(q, kc, vc, 5)
+    kc2 = kc.at[:, :, 5:].set(1e6)  # poison masked slots
+    vc2 = vc.at[:, :, 5:].set(-1e6)
+    out2 = K.decode_attention(q, kc2, vc2, 5)
+    assert_close(out1, out2)
+
+
+# -- swiglu / matmul -----------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 20), f=st.sampled_from([8, 48, 96]))
+def test_swiglu_matches_ref(rows, f):
+    g, u = randf(rows, f), randf(rows, f)
+    assert_close(K.swiglu(g, u), ref.swiglu(g, u))
+
+
+def test_swiglu_zero_gate_is_zero():
+    g = jnp.zeros((4, 16))
+    u = randf(4, 16)
+    np.testing.assert_allclose(np.asarray(K.swiglu(g, u)), 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 7, 32, 48]),
+    k=st.sampled_from([8, 33, 64]),
+    n=st.sampled_from([8, 24, 64]),
+)
+def test_matmul_matches_ref(m, k, n):
+    a, b = randf(m, k), randf(k, n)
+    assert_close(K.matmul(a, b), ref.matmul(a, b), atol=1e-4, rtol=1e-4)
+
+
+def test_matmul_identity():
+    a = randf(8, 8)
+    eye = jnp.eye(8)
+    assert_close(K.matmul(a, eye), a, atol=1e-6)

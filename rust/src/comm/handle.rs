@@ -1,0 +1,112 @@
+//! Async completion handles for collectives.
+//!
+//! The reduction itself is performed eagerly on the host (it is part of this
+//! testbed's "device" work), but the modeled link time is charged as a
+//! deadline: `wait()` sleeps until the modeled completion instant. Compute
+//! issued between `launch` and `wait` therefore genuinely hides the link
+//! time — on any core count — exactly like NCCL's comm stream hides behind
+//! CUDA compute in the paper's Figure 6 traces.
+
+use std::time::{Duration, Instant};
+
+use crate::model::HostTensor;
+
+/// Handle to an in-flight AllReduce/AllGather.
+#[derive(Debug)]
+pub struct CommHandle {
+    /// The reduced tensor (already computed; semantically "arrives" at
+    /// `ready_at`).
+    result: HostTensor,
+    launched_at: Instant,
+    ready_at: Instant,
+    /// Modeled link duration (for stats).
+    pub modeled: Duration,
+}
+
+impl CommHandle {
+    pub fn new(result: HostTensor, modeled: Duration) -> CommHandle {
+        let now = Instant::now();
+        CommHandle { result, launched_at: now, ready_at: now + modeled, modeled }
+    }
+
+    /// An already-complete handle (TP=1 / upper-bound paths).
+    pub fn ready(result: HostTensor) -> CommHandle {
+        let now = Instant::now();
+        CommHandle { result, launched_at: now, ready_at: now, modeled: Duration::ZERO }
+    }
+
+    /// Block until the modeled completion time; returns the reduced tensor
+    /// and the *exposed* (non-overlapped) wait duration.
+    pub fn wait(self) -> (HostTensor, Duration) {
+        let now = Instant::now();
+        let exposed = if now < self.ready_at {
+            let d = self.ready_at - now;
+            spin_sleep(d);
+            d
+        } else {
+            Duration::ZERO
+        };
+        (self.result, exposed)
+    }
+
+    /// True if the modeled transfer has already completed.
+    pub fn is_ready(&self) -> bool {
+        Instant::now() >= self.ready_at
+    }
+
+    /// Time since launch (for traces).
+    pub fn age(&self) -> Duration {
+        Instant::now() - self.launched_at
+    }
+
+    /// (launch, modeled-completion) instants — the link-occupancy span for
+    /// execution traces.
+    pub fn span(&self) -> (Instant, Instant) {
+        (self.launched_at, self.ready_at)
+    }
+}
+
+/// Sleep with sub-millisecond fidelity: OS sleep for the bulk, then spin.
+/// Plain `thread::sleep` has ~50-100us jitter which would swamp the
+/// microsecond-scale comm times of the tiny testbed configs.
+fn spin_sleep(d: Duration) {
+    let target = Instant::now() + d;
+    if d > Duration::from_micros(300) {
+        std::thread::sleep(d - Duration::from_micros(200));
+    }
+    while Instant::now() < target {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> HostTensor {
+        HostTensor::new(vec![2], vec![1.0, 2.0])
+    }
+
+    #[test]
+    fn blocking_wait_exposes_full_latency() {
+        let h = CommHandle::new(t(), Duration::from_millis(5));
+        let (out, exposed) = h.wait();
+        assert_eq!(out.data, vec![1.0, 2.0]);
+        assert!(exposed >= Duration::from_millis(4), "{exposed:?}");
+    }
+
+    #[test]
+    fn overlapped_wait_exposes_nothing() {
+        let h = CommHandle::new(t(), Duration::from_millis(3));
+        std::thread::sleep(Duration::from_millis(5)); // "compute"
+        assert!(h.is_ready());
+        let (_, exposed) = h.wait();
+        assert_eq!(exposed, Duration::ZERO);
+    }
+
+    #[test]
+    fn ready_handle_is_instant() {
+        let (_, exposed) = CommHandle::ready(t()).wait();
+        assert_eq!(exposed, Duration::ZERO);
+    }
+}

@@ -1,0 +1,174 @@
+//! Interconnect cost models (the hardware substitution for NVLink / PCIe /
+//! InfiniBand fabrics the paper benchmarks on).
+//!
+//! AllReduce cost uses the standard alpha-beta model. For a ring AllReduce
+//! over `n` devices and message size `B` bytes:
+//!
+//!   t = 2 (n-1) * alpha_hop + 2 (n-1)/n * B / bw
+//!
+//! With SHARP (in-switch reduction, paper's NVLink runs set
+//! NCCL_NVLS_ENABLE=1) the latency term collapses to a one-shot:
+//!
+//!   t = alpha_sharp + B / bw
+//!
+//! Fabric constants follow public H100/DGX specs; what matters for the
+//! reproduction is the comm/compute *ratio* per fabric class, not the
+//! absolute numbers (see DESIGN.md substitutions).
+
+/// A fabric class the paper benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fabric {
+    /// NVLink 4 (+SHARP): 450 GB/s per-GPU bandwidth, sub-10us latency.
+    NvLink,
+    /// PCIe Gen5 fallback (paper's "No NVLink", NCCL_P2P_DISABLE=1).
+    Pcie,
+    /// Cross-node InfiniBand (NDR 400): used by the paper's 405B TP16 runs.
+    InfiniBand,
+    /// Single-device: communication is the identity (zero cost).
+    Local,
+    /// Custom (latency_us, bandwidth_GBps) — for sweeps/ablations.
+    Custom(u32, u32),
+}
+
+/// Cost model for one fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    pub fabric: Fabric,
+    /// Per-hop latency (seconds).
+    pub alpha: f64,
+    /// Algorithm bandwidth per device (bytes/second).
+    pub bandwidth: f64,
+    /// One-shot in-switch reduction (SHARP) instead of ring.
+    pub sharp: bool,
+}
+
+impl Interconnect {
+    pub fn new(fabric: Fabric) -> Interconnect {
+        match fabric {
+            // alpha is the *end-to-end* NCCL small-message AllReduce
+            // latency (protocol + launch), not the wire latency: ~18us for
+            // NVLS/SHARP one-shot on 8 GPUs, ~60us via shared-memory
+            // fallback with P2P disabled (the paper's "No NVLink"), ~25us
+            // per hop over NDR InfiniBand.
+            Fabric::NvLink => Interconnect {
+                fabric,
+                alpha: 18e-6,
+                bandwidth: 450e9,
+                sharp: true,
+            },
+            Fabric::Pcie => Interconnect {
+                fabric,
+                alpha: 5e-6,
+                bandwidth: 40e9,
+                sharp: false,
+            },
+            Fabric::InfiniBand => Interconnect {
+                fabric,
+                alpha: 25e-6,
+                bandwidth: 45e9,
+                sharp: false,
+            },
+            Fabric::Local => Interconnect {
+                fabric,
+                alpha: 0.0,
+                bandwidth: f64::INFINITY,
+                sharp: true,
+            },
+            Fabric::Custom(lat_us, bw_gbps) => Interconnect {
+                fabric,
+                alpha: lat_us as f64 * 1e-6,
+                bandwidth: bw_gbps as f64 * 1e9,
+                sharp: false,
+            },
+        }
+    }
+
+    /// Modeled AllReduce duration for `bytes` over `n` devices.
+    pub fn allreduce_time(&self, bytes: usize, n: usize) -> f64 {
+        if n <= 1 || matches!(self.fabric, Fabric::Local) {
+            return 0.0;
+        }
+        let b = bytes as f64;
+        if self.sharp {
+            // one-shot in-switch reduction (NVLS/SHARP)
+            self.alpha + b / self.bandwidth
+        } else {
+            // latency: tree depth (NCCL picks tree/SHM for small messages,
+            // not the 2(n-1)-hop ring); bandwidth: ring algbw factor
+            let hops = (n - 1) as f64;
+            hops * self.alpha + 2.0 * hops / n as f64 * b / self.bandwidth
+        }
+    }
+
+    /// Modeled AllGather duration (lm-head vocab shards).
+    pub fn allgather_time(&self, bytes_per_rank: usize, n: usize) -> f64 {
+        if n <= 1 || matches!(self.fabric, Fabric::Local) {
+            return 0.0;
+        }
+        let hops = (n - 1) as f64;
+        hops * self.alpha + hops * bytes_per_rank as f64 / self.bandwidth
+    }
+
+    pub fn name(&self) -> String {
+        match self.fabric {
+            Fabric::NvLink => "nvlink".into(),
+            Fabric::Pcie => "pcie".into(),
+            Fabric::InfiniBand => "infiniband".into(),
+            Fabric::Local => "local".into(),
+            Fabric::Custom(l, b) => format!("custom({l}us,{b}GB/s)"),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Interconnect> {
+        Ok(Interconnect::new(match s {
+            "nvlink" => Fabric::NvLink,
+            "pcie" | "no-nvlink" => Fabric::Pcie,
+            "infiniband" | "ib" => Fabric::InfiniBand,
+            "local" | "none" => Fabric::Local,
+            // "slow": a fabric whose latency is commensurate with this
+            // CPU testbed's module times (ms-scale), so architecture
+            // comparisons on the real engine show the paper's shape the
+            // way GPU-scale modules vs NCCL latencies do.
+            "slow" => Fabric::Custom(3000, 1),
+            _ => anyhow::bail!("unknown fabric {s:?} (nvlink|pcie|infiniband|local|slow)"),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_is_free() {
+        let ic = Interconnect::new(Fabric::Local);
+        assert_eq!(ic.allreduce_time(1 << 20, 8), 0.0);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let ic = Interconnect::new(Fabric::NvLink);
+        assert_eq!(ic.allreduce_time(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn pcie_slower_than_nvlink() {
+        let nv = Interconnect::new(Fabric::NvLink);
+        let pcie = Interconnect::new(Fabric::Pcie);
+        let bytes = 8192 * 4 * 4; // a typical decode message
+        assert!(pcie.allreduce_time(bytes, 8) > nv.allreduce_time(bytes, 8));
+    }
+
+    #[test]
+    fn monotone_in_bytes_and_ranks() {
+        let ic = Interconnect::new(Fabric::Pcie);
+        assert!(ic.allreduce_time(2 << 20, 8) > ic.allreduce_time(1 << 20, 8));
+        assert!(ic.allreduce_time(1 << 20, 8) > ic.allreduce_time(1 << 20, 2));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert!(Interconnect::parse("nvlink").is_ok());
+        assert!(Interconnect::parse("warp-drive").is_err());
+    }
+}

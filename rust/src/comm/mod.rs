@@ -1,0 +1,11 @@
+//! Communication layer: interconnect cost models, the collective engine
+//! (real sum-reduction across rank partials + simulated link latency), and
+//! async completion handles that make the Ladder overlap measurable.
+
+pub mod collective;
+pub mod handle;
+pub mod interconnect;
+
+pub use collective::{CollectiveEngine, CommStats};
+pub use handle::CommHandle;
+pub use interconnect::{Fabric, Interconnect};

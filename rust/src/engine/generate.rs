@@ -1,0 +1,169 @@
+//! Generation loop: prefill + decode with sampling, timing each phase the
+//! way the paper reports (prefill latency, decode latency, tokens/sec).
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::tpengine::TpEngine;
+use crate::comm::CommStats;
+use crate::model::HostTensor;
+use crate::util::rng::Rng;
+
+/// Token sampling strategy.
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Greedy,
+    /// top-k with temperature, seeded.
+    TopK { k: usize, temperature: f64, seed: u64 },
+}
+
+impl Sampler {
+    /// Sample one token per batch row from logits [B, V].
+    pub fn sample(&self, logits: &HostTensor, rng: &mut Rng) -> Vec<i32> {
+        let b = logits.shape[0];
+        let v = logits.shape[1];
+        (0..b)
+            .map(|bi| {
+                let row = &logits.data[bi * v..(bi + 1) * v];
+                match self {
+                    Sampler::Greedy => argmax(row) as i32,
+                    Sampler::TopK { k, temperature, .. } => {
+                        let mut idx: Vec<usize> = (0..v).collect();
+                        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+                        idx.truncate((*k).max(1));
+                        let weights: Vec<f64> = idx
+                            .iter()
+                            .map(|&i| ((row[i] as f64) / temperature.max(1e-6)).exp())
+                            .collect();
+                        idx[rng.categorical(&weights)] as i32
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Timing + comm report for one generation run (the paper's Table 2 row).
+#[derive(Debug, Clone)]
+pub struct GenerateReport {
+    pub tokens: Vec<Vec<i32>>,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    pub decode_steps: usize,
+    pub comm: CommStats,
+}
+
+impl GenerateReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total = (self.prefill_time + self.decode_time).as_secs_f64();
+        (self.tokens.len() * self.tokens[0].len()) as f64 / total
+    }
+
+    pub fn decode_tok_per_sec(&self) -> f64 {
+        (self.tokens.len() * self.decode_steps) as f64 / self.decode_time.as_secs_f64()
+    }
+}
+
+/// Static-batch generation (the paper's benchmark setting: all rows share a
+/// prompt length, generate `gen_len` tokens together).
+pub fn generate(
+    engine: &mut TpEngine,
+    prompts: &[Vec<i32>],
+    gen_len: usize,
+    sampler: &Sampler,
+) -> Result<GenerateReport> {
+    assert_eq!(prompts.len(), engine.batch);
+    engine.comm.reset_stats();
+    let prompt_len = prompts[0].len();
+    let bucket = engine.pick_bucket(prompt_len)?;
+    let mut rng = Rng::new(match sampler {
+        Sampler::TopK { seed, .. } => *seed,
+        _ => 0,
+    });
+
+    // pad prompts into the bucket
+    let mut tokens = vec![0i32; engine.batch * bucket];
+    let mut true_lens = vec![0usize; engine.batch];
+    for (b, p) in prompts.iter().enumerate() {
+        tokens[b * bucket..b * bucket + p.len()].copy_from_slice(p);
+        true_lens[b] = p.len();
+    }
+
+    let t0 = Instant::now();
+    let logits = engine.prefill(&tokens, bucket, &true_lens)?;
+    let prefill_time = t0.elapsed();
+
+    let mut out: Vec<Vec<i32>> = vec![Vec::with_capacity(gen_len); engine.batch];
+    let mut next = sampler.sample(&logits, &mut rng);
+    for (b, &t) in next.iter().enumerate() {
+        out[b].push(t);
+    }
+
+    let t1 = Instant::now();
+    for _ in 1..gen_len {
+        let logits = engine.decode(&next)?;
+        next = sampler.sample(&logits, &mut rng);
+        for (b, &t) in next.iter().enumerate() {
+            out[b].push(t);
+        }
+    }
+    let decode_time = t1.elapsed();
+
+    Ok(GenerateReport {
+        tokens: out,
+        prefill_time,
+        decode_time,
+        decode_steps: gen_len - 1,
+        comm: engine.comm.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits(rows: &[&[f32]]) -> HostTensor {
+        let b = rows.len();
+        let v = rows[0].len();
+        HostTensor::new(vec![b, v], rows.concat())
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let l = logits(&[&[0.1, 3.0, -1.0], &[5.0, 0.0, 0.0]]);
+        let out = Sampler::Greedy.sample(&l, &mut Rng::new(0));
+        assert_eq!(out, vec![1, 0]);
+    }
+
+    #[test]
+    fn topk_stays_in_top_k() {
+        let l = logits(&[&[0.0, 10.0, 9.0, -5.0]]);
+        let s = Sampler::TopK { k: 2, temperature: 1.0, seed: 7 };
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let t = s.sample(&l, &mut rng)[0];
+            assert!(t == 1 || t == 2, "{t}");
+        }
+    }
+
+    #[test]
+    fn topk_low_temperature_is_greedy() {
+        let l = logits(&[&[0.0, 2.0, 1.9]]);
+        let s = Sampler::TopK { k: 3, temperature: 0.01, seed: 1 };
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            assert_eq!(s.sample(&l, &mut rng)[0], 1);
+        }
+    }
+}

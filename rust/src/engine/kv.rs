@@ -1,0 +1,118 @@
+//! KV-cache slabs: one [B, KVl, M, D] tensor pair per (rank, layer), plus
+//! per-slot length bookkeeping for continuous batching.
+
+use anyhow::{bail, Result};
+
+use crate::model::HostTensor;
+
+/// Host-resident KV cache for one rank: `layers x {k, v}` slabs.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub k: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub batch: usize,
+    pub kv_heads_l: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, batch: usize, kv_heads_l: usize, max_seq: usize, head_dim: usize) -> KvCache {
+        let shape = vec![batch, kv_heads_l, max_seq, head_dim];
+        KvCache {
+            k: (0..layers).map(|_| HostTensor::zeros(shape.clone())).collect(),
+            v: (0..layers).map(|_| HostTensor::zeros(shape.clone())).collect(),
+            batch,
+            kv_heads_l,
+            max_seq,
+            head_dim,
+        }
+    }
+
+    /// Bytes per slot (both K and V, all layers) — the KV budget unit the
+    /// batcher admits against.
+    pub fn bytes_per_slot(&self) -> usize {
+        2 * self.k.len() * self.kv_heads_l * self.max_seq * self.head_dim * 4
+    }
+
+    fn slot_stride(&self) -> usize {
+        self.kv_heads_l * self.max_seq * self.head_dim
+    }
+
+    /// Overwrite slot `b` of layer `layer` from a single-slot cache tensor
+    /// (shape [1, KVl, M, D]) — used when a b=1 prefill lands in a multi-slot
+    /// decode batch (continuous batching).
+    pub fn write_slot(&mut self, layer: usize, b: usize, k1: &HostTensor, v1: &HostTensor) -> Result<()> {
+        let stride = self.slot_stride();
+        if k1.data.len() != stride || v1.data.len() != stride {
+            bail!(
+                "slot tensor has {} elems, want {stride} (shape {:?})",
+                k1.data.len(),
+                k1.shape
+            );
+        }
+        if b >= self.batch {
+            bail!("slot {b} out of range (batch {})", self.batch);
+        }
+        self.k[layer].data[b * stride..(b + 1) * stride].copy_from_slice(&k1.data);
+        self.v[layer].data[b * stride..(b + 1) * stride].copy_from_slice(&v1.data);
+        Ok(())
+    }
+
+    /// Extract slot `b` of layer `layer` as a [1, KVl, M, D] pair.
+    pub fn read_slot(&self, layer: usize, b: usize) -> (HostTensor, HostTensor) {
+        let stride = self.slot_stride();
+        let shape = vec![1, self.kv_heads_l, self.max_seq, self.head_dim];
+        (
+            HostTensor::new(shape.clone(), self.k[layer].data[b * stride..(b + 1) * stride].to_vec()),
+            HostTensor::new(shape, self.v[layer].data[b * stride..(b + 1) * stride].to_vec()),
+        )
+    }
+
+    /// Zero a slot (request eviction).
+    pub fn clear_slot(&mut self, b: usize) {
+        let stride = self.slot_stride();
+        for layer in 0..self.k.len() {
+            self.k[layer].data[b * stride..(b + 1) * stride].fill(0.0);
+            self.v[layer].data[b * stride..(b + 1) * stride].fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_roundtrip() {
+        let mut kv = KvCache::new(2, 3, 2, 4, 2);
+        let stride = 2 * 4 * 2;
+        let k1 = HostTensor::new(vec![1, 2, 4, 2], (0..stride).map(|x| x as f32).collect());
+        let v1 = HostTensor::new(vec![1, 2, 4, 2], (0..stride).map(|x| -(x as f32)).collect());
+        kv.write_slot(1, 2, &k1, &v1).unwrap();
+        let (k, v) = kv.read_slot(1, 2);
+        assert_eq!(k.data, k1.data);
+        assert_eq!(v.data, v1.data);
+        // other slots untouched
+        let (k0, _) = kv.read_slot(1, 0);
+        assert!(k0.data.iter().all(|&x| x == 0.0));
+        kv.clear_slot(2);
+        let (k, _) = kv.read_slot(1, 2);
+        assert!(k.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut kv = KvCache::new(1, 2, 2, 4, 2);
+        let bad = HostTensor::zeros(vec![1, 2, 2, 2]);
+        assert!(kv.write_slot(0, 0, &bad, &bad).is_err());
+        let good = HostTensor::zeros(vec![1, 2, 4, 2]);
+        assert!(kv.write_slot(0, 5, &good, &good).is_err());
+    }
+
+    #[test]
+    fn bytes_per_slot() {
+        let kv = KvCache::new(2, 1, 2, 8, 4);
+        assert_eq!(kv.bytes_per_slot(), 2 * 2 * 2 * 8 * 4 * 4);
+    }
+}

@@ -1,0 +1,21 @@
+//! The multi-rank TP execution engine (the paper's system, L3).
+//!
+//! N simulated ranks each execute their *real* weight-sharded HLO modules on
+//! the PJRT CPU client; the engine owns the residual stream, performs the
+//! AllReduces (real sums + modeled link time), and schedules module
+//! execution per architecture — Standard blocks on every reduce, Ladder
+//! launches the next module first (paper Algorithm 1), Parallel fuses
+//! attention+MLP into one reduce, Desync-nx drops reduces and lets per-rank
+//! residual streams diverge, Upperbound deletes communication.
+
+pub mod generate;
+pub mod kv;
+pub mod rank;
+pub mod tpengine;
+pub mod trace;
+
+pub use generate::{GenerateReport, Sampler};
+pub use kv::KvCache;
+pub use rank::RankState;
+pub use tpengine::TpEngine;
+pub use trace::EngineTracer;

@@ -1,0 +1,205 @@
+//! Per-rank state: sharded weight literals (converted once) + KV cache, and
+//! the module invocations for one rank.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::kv::KvCache;
+use crate::model::{HostTensor, LlamaConfig, RankWeights, WeightStore};
+use crate::runtime::{literal_i32, tensor_from_literal, ExecCache};
+
+/// Per-layer weight literals in module argument order.
+struct LayerLits {
+    attn: Vec<Literal>, // norm, wq, wk, wv, wo
+    mlp: Vec<Literal>,  // norm, wg, wu, wd
+}
+
+/// Inference phase (selects the exported module variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// One simulated TP rank: weights + caches + module runners.
+pub struct RankState {
+    pub rank: usize,
+    pub tp: usize,
+    pub kv: KvCache,
+    layers: Vec<LayerLits>,
+    emb: Literal,
+    final_norm: Literal,
+    lm: Literal,
+}
+
+impl RankState {
+    pub fn new(
+        cfg: &LlamaConfig,
+        weights: &WeightStore,
+        rank: usize,
+        tp: usize,
+        batch: usize,
+    ) -> Result<RankState> {
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for i in 0..cfg.layers {
+            let rw: RankWeights = weights.rank_layer(i, rank, tp)?;
+            layers.push(LayerLits {
+                attn: vec![
+                    rw.attn_norm.to_literal()?,
+                    rw.wq.to_literal()?,
+                    rw.wk.to_literal()?,
+                    rw.wv.to_literal()?,
+                    rw.wo.to_literal()?,
+                ],
+                mlp: vec![
+                    rw.mlp_norm.to_literal()?,
+                    rw.wg.to_literal()?,
+                    rw.wu.to_literal()?,
+                    rw.wd.to_literal()?,
+                ],
+            });
+        }
+        Ok(RankState {
+            rank,
+            tp,
+            kv: KvCache::new(cfg.layers, batch, cfg.kv_heads / tp, cfg.max_seq, cfg.head_dim),
+            layers,
+            emb: weights.get("emb")?.to_literal()?,
+            final_norm: weights.get("final_norm")?.to_literal()?,
+            lm: weights.rank_lm(rank, tp)?.to_literal()?,
+        })
+    }
+
+    /// Run the embedding module (replicated; only rank 0 needs to call it).
+    pub fn embed(&self, exec: &ExecCache, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
+        if tokens.len() != b * s {
+            bail!("embed: {} tokens for [{b},{s}]", tokens.len());
+        }
+        let name = format!("embed__b{b}__s{s}");
+        let toks = literal_i32(tokens, &[b, s])?;
+        let outs = exec.run(&name, &[&toks, &self.emb])?;
+        tensor_from_literal(&outs[0])
+    }
+
+    /// Attention module (prefill or decode) for one layer. Updates this
+    /// rank's KV cache in place; single-slot prefill (`slot=Some(b)`) runs
+    /// the b=1 module against that slot's cache region (continuous
+    /// batching).
+    pub fn attn(
+        &mut self,
+        exec: &ExecCache,
+        layer: usize,
+        x: &HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+    ) -> Result<HostTensor> {
+        self.block(exec, layer, x, phase, lens, slot, BlockKind::Attn)
+    }
+
+    /// Fused attention+MLP module (Parallel architecture).
+    pub fn fused(
+        &mut self,
+        exec: &ExecCache,
+        layer: usize,
+        x: &HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+    ) -> Result<HostTensor> {
+        self.block(exec, layer, x, phase, lens, slot, BlockKind::Fused)
+    }
+
+    fn block(
+        &mut self,
+        exec: &ExecCache,
+        layer: usize,
+        x: &HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        kind: BlockKind,
+    ) -> Result<HostTensor> {
+        let (b, s) = (x.shape[0], x.shape[1]);
+        // §Perf: full-batch calls *take* the cache tensors (they are
+        // replaced by the module outputs below) instead of cloning ~2x the
+        // KV slab per attention call. Slot calls still copy (subrange).
+        let empty = || HostTensor::new(vec![0], Vec::new());
+        let (kc, vc) = match slot {
+            Some(slot_b) => self.kv.read_slot(layer, slot_b),
+            None => (
+                std::mem::replace(&mut self.kv.k[layer], empty()),
+                std::mem::replace(&mut self.kv.v[layer], empty()),
+            ),
+        };
+        let x_lit = x.to_literal()?;
+        let kc_lit = kc.to_literal()?;
+        let vc_lit = vc.to_literal()?;
+        let lens_lit = match (phase, lens) {
+            (Phase::Decode, Some(l)) => Some(literal_i32(l, &[b])?),
+            (Phase::Decode, None) => bail!("decode needs lens"),
+            _ => None,
+        };
+        let mut args: Vec<&Literal> = vec![&x_lit];
+        let lw = &self.layers[layer];
+        match kind {
+            BlockKind::Attn => args.extend(lw.attn.iter()),
+            BlockKind::Fused => {
+                // PaLM fusion: shared pre-norm (attn_norm), then both branches.
+                args.extend(lw.attn.iter());
+                args.extend(lw.mlp.iter().skip(1)); // wg, wu, wd
+            }
+        }
+        args.push(&kc_lit);
+        args.push(&vc_lit);
+        let prefix = match kind {
+            BlockKind::Attn => "attn",
+            BlockKind::Fused => "fused",
+        };
+        let name = match phase {
+            Phase::Prefill => format!("{prefix}_prefill__tp{}__b{b}__s{s}", self.tp),
+            Phase::Decode => {
+                args.push(lens_lit.as_ref().unwrap());
+                format!("{prefix}_decode__tp{}__b{b}", self.tp)
+            }
+        };
+        let outs = exec.run(&name, &args)?;
+        let partial = tensor_from_literal(&outs[0])?;
+        let k_new = tensor_from_literal(&outs[1])?;
+        let v_new = tensor_from_literal(&outs[2])?;
+        match slot {
+            Some(slot_b) => self.kv.write_slot(layer, slot_b, &k_new, &v_new)?,
+            None => {
+                self.kv.k[layer] = k_new;
+                self.kv.v[layer] = v_new;
+            }
+        }
+        Ok(partial)
+    }
+
+    /// MLP module for one layer (no cache interaction).
+    pub fn mlp(&self, exec: &ExecCache, layer: usize, x: &HostTensor) -> Result<HostTensor> {
+        let (b, s) = (x.shape[0], x.shape[1]);
+        let name = format!("mlp__tp{}__b{b}__s{s}", self.tp);
+        let x_lit = x.to_literal()?;
+        let mut args: Vec<&Literal> = vec![&x_lit];
+        args.extend(self.layers[layer].mlp.iter());
+        let outs = exec.run(&name, &args)?;
+        tensor_from_literal(&outs[0])
+    }
+
+    /// Final norm + this rank's LM-head vocab shard: x [B,H] -> [B, V/tp].
+    pub fn lm_head(&self, exec: &ExecCache, x: &HostTensor) -> Result<HostTensor> {
+        let b = x.shape[0];
+        let name = format!("lm_head__tp{}__b{b}", self.tp);
+        let x_lit = x.to_literal()?;
+        let outs = exec.run(&name, &[&x_lit, &self.final_norm, &self.lm])?;
+        tensor_from_literal(&outs[0])
+    }
+}
+
+#[derive(Clone, Copy)]
+enum BlockKind {
+    Attn,
+    Fused,
+}

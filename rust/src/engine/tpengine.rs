@@ -1,0 +1,416 @@
+//! The TP engine: per-architecture forward scheduling over per-rank modules.
+//!
+//! This file is the paper's Algorithm 1 (and its Standard / Parallel /
+//! Desync / Upperbound counterparts) in executable form. The residual
+//! stream lives here as host tensors; every AllReduce goes through the
+//! [`CollectiveEngine`] which performs the real reduction and charges the
+//! modeled link time as a deadline — so the Ladder schedule's overlap is a
+//! genuine wall-clock effect.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::rank::{Phase, RankState};
+use crate::comm::{CollectiveEngine, CommHandle, Interconnect};
+use crate::model::{Arch, HostTensor, LlamaConfig, WeightStore};
+use crate::runtime::ExecCache;
+
+/// Multi-rank tensor-parallel engine for one (arch, tp, batch) setting.
+pub struct TpEngine {
+    pub cfg: LlamaConfig,
+    pub tp: usize,
+    pub arch: Arch,
+    pub batch: usize,
+    pub comm: CollectiveEngine,
+    exec: Rc<ExecCache>,
+    ranks: Vec<RankState>,
+    /// Current sequence length per batch slot (continuous batching state).
+    pub lens: Vec<i32>,
+    buckets: Vec<usize>,
+    /// Optional wall-clock execution tracer (Figure 6 counterpart); enable
+    /// with [`TpEngine::enable_trace`].
+    pub tracer: Option<super::trace::EngineTracer>,
+}
+
+impl TpEngine {
+    pub fn new(
+        exec: Rc<ExecCache>,
+        weights: &WeightStore,
+        tp: usize,
+        arch: Arch,
+        batch: usize,
+        interconnect: Interconnect,
+    ) -> Result<TpEngine> {
+        let cfg = exec.artifacts().config.clone();
+        let (tps, batches, buckets) = exec.artifacts().serving_params()?;
+        if !tps.contains(&tp) {
+            bail!("tp={tp} not exported (available: {tps:?})");
+        }
+        if !batches.contains(&batch) {
+            bail!("batch={batch} not exported (available: {batches:?})");
+        }
+        if cfg.heads % tp != 0 || cfg.kv_heads % tp != 0 {
+            bail!("tp={tp} does not divide heads/kv_heads");
+        }
+        let ranks = (0..tp)
+            .map(|t| RankState::new(&cfg, weights, t, tp, batch))
+            .collect::<Result<Vec<_>>>()?;
+        // Upperbound deletes ALL communication (paper: "removes all
+        // communication operations"), including the lm-head AllGather — so
+        // its collective engine runs on the free local fabric.
+        let interconnect = if matches!(arch, Arch::Upperbound) {
+            crate::comm::Interconnect::new(crate::comm::Fabric::Local)
+        } else {
+            interconnect
+        };
+        Ok(TpEngine {
+            cfg,
+            tp,
+            arch,
+            batch,
+            comm: CollectiveEngine::new(tp, interconnect),
+            exec,
+            ranks,
+            lens: vec![0; batch],
+            buckets,
+            tracer: None,
+        })
+    }
+
+    /// Start (or restart) wall-clock tracing of module + AllReduce spans.
+    pub fn enable_trace(&mut self) {
+        self.tracer = Some(super::trace::EngineTracer::new());
+    }
+
+    /// Smallest exported prefill bucket that fits `prompt_len`.
+    pub fn pick_bucket(&self, prompt_len: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= prompt_len)
+            .min()
+            .ok_or_else(|| {
+                anyhow::anyhow!("prompt of {prompt_len} exceeds largest bucket {:?}", self.buckets)
+            })
+    }
+
+    // ---------------------------------------------------------------------
+    // public inference API
+    // ---------------------------------------------------------------------
+
+    /// Batched prefill: `tokens` is [B, bucket] (padded); `true_lens[b]` is
+    /// each row's real prompt length. Returns last-position logits [B, V].
+    pub fn prefill(&mut self, tokens: &[i32], bucket: usize, true_lens: &[usize]) -> Result<HostTensor> {
+        let b = self.batch;
+        if tokens.len() != b * bucket || true_lens.len() != b {
+            bail!("prefill shapes: {} tokens, {} lens", tokens.len(), true_lens.len());
+        }
+        let x0 = self.ranks[0].embed(&self.exec, tokens, b, bucket)?;
+        let finals = self.forward(x0, Phase::Prefill, None, None)?;
+        for (slot, &l) in true_lens.iter().enumerate() {
+            self.lens[slot] = l as i32;
+        }
+        let last: Vec<usize> = true_lens.iter().map(|&l| l - 1).collect();
+        self.head(&finals, &last)
+    }
+
+    /// Single-slot prefill into `slot` (continuous batching): `tokens` is
+    /// [1, bucket]. Returns last-position logits [V].
+    pub fn prefill_slot(&mut self, slot: usize, tokens: &[i32], bucket: usize, true_len: usize) -> Result<Vec<f32>> {
+        if slot >= self.batch {
+            bail!("slot {slot} out of range");
+        }
+        let x0 = self.ranks[0].embed(&self.exec, tokens, 1, bucket)?;
+        let finals = self.forward(x0, Phase::Prefill, None, Some(slot))?;
+        self.lens[slot] = true_len as i32;
+        let logits = self.head(&finals, &[true_len - 1])?;
+        Ok(logits.data)
+    }
+
+    /// One decode step for all slots: `tokens` is [B]. Returns logits [B, V]
+    /// and advances every slot's length. Inactive slots decode garbage that
+    /// is never read (their cache writes land beyond any live region).
+    pub fn decode(&mut self, tokens: &[i32]) -> Result<HostTensor> {
+        let b = self.batch;
+        if tokens.len() != b {
+            bail!("decode wants {b} tokens, got {}", tokens.len());
+        }
+        let lens = self.lens.clone();
+        let x0 = self.ranks[0].embed(&self.exec, tokens, b, 1)?;
+        let finals = self.forward(x0, Phase::Decode, Some(&lens), None)?;
+        for l in self.lens.iter_mut() {
+            *l += 1;
+        }
+        let last = vec![0usize; b];
+        self.head(&finals, &last)
+    }
+
+    /// Release a slot (request finished/evicted).
+    pub fn release_slot(&mut self, slot: usize) {
+        self.lens[slot] = 0;
+        for rank in &mut self.ranks {
+            rank.kv.clear_slot(slot);
+        }
+    }
+
+    /// KV bytes one slot occupies across all ranks (batcher admission unit).
+    pub fn kv_bytes_per_slot(&self) -> usize {
+        self.ranks.iter().map(|r| r.kv.bytes_per_slot()).sum()
+    }
+
+    pub fn exec(&self) -> &ExecCache {
+        &self.exec
+    }
+
+    // ---------------------------------------------------------------------
+    // the per-architecture forward schedules
+    // ---------------------------------------------------------------------
+
+    /// Run all layers; returns per-rank final residuals.
+    fn forward(
+        &mut self,
+        x0: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+    ) -> Result<Vec<HostTensor>> {
+        match self.arch {
+            Arch::Standard => self.fwd_synced(x0, phase, lens, slot, self.cfg.layers),
+            Arch::Ladder => self.fwd_synced(x0, phase, lens, slot, 0),
+            Arch::Hybrid => self.fwd_synced(x0, phase, lens, slot, self.cfg.layers / 2),
+            Arch::Parallel => self.fwd_parallel(x0, phase, lens, slot),
+            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, slot, n),
+            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, slot),
+        }
+    }
+
+    /// Standard (`ladder_from == layers`), Ladder (`== 0`) and Hybrid
+    /// (`== layers/2`) share one loop. For ladder layers the AllReduce of a
+    /// module is waited on only *after* the next module has been issued —
+    /// paper Algorithm 1 — so the modeled link time runs concurrently with
+    /// the next module's PJRT execution.
+    fn fwd_synced(
+        &mut self,
+        mut x: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        ladder_from: usize,
+    ) -> Result<Vec<HostTensor>> {
+        let layers = self.cfg.layers;
+        let mut pend_attn: Option<CommHandle> = None;
+        let mut pend_mlp: Option<CommHandle> = None;
+        for i in 0..layers {
+            if i >= ladder_from {
+                // -- ladder block (Alg. 1) --
+                if let Some(h) = pend_attn.take() {
+                    self.absorb(&mut x, h); // wait prev layer's attn reduce
+                }
+                let attn = self.run_attn_all(i, &x, phase, lens, slot)?;
+                let attn_h = self.comm.allreduce(attn)?; // async
+                if let Some(h) = pend_mlp.take() {
+                    self.absorb(&mut x, h); // wait prev layer's MLP reduce
+                }
+                let mlp = self.run_mlp_all(i, &x)?; // overlaps attn_h
+                let mlp_h = self.comm.allreduce(mlp)?; // async into next layer
+                pend_attn = Some(attn_h);
+                pend_mlp = Some(mlp_h);
+            } else {
+                // -- standard block: blocking reduces --
+                let attn = self.run_attn_all(i, &x, phase, lens, slot)?;
+                let h = self.comm.allreduce(attn)?;
+                self.absorb(&mut x, h);
+                let mlp = self.run_mlp_all(i, &x)?;
+                let h = self.comm.allreduce(mlp)?;
+                self.absorb(&mut x, h);
+            }
+        }
+        if let Some(h) = pend_attn.take() {
+            self.absorb(&mut x, h);
+        }
+        if let Some(h) = pend_mlp.take() {
+            self.absorb(&mut x, h);
+        }
+        Ok(vec![x; self.tp])
+    }
+
+    /// PaLM parallel attention+MLP: one blocking reduce per layer.
+    fn fwd_parallel(
+        &mut self,
+        mut x: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+    ) -> Result<Vec<HostTensor>> {
+        for i in 0..self.cfg.layers {
+            let mut partials = Vec::with_capacity(self.tp);
+            for t in 0..self.tp {
+                partials.push(self.ranks[t].fused(&self.exec, i, &x, phase, lens, slot)?);
+            }
+            let h = self.comm.allreduce(partials)?;
+            self.absorb(&mut x, h);
+        }
+        Ok(vec![x; self.tp])
+    }
+
+    /// Desync-nx (paper §5): keep every n-th AllReduce; a retained reduce
+    /// carries `partial_t + r_t / tp`, re-synchronizing the streams.
+    fn fwd_desync(
+        &mut self,
+        x0: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        n: usize,
+    ) -> Result<Vec<HostTensor>> {
+        let tp = self.tp;
+        let mut rs: Vec<HostTensor> = vec![x0; tp];
+        let mut c = 0usize;
+        let mut synced = true;
+        for i in 0..self.cfg.layers {
+            for kind in [BlockSel::Attn, BlockSel::Mlp] {
+                let mut partials = Vec::with_capacity(tp);
+                for t in 0..tp {
+                    let p = match kind {
+                        BlockSel::Attn => self.ranks[t].attn(&self.exec, i, &rs[t], phase, lens, slot)?,
+                        BlockSel::Mlp => self.ranks[t].mlp(&self.exec, i, &rs[t])?,
+                    };
+                    partials.push(p);
+                }
+                c += 1;
+                if c % n == 0 {
+                    // retained reduce: message = partial + residual/tp
+                    for (t, p) in partials.iter_mut().enumerate() {
+                        for (a, b) in p.data.iter_mut().zip(&rs[t].data) {
+                            *a += b / tp as f32;
+                        }
+                    }
+                    let h = self.comm.allreduce(partials)?;
+                    if let Some(tr) = &mut self.tracer {
+                        let (launch, ready) = h.span();
+                        tr.record("allreduce_resync", 1, launch, ready);
+                    }
+                    let (x, exposed) = h.wait();
+                    self.comm.record_exposed(exposed);
+                    rs = vec![x; tp];
+                    synced = true;
+                } else {
+                    for (t, p) in partials.into_iter().enumerate() {
+                        add_assign(&mut rs[t], &p);
+                    }
+                    synced = false;
+                }
+            }
+        }
+        if !synced {
+            // final resync (mean) so the head sees one residual
+            let msgs: Vec<HostTensor> = rs
+                .iter()
+                .map(|r| HostTensor::new(r.shape.clone(), r.data.iter().map(|v| v / tp as f32).collect()))
+                .collect();
+            let h = self.comm.allreduce(msgs)?;
+            let (x, exposed) = h.wait();
+            self.comm.record_exposed(exposed);
+            rs = vec![x; tp];
+        }
+        Ok(rs)
+    }
+
+    /// Communication deleted entirely (speed ceiling; wrong numerics).
+    fn fwd_upperbound(
+        &mut self,
+        mut x: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+    ) -> Result<Vec<HostTensor>> {
+        for i in 0..self.cfg.layers {
+            let attn = self.run_attn_all(i, &x, phase, lens, slot)?;
+            add_assign(&mut x, &attn[0]);
+            let mlp = self.run_mlp_all(i, &x)?;
+            add_assign(&mut x, &mlp[0]);
+        }
+        Ok(vec![x; self.tp])
+    }
+
+    // ---------------------------------------------------------------------
+    // helpers
+    // ---------------------------------------------------------------------
+
+    fn run_attn_all(
+        &mut self,
+        layer: usize,
+        x: &HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+    ) -> Result<Vec<HostTensor>> {
+        let t0 = std::time::Instant::now();
+        let out: Result<Vec<HostTensor>> = (0..self.tp)
+            .map(|t| self.ranks[t].attn(&self.exec, layer, x, phase, lens, slot))
+            .collect();
+        if let Some(tr) = &mut self.tracer {
+            tr.record(&format!("attn{layer}"), 0, t0, std::time::Instant::now());
+        }
+        out
+    }
+
+    fn run_mlp_all(&mut self, layer: usize, x: &HostTensor) -> Result<Vec<HostTensor>> {
+        let t0 = std::time::Instant::now();
+        let out: Result<Vec<HostTensor>> = (0..self.tp)
+            .map(|t| self.ranks[t].mlp(&self.exec, layer, x))
+            .collect();
+        if let Some(tr) = &mut self.tracer {
+            tr.record(&format!("mlp{layer}"), 0, t0, std::time::Instant::now());
+        }
+        out
+    }
+
+    /// Wait a handle, record exposed time, add the delta into the residual.
+    fn absorb(&mut self, x: &mut HostTensor, h: CommHandle) {
+        if let Some(tr) = &mut self.tracer {
+            let (launch, ready) = h.span();
+            tr.record("allreduce", 1, launch, ready);
+        }
+        let (delta, exposed) = h.wait();
+        self.comm.record_exposed(exposed);
+        add_assign(x, &delta);
+    }
+
+    /// lm head: slice each row's `last[b]` position, run per-rank head
+    /// shards, AllGather the vocab dimension. Returns [B, V].
+    fn head(&self, finals: &[HostTensor], last: &[usize]) -> Result<HostTensor> {
+        let h = self.cfg.hidden;
+        let b = last.len();
+        let mut shards = Vec::with_capacity(self.tp);
+        for t in 0..self.tp {
+            let xt = &finals[t];
+            let s = xt.shape[1];
+            let mut rows = Vec::with_capacity(b * h);
+            for (bi, &pos) in last.iter().enumerate() {
+                if pos >= s {
+                    bail!("last position {pos} out of range (S={s})");
+                }
+                let base = (bi * s + pos) * h;
+                rows.extend_from_slice(&xt.data[base..base + h]);
+            }
+            let x_last = HostTensor::new(vec![b, h], rows);
+            shards.push(self.ranks[t].lm_head(&self.exec, &x_last)?);
+        }
+        self.comm.allgather_concat(shards)
+    }
+}
+
+#[derive(Clone, Copy)]
+enum BlockSel {
+    Attn,
+    Mlp,
+}
+
+fn add_assign(x: &mut HostTensor, delta: &HostTensor) {
+    debug_assert_eq!(x.shape, delta.shape);
+    for (a, b) in x.data.iter_mut().zip(&delta.data) {
+        *a += b;
+    }
+}

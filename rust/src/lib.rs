@@ -1,0 +1,35 @@
+//! # ladder-infer
+//!
+//! A tensor-parallel LLM inference framework reproducing **Ladder-Residual:
+//! Parallelism-Aware Architecture for Accelerating Large Model Inference with
+//! Communication Overlapping** (ICML 2025).
+//!
+//! Three-layer architecture:
+//!
+//! * **L1/L2 (build-time Python)** — Pallas kernels + a Llama-style JAX model
+//!   exported per-TP-rank, split at every AllReduce edge, AOT-lowered to HLO
+//!   text in `artifacts/`.
+//! * **L3 (this crate)** — the coordinator: a multi-rank TP engine whose
+//!   per-architecture schedulers (Standard / Ladder / Parallel / Desync-nx /
+//!   comm-free upper bound) own the residual stream, the collectives and the
+//!   overlap; a serving stack (router, continuous batcher, KV manager); a
+//!   roofline + interconnect performance model that regenerates every table
+//!   and figure in the paper; and a training driver for the quality-parity
+//!   experiments.
+//!
+//! Python never runs on the request path: the rust binary is self-contained
+//! once `make artifacts` has produced the HLO modules.
+
+pub mod comm;
+pub mod engine;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type (anyhow is the only error dependency available in
+/// the offline vendor set; it matches the xla crate's error style).
+pub type Result<T> = anyhow::Result<T>;

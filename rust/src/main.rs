@@ -1,0 +1,160 @@
+//! ladder-infer CLI — the launcher.
+//!
+//! Subcommands:
+//!   generate  one-shot batched generation on an artifact config
+//!   serve     boot the line-JSON TCP serving API (continuous batching)
+//!   tables    regenerate the paper's tables/figures from the perf model
+//!   train     run the quality-parity training experiments
+//!
+//! Example:
+//!   ladder-infer serve --model small --arch ladder --tp 2 --port 8771
+//!   echo '{"prompt":"hello","max_new_tokens":8}' | nc -q1 localhost 8771
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use ladder_infer::comm::Interconnect;
+use ladder_infer::engine::{generate, Sampler, TpEngine};
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::perfmodel::tables;
+use ladder_infer::runtime::ExecCache;
+use ladder_infer::server::{api, Batcher, BatcherConfig};
+use ladder_infer::tokenizer::Tokenizer;
+use ladder_infer::trainer::parity;
+use ladder_infer::util::args::Args;
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    match cmd.as_str() {
+        "generate" => cmd_generate(argv),
+        "serve" => cmd_serve(argv),
+        "tables" => cmd_tables(argv),
+        "train" => cmd_train(argv),
+        _ => {
+            println!(
+                "ladder-infer — Ladder-Residual TP inference framework\n\n\
+                 usage: ladder-infer <generate|serve|tables|train> [options]\n\
+                 run any subcommand with --help for its options.\n\n\
+                 see also: cargo run --release --example <quickstart|serve_e2e|\
+                 train_parity|adapt_hybrid|paper_tables>"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn engine_args(program: &str, about: &str) -> Args {
+    Args::new(program, about)
+        .opt("model", Some("tiny"), "artifact config (tiny|small)")
+        .opt("arch", Some("ladder"), "standard|ladder|parallel|desync2|desync4|upperbound|hybrid")
+        .opt("tp", Some("2"), "tensor-parallel degree")
+        .opt("batch", Some("2"), "batch slots")
+        .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local")
+        .opt("seed", Some("42"), "weight seed (tiny uses shipped test weights)")
+}
+
+fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
+    let model = args.get("model")?;
+    let exec = Rc::new(ExecCache::open(&model)?);
+    let cfg = exec.artifacts().config.clone();
+    let weights = if model == "tiny" {
+        let flat = exec.artifacts().read_f32("testvec_weights.f32")?;
+        WeightStore::from_flat(&flat, exec.artifacts().packing()?, cfg.layers)?
+    } else {
+        WeightStore::random(&cfg, args.get_usize("seed")? as u64)
+    };
+    let engine = TpEngine::new(
+        exec,
+        &weights,
+        args.get_usize("tp")?,
+        Arch::parse(&args.get("arch")?)?,
+        args.get_usize("batch")?,
+        Interconnect::parse(&args.get("fabric")?)?,
+    )?;
+    let tok = Tokenizer::bytes_only(cfg.vocab);
+    Ok((engine, tok))
+}
+
+fn cmd_generate(argv: Vec<String>) -> Result<()> {
+    let args = engine_args("ladder-infer generate", "one-shot batched generation")
+        .opt("prompt", Some("hello world"), "prompt text (repeated per slot)")
+        .opt("gen", Some("16"), "tokens to generate")
+        .parse(argv)?;
+    let (mut engine, tok) = build_engine(&args)?;
+    let prompt = tok.encode(&args.get("prompt")?);
+    let prompts = vec![prompt; engine.batch];
+    let report = generate::generate(&mut engine, &prompts, args.get_usize("gen")?, &Sampler::Greedy)?;
+    for (i, t) in report.tokens.iter().enumerate() {
+        println!("slot {i}: {:?}", tok.decode(t));
+    }
+    println!(
+        "prefill {:.1}ms, decode {:.1}ms, {:.1} tok/s, comm hidden {:.0}%",
+        report.prefill_time.as_secs_f64() * 1e3,
+        report.decode_time.as_secs_f64() * 1e3,
+        report.tokens_per_sec(),
+        report.comm.hidden_fraction() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let args = engine_args("ladder-infer serve", "line-JSON TCP serving API")
+        .opt("port", Some("8771"), "listen port (0 = ephemeral)")
+        .opt("max-requests", Some("0"), "stop after N completions (0 = forever)")
+        .parse(argv)?;
+    let (engine, tok) = build_engine(&args)?;
+    let mut batcher = Batcher::new(engine, BatcherConfig::default());
+    let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
+    let (jobs, port) = api::spawn_listener(&addr, tok)?;
+    println!(
+        "serving {} [{}] tp={} on 127.0.0.1:{port} — protocol: one JSON per line",
+        args.get("model")?,
+        args.get("arch")?,
+        args.get_usize("tp")?
+    );
+    api::serve_forever(&mut batcher, jobs, args.get_usize("max-requests")?)
+}
+
+fn cmd_tables(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("ladder-infer tables", "regenerate paper tables/figures")
+        .opt("only", Some(""), "comma list: table1,table2,fig2,fig3,fig4,table6")
+        .parse(argv)?;
+    let only = args.get("only")?;
+    let want = |n: &str| only.is_empty() || only.split(',').any(|s| s == n);
+    if want("table1") {
+        tables::table1().print();
+    }
+    if want("table2") {
+        tables::table2().print();
+    }
+    if want("fig2") {
+        for t in tables::fig2() {
+            t.print();
+        }
+    }
+    if want("fig3") {
+        tables::fig3().print();
+    }
+    if want("fig4") {
+        tables::fig4().print();
+    }
+    if want("table6") {
+        tables::table6().print();
+    }
+    Ok(())
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("ladder-infer train", "quality-parity training experiments")
+        .opt("arches", Some("standard,ladder"), "comma list of architectures")
+        .opt("steps", Some("100"), "training steps")
+        .opt("lr", Some("0.0015"), "peak learning rate")
+        .parse(argv)?;
+    let exec = ExecCache::open("parity")?;
+    let arches: Vec<String> = args.get("arches")?.split(',').map(str::to_string).collect();
+    let refs: Vec<&str> = arches.iter().map(String::as_str).collect();
+    let rows = parity::pretrain_parity(&exec, &refs, args.get_usize("steps")?, args.get_f64("lr")? as f32, 8)?;
+    parity::parity_table("pretraining parity", &rows).print();
+    Ok(())
+}

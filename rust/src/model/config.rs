@@ -1,0 +1,194 @@
+//! Model configuration: the exported artifact configs (parsed from the
+//! manifest) and the paper's model-size table (used by the performance
+//! model to regenerate Tables 1-2/6 and Figures 2-4).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// The architecture variants benchmarked in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// Standard transformer: blocking AllReduce after attention and MLP.
+    Standard,
+    /// Ladder Residual (the paper's contribution): module i+1 consumes the
+    /// stale residual, AllReduces overlap with the next module's compute.
+    Ladder,
+    /// PaLM-style parallel attention+MLP: one AllReduce per layer.
+    Parallel,
+    /// Desync Residual-nx (paper §5): keep every n-th AllReduce, the rest
+    /// are dropped and the residual streams desynchronize between syncs.
+    Desync(usize),
+    /// All communication deleted — wrong numerics, speed upper bound.
+    Upperbound,
+    /// Hybrid: lower half standard, upper half ladder (paper §4.2).
+    Hybrid,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Result<Arch> {
+        Ok(match s {
+            "standard" => Arch::Standard,
+            "ladder" => Arch::Ladder,
+            "parallel" => Arch::Parallel,
+            "desync2" => Arch::Desync(2),
+            "desync4" => Arch::Desync(4),
+            "upperbound" => Arch::Upperbound,
+            "hybrid" => Arch::Hybrid,
+            _ => bail!("unknown architecture {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Arch::Standard => "standard".into(),
+            Arch::Ladder => "ladder".into(),
+            Arch::Parallel => "parallel".into(),
+            Arch::Desync(n) => format!("desync{n}"),
+            Arch::Upperbound => "upperbound".into(),
+            Arch::Hybrid => "hybrid".into(),
+        }
+    }
+
+    /// All variants, in the order the paper's tables list them.
+    pub fn all() -> Vec<Arch> {
+        vec![
+            Arch::Standard,
+            Arch::Parallel,
+            Arch::Ladder,
+            Arch::Desync(2),
+            Arch::Desync(4),
+            Arch::Hybrid,
+            Arch::Upperbound,
+        ]
+    }
+}
+
+/// Llama-style model configuration (full, unsharded sizes). Mirrors the
+/// python-side `ModelConfig`; parsed from the artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlamaConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub params: usize,
+}
+
+impl LlamaConfig {
+    pub fn from_json(j: &Json) -> Result<LlamaConfig> {
+        Ok(LlamaConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            hidden: j.get("hidden")?.as_usize()?,
+            layers: j.get("layers")?.as_usize()?,
+            heads: j.get("heads")?.as_usize()?,
+            kv_heads: j.get("kv_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            ffn: j.get("ffn")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            norm_eps: j.get("norm_eps")?.as_f64()?,
+            params: j.get("params")?.as_usize()?,
+        })
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+}
+
+/// A row of the paper's model-size table (Table 1: 1B .. 405B). Dimensions
+/// follow the public Llama-family configs the paper benchmarks.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub params_b: f64,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+/// The size sweep of paper Table 1. 1B/3B use the paper's trained configs
+/// (Llama-3.2-like), 8B..405B are the Llama-3.1 family, 176B is
+/// Bloom/Falcon-class, 34B is CodeLlama-class.
+pub const PAPER_MODELS: &[PaperModel] = &[
+    PaperModel { name: "1B", params_b: 1.2, hidden: 2048, layers: 16, heads: 32, kv_heads: 8, ffn: 8192, vocab: 128256 },
+    PaperModel { name: "3B", params_b: 3.2, hidden: 3072, layers: 28, heads: 24, kv_heads: 8, ffn: 8192, vocab: 128256 },
+    PaperModel { name: "8B", params_b: 8.0, hidden: 4096, layers: 32, heads: 32, kv_heads: 8, ffn: 14336, vocab: 128256 },
+    PaperModel { name: "34B", params_b: 34.0, hidden: 8192, layers: 48, heads: 64, kv_heads: 8, ffn: 22016, vocab: 32000 },
+    PaperModel { name: "70B", params_b: 70.0, hidden: 8192, layers: 80, heads: 64, kv_heads: 8, ffn: 28672, vocab: 128256 },
+    PaperModel { name: "176B", params_b: 176.0, hidden: 14336, layers: 70, heads: 112, kv_heads: 8, ffn: 57344, vocab: 250880 },
+    PaperModel { name: "405B", params_b: 405.0, hidden: 16384, layers: 126, heads: 128, kv_heads: 8, ffn: 53248, vocab: 128256 },
+];
+
+impl PaperModel {
+    pub fn by_name(name: &str) -> Result<&'static PaperModel> {
+        PAPER_MODELS
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown paper model {name:?}"))
+    }
+
+    pub fn q_dim(&self) -> usize {
+        // head_dim is hidden/heads across the family
+        self.hidden
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_roundtrip() {
+        for arch in Arch::all() {
+            assert_eq!(Arch::parse(&arch.name()).unwrap(), arch);
+        }
+        assert!(Arch::parse("nope").is_err());
+    }
+
+    #[test]
+    fn paper_models_sane() {
+        for m in PAPER_MODELS {
+            assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
+            assert!(m.heads % m.kv_heads == 0, "{}", m.name);
+        }
+        assert_eq!(PaperModel::by_name("70B").unwrap().layers, 80);
+    }
+
+    #[test]
+    fn config_from_json() {
+        let j = crate::util::json::parse(
+            r#"{"name":"t","vocab":256,"hidden":64,"layers":4,"heads":4,
+                "kv_heads":2,"head_dim":16,"ffn":192,"max_seq":128,
+                "rope_theta":10000.0,"norm_eps":1e-5,"params":1000,"kernels":"pallas"}"#,
+        )
+        .unwrap();
+        let c = LlamaConfig::from_json(&j).unwrap();
+        assert_eq!(c.q_dim(), 64);
+        assert_eq!(c.kv_dim(), 32);
+    }
+}

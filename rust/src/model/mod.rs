@@ -1,0 +1,8 @@
+//! Model configuration, the paper's size table, and weight handling
+//! (loading flat trained vectors, seeded random init, TP sharding).
+
+pub mod config;
+pub mod weights;
+
+pub use config::{Arch, LlamaConfig, PaperModel, PAPER_MODELS};
+pub use weights::{HostTensor, RankWeights, WeightStore};

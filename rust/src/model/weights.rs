@@ -1,0 +1,219 @@
+//! Host weight storage: load a flat trained vector (the python packing
+//! layout), or generate seeded random weights; slice into per-rank TP shards.
+//!
+//! Sharding rules (Megatron column/row parallel):
+//! * `wq`, `wk`, `wv`, `wg`, `wu`, `lm` — column split (output dim)
+//! * `wo`, `wd` — row split (input dim)
+//! * norms, `emb` — replicated
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A host-resident f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Column slice of a [R, C] matrix: columns [t*C/tp, (t+1)*C/tp).
+    pub fn shard_cols(&self, t: usize, tp: usize) -> HostTensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert_eq!(c % tp, 0, "cols {c} % tp {tp}");
+        let cl = c / tp;
+        let mut data = Vec::with_capacity(r * cl);
+        for row in 0..r {
+            let base = row * c + t * cl;
+            data.extend_from_slice(&self.data[base..base + cl]);
+        }
+        HostTensor::new(vec![r, cl], data)
+    }
+
+    /// Row slice of a [R, C] matrix: rows [t*R/tp, (t+1)*R/tp).
+    pub fn shard_rows(&self, t: usize, tp: usize) -> HostTensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert_eq!(r % tp, 0, "rows {r} % tp {tp}");
+        let rl = r / tp;
+        let data = self.data[t * rl * c..(t + 1) * rl * c].to_vec();
+        HostTensor::new(vec![rl, c], data)
+    }
+}
+
+/// Full-model weights on the host, keyed by the python packing names
+/// (`emb`, `layers.<i>.<tensor>`, `final_norm`, `lm`).
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub tensors: BTreeMap<String, HostTensor>,
+    pub layers: usize,
+}
+
+/// Per-rank sharded weights for one layer, in the argument order the
+/// exported attention / MLP / fused modules expect.
+#[derive(Debug, Clone)]
+pub struct RankWeights {
+    pub attn_norm: HostTensor,
+    pub wq: HostTensor,
+    pub wk: HostTensor,
+    pub wv: HostTensor,
+    pub wo: HostTensor,
+    pub mlp_norm: HostTensor,
+    pub wg: HostTensor,
+    pub wu: HostTensor,
+    pub wd: HostTensor,
+}
+
+impl WeightStore {
+    /// Load from a flat f32 file using the manifest's packing table.
+    pub fn from_flat_file(path: &std::path::Path, packing: &Json, layers: usize) -> Result<WeightStore> {
+        let bytes = std::fs::read(path).map_err(|e| anyhow!("read {path:?}: {e}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path:?}: not a f32 file ({} bytes)", bytes.len());
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::from_flat(&flat, packing, layers)
+    }
+
+    /// Slice a flat vector into named tensors per the packing table.
+    pub fn from_flat(flat: &[f32], packing: &Json, layers: usize) -> Result<WeightStore> {
+        let total = packing.get("total")?.as_usize()?;
+        if flat.len() != total {
+            bail!("flat weight vector has {} elements, packing wants {total}", flat.len());
+        }
+        let mut tensors = BTreeMap::new();
+        for entry in packing.get("tensors")?.as_arr()? {
+            let name = entry.get("name")?.as_str()?.to_string();
+            let shape = entry.get("shape")?.usize_vec()?;
+            let offset = entry.get("offset")?.as_usize()?;
+            let n: usize = shape.iter().product();
+            tensors.insert(name, HostTensor::new(shape, flat[offset..offset + n].to_vec()));
+        }
+        Ok(WeightStore { tensors, layers })
+    }
+
+    /// Seeded random init with Llama-like scaling (for benches where only
+    /// shapes matter). Matches the packing layout of `config`.
+    pub fn random(cfg: &super::LlamaConfig, seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let (h, f, v) = (cfg.hidden, cfg.ffn, cfg.vocab);
+        let (qd, kvd) = (cfg.q_dim(), cfg.kv_dim());
+        let std = (h as f32).powf(-0.5);
+        let mut tensors = BTreeMap::new();
+        tensors.insert("emb".into(), HostTensor::new(vec![v, h], rng.normal_vec(v * h, 1.0)));
+        for i in 0..cfg.layers {
+            let p = |name: &str| format!("layers.{i}.{name}");
+            tensors.insert(p("attn_norm"), HostTensor::new(vec![h], vec![1.0; h]));
+            tensors.insert(p("wq"), HostTensor::new(vec![h, qd], rng.normal_vec(h * qd, std)));
+            tensors.insert(p("wk"), HostTensor::new(vec![h, kvd], rng.normal_vec(h * kvd, std)));
+            tensors.insert(p("wv"), HostTensor::new(vec![h, kvd], rng.normal_vec(h * kvd, std)));
+            tensors.insert(p("wo"), HostTensor::new(vec![qd, h], rng.normal_vec(qd * h, std * 0.3)));
+            tensors.insert(p("mlp_norm"), HostTensor::new(vec![h], vec![1.0; h]));
+            tensors.insert(p("wg"), HostTensor::new(vec![h, f], rng.normal_vec(h * f, std)));
+            tensors.insert(p("wu"), HostTensor::new(vec![h, f], rng.normal_vec(h * f, std)));
+            tensors.insert(p("wd"), HostTensor::new(vec![f, h], rng.normal_vec(f * h, (f as f32).powf(-0.5) * 0.3)));
+        }
+        tensors.insert("final_norm".into(), HostTensor::new(vec![h], vec![1.0; h]));
+        tensors.insert("lm".into(), HostTensor::new(vec![h, v], rng.normal_vec(h * v, std)));
+        WeightStore { tensors, layers: cfg.layers }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("missing tensor {name:?}"))
+    }
+
+    /// Shard layer `i`'s tensors for rank `t` of `tp`.
+    pub fn rank_layer(&self, i: usize, t: usize, tp: usize) -> Result<RankWeights> {
+        let g = |name: &str| self.get(&format!("layers.{i}.{name}"));
+        Ok(RankWeights {
+            attn_norm: g("attn_norm")?.clone(),
+            wq: g("wq")?.shard_cols(t, tp),
+            wk: g("wk")?.shard_cols(t, tp),
+            wv: g("wv")?.shard_cols(t, tp),
+            wo: g("wo")?.shard_rows(t, tp),
+            mlp_norm: g("mlp_norm")?.clone(),
+            wg: g("wg")?.shard_cols(t, tp),
+            wu: g("wu")?.shard_cols(t, tp),
+            wd: g("wd")?.shard_rows(t, tp),
+        })
+    }
+
+    /// Rank `t`'s LM head column shard.
+    pub fn rank_lm(&self, t: usize, tp: usize) -> Result<HostTensor> {
+        Ok(self.get("lm")?.shard_cols(t, tp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_cols_reassembles() {
+        let t = HostTensor::new(vec![2, 4], vec![0., 1., 2., 3., 10., 11., 12., 13.]);
+        let a = t.shard_cols(0, 2);
+        let b = t.shard_cols(1, 2);
+        assert_eq!(a.data, vec![0., 1., 10., 11.]);
+        assert_eq!(b.data, vec![2., 3., 12., 13.]);
+    }
+
+    #[test]
+    fn shard_rows_reassembles() {
+        let t = HostTensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let a = t.shard_rows(0, 2);
+        let b = t.shard_rows(1, 2);
+        assert_eq!(a.data, vec![0., 1., 2., 3.]);
+        assert_eq!(b.data, vec![4., 5., 6., 7.]);
+        assert_eq!(a.shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn from_flat_respects_offsets() {
+        let packing = crate::util::json::parse(
+            r#"{"total": 6, "tensors": [
+                {"name": "a", "shape": [2], "offset": 0},
+                {"name": "b", "shape": [2, 2], "offset": 2}]}"#,
+        )
+        .unwrap();
+        let ws = WeightStore::from_flat(&[1., 2., 3., 4., 5., 6.], &packing, 0).unwrap();
+        assert_eq!(ws.get("a").unwrap().data, vec![1., 2.]);
+        assert_eq!(ws.get("b").unwrap().shape, vec![2, 2]);
+        assert!(WeightStore::from_flat(&[1.0], &packing, 0).is_err());
+    }
+
+    #[test]
+    fn random_weights_cover_all_layers() {
+        let cfg = crate::model::LlamaConfig {
+            name: "t".into(), vocab: 32, hidden: 16, layers: 2, heads: 2,
+            kv_heads: 2, head_dim: 8, ffn: 32, max_seq: 16,
+            rope_theta: 1e4, norm_eps: 1e-5, params: 0,
+        };
+        let ws = WeightStore::random(&cfg, 7);
+        assert!(ws.get("layers.1.wd").is_ok());
+        let rw = ws.rank_layer(0, 1, 2).unwrap();
+        assert_eq!(rw.wq.shape, vec![16, 8]);
+        assert_eq!(rw.wd.shape, vec![16, 16]);
+    }
+}

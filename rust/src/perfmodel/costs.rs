@@ -1,0 +1,212 @@
+//! Roofline cost model: per-module execution times for a paper-scale model
+//! under TP sharding.
+//!
+//! time(module) = max(flops / gpu.flops, bytes / gpu.mem_bw) + launch
+//!
+//! Prefill is compute-bound (large GEMMs over S=1024 tokens); decode is
+//! memory-bound (weights + KV cache streamed per token) — the regimes the
+//! paper's Table 2 prefill/decode split reflects.
+
+use super::hardware::{GpuSpec, ELEM_BYTES};
+use crate::comm::Interconnect;
+use crate::model::PaperModel;
+
+/// Execution times (seconds) for one layer's modules on one rank.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModuleTimes {
+    pub attn: f64,
+    pub mlp: f64,
+    /// Fused attention+MLP (Parallel architecture).
+    pub fused: f64,
+    /// AllReduce of one [B,S,H] message.
+    pub allreduce: f64,
+    /// embed + final norm + lm head (+ its AllGather), per forward.
+    pub edges: f64,
+}
+
+/// Cost model for one (model, gpu, tp, fabric) setting.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub model: PaperModel,
+    pub gpu: GpuSpec,
+    pub tp: usize,
+    pub interconnect: Interconnect,
+    /// Cross-node hop (e.g. TP16 across 2 nodes via InfiniBand): the
+    /// AllReduce additionally traverses this fabric with the full message.
+    pub cross_node: Option<(Interconnect, usize)>,
+}
+
+impl CostModel {
+    pub fn new(model: PaperModel, gpu: GpuSpec, tp: usize, interconnect: Interconnect) -> CostModel {
+        CostModel { model, gpu, tp, interconnect, cross_node: None }
+    }
+
+    pub fn with_cross_node(mut self, fabric: Interconnect, nodes: usize) -> CostModel {
+        self.cross_node = Some((fabric, nodes));
+        self
+    }
+
+    fn roofline(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.gpu.flops).max(bytes / self.gpu.mem_bw) + self.gpu.launch_overhead
+    }
+
+    /// AllReduce time for a [B, S, H] activation message.
+    pub fn allreduce(&self, batch: usize, seq: usize) -> f64 {
+        let bytes = (batch * seq * self.model.hidden) as f64 * ELEM_BYTES;
+        let intra_ranks = match self.cross_node {
+            Some((_, nodes)) => self.tp / nodes,
+            None => self.tp,
+        };
+        let mut t = self.interconnect.allreduce_time(bytes as usize, intra_ranks);
+        if let Some((fabric, nodes)) = self.cross_node {
+            t += fabric.allreduce_time(bytes as usize, nodes);
+        }
+        t
+    }
+
+    /// Module times for the prefill phase (S = prompt length).
+    pub fn prefill(&self, batch: usize, seq: usize) -> ModuleTimes {
+        let m = &self.model;
+        let t = self.tp as f64;
+        let (b, s) = (batch as f64, seq as f64);
+        let h = m.hidden as f64;
+        let (qd, kvd) = (m.q_dim() as f64, m.kv_dim() as f64);
+        let hd = m.head_dim() as f64;
+        let heads_l = m.heads as f64 / t;
+        let f = m.ffn as f64;
+
+        // projections + attention scores/values (causal halves the matrix)
+        let attn_flops =
+            2.0 * b * s * h * (qd + 2.0 * kvd) / t + 2.0 * b * s * qd / t * h + 2.0 * heads_l * b * s * s * hd;
+        let attn_bytes = (h * (qd + 2.0 * kvd) + qd * h) / t * ELEM_BYTES;
+        let mlp_flops = 6.0 * b * s * h * f / t;
+        let mlp_bytes = 3.0 * h * f / t * ELEM_BYTES;
+
+        let attn = self.roofline(attn_flops, attn_bytes);
+        let mlp = self.roofline(mlp_flops, mlp_bytes);
+        ModuleTimes {
+            attn,
+            mlp,
+            // fusion saves one dispatch, not FLOPs
+            fused: attn + mlp - self.gpu.launch_overhead,
+            allreduce: self.allreduce(batch, seq),
+            edges: self.edges(batch, seq),
+        }
+    }
+
+    /// Module times for one decode step at context length `ctx`.
+    pub fn decode(&self, batch: usize, ctx: usize) -> ModuleTimes {
+        let m = &self.model;
+        let t = self.tp as f64;
+        let b = batch as f64;
+        let h = m.hidden as f64;
+        let (qd, kvd) = (m.q_dim() as f64, m.kv_dim() as f64);
+        let hd = m.head_dim() as f64;
+        let heads_l = m.heads as f64 / t;
+        let kv_heads_l = m.kv_heads as f64 / t;
+        let f = m.ffn as f64;
+        let l = ctx as f64;
+
+        let attn_flops =
+            2.0 * b * (h * (qd + 2.0 * kvd) / t + qd / t * h) + 4.0 * b * heads_l * l * hd;
+        // decode reads the weight shard + this batch's KV cache
+        let attn_bytes = (h * (qd + 2.0 * kvd) + qd * h) / t * ELEM_BYTES
+            + b * 2.0 * kv_heads_l * l * hd * ELEM_BYTES;
+        let mlp_flops = 6.0 * b * h * f / t;
+        let mlp_bytes = 3.0 * h * f / t * ELEM_BYTES;
+
+        let attn = self.roofline(attn_flops, attn_bytes);
+        let mlp = self.roofline(mlp_flops, mlp_bytes);
+        ModuleTimes {
+            attn,
+            mlp,
+            fused: attn + mlp - self.gpu.launch_overhead,
+            allreduce: self.allreduce(batch, 1),
+            edges: self.edges(batch, 1),
+        }
+    }
+
+    /// Embedding + final norm + LM head (incl. its vocab AllGather).
+    fn edges(&self, batch: usize, seq: usize) -> f64 {
+        let m = &self.model;
+        let t = self.tp as f64;
+        let (b, _s) = (batch as f64, seq as f64);
+        let h = m.hidden as f64;
+        let v = m.vocab as f64;
+        // lm head on last position only
+        let lm_flops = 2.0 * b * h * v / t;
+        let lm_bytes = h * v / t * ELEM_BYTES;
+        let gather_bytes = (b * v / t) * ELEM_BYTES;
+        self.roofline(lm_flops, lm_bytes)
+            + self.interconnect.allgather_time(gather_bytes as usize, self.tp)
+    }
+
+    /// Fraction of a standard-architecture decode step spent in (exposed)
+    /// communication — the paper's "38% of latency" style headline number.
+    pub fn comm_fraction_decode(&self, batch: usize, ctx: usize) -> f64 {
+        let mt = self.decode(batch, ctx);
+        let layers = self.model.layers as f64;
+        let comm = layers * 2.0 * mt.allreduce;
+        let compute = layers * (mt.attn + mt.mlp) + mt.edges;
+        comm / (comm + compute)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Fabric, Interconnect};
+    use crate::model::PaperModel;
+    use crate::perfmodel::hardware::H100;
+
+    fn m70b() -> PaperModel {
+        *PaperModel::by_name("70B").unwrap()
+    }
+
+    #[test]
+    fn prefill_compute_bound_decode_memory_bound() {
+        let cm = CostModel::new(m70b(), H100, 8, Interconnect::new(Fabric::NvLink));
+        let p = cm.prefill(4, 1024);
+        let d = cm.decode(4, 1024);
+        // prefill per-layer compute far exceeds a decode step's
+        assert!(p.attn + p.mlp > 10.0 * (d.attn + d.mlp));
+        // decode attn time should be dominated by bytes, i.e. larger than
+        // the pure-flops time
+        let flops_only = 2.0e0 * 4.0 * (8192.0 * (8192.0 + 2.0 * 1024.0) / 8.0) / H100.flops;
+        assert!(d.attn > flops_only);
+    }
+
+    #[test]
+    fn comm_fraction_70b_matches_paper_ballpark() {
+        // paper: ~30-38% of inference latency is AllReduce for 70B TP8 bs4
+        // with NVLink enabled
+        let cm = CostModel::new(m70b(), H100, 8, Interconnect::new(Fabric::NvLink));
+        let frac = cm.comm_fraction_decode(4, 1024);
+        assert!(frac > 0.2 && frac < 0.5, "comm fraction {frac}");
+    }
+
+    #[test]
+    fn no_nvlink_increases_comm_fraction() {
+        let nv = CostModel::new(m70b(), H100, 8, Interconnect::new(Fabric::NvLink));
+        let pcie = CostModel::new(m70b(), H100, 8, Interconnect::new(Fabric::Pcie));
+        assert!(
+            pcie.comm_fraction_decode(4, 1024) > nv.comm_fraction_decode(4, 1024) + 0.1
+        );
+    }
+
+    #[test]
+    fn tp_scaling_reduces_compute_time() {
+        let cm2 = CostModel::new(m70b(), H100, 2, Interconnect::new(Fabric::NvLink));
+        let cm8 = CostModel::new(m70b(), H100, 8, Interconnect::new(Fabric::NvLink));
+        assert!(cm8.decode(4, 1024).mlp < cm2.decode(4, 1024).mlp);
+    }
+
+    #[test]
+    fn cross_node_adds_cost() {
+        let m = *PaperModel::by_name("405B").unwrap();
+        let local = CostModel::new(m, H100, 16, Interconnect::new(Fabric::NvLink));
+        let cross = CostModel::new(m, H100, 16, Interconnect::new(Fabric::NvLink))
+            .with_cross_node(Interconnect::new(Fabric::InfiniBand), 2);
+        assert!(cross.allreduce(4, 1) > local.allreduce(4, 1));
+    }
+}

@@ -1,0 +1,17 @@
+//! Performance model: H100 roofline compute costs + interconnect model +
+//! per-architecture discrete-event timeline simulation.
+//!
+//! This is the substitution for the paper's 8-16 H100 testbed (DESIGN.md §1):
+//! absolute numbers are calibrated to public hardware specs, while the
+//! who-wins/by-how-much *shape* of every table and figure emerges from the
+//! same dependency structures the real systems have (blocking vs overlapped
+//! vs dropped AllReduces).
+
+pub mod costs;
+pub mod hardware;
+pub mod tables;
+pub mod timeline;
+
+pub use costs::{CostModel, ModuleTimes};
+pub use hardware::{GpuSpec, H100};
+pub use timeline::{simulate_decode_step, simulate_prefill, GenTimes, TimelineResult};

@@ -1,0 +1,369 @@
+//! Discrete-event timeline simulation of one forward pass per architecture.
+//!
+//! Two resources per rank (symmetric ranks => simulate one): the compute
+//! stream and the interconnect. The architecture fixes the dependency
+//! structure:
+//!
+//! * Standard — every AllReduce blocks the compute stream.
+//! * Ladder   — an AllReduce is waited on one module later (paper Alg. 1),
+//!              so it overlaps the next module's compute.
+//! * Parallel — one blocking AllReduce per layer over the fused module.
+//! * Desync-n — only every n-th AllReduce is issued (blocking).
+//! * Upperbound — no communication at all.
+
+use super::costs::{CostModel, ModuleTimes};
+use crate::model::Arch;
+
+/// One simulated forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineResult {
+    /// Wall time of the forward pass (seconds).
+    pub total: f64,
+    /// Total modeled AllReduce time.
+    pub comm_total: f64,
+    /// Comm time the compute stream actually stalled on.
+    pub comm_exposed: f64,
+    pub trace: Vec<TraceEvent>,
+}
+
+/// Chrome-trace-style event (stream 0 = compute, 1 = interconnect).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub stream: usize,
+    pub start: f64,
+    pub dur: f64,
+}
+
+/// Simulate one forward pass of `layers` transformer layers.
+pub fn simulate_forward(arch: Arch, layers: usize, mt: &ModuleTimes, with_trace: bool) -> TimelineResult {
+    let mut sim = Sim::new(with_trace);
+    match arch {
+        Arch::Standard => {
+            for i in 0..layers {
+                sim.compute(&format!("attn{i}"), mt.attn);
+                sim.allreduce_blocking(&format!("ar_attn{i}"), mt.allreduce);
+                sim.compute(&format!("mlp{i}"), mt.mlp);
+                sim.allreduce_blocking(&format!("ar_mlp{i}"), mt.allreduce);
+            }
+        }
+        Arch::Ladder => {
+            let mut pend_attn: Option<f64> = None;
+            let mut pend_mlp: Option<f64> = None;
+            for i in 0..layers {
+                if let Some(done) = pend_attn.take() {
+                    sim.wait(done);
+                }
+                sim.compute(&format!("attn{i}"), mt.attn);
+                pend_attn = Some(sim.allreduce_async(&format!("ar_attn{i}"), mt.allreduce));
+                if let Some(done) = pend_mlp.take() {
+                    sim.wait(done);
+                }
+                sim.compute(&format!("mlp{i}"), mt.mlp);
+                pend_mlp = Some(sim.allreduce_async(&format!("ar_mlp{i}"), mt.allreduce));
+            }
+            if let Some(done) = pend_attn {
+                sim.wait(done);
+            }
+            if let Some(done) = pend_mlp {
+                sim.wait(done);
+            }
+        }
+        Arch::Hybrid => {
+            let split = layers / 2;
+            let mut pend_attn: Option<f64> = None;
+            let mut pend_mlp: Option<f64> = None;
+            for i in 0..layers {
+                if i < split {
+                    sim.compute(&format!("attn{i}"), mt.attn);
+                    sim.allreduce_blocking(&format!("ar_attn{i}"), mt.allreduce);
+                    sim.compute(&format!("mlp{i}"), mt.mlp);
+                    sim.allreduce_blocking(&format!("ar_mlp{i}"), mt.allreduce);
+                } else {
+                    if let Some(done) = pend_attn.take() {
+                        sim.wait(done);
+                    }
+                    sim.compute(&format!("attn{i}"), mt.attn);
+                    pend_attn = Some(sim.allreduce_async(&format!("ar_attn{i}"), mt.allreduce));
+                    if let Some(done) = pend_mlp.take() {
+                        sim.wait(done);
+                    }
+                    sim.compute(&format!("mlp{i}"), mt.mlp);
+                    pend_mlp = Some(sim.allreduce_async(&format!("ar_mlp{i}"), mt.allreduce));
+                }
+            }
+            if let Some(done) = pend_attn {
+                sim.wait(done);
+            }
+            if let Some(done) = pend_mlp {
+                sim.wait(done);
+            }
+        }
+        Arch::Parallel => {
+            for i in 0..layers {
+                sim.compute(&format!("fused{i}"), mt.fused);
+                sim.allreduce_blocking(&format!("ar{i}"), mt.allreduce);
+            }
+        }
+        Arch::Desync(n) => {
+            let mut c = 0usize;
+            for i in 0..layers {
+                for (kind, dur) in [("attn", mt.attn), ("mlp", mt.mlp)] {
+                    sim.compute(&format!("{kind}{i}"), dur);
+                    c += 1;
+                    if c % n == 0 {
+                        sim.allreduce_blocking(&format!("ar_{kind}{i}"), mt.allreduce);
+                    }
+                }
+            }
+            if (2 * layers) % n != 0 {
+                sim.allreduce_blocking("ar_final_resync", mt.allreduce);
+            }
+        }
+        Arch::Upperbound => {
+            for i in 0..layers {
+                sim.compute(&format!("attn{i}"), mt.attn);
+                sim.compute(&format!("mlp{i}"), mt.mlp);
+            }
+        }
+    }
+    sim.compute("edges", mt.edges);
+    sim.finish()
+}
+
+/// Prefill latency for one forward over the prompt.
+pub fn simulate_prefill(arch: Arch, cm: &CostModel, batch: usize, prompt: usize) -> TimelineResult {
+    let mt = cm.prefill(batch, prompt);
+    simulate_forward(arch, cm.model.layers, &mt, false)
+}
+
+/// One decode step at a given context length.
+pub fn simulate_decode_step(
+    arch: Arch,
+    cm: &CostModel,
+    batch: usize,
+    ctx: usize,
+    with_trace: bool,
+) -> TimelineResult {
+    let mt = cm.decode(batch, ctx);
+    simulate_forward(arch, cm.model.layers, &mt, with_trace)
+}
+
+/// Full generation run: prefill + `gen` decode steps with a growing context.
+#[derive(Debug, Clone)]
+pub struct GenTimes {
+    pub prefill: f64,
+    pub decode_total: f64,
+    pub gen_tokens: usize,
+    pub batch: usize,
+    pub comm_exposed: f64,
+    pub comm_total: f64,
+}
+
+impl GenTimes {
+    pub fn total(&self) -> f64 {
+        self.prefill + self.decode_total
+    }
+
+    /// Generated tokens per second (the paper's throughput metric).
+    pub fn tok_per_sec(&self) -> f64 {
+        (self.batch * self.gen_tokens) as f64 / self.total()
+    }
+
+    /// Mean per-step decode latency.
+    pub fn decode_latency(&self) -> f64 {
+        self.decode_total / self.gen_tokens as f64
+    }
+}
+
+pub fn simulate_generation(
+    arch: Arch,
+    cm: &CostModel,
+    batch: usize,
+    prompt: usize,
+    gen: usize,
+) -> GenTimes {
+    let pre = simulate_prefill(arch, cm, batch, prompt);
+    let mut decode_total = 0.0;
+    let mut exposed = pre.comm_exposed;
+    let mut comm_total = pre.comm_total;
+    for step in 0..gen {
+        let r = simulate_decode_step(arch, cm, batch, prompt + step, false);
+        decode_total += r.total;
+        exposed += r.comm_exposed;
+        comm_total += r.comm_total;
+    }
+    GenTimes {
+        prefill: pre.total,
+        decode_total,
+        gen_tokens: gen,
+        batch,
+        comm_exposed: exposed,
+        comm_total,
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct Sim {
+    /// compute-stream head time
+    tc: f64,
+    /// interconnect free time
+    link_free: f64,
+    comm_total: f64,
+    comm_exposed: f64,
+    trace: Option<Vec<TraceEvent>>,
+}
+
+impl Sim {
+    fn new(with_trace: bool) -> Sim {
+        Sim {
+            tc: 0.0,
+            link_free: 0.0,
+            comm_total: 0.0,
+            comm_exposed: 0.0,
+            trace: if with_trace { Some(Vec::new()) } else { None },
+        }
+    }
+
+    fn compute(&mut self, name: &str, dur: f64) {
+        if let Some(t) = &mut self.trace {
+            t.push(TraceEvent { name: name.into(), stream: 0, start: self.tc, dur });
+        }
+        self.tc += dur;
+    }
+
+    /// Issue an AllReduce and immediately block on it.
+    fn allreduce_blocking(&mut self, name: &str, dur: f64) {
+        let done = self.allreduce_async(name, dur);
+        self.wait(done);
+    }
+
+    /// Issue an AllReduce on the link; returns its completion time.
+    fn allreduce_async(&mut self, name: &str, dur: f64) -> f64 {
+        let start = self.tc.max(self.link_free);
+        let done = start + dur;
+        self.link_free = done;
+        self.comm_total += dur;
+        if let Some(t) = &mut self.trace {
+            t.push(TraceEvent { name: name.into(), stream: 1, start, dur });
+        }
+        done
+    }
+
+    /// Stall the compute stream until `done`.
+    fn wait(&mut self, done: f64) {
+        if done > self.tc {
+            self.comm_exposed += done - self.tc;
+            self.tc = done;
+        }
+    }
+
+    fn finish(self) -> TimelineResult {
+        TimelineResult {
+            total: self.tc.max(self.link_free),
+            comm_total: self.comm_total,
+            comm_exposed: self.comm_exposed,
+            trace: self.trace.unwrap_or_default(),
+        }
+    }
+}
+
+/// Dump a trace as chrome://tracing JSON.
+pub fn trace_to_chrome_json(events: &[TraceEvent]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let arr = events
+        .iter()
+        .map(|e| {
+            Json::obj()
+                .set("name", e.name.as_str())
+                .set("ph", "X")
+                .set("ts", e.start * 1e6)
+                .set("dur", e.dur * 1e6)
+                .set("pid", 0usize)
+                .set("tid", e.stream)
+        })
+        .collect::<Vec<_>>();
+    Json::Arr(arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+
+    fn mt(attn: f64, mlp: f64, ar: f64) -> ModuleTimes {
+        ModuleTimes { attn, mlp, fused: attn + mlp, allreduce: ar, edges: 0.0 }
+    }
+
+    #[test]
+    fn standard_serializes_comm() {
+        let r = simulate_forward(Arch::Standard, 4, &mt(1.0, 1.0, 0.5), false);
+        assert!((r.total - (4.0 * (1.0 + 0.5 + 1.0 + 0.5))).abs() < 1e-9);
+        assert!((r.comm_exposed - r.comm_total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_hides_comm_when_compute_is_longer() {
+        // comm (0.5) < module (1.0): ladder hides everything except the two
+        // trailing reduces of the last layer.
+        let r = simulate_forward(Arch::Ladder, 4, &mt(1.0, 1.0, 0.5), false);
+        let std = simulate_forward(Arch::Standard, 4, &mt(1.0, 1.0, 0.5), false);
+        assert!(r.total < std.total);
+        assert!(r.comm_exposed < 0.25 * r.comm_total, "{r:?}");
+    }
+
+    #[test]
+    fn ladder_bounded_by_comm_when_link_is_slow() {
+        // comm (4.0) >> module (1.0): the link is the bottleneck; the total
+        // approaches the serialized link occupancy.
+        let r = simulate_forward(Arch::Ladder, 4, &mt(1.0, 1.0, 4.0), false);
+        assert!(r.total >= 8.0 * 4.0, "{}", r.total); // 8 ARs serialized
+        let std = simulate_forward(Arch::Standard, 4, &mt(1.0, 1.0, 4.0), false);
+        assert!(r.total < std.total); // still better than standard
+    }
+
+    #[test]
+    fn parallel_halves_comm_count() {
+        let r = simulate_forward(Arch::Parallel, 4, &mt(1.0, 1.0, 0.5), false);
+        assert!((r.comm_total - 4.0 * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn desync_drops_comm() {
+        let r2 = simulate_forward(Arch::Desync(2), 4, &mt(1.0, 1.0, 0.5), false);
+        let r4 = simulate_forward(Arch::Desync(4), 4, &mt(1.0, 1.0, 0.5), false);
+        assert!((r2.comm_total - 4.0 * 0.5).abs() < 1e-9);
+        assert!((r4.comm_total - 2.0 * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn upperbound_has_no_comm_and_is_fastest() {
+        let m = mt(1.0, 1.0, 0.5);
+        let ub = simulate_forward(Arch::Upperbound, 4, &m, false);
+        assert_eq!(ub.comm_total, 0.0);
+        for arch in [Arch::Standard, Arch::Ladder, Arch::Parallel, Arch::Desync(2)] {
+            let r = simulate_forward(arch, 4, &m, false);
+            assert!(ub.total <= r.total + 1e-12, "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn ordering_upperbound_le_ladder_le_standard() {
+        for ar in [0.1, 0.5, 2.0, 10.0] {
+            let m = mt(1.0, 1.3, ar);
+            let ub = simulate_forward(Arch::Upperbound, 6, &m, false).total;
+            let lad = simulate_forward(Arch::Ladder, 6, &m, false).total;
+            let std = simulate_forward(Arch::Standard, 6, &m, false).total;
+            assert!(ub <= lad + 1e-12 && lad <= std + 1e-12, "ar={ar}");
+        }
+    }
+
+    #[test]
+    fn trace_events_emitted() {
+        let r = simulate_forward(Arch::Ladder, 2, &mt(1.0, 1.0, 0.5), true);
+        assert!(r.trace.iter().any(|e| e.stream == 1));
+        let json = trace_to_chrome_json(&r.trace);
+        assert!(json.to_string().contains("ar_attn0"));
+    }
+}

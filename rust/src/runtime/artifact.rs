@@ -1,0 +1,125 @@
+//! Artifact directory handling: manifest parsing + module metadata.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::LlamaConfig;
+use crate::util::json::{parse, Json};
+
+/// One exported HLO module's interface (from the manifest).
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// A parsed `artifacts/<config>/` directory.
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub config: LlamaConfig,
+    pub manifest: Json,
+}
+
+impl ArtifactDir {
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactDir> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow!("read {manifest_path:?}: {e} — run `make artifacts` first")
+        })?;
+        let manifest = parse(&text)?;
+        let config = LlamaConfig::from_json(manifest.get("config")?)?;
+        Ok(ArtifactDir { dir, config, manifest })
+    }
+
+    /// Locate the artifact dir for a named config, trying the conventional
+    /// locations relative to the working directory and the crate root.
+    pub fn open_named(name: &str) -> Result<ArtifactDir> {
+        let candidates = [
+            PathBuf::from("artifacts").join(name),
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name),
+        ];
+        for c in &candidates {
+            if c.join("manifest.json").exists() {
+                return ArtifactDir::open(c);
+            }
+        }
+        Err(anyhow!(
+            "artifact config {name:?} not found (tried {candidates:?}); run `make artifacts`"
+        ))
+    }
+
+    pub fn module(&self, name: &str) -> Result<ModuleSpec> {
+        let m = self
+            .manifest
+            .get("modules")?
+            .opt(name)
+            .ok_or_else(|| anyhow!("module {name:?} not in manifest"))?;
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            m.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        name: t.opt("name").and_then(|n| n.as_str().ok().map(String::from)).unwrap_or_default(),
+                        shape: t.get("shape")?.usize_vec()?,
+                        dtype: t.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect()
+        };
+        Ok(ModuleSpec {
+            name: name.to_string(),
+            file: self.dir.join(m.get("file")?.as_str()?),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+
+    pub fn module_names(&self) -> Result<Vec<String>> {
+        Ok(self.manifest.get("modules")?.as_obj()?.keys().cloned().collect())
+    }
+
+    pub fn packing(&self) -> Result<&Json> {
+        self.manifest.get("packing")
+    }
+
+    /// Serving export parameters (tps / batches / buckets), if present.
+    pub fn serving_params(&self) -> Result<(Vec<usize>, Vec<usize>, Vec<usize>)> {
+        Ok((
+            self.manifest.get("tps")?.usize_vec()?,
+            self.manifest.get("batches")?.usize_vec()?,
+            self.manifest.get("buckets")?.usize_vec()?,
+        ))
+    }
+
+    /// Read a raw little-endian f32 file from the artifact dir.
+    pub fn read_f32(&self, file: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path).map_err(|e| anyhow!("read {path:?}: {e}"))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read a raw little-endian i32 file from the artifact dir.
+    pub fn read_i32(&self, file: &str) -> Result<Vec<i32>> {
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path).map_err(|e| anyhow!("read {path:?}: {e}"))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}

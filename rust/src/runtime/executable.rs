@@ -1,0 +1,80 @@
+//! PJRT client + executable cache.
+//!
+//! PJRT handles in the `xla` crate are `Rc`-based (not `Send`/`Sync`), so
+//! the client is **thread-local**: each engine thread owns one CPU client
+//! and its own compilations. Within a thread, the N simulated TP ranks and
+//! every layer share a single compilation per (module, phase, shape).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::ArtifactDir;
+
+thread_local! {
+    static CLIENT: PjRtClient = PjRtClient::cpu().expect("create PJRT CPU client");
+}
+
+/// The thread's PJRT CPU client (clones share the underlying client).
+pub fn client() -> PjRtClient {
+    CLIENT.with(|c| c.clone())
+}
+
+/// Lazy compile-on-first-use cache over an artifact directory.
+pub struct ExecCache {
+    artifacts: ArtifactDir,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl ExecCache {
+    pub fn new(artifacts: ArtifactDir) -> ExecCache {
+        ExecCache { artifacts, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Open the conventional artifact dir for `name` and wrap it.
+    pub fn open(name: &str) -> Result<ExecCache> {
+        Ok(ExecCache::new(ArtifactDir::open_named(name)?))
+    }
+
+    pub fn artifacts(&self) -> &ArtifactDir {
+        &self.artifacts
+    }
+
+    /// Compile (or fetch) the executable for a module name.
+    pub fn get(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.artifacts.module(name)?;
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {:?}", spec.file))?;
+        let proto = HloModuleProto::from_text_file(path)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(client().compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a module: literals in (by reference — weight literals are
+    /// shared across layers/calls), decomposed output tuple out.
+    ///
+    /// All exported modules are lowered with `return_tuple=True`, so the
+    /// result is a single tuple buffer which we bring to the host and
+    /// decompose.
+    pub fn run(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let exe = self.get(name)?;
+        let result = exe.execute::<&Literal>(args)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.decompose_tuple()?)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 runtime: load AOT artifacts (HLO text + manifest) and execute them on
+//! the PJRT CPU client. This is the only module that touches the `xla`
+//! crate; everything above it deals in [`HostTensor`]s.
+//!
+//! [`HostTensor`]: crate::model::HostTensor
+
+pub mod artifact;
+pub mod executable;
+pub mod literal;
+
+pub use artifact::{ArtifactDir, ModuleSpec};
+pub use executable::{client, ExecCache};
+pub use literal::{literal_f32, literal_i32, tensor_from_literal};

@@ -1,0 +1,148 @@
+//! Line-JSON TCP API.
+//!
+//! Protocol: one JSON object per line.
+//!
+//! request:  {"id": 1, "prompt": "text", "max_new_tokens": 32}
+//! response: {"id": 1, "text": "...", "tokens": [...], "ttft_ms": ..,
+//!            "e2e_ms": ..}
+//!
+//! The acceptor and connection readers run on their own threads; the engine
+//! loop (PJRT is not Send) stays on the caller's thread and is driven by
+//! [`serve_forever`]. Responses are routed back over per-request channels.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::request::{Request, RequestResult};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{parse, Json};
+
+/// A request paired with its response channel.
+pub struct ApiJob {
+    pub request: Request,
+    pub respond: Sender<RequestResult>,
+}
+
+/// Spawn the TCP acceptor; returns the job channel the engine loop drains.
+pub fn spawn_listener(addr: &str, tokenizer: Tokenizer) -> Result<(Receiver<ApiJob>, u16)> {
+    let listener = TcpListener::bind(addr)?;
+    let port = listener.local_addr()?.port();
+    let (tx, rx) = channel::<ApiJob>();
+    std::thread::spawn(move || {
+        let mut next_id: u64 = 1;
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            let tok = tokenizer.clone();
+            let base_id = next_id;
+            next_id += 1_000_000;
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, tx, tok, base_id);
+            });
+        }
+    });
+    Ok((rx, port))
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<ApiJob>, tok: Tokenizer, base_id: u64) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut local_id = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse(&line) {
+            Ok(req_json) => {
+                local_id += 1;
+                match build_request(&req_json, &tok, base_id + local_id) {
+                    Ok(request) => {
+                        let (rtx, rrx) = channel();
+                        let id = request.id;
+                        tx.send(ApiJob { request, respond: rtx })
+                            .map_err(|_| anyhow::anyhow!("engine loop gone"))?;
+                        match rrx.recv_timeout(Duration::from_secs(300)) {
+                            Ok(result) => render_result(&result, &tok),
+                            Err(_) => Json::obj().set("id", id).set("error", "timeout"),
+                        }
+                    }
+                    Err(e) => Json::obj().set("error", e.to_string()),
+                }
+            }
+            Err(e) => Json::obj().set("error", format!("bad json: {e}")),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn build_request(j: &Json, tok: &Tokenizer, id: u64) -> Result<Request> {
+    let prompt_text = j.get("prompt")?.as_str()?;
+    let prompt = tok.encode(prompt_text);
+    let max_new = j.opt("max_new_tokens").map_or(Ok(16), |v| v.as_usize())?;
+    Ok(Request::new(id, prompt, max_new))
+}
+
+fn render_result(r: &RequestResult, tok: &Tokenizer) -> Json {
+    Json::obj()
+        .set("id", r.id)
+        .set("text", tok.decode(&r.tokens))
+        .set(
+            "tokens",
+            Json::Arr(r.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        )
+        .set("ttft_ms", r.ttft_secs * 1e3)
+        .set("e2e_ms", r.e2e_secs * 1e3)
+}
+
+/// Engine-thread serve loop: drain jobs into the batcher, step it, route
+/// completions back. Runs until `max_requests` completions (0 = forever).
+pub fn serve_forever(
+    batcher: &mut Batcher,
+    jobs: Receiver<ApiJob>,
+    max_requests: usize,
+) -> Result<()> {
+    let mut pending: Vec<(u64, Sender<RequestResult>)> = Vec::new();
+    let mut served = 0usize;
+    loop {
+        // admit everything currently queued on the socket side
+        loop {
+            match jobs.try_recv() {
+                Ok(job) => {
+                    pending.push((job.request.id, job.respond));
+                    batcher.submit(job.request);
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+        if batcher.pending() == 0 {
+            // idle: block briefly for the next job
+            match jobs.recv_timeout(Duration::from_millis(50)) {
+                Ok(job) => {
+                    pending.push((job.request.id, job.respond));
+                    batcher.submit(job.request);
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        }
+        for result in batcher.step()? {
+            if let Some(pos) = pending.iter().position(|(id, _)| *id == result.id) {
+                let (_, tx) = pending.swap_remove(pos);
+                let _ = tx.send(result);
+                served += 1;
+                if max_requests > 0 && served >= max_requests {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}

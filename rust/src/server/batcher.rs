@@ -1,0 +1,177 @@
+//! Continuous batcher: the core serving loop.
+//!
+//! Slot-based continuous batching over the fixed-B decode executable:
+//! waiting requests are admitted into free slots via single-slot prefill
+//! (`prefill_slot`), then all live slots advance together one decode step
+//! per iteration. Prefill-priority policy (admit whenever a slot is free)
+//! matches the paper's gpt-fast-derived serving setup; admission is gated
+//! by the KV budget.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::ServerMetrics;
+use super::request::{Request, RequestResult};
+use crate::engine::TpEngine;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max tokens a decode step may produce before we re-check the queue.
+    pub decode_burst: usize,
+    /// KV memory budget in bytes (0 = slots are the only limit).
+    pub kv_budget_bytes: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> BatcherConfig {
+        BatcherConfig { decode_burst: 1, kv_budget_bytes: 0 }
+    }
+}
+
+/// Per-slot in-flight request state.
+struct SlotState {
+    request: Request,
+    generated: Vec<i32>,
+    next_token: i32,
+    prefill_done: Instant,
+}
+
+/// The continuous batcher. Owns the engine (single-threaded PJRT).
+pub struct Batcher {
+    pub engine: TpEngine,
+    pub config: BatcherConfig,
+    pub metrics: ServerMetrics,
+    queue: VecDeque<Request>,
+    slots: Vec<Option<SlotState>>,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(engine: TpEngine, config: BatcherConfig) -> Batcher {
+        let slots = (0..engine.batch).map(|_| None).collect();
+        Batcher {
+            engine,
+            config,
+            metrics: ServerMetrics::default(),
+            queue: VecDeque::new(),
+            slots,
+            rng: Rng::new(0xbac4),
+        }
+    }
+
+    pub fn submit(&mut self, request: Request) {
+        self.metrics.submitted += 1;
+        self.queue.push_back(request);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Number of requests the KV budget admits simultaneously.
+    fn kv_slot_limit(&self) -> usize {
+        if self.config.kv_budget_bytes == 0 {
+            return self.engine.batch;
+        }
+        (self.config.kv_budget_bytes / self.engine.kv_bytes_per_slot().max(1))
+            .clamp(1, self.engine.batch)
+    }
+
+    /// One scheduler iteration: admit + prefill waiting requests into free
+    /// slots, then run `decode_burst` decode steps for live slots. Returns
+    /// results completed this iteration.
+    pub fn step(&mut self) -> Result<Vec<RequestResult>> {
+        let mut done = Vec::new();
+
+        // -- admission (prefill-priority, FIFO) --
+        let limit = self.kv_slot_limit();
+        for slot in 0..self.slots.len() {
+            let live = self.slots.iter().filter(|s| s.is_some()).count();
+            if live >= limit {
+                break;
+            }
+            if self.slots[slot].is_some() {
+                continue;
+            }
+            let Some(request) = self.queue.pop_front() else { break };
+            let bucket = self.engine.pick_bucket(request.prompt.len())?;
+            let mut padded = vec![0i32; bucket];
+            padded[..request.prompt.len()].copy_from_slice(&request.prompt);
+            let queued = request.arrived.elapsed().as_secs_f64();
+            let logits = self
+                .engine
+                .prefill_slot(slot, &padded, bucket, request.prompt.len())?;
+            let logits_t =
+                crate::model::HostTensor::new(vec![1, logits.len()], logits);
+            let next = request.sampler.sample(&logits_t, &mut self.rng)[0];
+            self.metrics.queued_secs.add(queued);
+            self.metrics.prefills += 1;
+            self.slots[slot] = Some(SlotState {
+                request,
+                generated: vec![next],
+                next_token: next,
+                prefill_done: Instant::now(),
+            });
+        }
+
+        // -- decode burst --
+        let any_live = self.slots.iter().any(|s| s.is_some());
+        if any_live {
+            for _ in 0..self.config.decode_burst.max(1) {
+                // tokens for all slots (idle slots feed token 0, ignored)
+                let tokens: Vec<i32> = self
+                    .slots
+                    .iter()
+                    .map(|s| s.as_ref().map_or(0, |st| st.next_token))
+                    .collect();
+                let logits = self.engine.decode(&tokens)?;
+                self.metrics.decode_steps += 1;
+                let v = logits.shape[1];
+                for (slot, state) in self.slots.iter_mut().enumerate() {
+                    let Some(st) = state else { continue };
+                    let row = crate::model::HostTensor::new(
+                        vec![1, v],
+                        logits.data[slot * v..(slot + 1) * v].to_vec(),
+                    );
+                    let tok = st.request.sampler.sample(&row, &mut self.rng)[0];
+                    st.generated.push(tok);
+                    st.next_token = tok;
+                    self.metrics.tokens_out += 1;
+                    let finished = st.generated.len() >= st.request.max_new_tokens
+                        || st.request.eos == Some(tok)
+                        || self.engine.lens[slot] as usize >= self.engine.cfg.max_seq - 1;
+                    if finished {
+                        let st = state.take().unwrap();
+                        let now = Instant::now();
+                        let result = RequestResult {
+                            id: st.request.id,
+                            tokens: st.generated,
+                            queued_secs: 0.0,
+                            ttft_secs: (st.prefill_done - st.request.arrived).as_secs_f64(),
+                            e2e_secs: (now - st.request.arrived).as_secs_f64(),
+                        };
+                        self.metrics.record_completion(&result);
+                        self.engine.release_slot(slot);
+                        done.push(result);
+                    }
+                }
+                if self.slots.iter().all(|s| s.is_none()) {
+                    break;
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// Drive until the queue and all slots drain; returns all results.
+    pub fn run_to_completion(&mut self) -> Result<Vec<RequestResult>> {
+        let mut out = Vec::new();
+        while self.pending() > 0 {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,62 @@
+//! Server-side aggregate metrics (throughput, latency percentiles).
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::request::RequestResult;
+
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub submitted: usize,
+    pub completed: usize,
+    pub prefills: usize,
+    pub decode_steps: usize,
+    pub tokens_out: usize,
+    pub queued_secs: Summary,
+    pub ttft_secs: Summary,
+    pub e2e_secs: Summary,
+}
+
+impl ServerMetrics {
+    pub fn record_completion(&mut self, r: &RequestResult) {
+        self.completed += 1;
+        self.ttft_secs.add(r.ttft_secs);
+        self.e2e_secs.add(r.e2e_secs);
+    }
+
+    pub fn report(&self, wall_secs: f64) -> Json {
+        Json::obj()
+            .set("submitted", self.submitted)
+            .set("completed", self.completed)
+            .set("prefills", self.prefills)
+            .set("decode_steps", self.decode_steps)
+            .set("tokens_out", self.tokens_out)
+            .set("throughput_tok_per_s", self.tokens_out as f64 / wall_secs.max(1e-9))
+            .set("ttft_p50_ms", self.ttft_secs.p50() * 1e3)
+            .set("ttft_p99_ms", self.ttft_secs.p99() * 1e3)
+            .set("e2e_p50_ms", self.e2e_secs.p50() * 1e3)
+            .set("e2e_p99_ms", self.e2e_secs.p99() * 1e3)
+            .set("queue_p50_ms", self.queued_secs.p50() * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_completions() {
+        let mut m = ServerMetrics::default();
+        m.record_completion(&RequestResult {
+            id: 1,
+            tokens: vec![1, 2, 3],
+            queued_secs: 0.0,
+            ttft_secs: 0.1,
+            e2e_secs: 0.5,
+        });
+        assert_eq!(m.completed, 1);
+        assert!((m.e2e_secs.p50() - 0.5).abs() < 1e-9);
+        let rep = m.report(2.0);
+        assert!(rep.get("ttft_p50_ms").unwrap().as_f64().unwrap() > 99.0);
+    }
+}

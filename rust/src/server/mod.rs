@@ -1,0 +1,15 @@
+//! Serving coordinator: request queue, continuous batcher, metrics and a
+//! line-JSON TCP API — the vLLM-router-shaped stack around the TP engine.
+//!
+//! Threading: PJRT handles are not `Send`, so the engine loop owns its
+//! thread; the TCP acceptor and per-connection readers are separate threads
+//! that communicate through `std::sync::mpsc` channels of plain data.
+
+pub mod api;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::ServerMetrics;
+pub use request::{Request, RequestResult};

@@ -1,0 +1,52 @@
+//! Request / response types for the serving stack.
+
+use std::time::Instant;
+
+use crate::engine::Sampler;
+
+/// An inference request as admitted to the queue.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampler: Sampler,
+    /// Stop decoding at this token id (e.g. tokenizer EOS), if any.
+    pub eos: Option<i32>,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampler: Sampler::Greedy,
+            eos: None,
+            arrived: Instant::now(),
+        }
+    }
+}
+
+/// Completion record with the latency breakdown the paper reports.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Queue wait before prefill started.
+    pub queued_secs: f64,
+    /// Time to first token (arrival -> first logits sampled).
+    pub ttft_secs: f64,
+    /// Total latency (arrival -> last token).
+    pub e2e_secs: f64,
+}
+
+impl RequestResult {
+    pub fn decode_tok_per_sec(&self) -> f64 {
+        if self.tokens.len() <= 1 {
+            return 0.0;
+        }
+        (self.tokens.len() - 1) as f64 / (self.e2e_secs - self.ttft_secs).max(1e-12)
+    }
+}

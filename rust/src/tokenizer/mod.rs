@@ -1,0 +1,169 @@
+//! Byte-level tokenizer with optional greedy BPE merges.
+//!
+//! The serving examples need a real text <-> token path; vocab layout:
+//! ids 0..255 are raw bytes, id 256 is BOS, 257 is EOS, and ids 258.. are
+//! learned BPE merges (trained greedily from a corpus). Configs with
+//! `vocab == 256` use the plain byte mapping (no specials/merges) so that
+//! every id is valid for the tiny test models.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+const FIRST_MERGE: i32 = 258;
+
+/// Byte-level BPE tokenizer.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: usize,
+    /// merge list in training order: (left, right) -> new id FIRST_MERGE+i
+    merges: Vec<(i32, i32)>,
+    merge_rank: HashMap<(i32, i32), usize>,
+}
+
+impl Tokenizer {
+    /// Plain byte tokenizer clipped to `vocab` (ids >= vocab map to
+    /// `byte % vocab` so tiny-vocab test models stay in range).
+    pub fn bytes_only(vocab: usize) -> Tokenizer {
+        Tokenizer { vocab, merges: Vec::new(), merge_rank: HashMap::new() }
+    }
+
+    /// Train `n_merges` greedy BPE merges from a corpus.
+    pub fn train(corpus: &str, vocab: usize) -> Result<Tokenizer> {
+        if vocab < 258 {
+            bail!("BPE training needs vocab >= 258 (got {vocab})");
+        }
+        let n_merges = vocab - FIRST_MERGE as usize;
+        let mut ids: Vec<i32> = corpus.bytes().map(|b| b as i32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        for m in 0..n_merges {
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // deterministic argmax: highest count, then smallest pair
+            let best = counts
+                .iter()
+                .max_by_key(|(pair, &c)| (c, std::cmp::Reverse(**pair)))
+                .map(|(p, c)| (*p, *c));
+            let Some((pair, count)) = best else { break };
+            if count < 2 {
+                break;
+            }
+            let new_id = FIRST_MERGE + m as i32;
+            merges.push(pair);
+            ids = apply_merge(&ids, pair, new_id);
+        }
+        let merge_rank = merges.iter().enumerate().map(|(i, p)| (*p, i)).collect();
+        Ok(Tokenizer { vocab, merges, merge_rank })
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = text
+            .bytes()
+            .map(|b| (b as i32) % self.vocab.min(256) as i32)
+            .collect();
+        // apply merges in rank order until fixpoint
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, pos)
+            for (pos, w) in ids.windows(2).enumerate() {
+                if let Some(&rank) = self.merge_rank.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, pos));
+                    }
+                }
+            }
+            match best {
+                Some((rank, _)) => {
+                    let pair = self.merges[rank];
+                    ids = apply_merge(&ids, pair, FIRST_MERGE + rank as i32);
+                }
+                None => break,
+            }
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len());
+        for &id in ids {
+            self.push_bytes(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn push_bytes(&self, id: i32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else if id == BOS || id == EOS {
+            // specials render as nothing
+        } else {
+            let idx = (id - FIRST_MERGE) as usize;
+            if let Some(&(l, r)) = self.merges.get(idx) {
+                self.push_bytes(l, out);
+                self.push_bytes(r, out);
+            } else {
+                out.push(b'?');
+            }
+        }
+    }
+}
+
+fn apply_merge(ids: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let t = Tokenizer::bytes_only(256);
+        let s = "hello, ladder residual!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tiny_vocab_wraps() {
+        let t = Tokenizer::bytes_only(64);
+        for id in t.encode("Zebra!") {
+            assert!(id < 64);
+        }
+    }
+
+    #[test]
+    fn bpe_roundtrips_and_compresses() {
+        let corpus = "the cat sat on the mat. the cat sat on the hat. ".repeat(20);
+        let t = Tokenizer::train(&corpus, 300).unwrap();
+        let s = "the cat sat on the mat";
+        let ids = t.encode(s);
+        assert_eq!(t.decode(&ids), s);
+        assert!(ids.len() < s.len(), "{} !< {}", ids.len(), s.len());
+    }
+
+    #[test]
+    fn bpe_encode_is_deterministic() {
+        let corpus = "abab abab abab".repeat(10);
+        let t = Tokenizer::train(&corpus, 300).unwrap();
+        assert_eq!(t.encode("ababab"), t.encode("ababab"));
+    }
+
+    #[test]
+    fn train_rejects_small_vocab() {
+        assert!(Tokenizer::train("abc", 100).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Training driver for the quality-parity experiments (paper Tables 3/4/5).
+//!
+//! The python side AOT-exports one `train_<arch>` graph (fwd + bwd + AdamW,
+//! all weights in a single flat f32 vector) and one `eval_<arch>` graph per
+//! architecture; this module drives them from Rust over a synthetic corpus —
+//! python never runs at experiment time.
+
+pub mod data;
+pub mod parity;
+pub mod train_loop;
+
+pub use data::Corpus;
+pub use train_loop::{EvalMetrics, TrainRun, Trainer};

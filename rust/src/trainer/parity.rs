@@ -1,0 +1,130 @@
+//! The quality-parity experiment drivers (paper Tables 3, 4, 5 analogs).
+//!
+//! * [`pretrain_parity`] — train every architecture from the same seeded
+//!   init on the same data stream; report held-out perplexity + probe
+//!   accuracy (Table 3: standard vs parallel vs ladder; Table 5: desync).
+//! * [`hybrid_adaptation`] — pretrain a standard model, evaluate it
+//!   *zero-shot* under the hybrid-ladder computation flow (the paper's huge
+//!   drop), then retrain briefly and report the recovery (Table 4).
+
+use anyhow::Result;
+
+use super::data::Corpus;
+use super::train_loop::{EvalMetrics, TrainRun, Trainer};
+use crate::runtime::ExecCache;
+use crate::util::bench::Table;
+
+const TRAIN_SEED: u64 = 11;
+const EVAL_SEED: u64 = 1213;
+const BRANCHING: usize = 4;
+
+/// One architecture's parity row.
+#[derive(Debug, Clone)]
+pub struct ParityRow {
+    pub arch: String,
+    pub final_train_loss: f32,
+    pub eval: EvalMetrics,
+}
+
+/// Train each architecture for `steps` from the shared init; equal data.
+pub fn pretrain_parity(
+    exec: &ExecCache,
+    arches: &[&str],
+    steps: usize,
+    peak_lr: f32,
+    eval_batches: usize,
+) -> Result<Vec<ParityRow>> {
+    let mut out = Vec::new();
+    for &arch in arches {
+        let mut trainer = Trainer::new(exec)?;
+        let vocab = exec.artifacts().config.vocab;
+        let mut corpus = Corpus::new(vocab, BRANCHING, TRAIN_SEED);
+        let run: TrainRun = trainer.run(arch, steps, peak_lr, &mut corpus, EVAL_SEED, eval_batches)?;
+        let tail = &run.losses[run.losses.len().saturating_sub(5)..];
+        out.push(ParityRow {
+            arch: arch.to_string(),
+            final_train_loss: tail.iter().sum::<f32>() / tail.len() as f32,
+            eval: run.final_eval,
+        });
+    }
+    Ok(out)
+}
+
+pub fn parity_table(title: &str, rows: &[ParityRow]) -> Table {
+    let mut t = Table::new(title, &["Model", "Train loss", "Held-out PPL", "Probe acc (%)"]);
+    for r in rows {
+        t.row(&[
+            r.arch.clone(),
+            format!("{:.3}", r.final_train_loss),
+            format!("{:.2}", r.eval.perplexity),
+            format!("{:.1}", r.eval.accuracy * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Table 4 analog: zero-shot hybrid conversion + light retraining recovery.
+#[derive(Debug, Clone)]
+pub struct HybridReport {
+    pub base: EvalMetrics,
+    pub zeroshot: EvalMetrics,
+    pub retrained: EvalMetrics,
+    pub base_steps: usize,
+    pub adapt_steps: usize,
+}
+
+pub fn hybrid_adaptation(
+    exec: &ExecCache,
+    base_steps: usize,
+    adapt_steps: usize,
+    peak_lr: f32,
+    eval_batches: usize,
+) -> Result<HybridReport> {
+    let vocab = exec.artifacts().config.vocab;
+
+    // 1. pretrain the standard model
+    let mut trainer = Trainer::new(exec)?;
+    let mut corpus = Corpus::new(vocab, BRANCHING, TRAIN_SEED);
+    trainer.run("standard", base_steps, peak_lr, &mut corpus, EVAL_SEED, eval_batches)?;
+    let mut eval_corpus = Corpus::new(vocab, BRANCHING, EVAL_SEED);
+    let base = trainer.eval("standard", &mut eval_corpus, eval_batches)?;
+
+    // 2. zero-shot: same weights, hybrid-ladder computation flow
+    let mut eval_corpus = Corpus::new(vocab, BRANCHING, EVAL_SEED);
+    let zeroshot = trainer.eval("hybrid", &mut eval_corpus, eval_batches)?;
+
+    // 3. light retraining under the hybrid flow (fresh optimizer state,
+    //    lower LR — the paper's 3B-token SFT analog)
+    trainer.m.fill(0.0);
+    trainer.v.fill(0.0);
+    trainer.step = 0;
+    let mut adapt_corpus = Corpus::new(vocab, BRANCHING, TRAIN_SEED + 1);
+    let warmup_lr = peak_lr * 0.3;
+    for s in 0..adapt_steps {
+        let lr = if s < adapt_steps / 5 + 1 {
+            warmup_lr * (s + 1) as f32 / (adapt_steps / 5 + 1) as f32
+        } else {
+            warmup_lr
+        };
+        let tokens = adapt_corpus.batch(trainer.train_batch, trainer.train_seq);
+        trainer.train_step("hybrid", lr, &tokens)?;
+    }
+    let mut eval_corpus = Corpus::new(vocab, BRANCHING, EVAL_SEED);
+    let retrained = trainer.eval("hybrid", &mut eval_corpus, eval_batches)?;
+
+    Ok(HybridReport { base, zeroshot, retrained, base_steps, adapt_steps })
+}
+
+pub fn hybrid_table(r: &HybridReport) -> Table {
+    let mut t = Table::new(
+        "Table 4 analog: hybrid Ladder conversion of a pretrained standard model",
+        &["Model", "Held-out PPL", "Probe acc (%)"],
+    );
+    let row = |name: &str, e: &EvalMetrics| {
+        [name.to_string(), format!("{:.2}", e.perplexity), format!("{:.1}", e.accuracy * 100.0)]
+    };
+    t.row(&row("standard (pretrained)", &r.base));
+    t.row(&row("hybrid-ladder zeroshot", &r.zeroshot));
+    t.row(&row("hybrid-ladder retrained", &r.retrained));
+    t
+}

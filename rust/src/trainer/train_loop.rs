@@ -1,0 +1,155 @@
+//! The train/eval loop over the AOT-compiled flat-vector graphs.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use super::data::Corpus;
+use crate::runtime::{literal_f32, literal_i32, ExecCache};
+
+/// Held-out evaluation metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalMetrics {
+    pub loss: f64,
+    pub perplexity: f64,
+    /// Greedy next-token accuracy (the probe-task analog of the paper's
+    /// benchmark accuracies).
+    pub accuracy: f64,
+}
+
+/// Recorded history of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainRun {
+    pub arch: String,
+    pub losses: Vec<f32>,
+    pub final_eval: EvalMetrics,
+}
+
+/// Drives `train_<arch>` / `eval_<arch>` graphs for the parity config.
+pub struct Trainer<'a> {
+    exec: &'a ExecCache,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub eval_batch: usize,
+    pub eval_seq: usize,
+    /// Flat parameter vector and AdamW state.
+    pub w: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl<'a> Trainer<'a> {
+    /// Initialize from the artifact manifest's seeded `init_weights` vector.
+    pub fn new(exec: &'a ExecCache) -> Result<Trainer<'a>> {
+        let man = &exec.artifacts().manifest;
+        let tr = man.get("training")?;
+        let w = exec
+            .artifacts()
+            .read_f32(tr.get("init_weights")?.as_str()?)?;
+        let n = exec.artifacts().packing()?.get("total")?.as_usize()?;
+        if w.len() != n {
+            return Err(anyhow!("init weights: {} elems, packing wants {n}", w.len()));
+        }
+        Ok(Trainer {
+            exec,
+            train_batch: tr.get("train_batch")?.as_usize()?,
+            train_seq: tr.get("train_seq")?.as_usize()?,
+            eval_batch: tr.get("eval_batch")?.as_usize()?,
+            eval_seq: tr.get("eval_seq")?.as_usize()?,
+            m: vec![0.0; w.len()],
+            v: vec![0.0; w.len()],
+            w,
+            step: 0,
+        })
+    }
+
+    /// Reset parameters to a fresh copy (for running several arches from
+    /// the same seed point).
+    pub fn reset(&mut self) -> Result<()> {
+        let tr = self.exec.artifacts().manifest.get("training")?;
+        self.w = self
+            .exec
+            .artifacts()
+            .read_f32(tr.get("init_weights")?.as_str()?)?;
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.step = 0;
+        Ok(())
+    }
+
+    /// One AdamW step; returns the batch loss.
+    pub fn train_step(&mut self, arch: &str, lr: f32, tokens: &[i32]) -> Result<f32> {
+        let n = self.w.len();
+        let args: Vec<Literal> = vec![
+            literal_f32(&self.w, &[n])?,
+            literal_f32(&self.m, &[n])?,
+            literal_f32(&self.v, &[n])?,
+            Literal::scalar(self.step),
+            Literal::scalar(lr),
+            literal_i32(tokens, &[self.train_batch, self.train_seq])?,
+        ];
+        let arg_refs: Vec<&Literal> = args.iter().collect();
+        let outs = self.exec.run(&format!("train_{arch}"), &arg_refs)?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        self.w = outs[1].to_vec::<f32>()?;
+        self.m = outs[2].to_vec::<f32>()?;
+        self.v = outs[3].to_vec::<f32>()?;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Evaluate current weights on held-out batches.
+    pub fn eval(&self, arch: &str, corpus: &mut Corpus, batches: usize) -> Result<EvalMetrics> {
+        let n = self.w.len();
+        let mut loss_sum = 0.0f64;
+        let mut hits = 0i64;
+        let n_pred_per_batch = self.eval_batch * (self.eval_seq - 1);
+        for _ in 0..batches {
+            let tokens = corpus.batch(self.eval_batch, self.eval_seq);
+            let args: Vec<Literal> = vec![
+                literal_f32(&self.w, &[n])?,
+                literal_i32(&tokens, &[self.eval_batch, self.eval_seq])?,
+            ];
+            let arg_refs: Vec<&Literal> = args.iter().collect();
+            let outs = self.exec.run(&format!("eval_{arch}"), &arg_refs)?;
+            loss_sum += outs[0].to_vec::<f32>()?[0] as f64;
+            hits += outs[1].to_vec::<i32>()?[0] as i64;
+        }
+        let n_pred = (batches * n_pred_per_batch) as f64;
+        let loss = loss_sum / n_pred;
+        Ok(EvalMetrics {
+            loss,
+            perplexity: loss.exp(),
+            accuracy: hits as f64 / n_pred,
+        })
+    }
+
+    /// Full run: cosine LR schedule with warmup, loss logged each step.
+    pub fn run(
+        &mut self,
+        arch: &str,
+        steps: usize,
+        peak_lr: f32,
+        corpus: &mut Corpus,
+        eval_corpus_seed: u64,
+        eval_batches: usize,
+    ) -> Result<TrainRun> {
+        let warmup = (steps / 10).max(1);
+        let mut losses = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let lr = if s < warmup {
+                peak_lr * (s + 1) as f32 / warmup as f32
+            } else {
+                let t = (s - warmup) as f32 / (steps - warmup).max(1) as f32;
+                let floor = peak_lr * 0.1;
+                floor + 0.5 * (peak_lr - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+            };
+            let tokens = corpus.batch(self.train_batch, self.train_seq);
+            losses.push(self.train_step(arch, lr, &tokens)?);
+        }
+        // fresh seeded held-out stream: identical across architectures
+        let mut eval_corpus = Corpus::new(corpus.vocab, corpus.branching, eval_corpus_seed);
+        let final_eval = self.eval(arch, &mut eval_corpus, eval_batches)?;
+        Ok(TrainRun { arch: arch.to_string(), losses, final_eval })
+    }
+}

@@ -1,0 +1,214 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors, defaults, and a generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative argument specification + parsed values.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Args {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Args {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(str::to_string),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Args {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key} (try --help)"))?
+                    .clone();
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    self.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("option --{key} needs a value"))?,
+                    };
+                    self.values.insert(key, val);
+                }
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn parse_env(self) -> Result<Args> {
+        self.parse(std::env::args().skip(1))
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v>", spec.name)
+            };
+            let default = spec
+                .default
+                .as_deref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:28}{}{default}\n", spec.help));
+        }
+        s
+    }
+
+    // -- typed accessors -----------------------------------------------------
+
+    pub fn get(&self, name: &str) -> Result<String> {
+        if let Some(v) = self.values.get(name) {
+            return Ok(v.clone());
+        }
+        if let Some(spec) = self.specs.iter().find(|s| s.name == name) {
+            if let Some(d) = &spec.default {
+                return Ok(d.clone());
+            }
+        }
+        bail!("missing required option --{name}")
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name)?;
+        v.parse().map_err(|e| anyhow!("--{name}={v}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get(name)?;
+        v.parse().map_err(|e| anyhow!("--{name}={v}: {e}"))
+    }
+
+    /// Comma-separated list accessor: `--sizes 1,2,4`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.get(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().map_err(|e| anyhow!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = Args::new("t", "")
+            .opt("model", Some("tiny"), "")
+            .opt("tp", None, "")
+            .flag("verbose", "")
+            .parse(argv("--tp 4 --verbose run"))
+            .unwrap();
+        assert_eq!(a.get("model").unwrap(), "tiny");
+        assert_eq!(a.get_usize("tp").unwrap(), 4);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn inline_equals() {
+        let a = Args::new("t", "")
+            .opt("lr", None, "")
+            .parse(argv("--lr=0.5"))
+            .unwrap();
+        assert_eq!(a.get_f64("lr").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(Args::new("t", "").parse(argv("--nope")).is_err());
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        let a = Args::new("t", "").opt("x", None, "").parse(argv("")).unwrap();
+        assert!(a.get("x").is_err());
+    }
+
+    #[test]
+    fn list_accessor() {
+        let a = Args::new("t", "")
+            .opt("sizes", Some("1,2,4"), "")
+            .parse(argv(""))
+            .unwrap();
+        assert_eq!(a.get_usize_list("sizes").unwrap(), vec![1, 2, 4]);
+    }
+}

@@ -1,0 +1,128 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs our `harness = false` bench binaries, which use this
+//! module for warmup + timed iterations + a uniform report format. Each
+//! bench binary regenerates one paper table/figure.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Timed measurement of a closure: warmup iterations, then `iters` samples.
+pub fn time_it<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "  {label:40} mean {:>10.3}ms  p50 {:>10.3}ms  ±{:>8.3}ms  (n={})",
+        s.mean() * 1e3,
+        s.p50() * 1e3,
+        s.ci95() * 1e3,
+        s.count()
+    );
+    s
+}
+
+/// Pretty table printer shared by bench binaries and `paper_tables`:
+/// fixed-width columns derived from the widest cell.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:width$} ", c, width = widths[i]));
+            }
+            s.push('|');
+            s
+        };
+        println!("{}", line(&self.header));
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Markdown rendering (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!(
+            "|{}|\n",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+}
+
+/// Format a speedup multiple the way the paper does (e.g. "1.56x").
+pub fn speedup(baseline: f64, improved: f64) -> String {
+    format!("{:.2}x", baseline / improved)
+}
+
+/// Format a percent improvement the way the paper's Table 2/6 do.
+pub fn pct_improvement(baseline: f64, improved: f64) -> String {
+    format!("{:.2}", (baseline - improved) / baseline * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts() {
+        let s = time_it("noop", 1, 5, || {});
+        assert_eq!(s.count(), 5);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(speedup(2.0, 1.0), "2.00x");
+        assert_eq!(pct_improvement(2.0, 1.0), "50.00");
+    }
+}

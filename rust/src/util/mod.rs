@@ -1,0 +1,15 @@
+//! Hand-rolled substrates.
+//!
+//! The build environment is fully offline and the vendored crate set contains
+//! neither serde, clap, rand, criterion nor proptest — so this module
+//! implements the small slices of each that the framework needs: a JSON
+//! parser/writer ([`json`]), a CLI argument parser ([`args`]), seeded RNGs
+//! ([`rng`]), summary statistics ([`stats`]), a timing/benchmark harness
+//! ([`bench`]) and a property-testing helper ([`proptest`]).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,147 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` over `cases` generated inputs
+//! and, on failure, performs a bounded greedy shrink via the generator's
+//! `shrink` hook before panicking with the minimal counterexample found.
+
+use std::fmt::Debug;
+
+use super::rng::Rng;
+
+/// A generator of random test inputs with an optional shrinker.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of a failing input (default: none).
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over generated cases; panic with a (shrunken)
+/// counterexample on failure. Deterministic via the fixed seed.
+pub fn check<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(0x1adde2);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_loop(gen, value, &prop);
+            panic!("property {name:?} failed on case {case}:\n{minimal:#?}");
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut failing: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Greedy descent, bounded to avoid pathological generators.
+    for _ in 0..64 {
+        let mut advanced = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+/// Generator for usize in [lo, hi], shrinking toward lo.
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator for f32 vectors of length in [min_len, max_len], values in
+/// [-scale, scale]; shrinks by halving the length and zeroing entries.
+pub struct VecF32Gen {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32Gen {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = rng.range(self.min_len, self.max_len);
+        (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * self.scale).collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+        }
+        if v.iter().any(|x| *x != 0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Pair two generators.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 100, &PairGen(UsizeGen { lo: 0, hi: 100 }, UsizeGen { lo: 0, hi: 100 }),
+            |(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "lt-10")]
+    fn failing_property_shrinks() {
+        check("lt-10", 200, &UsizeGen { lo: 0, hi: 100 }, |v| *v < 10);
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecF32Gen { min_len: 2, max_len: 8, scale: 1.0 };
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            assert!(v.len() >= 2 && v.len() <= 8);
+            assert!(v.iter().all(|x| x.abs() <= 1.0));
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration: the Rust TP engine (real HLO modules + rust scheduling +
+//! rust collectives) must reproduce the python SimEngine's golden logits for
+//! every architecture, for prefill and teacher-forced KV-cache decode.
+//!
+//! Golden vectors are produced at artifact-build time (aot.py
+//! export_testvectors) — seeded weights, seeded tokens, per-step logits.
+
+use ladder_infer::comm::{Fabric, Interconnect};
+use ladder_infer::engine::TpEngine;
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::runtime::{ArtifactDir, ExecCache};
+
+use std::rc::Rc;
+
+struct TestVec {
+    exec: Rc<ExecCache>,
+    weights: WeightStore,
+    tokens: Vec<i32>,
+    tp: usize,
+    batch: usize,
+    prompt: usize,
+    steps: usize,
+    vocab: usize,
+}
+
+fn load() -> TestVec {
+    let art = ArtifactDir::open_named("tiny").expect("run `make artifacts` first");
+    let tv = art.manifest.get("testvec").unwrap();
+    let tp = tv.get("tp").unwrap().as_usize().unwrap();
+    let batch = tv.get("batch").unwrap().as_usize().unwrap();
+    let prompt = tv.get("prompt").unwrap().as_usize().unwrap();
+    let steps = tv.get("steps").unwrap().as_usize().unwrap();
+    let flat = art.read_f32("testvec_weights.f32").unwrap();
+    let weights =
+        WeightStore::from_flat(&flat, art.packing().unwrap(), art.config.layers).unwrap();
+    let tokens = art.read_i32("testvec_tokens.i32").unwrap();
+    let vocab = art.config.vocab;
+    TestVec { exec: Rc::new(ExecCache::new(art)), weights, tokens, tp, batch, prompt, steps, vocab }
+}
+
+fn expected(exec: &ExecCache, arch: &str) -> Vec<f32> {
+    exec.artifacts()
+        .read_f32(&format!("testvec_logits_{arch}.f32"))
+        .unwrap()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn check_arch(arch: Arch) {
+    let tv = load();
+    let want = expected(&tv.exec, &arch.name());
+    let step_len = tv.batch * tv.vocab;
+    assert_eq!(want.len(), (tv.steps + 1) * step_len, "golden file size");
+
+    let mut engine = TpEngine::new(
+        tv.exec.clone(),
+        &tv.weights,
+        tv.tp,
+        arch,
+        tv.batch,
+        Interconnect::new(Fabric::Local),
+    )
+    .unwrap();
+
+    // prefill: tokens[:, :prompt] (row-major [B, prompt+steps])
+    let total = tv.prompt + tv.steps;
+    let mut prefill_tokens = vec![0i32; tv.batch * tv.prompt];
+    for b in 0..tv.batch {
+        prefill_tokens[b * tv.prompt..(b + 1) * tv.prompt]
+            .copy_from_slice(&tv.tokens[b * total..b * total + tv.prompt]);
+    }
+    let true_lens = vec![tv.prompt; tv.batch];
+    let logits = engine.prefill(&prefill_tokens, tv.prompt, &true_lens).unwrap();
+    let diff = max_abs_diff(&logits.data, &want[..step_len]);
+    // tiny artifacts use Pallas kernels, the oracle uses ref kernels: small
+    // fp divergence from different reduction orders is expected.
+    assert!(diff < 2e-3, "{}: prefill logits diff {diff}", arch.name());
+
+    // teacher-forced decode
+    for t in 0..tv.steps {
+        let step_tokens: Vec<i32> = (0..tv.batch)
+            .map(|b| tv.tokens[b * total + tv.prompt + t])
+            .collect();
+        let logits = engine.decode(&step_tokens).unwrap();
+        let want_step = &want[(t + 1) * step_len..(t + 2) * step_len];
+        let diff = max_abs_diff(&logits.data, want_step);
+        assert!(diff < 2e-3, "{}: decode step {t} diff {diff}", arch.name());
+    }
+}
+
+#[test]
+fn standard_matches_golden() {
+    check_arch(Arch::Standard);
+}
+
+#[test]
+fn ladder_matches_golden() {
+    check_arch(Arch::Ladder);
+}
+
+#[test]
+fn parallel_matches_golden() {
+    check_arch(Arch::Parallel);
+}
+
+#[test]
+fn hybrid_matches_golden() {
+    check_arch(Arch::Hybrid);
+}
+
+#[test]
+fn desync2_matches_golden() {
+    check_arch(Arch::Desync(2));
+}
+
+#[test]
+fn desync4_matches_golden() {
+    check_arch(Arch::Desync(4));
+}
+
+#[test]
+fn upperbound_runs_and_diverges_from_standard() {
+    let tv = load();
+    let mut engine = TpEngine::new(
+        tv.exec.clone(),
+        &tv.weights,
+        tv.tp,
+        Arch::Upperbound,
+        tv.batch,
+        Interconnect::new(Fabric::Local),
+    )
+    .unwrap();
+    let total = tv.prompt + tv.steps;
+    let mut prefill_tokens = vec![0i32; tv.batch * tv.prompt];
+    for b in 0..tv.batch {
+        prefill_tokens[b * tv.prompt..(b + 1) * tv.prompt]
+            .copy_from_slice(&tv.tokens[b * total..b * total + tv.prompt]);
+    }
+    let logits = engine
+        .prefill(&prefill_tokens, tv.prompt, &vec![tv.prompt; tv.batch])
+        .unwrap();
+    assert!(logits.data.iter().all(|x| x.is_finite()));
+    let want = expected(&tv.exec, "standard");
+    let diff = max_abs_diff(&logits.data, &want[..tv.batch * tv.vocab]);
+    assert!(diff > 1e-3, "upperbound should NOT match standard (diff {diff})");
+}
+
+#[test]
+fn tp1_equals_tp2_standard() {
+    let tv = load();
+    let total = tv.prompt + tv.steps;
+    let mut prefill_tokens = vec![0i32; tv.batch * tv.prompt];
+    for b in 0..tv.batch {
+        prefill_tokens[b * tv.prompt..(b + 1) * tv.prompt]
+            .copy_from_slice(&tv.tokens[b * total..b * total + tv.prompt]);
+    }
+    let run = |tp: usize| {
+        let mut e = TpEngine::new(
+            tv.exec.clone(),
+            &tv.weights,
+            tp,
+            Arch::Standard,
+            tv.batch,
+            Interconnect::new(Fabric::Local),
+        )
+        .unwrap();
+        e.prefill(&prefill_tokens, tv.prompt, &vec![tv.prompt; tv.batch])
+            .unwrap()
+    };
+    let a = run(1);
+    let b = run(2);
+    assert!(max_abs_diff(&a.data, &b.data) < 2e-3);
+}

@@ -1,0 +1,169 @@
+//! Property tests (hand-rolled harness, util::proptest) on the coordinator
+//! invariants DESIGN.md §4 calls out: collectives, interconnect monotonicity,
+//! timeline ordering, KV cache slots, tokenizer roundtrip.
+
+use ladder_infer::comm::{CollectiveEngine, Fabric, Interconnect};
+use ladder_infer::engine::KvCache;
+use ladder_infer::model::{Arch, HostTensor};
+use ladder_infer::perfmodel::costs::ModuleTimes;
+use ladder_infer::perfmodel::timeline::simulate_forward;
+use ladder_infer::tokenizer::Tokenizer;
+use ladder_infer::util::proptest::{check, Gen, PairGen, UsizeGen, VecF32Gen};
+use ladder_infer::util::rng::Rng;
+
+struct ModuleTimesGen;
+
+impl Gen for ModuleTimesGen {
+    type Value = (usize, ModuleTimes);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let layers = rng.range(1, 12);
+        let mt = ModuleTimes {
+            attn: rng.f64() * 10.0 + 0.01,
+            mlp: rng.f64() * 10.0 + 0.01,
+            fused: 0.0,
+            allreduce: rng.f64() * 20.0,
+            edges: rng.f64(),
+        };
+        let mt = ModuleTimes { fused: mt.attn + mt.mlp, ..mt };
+        (layers, mt)
+    }
+}
+
+#[test]
+fn prop_timeline_ordering_upperbound_ladder_standard() {
+    check("ub<=ladder<=standard", 300, &ModuleTimesGen, |(layers, mt)| {
+        let ub = simulate_forward(Arch::Upperbound, *layers, mt, false).total;
+        let lad = simulate_forward(Arch::Ladder, *layers, mt, false).total;
+        let std = simulate_forward(Arch::Standard, *layers, mt, false).total;
+        ub <= lad + 1e-9 && lad <= std + 1e-9
+    });
+}
+
+#[test]
+fn prop_ladder_exposure_never_exceeds_total_comm() {
+    check("exposed<=total", 300, &ModuleTimesGen, |(layers, mt)| {
+        let r = simulate_forward(Arch::Ladder, *layers, mt, false);
+        r.comm_exposed <= r.comm_total + 1e-9
+    });
+}
+
+#[test]
+fn prop_desync_comm_counts() {
+    check("desync-comm-count", 200, &ModuleTimesGen, |(layers, mt)| {
+        let full = simulate_forward(Arch::Standard, *layers, mt, false).comm_total;
+        let d2 = simulate_forward(Arch::Desync(2), *layers, mt, false).comm_total;
+        if mt.allreduce == 0.0 {
+            return true;
+        }
+        // desync2 keeps exactly half of 2*layers reduces
+        (d2 - full / 2.0).abs() < 1e-6 * full.max(1.0)
+    });
+}
+
+#[test]
+fn prop_makespan_monotone_in_link_latency() {
+    check("monotone-in-ar", 200, &ModuleTimesGen, |(layers, mt)| {
+        let slower = ModuleTimes { allreduce: mt.allreduce * 2.0 + 0.1, ..*mt };
+        for arch in [Arch::Standard, Arch::Ladder, Arch::Parallel, Arch::Desync(2)] {
+            let a = simulate_forward(arch, *layers, mt, false).total;
+            let b = simulate_forward(arch, *layers, &slower, false).total;
+            if b + 1e-9 < a {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_allreduce_sum_matches_scalar_sum() {
+    let gen = PairGen(UsizeGen { lo: 1, hi: 6 }, VecF32Gen { min_len: 1, max_len: 64, scale: 10.0 });
+    check("allreduce-sum", 150, &gen, |(tp, data)| {
+        let ce = CollectiveEngine::new(*tp, Interconnect::new(Fabric::Local));
+        let parts: Vec<HostTensor> = (0..*tp)
+            .map(|t| {
+                HostTensor::new(
+                    vec![data.len()],
+                    data.iter().map(|x| x * (t + 1) as f32).collect(),
+                )
+            })
+            .collect();
+        let (out, _) = ce.allreduce(parts).unwrap().wait();
+        let factor: f32 = (1..=*tp).map(|t| t as f32).sum();
+        out.data
+            .iter()
+            .zip(data)
+            .all(|(o, d)| (o - d * factor).abs() <= 1e-3 * (1.0 + d.abs() * factor.abs()))
+    });
+}
+
+#[test]
+fn prop_allgather_preserves_all_elements() {
+    let gen = PairGen(UsizeGen { lo: 1, hi: 5 }, UsizeGen { lo: 1, hi: 8 });
+    check("allgather-elements", 100, &gen, |(tp, cols)| {
+        let ce = CollectiveEngine::new(*tp, Interconnect::new(Fabric::Local));
+        let shards: Vec<HostTensor> = (0..*tp)
+            .map(|t| HostTensor::new(vec![2, *cols], vec![t as f32; 2 * cols]))
+            .collect();
+        let out = ce.allgather_concat(shards).unwrap();
+        out.shape == vec![2, cols * tp] && out.data.len() == 2 * cols * tp
+    });
+}
+
+#[test]
+fn prop_kv_slot_writes_are_isolated() {
+    let gen = PairGen(UsizeGen { lo: 1, hi: 4 }, UsizeGen { lo: 0, hi: 3 });
+    check("kv-slot-isolation", 100, &gen, |(layers, slot)| {
+        let batch = 4;
+        let mut kv = KvCache::new(*layers, batch, 2, 8, 4);
+        let stride = 2 * 8 * 4;
+        let ones = HostTensor::new(vec![1, 2, 8, 4], vec![1.0; stride]);
+        kv.write_slot(layers - 1, *slot, &ones, &ones).unwrap();
+        // all other slots in all layers stay zero
+        for l in 0..*layers {
+            for b in 0..batch {
+                let (k, v) = kv.read_slot(l, b);
+                let expect = if l == layers - 1 && b == *slot { 1.0 } else { 0.0 };
+                if k.data.iter().any(|&x| x != expect) || v.data.iter().any(|&x| x != expect) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_tokenizer_roundtrip_ascii() {
+    struct AsciiGen;
+    impl Gen for AsciiGen {
+        type Value = String;
+        fn generate(&self, rng: &mut Rng) -> String {
+            let n = rng.range(0, 60);
+            (0..n).map(|_| (rng.range(32, 126) as u8) as char).collect()
+        }
+        fn shrink(&self, v: &String) -> Vec<String> {
+            if v.is_empty() {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_string(), String::new()]
+            }
+        }
+    }
+    let tok = Tokenizer::bytes_only(256);
+    check("tokenizer-roundtrip", 200, &AsciiGen, |s| tok.decode(&tok.encode(s)) == *s);
+}
+
+#[test]
+fn prop_interconnect_monotone() {
+    let gen = PairGen(UsizeGen { lo: 2, hi: 16 }, UsizeGen { lo: 1, hi: 1 << 20 });
+    check("interconnect-monotone", 200, &gen, |(n, bytes)| {
+        for fabric in [Fabric::NvLink, Fabric::Pcie, Fabric::InfiniBand] {
+            let ic = Interconnect::new(fabric);
+            if ic.allreduce_time(*bytes * 2, *n) + 1e-15 < ic.allreduce_time(*bytes, *n) {
+                return false;
+            }
+        }
+        true
+    });
+}

@@ -1,0 +1,122 @@
+//! Integration: continuous batcher + TCP API over the real tiny engine.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+
+use ladder_infer::comm::{Fabric, Interconnect};
+use ladder_infer::engine::TpEngine;
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::runtime::ExecCache;
+use ladder_infer::server::{api, Batcher, BatcherConfig, Request};
+use ladder_infer::tokenizer::Tokenizer;
+use ladder_infer::util::json::parse;
+
+fn build_batcher(arch: Arch, batch: usize) -> Batcher {
+    let exec = Rc::new(ExecCache::open("tiny").expect("make artifacts first"));
+    let cfg = exec.artifacts().config.clone();
+    let flat = exec.artifacts().read_f32("testvec_weights.f32").unwrap();
+    let weights = WeightStore::from_flat(&flat, exec.artifacts().packing().unwrap(), cfg.layers).unwrap();
+    let engine = TpEngine::new(
+        exec,
+        &weights,
+        2,
+        arch,
+        batch,
+        Interconnect::new(Fabric::Local),
+    )
+    .unwrap();
+    Batcher::new(engine, BatcherConfig::default())
+}
+
+#[test]
+fn batcher_completes_all_requests_fifo() {
+    let mut b = build_batcher(Arch::Ladder, 2);
+    for i in 0..5u64 {
+        b.submit(Request::new(i, vec![1, 2, 3, (i % 4) as i32], 4));
+    }
+    let results = b.run_to_completion().unwrap();
+    assert_eq!(results.len(), 5);
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    // each request produced exactly max_new_tokens
+    for r in &results {
+        assert_eq!(r.tokens.len(), 4, "request {}", r.id);
+        assert!(r.ttft_secs > 0.0 && r.e2e_secs >= r.ttft_secs);
+    }
+    ids.sort();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    assert_eq!(b.metrics.completed, 5);
+    assert!(b.metrics.decode_steps > 0);
+}
+
+#[test]
+fn batcher_oversubscription_queues_and_drains() {
+    // more requests than slots: the queue must drain without starvation
+    let mut b = build_batcher(Arch::Standard, 2);
+    for i in 0..7u64 {
+        b.submit(Request::new(i, vec![5, 6, 7], 3));
+    }
+    let results = b.run_to_completion().unwrap();
+    assert_eq!(results.len(), 7);
+    assert_eq!(b.pending(), 0);
+}
+
+#[test]
+fn batcher_isolation_between_slots() {
+    // the same prompt must produce the same tokens regardless of what else
+    // shares the batch (KV slots must not leak across requests)
+    let prompt = vec![9i32, 8, 7, 6, 5];
+    let solo = {
+        let mut b = build_batcher(Arch::Standard, 2);
+        b.submit(Request::new(0, prompt.clone(), 5));
+        b.run_to_completion().unwrap().remove(0).tokens
+    };
+    let crowded = {
+        let mut b = build_batcher(Arch::Standard, 2);
+        b.submit(Request::new(0, prompt.clone(), 5));
+        b.submit(Request::new(1, vec![100, 101, 102, 103, 104, 105, 106], 5));
+        b.submit(Request::new(2, vec![33, 44], 5));
+        let results = b.run_to_completion().unwrap();
+        results.into_iter().find(|r| r.id == 0).unwrap().tokens
+    };
+    assert_eq!(solo, crowded, "KV slot leakage between concurrent requests");
+}
+
+#[test]
+fn kv_budget_limits_concurrency() {
+    let mut b = build_batcher(Arch::Standard, 2);
+    // budget for exactly one slot
+    b.config.kv_budget_bytes = b.engine.kv_bytes_per_slot();
+    for i in 0..3u64 {
+        b.submit(Request::new(i, vec![1, 2], 2));
+    }
+    let results = b.run_to_completion().unwrap();
+    assert_eq!(results.len(), 3);
+}
+
+#[test]
+fn tcp_api_roundtrip() {
+    let tok = Tokenizer::bytes_only(256);
+    let (jobs, port) = api::spawn_listener("127.0.0.1:0", tok).unwrap();
+
+    // client thread: send two requests, collect replies
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream
+            .write_all(b"{\"prompt\":\"hi there\",\"max_new_tokens\":3}\n")
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line
+    });
+
+    let mut b = build_batcher(Arch::Ladder, 2);
+    api::serve_forever(&mut b, jobs, 1).unwrap();
+
+    let line = client.join().unwrap();
+    let reply = parse(&line).unwrap();
+    assert!(reply.opt("error").is_none(), "{line}");
+    assert_eq!(reply.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+    assert!(reply.get("e2e_ms").unwrap().as_f64().unwrap() > 0.0);
+}
