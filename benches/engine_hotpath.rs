@@ -1,66 +1,122 @@
 //! Real-engine microbenchmarks (`cargo bench --bench engine_hotpath`):
-//! decode-step latency per architecture on the tiny model, collective
-//! throughput, and the host-side overhead split — the measured counterpart
-//! of the perfmodel numbers and the input to the §Perf optimization log.
+//! decode-step latency per architecture x rank runtime on the tiny model,
+//! collective throughput, and the host-side overhead split — the measured
+//! counterpart of the perfmodel numbers and the input to the §Perf
+//! optimization log. Dumps the machine-readable report to `BENCH_pr1.json`.
 
+use std::collections::VecDeque;
 use std::rc::Rc;
 
 use ladder_infer::comm::{CollectiveEngine, Fabric, Interconnect};
-use ladder_infer::engine::TpEngine;
+use ladder_infer::engine::{RuntimeKind, TpEngine};
 use ladder_infer::model::{Arch, HostTensor, WeightStore};
 use ladder_infer::runtime::ExecCache;
 use ladder_infer::util::bench::{time_it, Table};
+use ladder_infer::util::json::Json;
+
+const ARCHES: [Arch; 6] = [
+    Arch::Standard,
+    Arch::Parallel,
+    Arch::Ladder,
+    Arch::Desync(2),
+    Arch::Desync(4),
+    Arch::Upperbound,
+];
 
 fn main() -> anyhow::Result<()> {
     let exec = Rc::new(ExecCache::open("tiny")?);
     let cfg = exec.artifacts().config.clone();
     let flat = exec.artifacts().read_f32("testvec_weights.f32")?;
     let weights = WeightStore::from_flat(&flat, exec.artifacts().packing()?, cfg.layers)?;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
     // -- collective microbench ------------------------------------------------
+    // §Perf: the message pool is cloned *outside* the timed closure — the old
+    // bench cloned inside it, so the "collective" number was dominated by
+    // host memcpy. The memcpy is timed separately below to keep it visible.
     println!("== collective engine ==");
+    const WARMUP: usize = 3;
+    const ITERS: usize = 20;
     for tp in [2usize, 4, 8] {
         let ce = CollectiveEngine::new(tp, Interconnect::new(Fabric::Local));
         let parts: Vec<HostTensor> = (0..tp)
             .map(|_| HostTensor::new(vec![4, 64, 256], vec![1.0; 4 * 64 * 256]))
             .collect();
-        time_it(&format!("allreduce 256KiB x tp{tp}"), 3, 20, || {
-            let p = parts.clone();
+        let mut pool: VecDeque<Vec<HostTensor>> =
+            (0..WARMUP + ITERS).map(|_| parts.clone()).collect();
+        time_it(&format!("allreduce 256KiB x tp{tp}"), WARMUP, ITERS, || {
+            let p = pool.pop_front().expect("pool sized to warmup+iters");
             let _ = ce.allreduce(p).unwrap().wait();
+        });
+        time_it(&format!("  (clone 256KiB x tp{tp} memcpy)"), WARMUP, ITERS, || {
+            std::hint::black_box(parts.clone());
         });
     }
 
-    // -- decode-step latency per architecture ---------------------------------
-    println!("\n== decode step (tiny model, tp=2, real modules) ==");
-    let mut table = Table::new("decode-step latency", &["arch", "mean ms", "p50 ms"]);
-    for arch in [
-        Arch::Standard,
-        Arch::Parallel,
-        Arch::Ladder,
-        Arch::Desync(2),
-        Arch::Desync(4),
-        Arch::Upperbound,
-    ] {
-        let mut engine = TpEngine::new(
-            exec.clone(),
-            &weights,
-            2,
-            arch,
-            2,
-            Interconnect::new(Fabric::Pcie),
-        )?;
-        // prime: prefill 16 tokens
-        let tokens = vec![1i32; 2 * 16];
-        engine.prefill(&tokens, 16, &[16, 16])?;
-        let s = time_it(&format!("decode step [{}]", arch.name()), 3, 15, || {
-            let _ = engine.decode(&[1, 2]).unwrap();
-        });
+    // -- decode-step latency per architecture x runtime -----------------------
+    println!("\n== decode step (tiny model, tp=2, real modules, {cores} cores) ==");
+    let mut table = Table::new(
+        "decode-step latency (sequential vs threaded runtime)",
+        &["arch", "seq mean ms", "thr mean ms", "thr speedup"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for arch in ARCHES {
+        let mut means = [0.0f64; 2];
+        for (ri, runtime) in [RuntimeKind::Sequential, RuntimeKind::Threaded].iter().enumerate() {
+            let mut engine = TpEngine::with_runtime(
+                exec.clone(),
+                &weights,
+                2,
+                arch,
+                2,
+                Interconnect::new(Fabric::Pcie),
+                *runtime,
+            )?;
+            // prime: prefill 16 tokens
+            let tokens = vec![1i32; 2 * 16];
+            engine.prefill(&tokens, 16, &[16, 16])?;
+            let s = time_it(
+                &format!("decode step [{} / {}]", arch.name(), runtime.name()),
+                3,
+                15,
+                || {
+                    let _ = engine.decode(&[1, 2]).unwrap();
+                },
+            );
+            means[ri] = s.mean();
+            rows.push(
+                Json::obj()
+                    .set("arch", arch.name())
+                    .set("runtime", runtime.name())
+                    .set("mean_ms", s.mean() * 1e3)
+                    .set("p50_ms", s.p50() * 1e3),
+            );
+        }
+        let speedup = means[0] / means[1];
+        speedups.push((arch.name(), speedup));
         table.row(&[
             arch.name(),
-            format!("{:.2}", s.mean() * 1e3),
-            format!("{:.2}", s.p50() * 1e3),
+            format!("{:.2}", means[0] * 1e3),
+            format!("{:.2}", means[1] * 1e3),
+            format!("{speedup:.2}x"),
         ]);
     }
     table.print();
+
+    let report = Json::obj()
+        .set("bench", "engine_hotpath")
+        .set("model", "tiny")
+        .set("tp", 2usize)
+        .set("batch", 2usize)
+        .set("fabric", "pcie")
+        .set("host_cores", cores)
+        .set("decode_rows", Json::Arr(rows))
+        .set(
+            "threaded_speedup",
+            Json::Obj(speedups.into_iter().map(|(a, s)| (a, Json::Num(s))).collect()),
+        );
+    std::fs::write("BENCH_pr1.json", report.to_pretty())?;
+    println!("\nwrote BENCH_pr1.json");
     Ok(())
 }

@@ -6,13 +6,14 @@
 //! direct measure of how much latency the Ladder schedule hides (paper
 //! Fig. 6's NCCL-blocking-vs-overlapped story, as a number).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use super::handle::CommHandle;
 use super::interconnect::Interconnect;
+use super::rendezvous::SharedCollective;
 use crate::model::HostTensor;
 
 /// Aggregate comm statistics (shared across a generation run).
@@ -26,25 +27,38 @@ pub struct CommStats {
 }
 
 impl CommStats {
-    /// Fraction of modeled comm time hidden behind compute (0..1).
+    /// Fraction of modeled comm time hidden behind compute, clamped to 0..1.
+    /// Exposed time is measured with real sleeps, so OS scheduling jitter
+    /// can push it slightly past the modeled total — that must read as
+    /// "nothing hidden", never as a negative fraction.
     pub fn hidden_fraction(&self) -> f64 {
         if self.modeled_total.is_zero() {
             return 0.0;
         }
-        1.0 - self.exposed_total.as_secs_f64() / self.modeled_total.as_secs_f64()
+        (1.0 - self.exposed_total.as_secs_f64() / self.modeled_total.as_secs_f64()).clamp(0.0, 1.0)
     }
 }
 
 /// Engine performing collectives over the N simulated ranks.
+///
+/// Statistics live behind an `Arc` so the threaded runtime's rendezvous
+/// collective (created with [`CollectiveEngine::rendezvous`]) reports into
+/// the same ledger as the coordinator-side AllGather.
 pub struct CollectiveEngine {
     pub tp: usize,
     pub interconnect: Interconnect,
-    stats: Mutex<CommStats>,
+    stats: Arc<Mutex<CommStats>>,
 }
 
 impl CollectiveEngine {
     pub fn new(tp: usize, interconnect: Interconnect) -> CollectiveEngine {
-        CollectiveEngine { tp, interconnect, stats: Mutex::new(CommStats::default()) }
+        CollectiveEngine { tp, interconnect, stats: Arc::new(Mutex::new(CommStats::default())) }
+    }
+
+    /// Build the worker-facing rendezvous collective sharing this engine's
+    /// interconnect model and stats ledger.
+    pub fn rendezvous(&self) -> Arc<SharedCollective> {
+        Arc::new(SharedCollective::new(self.tp, self.interconnect, self.stats.clone()))
     }
 
     /// Launch an AllReduce over per-rank partial tensors. The sum is
@@ -183,6 +197,24 @@ mod tests {
         let e = engine(2);
         e.allreduce(vec![t(&[0.; 8]), t(&[0.; 8])]).unwrap().wait();
         assert_eq!(e.stats().bytes_moved, 32);
+    }
+
+    #[test]
+    fn hidden_fraction_clamps_to_unit_interval() {
+        // OS jitter can make measured exposed time exceed the modeled total;
+        // the fraction must clamp to 0 rather than go negative.
+        let s = CommStats {
+            modeled_total: Duration::from_micros(100),
+            exposed_total: Duration::from_micros(150),
+            ..CommStats::default()
+        };
+        assert_eq!(s.hidden_fraction(), 0.0);
+        let s = CommStats {
+            modeled_total: Duration::from_micros(100),
+            exposed_total: Duration::ZERO,
+            ..CommStats::default()
+        };
+        assert_eq!(s.hidden_fraction(), 1.0);
     }
 
     #[test]

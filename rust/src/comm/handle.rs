@@ -66,13 +66,21 @@ impl CommHandle {
     }
 }
 
-/// Sleep with sub-millisecond fidelity: OS sleep for the bulk, then spin.
-/// Plain `thread::sleep` has ~50-100us jitter which would swamp the
-/// microsecond-scale comm times of the tiny testbed configs.
-fn spin_sleep(d: Duration) {
+/// Sleep with sub-millisecond fidelity: OS sleep (park) for the bulk, then
+/// spin only the final ~50us. Plain `thread::sleep` has ~50-100us jitter
+/// which would swamp the microsecond-scale comm times of the tiny testbed
+/// configs, so deadlines short enough for that jitter to dominate are
+/// busy-waited exactly as before — but anything longer parks, because under
+/// the threaded rank runtime a rank burning a core on a modeled deadline
+/// steals cycles from sibling ranks' compute.
+pub(crate) fn spin_sleep(d: Duration) {
+    /// Busy-wait tail after the park (absorbs scheduler wakeup latency).
+    const SPIN_WINDOW: Duration = Duration::from_micros(50);
+    /// Below this, OS sleep jitter dominates the deadline: pure spin.
+    const MIN_PARK: Duration = Duration::from_micros(300);
     let target = Instant::now() + d;
-    if d > Duration::from_micros(300) {
-        std::thread::sleep(d - Duration::from_micros(200));
+    if d > MIN_PARK {
+        std::thread::sleep(d - SPIN_WINDOW);
     }
     while Instant::now() < target {
         std::hint::spin_loop();

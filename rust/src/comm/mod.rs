@@ -1,11 +1,14 @@
 //! Communication layer: interconnect cost models, the collective engine
-//! (real sum-reduction across rank partials + simulated link latency), and
-//! async completion handles that make the Ladder overlap measurable.
+//! (real sum-reduction across rank partials + simulated link latency),
+//! async completion handles that make the Ladder overlap measurable, and
+//! the rendezvous collective the threaded rank runtime synchronizes on.
 
 pub mod collective;
 pub mod handle;
 pub mod interconnect;
+pub mod rendezvous;
 
 pub use collective::{CollectiveEngine, CommStats};
 pub use handle::CommHandle;
 pub use interconnect::{Fabric, Interconnect};
+pub use rendezvous::{ReduceOp, SharedCollective};

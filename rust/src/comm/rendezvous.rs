@@ -1,0 +1,373 @@
+//! Rendezvous collectives for the threaded rank runtime.
+//!
+//! Under the threaded runtime every simulated TP rank runs on its own worker
+//! thread, so an AllReduce is a real synchronization point: each rank
+//! *deposits* its partial tensor, the last depositor reduces all partials in
+//! deterministic rank order (0, 1, ..., tp-1 — exactly the order the
+//! sequential [`CollectiveEngine`] sums in, preserving the bitwise
+//! reproducibility contract of `allreduce_sums_in_rank_order`), and the
+//! modeled link deadline starts ticking from that rendezvous instant — the
+//! same "collective cannot start before the last rank arrives" semantics as
+//! NCCL. Ranks then [`wait`] the result; compute they issue between deposit
+//! and wait genuinely overlaps the modeled link time on a sibling core.
+//!
+//! Exposed-time accounting: the per-round exposed wait is the *maximum*
+//! across ranks (the critical path), folded incrementally into the shared
+//! [`CommStats`] as ranks finish waiting — so `hidden_fraction` keeps the
+//! same meaning it has under the sequential runtime, where each collective
+//! is waited exactly once.
+//!
+//! [`CollectiveEngine`]: super::collective::CollectiveEngine
+//! [`wait`]: SharedCollective::wait
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::collective::CommStats;
+use super::handle::spin_sleep;
+use super::interconnect::Interconnect;
+use crate::model::HostTensor;
+
+/// What the rendezvous computes once all ranks have deposited.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Deterministic sum in rank order 0..tp — the AllReduce contract.
+    Sum,
+    /// Broadcast rank 0's partial, free and unmetered. This is the
+    /// Upperbound architecture's "deleted" collective: the sequential oracle
+    /// keeps one shared residual fed by rank 0's partials, so the threaded
+    /// ranks rendezvous on rank 0's tensor to stay bitwise in step — but no
+    /// communication is modeled or counted, matching the paper's "removes
+    /// all communication operations".
+    TakeRank0,
+}
+
+/// One in-flight collective round, keyed by sequence number. Every rank
+/// issues the same schedule, so per-worker sequence counters line up without
+/// any central coordination.
+struct Round {
+    op: ReduceOp,
+    parts: Vec<Option<HostTensor>>,
+    deposited: usize,
+    result: Option<Arc<HostTensor>>,
+    /// Modeled completion instant; meaningful once `result` is set.
+    ready_at: Instant,
+    /// Ranks that finished waiting (the round retires at `tp`).
+    waited: usize,
+    /// Largest exposed wait recorded so far (critical-path accounting).
+    exposed_max: Duration,
+}
+
+impl Round {
+    fn new(tp: usize, op: ReduceOp) -> Round {
+        Round {
+            op,
+            parts: (0..tp).map(|_| None).collect(),
+            deposited: 0,
+            result: None,
+            ready_at: Instant::now(),
+            waited: 0,
+            exposed_max: Duration::ZERO,
+        }
+    }
+}
+
+struct Inner {
+    rounds: HashMap<u64, Round>,
+    /// Set on any worker error: wakes all waiters with the failure instead
+    /// of deadlocking ranks blocked on a rendezvous that will never fill.
+    poisoned: Option<String>,
+}
+
+/// The rendezvous collective shared by all rank worker threads.
+pub struct SharedCollective {
+    tp: usize,
+    interconnect: Interconnect,
+    stats: Arc<Mutex<CommStats>>,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl SharedCollective {
+    pub fn new(tp: usize, interconnect: Interconnect, stats: Arc<Mutex<CommStats>>) -> SharedCollective {
+        SharedCollective {
+            tp,
+            interconnect,
+            stats,
+            inner: Mutex::new(Inner { rounds: HashMap::new(), poisoned: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn tp(&self) -> usize {
+        self.tp
+    }
+
+    /// Deposit rank `rank`'s partial for collective round `seq`. The last
+    /// depositor performs the reduction (rank order 0..tp) and anchors the
+    /// modeled link deadline at the rendezvous instant. Non-blocking.
+    pub fn deposit(&self, rank: usize, seq: u64, part: HostTensor, op: ReduceOp) -> Result<()> {
+        if rank >= self.tp {
+            bail!("rank {rank} out of range for tp={}", self.tp);
+        }
+        let mut g = self.inner.lock().unwrap();
+        if let Some(msg) = &g.poisoned {
+            bail!("collective poisoned: {msg}");
+        }
+        let tp = self.tp;
+        let round = g.rounds.entry(seq).or_insert_with(|| Round::new(tp, op));
+        if round.op != op {
+            bail!("round {seq}: rank {rank} op {op:?} mismatches {:?}", round.op);
+        }
+        if round.parts[rank].is_some() {
+            bail!("round {seq}: rank {rank} deposited twice");
+        }
+        if let Some(first) = round.parts.iter().flatten().next() {
+            if first.shape != part.shape {
+                bail!("round {seq}: shape mismatch {:?} vs {:?}", part.shape, first.shape);
+            }
+        }
+        round.parts[rank] = Some(part);
+        round.deposited += 1;
+        let taken: Option<Vec<HostTensor>> = if round.deposited == tp {
+            Some(round.parts.iter_mut().map(|p| p.take().unwrap()).collect())
+        } else {
+            None
+        };
+        drop(g); // reduce outside the lock: sibling rounds keep rendezvousing
+
+        if let Some(parts) = taken {
+            let mut parts = parts.into_iter();
+            let result = match op {
+                ReduceOp::Sum => {
+                    let mut acc = parts.next().unwrap();
+                    for p in parts {
+                        for (a, b) in acc.data.iter_mut().zip(&p.data) {
+                            *a += b;
+                        }
+                    }
+                    acc
+                }
+                ReduceOp::TakeRank0 => parts.next().unwrap(),
+            };
+            let modeled = match op {
+                ReduceOp::Sum => {
+                    let bytes = result.numel() * 4;
+                    let d = Duration::from_secs_f64(self.interconnect.allreduce_time(bytes, tp));
+                    let mut s = self.stats.lock().unwrap();
+                    s.allreduce_count += 1;
+                    s.bytes_moved += bytes;
+                    s.modeled_total += d;
+                    d
+                }
+                ReduceOp::TakeRank0 => Duration::ZERO,
+            };
+            // Publish: the deadline is anchored after the reduction, exactly
+            // like the sequential engine's CommHandle (the sum is "device
+            // work", the deadline models only the link).
+            let mut g = self.inner.lock().unwrap();
+            let round = g.rounds.get_mut(&seq).expect("completed round vanished before publish");
+            round.ready_at = Instant::now() + modeled;
+            round.result = Some(Arc::new(result));
+            self.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Block rank `rank` until round `seq` has rendezvoused *and* its
+    /// modeled link deadline has passed. Returns the reduced tensor and this
+    /// rank's exposed (non-overlapped) wait.
+    pub fn wait(&self, rank: usize, seq: u64) -> Result<(Arc<HostTensor>, Duration)> {
+        if rank >= self.tp {
+            bail!("rank {rank} out of range for tp={}", self.tp);
+        }
+        let mut g = self.inner.lock().unwrap();
+        let (result, ready_at) = loop {
+            if let Some(msg) = &g.poisoned {
+                bail!("collective poisoned: {msg}");
+            }
+            if let Some(round) = g.rounds.get(&seq) {
+                if let Some(r) = &round.result {
+                    break (r.clone(), round.ready_at);
+                }
+            }
+            g = self.cv.wait(g).unwrap();
+        };
+        drop(g); // sleep outside the lock: sibling rounds keep rendezvousing
+
+        let now = Instant::now();
+        let exposed = if now < ready_at {
+            let d = ready_at - now;
+            spin_sleep(d);
+            d
+        } else {
+            Duration::ZERO
+        };
+
+        let mut g = self.inner.lock().unwrap();
+        let round = g.rounds.get_mut(&seq).expect("round retired before all ranks waited");
+        if exposed > round.exposed_max {
+            // incrementally raise the recorded per-round exposed time to the
+            // max across ranks — the collective's critical-path exposure
+            if round.op == ReduceOp::Sum {
+                let delta = exposed - round.exposed_max;
+                self.stats.lock().unwrap().exposed_total += delta;
+            }
+            round.exposed_max = exposed;
+        }
+        round.waited += 1;
+        if round.waited == self.tp {
+            g.rounds.remove(&seq);
+        }
+        Ok((result, exposed))
+    }
+
+    /// Mark the collective as failed and wake every blocked rank. Used by a
+    /// worker that errors mid-forward so siblings blocked in [`wait`] fail
+    /// fast instead of deadlocking.
+    ///
+    /// [`wait`]: SharedCollective::wait
+    pub fn poison(&self, msg: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned.is_none() {
+            g.poisoned = Some(msg.to_string());
+        }
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::interconnect::Fabric;
+    use std::thread;
+
+    fn coll(tp: usize, fabric: Fabric) -> Arc<SharedCollective> {
+        Arc::new(SharedCollective::new(
+            tp,
+            Interconnect::new(fabric),
+            Arc::new(Mutex::new(CommStats::default())),
+        ))
+    }
+
+    fn t(v: &[f32]) -> HostTensor {
+        HostTensor::new(vec![v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn sums_in_rank_order_across_threads() {
+        let c = coll(3, Fabric::Local);
+        let mut handles = Vec::new();
+        for rank in 0..3usize {
+            let c = c.clone();
+            handles.push(thread::spawn(move || {
+                let part = t(&[10f32.powi(rank as i32), 2.0 * 10f32.powi(rank as i32)]);
+                c.deposit(rank, 0, part, ReduceOp::Sum).unwrap();
+                let (out, _) = c.wait(rank, 0).unwrap();
+                out.data.clone()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![111.0, 222.0]);
+        }
+    }
+
+    #[test]
+    fn take_rank0_broadcasts_and_is_unmetered() {
+        let stats = Arc::new(Mutex::new(CommStats::default()));
+        let c = Arc::new(SharedCollective::new(
+            2,
+            Interconnect::new(Fabric::Custom(2000, 1)),
+            stats.clone(),
+        ));
+        let c2 = c.clone();
+        let h = thread::spawn(move || {
+            c2.deposit(1, 0, t(&[9.0]), ReduceOp::TakeRank0).unwrap();
+            let (out, _) = c2.wait(1, 0).unwrap();
+            out.data.clone()
+        });
+        c.deposit(0, 0, t(&[5.0]), ReduceOp::TakeRank0).unwrap();
+        let (out, _) = c.wait(0, 0).unwrap();
+        assert_eq!(out.data, vec![5.0]);
+        assert_eq!(h.join().unwrap(), vec![5.0]);
+        let s = stats.lock().unwrap();
+        assert_eq!(s.allreduce_count, 0);
+        assert_eq!(s.modeled_total, Duration::ZERO);
+    }
+
+    #[test]
+    fn stats_count_once_per_round() {
+        let stats = Arc::new(Mutex::new(CommStats::default()));
+        let c = Arc::new(SharedCollective::new(2, Interconnect::new(Fabric::Local), stats.clone()));
+        let c2 = c.clone();
+        let h = thread::spawn(move || {
+            c2.deposit(1, 0, t(&[1.0; 8]), ReduceOp::Sum).unwrap();
+            c2.wait(1, 0).unwrap();
+        });
+        c.deposit(0, 0, t(&[1.0; 8]), ReduceOp::Sum).unwrap();
+        c.wait(0, 0).unwrap();
+        h.join().unwrap();
+        let s = stats.lock().unwrap();
+        assert_eq!(s.allreduce_count, 1);
+        assert_eq!(s.bytes_moved, 32);
+    }
+
+    #[test]
+    fn poison_wakes_blocked_waiters() {
+        let c = coll(2, Fabric::Local);
+        let c2 = c.clone();
+        let h = thread::spawn(move || {
+            c2.deposit(0, 0, t(&[1.0]), ReduceOp::Sum).unwrap();
+            c2.wait(0, 0) // blocks: rank 1 never deposits
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        c.poison("rank 1 exploded");
+        let res = h.join().unwrap();
+        assert!(res.is_err());
+        assert!(res.unwrap_err().to_string().contains("rank 1 exploded"));
+        // and later deposits fail fast too
+        assert!(c.deposit(1, 0, t(&[1.0]), ReduceOp::Sum).is_err());
+    }
+
+    #[test]
+    fn rejects_double_deposit_and_bad_shapes() {
+        let c = coll(2, Fabric::Local);
+        c.deposit(0, 0, t(&[1.0, 2.0]), ReduceOp::Sum).unwrap();
+        assert!(c.deposit(0, 0, t(&[1.0, 2.0]), ReduceOp::Sum).is_err());
+        assert!(c.deposit(1, 0, t(&[1.0]), ReduceOp::Sum).is_err());
+        assert!(c.deposit(1, 1, t(&[1.0]), ReduceOp::TakeRank0).is_ok());
+        // op mismatch on an open round
+        assert!(c.deposit(0, 1, t(&[1.0]), ReduceOp::Sum).is_err());
+    }
+
+    #[test]
+    fn deadline_is_charged_from_the_rendezvous() {
+        // 2ms modeled latency: the waiting rank should expose ~all of it
+        // when it waits immediately after the rendezvous completes.
+        let c = coll2ms();
+        let c2 = c.clone();
+        let h = thread::spawn(move || {
+            c2.deposit(1, 0, t(&[1.0; 64]), ReduceOp::Sum).unwrap();
+            let (_, exposed) = c2.wait(1, 0).unwrap();
+            exposed
+        });
+        c.deposit(0, 0, t(&[1.0; 64]), ReduceOp::Sum).unwrap();
+        let (_, exposed) = c.wait(0, 0).unwrap();
+        let other = h.join().unwrap();
+        assert!(
+            exposed >= Duration::from_millis(1) || other >= Duration::from_millis(1),
+            "{exposed:?} / {other:?}"
+        );
+    }
+
+    fn coll2ms() -> Arc<SharedCollective> {
+        Arc::new(SharedCollective::new(
+            2,
+            Interconnect::new(Fabric::Custom(2000, 1)),
+            Arc::new(Mutex::new(CommStats::default())),
+        ))
+    }
+}

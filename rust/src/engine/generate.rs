@@ -62,6 +62,8 @@ pub struct GenerateReport {
     pub decode_time: Duration,
     pub decode_steps: usize,
     pub comm: CommStats,
+    /// Which rank runtime produced the timings ("sequential"/"threaded").
+    pub runtime: &'static str,
 }
 
 impl GenerateReport {
@@ -126,6 +128,7 @@ pub fn generate(
         decode_time,
         decode_steps: gen_len - 1,
         comm: engine.comm.stats(),
+        runtime: engine.runtime.name(),
     })
 }
 

@@ -3,7 +3,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::model::HostTensor;
+use crate::model::{HostTensor, LlamaConfig};
 
 /// Host-resident KV cache for one rank: `layers x {k, v}` slabs.
 #[derive(Debug, Clone)]
@@ -32,7 +32,19 @@ impl KvCache {
     /// Bytes per slot (both K and V, all layers) — the KV budget unit the
     /// batcher admits against.
     pub fn bytes_per_slot(&self) -> usize {
-        2 * self.k.len() * self.kv_heads_l * self.max_seq * self.head_dim * 4
+        Self::slot_bytes(self.k.len(), self.kv_heads_l, self.max_seq, self.head_dim)
+    }
+
+    /// Same unit computed from a config, summed over all `tp` ranks —
+    /// lets the engine answer KV-budget questions without touching the
+    /// caches (which live on worker threads under the threaded runtime).
+    pub fn bytes_per_slot_all_ranks(cfg: &LlamaConfig, tp: usize) -> usize {
+        tp * Self::slot_bytes(cfg.layers, cfg.kv_heads / tp, cfg.max_seq, cfg.head_dim)
+    }
+
+    /// Single source of truth for the per-rank slot footprint (f32 K + V).
+    fn slot_bytes(layers: usize, kv_heads_l: usize, max_seq: usize, head_dim: usize) -> usize {
+        2 * layers * kv_heads_l * max_seq * head_dim * 4
     }
 
     fn slot_stride(&self) -> usize {
@@ -114,5 +126,31 @@ mod tests {
     fn bytes_per_slot() {
         let kv = KvCache::new(2, 1, 2, 8, 4);
         assert_eq!(kv.bytes_per_slot(), 2 * 2 * 2 * 8 * 4 * 4);
+    }
+
+    #[test]
+    fn bytes_per_slot_all_ranks_matches_instances() {
+        let cfg = LlamaConfig {
+            name: "t".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 3,
+            heads: 4,
+            kv_heads: 4,
+            head_dim: 4,
+            ffn: 32,
+            max_seq: 8,
+            rope_theta: 1e4,
+            norm_eps: 1e-5,
+            params: 0,
+        };
+        for tp in [1usize, 2, 4] {
+            let per_rank =
+                KvCache::new(cfg.layers, 2, cfg.kv_heads / tp, cfg.max_seq, cfg.head_dim);
+            assert_eq!(
+                KvCache::bytes_per_slot_all_ranks(&cfg, tp),
+                tp * per_rank.bytes_per_slot()
+            );
+        }
     }
 }

@@ -7,15 +7,22 @@
 //! launches the next module first (paper Algorithm 1), Parallel fuses
 //! attention+MLP into one reduce, Desync-nx drops reduces and lets per-rank
 //! residual streams diverge, Upperbound deletes communication.
+//!
+//! Ranks execute on one of two runtimes ([`RuntimeKind`]): the default
+//! threaded runtime runs each rank on its own worker thread (true multi-core
+//! overlap, rendezvous collectives), the sequential runtime is the
+//! single-threaded bitwise-identical reference oracle.
 
 pub mod generate;
 pub mod kv;
 pub mod rank;
+pub mod threaded;
 pub mod tpengine;
 pub mod trace;
 
 pub use generate::{GenerateReport, Sampler};
 pub use kv::KvCache;
-pub use rank::RankState;
-pub use tpengine::TpEngine;
+pub use rank::{Embedder, RankState};
+pub use threaded::ThreadedRuntime;
+pub use tpengine::{RuntimeKind, TpEngine};
 pub use trace::EngineTracer;

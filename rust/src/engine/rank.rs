@@ -1,7 +1,7 @@
 //! Per-rank state: sharded weight literals (converted once) + KV cache, and
 //! the module invocations for one rank.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
 use super::kv::KvCache;
@@ -27,7 +27,10 @@ pub struct RankState {
     pub tp: usize,
     pub kv: KvCache,
     layers: Vec<LayerLits>,
-    emb: Literal,
+    /// The replicated embedding table — only rank 0 ever runs the embed
+    /// module (the threaded runtime's workers never do), so only rank 0
+    /// pays for the literal conversion.
+    emb: Option<Literal>,
     final_norm: Literal,
     lm: Literal,
 }
@@ -64,21 +67,19 @@ impl RankState {
             tp,
             kv: KvCache::new(cfg.layers, batch, cfg.kv_heads / tp, cfg.max_seq, cfg.head_dim),
             layers,
-            emb: weights.get("emb")?.to_literal()?,
+            emb: if rank == 0 { Some(weights.get("emb")?.to_literal()?) } else { None },
             final_norm: weights.get("final_norm")?.to_literal()?,
             lm: weights.rank_lm(rank, tp)?.to_literal()?,
         })
     }
 
-    /// Run the embedding module (replicated; only rank 0 needs to call it).
+    /// Run the embedding module (replicated; only rank 0 holds the table).
     pub fn embed(&self, exec: &ExecCache, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
-        if tokens.len() != b * s {
-            bail!("embed: {} tokens for [{b},{s}]", tokens.len());
-        }
-        let name = format!("embed__b{b}__s{s}");
-        let toks = literal_i32(tokens, &[b, s])?;
-        let outs = exec.run(&name, &[&toks, &self.emb])?;
-        tensor_from_literal(&outs[0])
+        let emb = self
+            .emb
+            .as_ref()
+            .ok_or_else(|| anyhow!("embedding table lives on rank 0, not rank {}", self.rank))?;
+        run_embed(exec, emb, tokens, b, s)
     }
 
     /// Attention module (prefill or decode) for one layer. Updates this
@@ -196,6 +197,53 @@ impl RankState {
         let outs = exec.run(&name, &[&x_lit, &self.final_norm, &self.lm])?;
         tensor_from_literal(&outs[0])
     }
+
+    /// Slice each row's `last[b]` position out of the final residual
+    /// [B, S, H] and run this rank's LM-head shard: returns [B, V/tp].
+    /// Shared by the sequential head and the threaded rank workers.
+    pub fn lm_head_rows(&self, exec: &ExecCache, x: &HostTensor, last: &[usize]) -> Result<HostTensor> {
+        if x.shape.len() != 3 {
+            bail!("lm_head_rows wants [B,S,H], got {:?}", x.shape);
+        }
+        let (s, h) = (x.shape[1], x.shape[2]);
+        let b = last.len();
+        let mut rows = Vec::with_capacity(b * h);
+        for (bi, &pos) in last.iter().enumerate() {
+            if pos >= s {
+                bail!("last position {pos} out of range (S={s})");
+            }
+            let base = (bi * s + pos) * h;
+            rows.extend_from_slice(&x.data[base..base + h]);
+        }
+        self.lm_head(exec, &HostTensor::new(vec![b, h], rows))
+    }
+}
+
+/// Coordinator-side embedding runner for the threaded runtime: the
+/// replicated embedding table only, without any per-layer weight literals
+/// (those live thread-locally inside the rank workers).
+pub struct Embedder {
+    emb: Literal,
+}
+
+impl Embedder {
+    pub fn new(weights: &WeightStore) -> Result<Embedder> {
+        Ok(Embedder { emb: weights.get("emb")?.to_literal()? })
+    }
+
+    pub fn embed(&self, exec: &ExecCache, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
+        run_embed(exec, &self.emb, tokens, b, s)
+    }
+}
+
+fn run_embed(exec: &ExecCache, emb: &Literal, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
+    if tokens.len() != b * s {
+        bail!("embed: {} tokens for [{b},{s}]", tokens.len());
+    }
+    let name = format!("embed__b{b}__s{s}");
+    let toks = literal_i32(tokens, &[b, s])?;
+    let outs = exec.run(&name, &[&toks, emb])?;
+    tensor_from_literal(&outs[0])
 }
 
 #[derive(Clone, Copy)]

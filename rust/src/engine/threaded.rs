@@ -1,0 +1,448 @@
+//! The threaded rank runtime: one long-lived worker thread per simulated TP
+//! rank, coordinated over channels, synchronized through the rendezvous
+//! collective.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (not `Send`), so nothing
+//! XLA-shaped crosses a thread boundary: each worker builds its own
+//! thread-local PJRT client, its own [`ExecCache`] over the shared artifact
+//! directory, and its own [`RankState`] (weight literals + KV cache) from
+//! the host-side [`WeightStore`], which is plain `Send` data. The
+//! coordinator ([`super::TpEngine`]) broadcasts the embedded residual
+//! activation to the workers as an `Arc<HostTensor>`; each worker converts
+//! it to a literal once per module call on its own thread — the sequential
+//! engine performs that conversion `tp` times per module on one core.
+//!
+//! Determinism contract: every worker executes the *same* per-rank schedule
+//! the sequential engine would (same module sequence, same collective
+//! sequence), and every collective reduces in rank order 0..tp regardless of
+//! arrival order. Threaded logits are therefore bitwise identical to the
+//! sequential oracle's — asserted per architecture by the
+//! `runtime_determinism` integration test.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::rank::{Phase, RankState};
+use crate::comm::rendezvous::{ReduceOp, SharedCollective};
+use crate::model::{Arch, HostTensor, WeightStore};
+use crate::runtime::{ArtifactDir, ExecCache};
+
+/// Coordinator -> worker commands. One `Forward` per engine prefill/decode;
+/// the worker replies with its LM-head vocab shard.
+enum Cmd {
+    Forward {
+        x0: Arc<HostTensor>,
+        phase: Phase,
+        lens: Option<Vec<i32>>,
+        slot: Option<usize>,
+        /// Per-row last positions to slice before the LM head.
+        last: Vec<usize>,
+    },
+    Release(usize),
+    Shutdown,
+}
+
+/// Worker -> coordinator replies.
+enum Reply {
+    Shard(Result<HostTensor>),
+}
+
+/// Handle to the per-rank worker threads owned by a threaded `TpEngine`.
+///
+/// Error semantics: a forward error (or panic) on any rank poisons the
+/// rendezvous collective, failing every in-flight and future collective —
+/// the engine is dead and must be rebuilt. Mid-forward failures leave rank
+/// KV caches and sequence counters in inconsistent states, so (as with the
+/// sequential engine after a mid-forward PJRT error) there is deliberately
+/// no resurrection path.
+pub struct ThreadedRuntime {
+    tp: usize,
+    cmds: Vec<mpsc::Sender<Cmd>>,
+    replies: Vec<mpsc::Receiver<Reply>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    coll: Arc<SharedCollective>,
+}
+
+impl ThreadedRuntime {
+    /// Spawn one worker per rank. Workers reopen the artifact directory and
+    /// shard the (`Arc`-shared) weights themselves, so compilation and
+    /// literal conversion happen concurrently across ranks at startup too.
+    pub fn spawn(
+        artifact_dir: &Path,
+        weights: &WeightStore,
+        tp: usize,
+        arch: Arch,
+        batch: usize,
+        coll: Arc<SharedCollective>,
+    ) -> Result<ThreadedRuntime> {
+        // one shared host copy for all workers, dropped when the last
+        // worker finishes building its literals
+        let weights = Arc::new(weights.clone());
+        let mut cmds = Vec::with_capacity(tp);
+        let mut replies = Vec::with_capacity(tp);
+        let mut workers = Vec::with_capacity(tp);
+        for rank in 0..tp {
+            let (cmd_tx, cmd_rx) = mpsc::channel();
+            let (rep_tx, rep_rx) = mpsc::channel();
+            let dir: PathBuf = artifact_dir.to_path_buf();
+            let weights = weights.clone();
+            let coll_w = coll.clone();
+            let handle = thread::Builder::new()
+                .name(format!("tp-rank-{rank}"))
+                .spawn(move || worker_main(rank, tp, batch, arch, dir, weights, coll_w, cmd_rx, rep_tx))
+                .map_err(|e| anyhow!("spawn rank {rank} worker: {e}"))?;
+            cmds.push(cmd_tx);
+            replies.push(rep_rx);
+            workers.push(handle);
+        }
+        Ok(ThreadedRuntime { tp, cmds, replies, workers, coll })
+    }
+
+    /// Broadcast one forward pass to all ranks and collect their LM-head
+    /// shards in rank order (deterministic AllGather input order).
+    pub fn forward(
+        &self,
+        x0: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        last: &[usize],
+    ) -> Result<Vec<HostTensor>> {
+        let x0 = Arc::new(x0);
+        for (rank, tx) in self.cmds.iter().enumerate() {
+            tx.send(Cmd::Forward {
+                x0: x0.clone(),
+                phase,
+                lens: lens.map(<[i32]>::to_vec),
+                slot,
+                last: last.to_vec(),
+            })
+            .map_err(|_| anyhow!("rank {rank} worker hung up"))?;
+        }
+        let mut shards = Vec::with_capacity(self.tp);
+        let mut first_err: Option<anyhow::Error> = None;
+        for (rank, rx) in self.replies.iter().enumerate() {
+            match rx.recv() {
+                Ok(Reply::Shard(Ok(shard))) => shards.push(shard),
+                Ok(Reply::Shard(Err(e))) => {
+                    first_err.get_or_insert(anyhow!("rank {rank}: {e}"));
+                }
+                Err(_) => {
+                    // worker thread is gone (its panic guard poisons the
+                    // collective, but poison again in case it died before
+                    // the guard was armed) — unblock any waiting siblings
+                    self.coll.poison(&format!("rank {rank} worker died"));
+                    first_err.get_or_insert(anyhow!("rank {rank} worker died"));
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(shards),
+        }
+    }
+
+    /// Clear slot state on every rank (request finished/evicted). Channel
+    /// FIFO ordering guarantees the clear lands before any later `Forward`.
+    pub fn release_slot(&self, slot: usize) {
+        for tx in &self.cmds {
+            let _ = tx.send(Cmd::Release(slot));
+        }
+    }
+}
+
+impl Drop for ThreadedRuntime {
+    fn drop(&mut self) {
+        for tx in &self.cmds {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// Poisons the collective if its thread unwinds (a panicking rank must not
+/// leave siblings blocked forever inside a rendezvous it will never reach).
+struct PanicGuard {
+    rank: usize,
+    coll: Arc<SharedCollective>,
+}
+
+impl Drop for PanicGuard {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.coll.poison(&format!("rank {} worker panicked", self.rank));
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    rank: usize,
+    tp: usize,
+    batch: usize,
+    arch: Arch,
+    dir: PathBuf,
+    weights: Arc<WeightStore>,
+    coll: Arc<SharedCollective>,
+    cmds: mpsc::Receiver<Cmd>,
+    replies: mpsc::Sender<Reply>,
+) {
+    let _panic_guard = PanicGuard { rank, coll: coll.clone() };
+    let mut ctx = match WorkerCtx::new(rank, tp, batch, arch, &dir, &weights, coll.clone()) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            let msg = format!("rank {rank} init failed: {e:#}");
+            coll.poison(&msg);
+            while let Ok(cmd) = cmds.recv() {
+                match cmd {
+                    Cmd::Forward { .. } => {
+                        if replies.send(Reply::Shard(Err(anyhow!(msg.clone())))).is_err() {
+                            break;
+                        }
+                    }
+                    Cmd::Release(_) => {}
+                    Cmd::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    drop(weights); // literals are built; release this worker's share of the host copy
+
+    while let Ok(cmd) = cmds.recv() {
+        match cmd {
+            Cmd::Forward { x0, phase, lens, slot, last } => {
+                let shard = ctx.forward((*x0).clone(), phase, lens.as_deref(), slot, &last);
+                if let Err(e) = &shard {
+                    // wake siblings blocked on a rendezvous this rank will
+                    // never reach
+                    ctx.coll.poison(&format!("rank {rank}: {e:#}"));
+                }
+                if replies.send(Reply::Shard(shard)).is_err() {
+                    break;
+                }
+            }
+            Cmd::Release(slot) => ctx.state.kv.clear_slot(slot),
+            Cmd::Shutdown => break,
+        }
+    }
+}
+
+/// Thread-local state of one rank worker: its own PJRT compilation cache and
+/// rank weights, plus its collective sequence counter. All ranks issue the
+/// same schedule, so the counters stay aligned without coordination.
+struct WorkerCtx {
+    rank: usize,
+    tp: usize,
+    layers: usize,
+    arch: Arch,
+    exec: ExecCache,
+    state: RankState,
+    coll: Arc<SharedCollective>,
+    seq: u64,
+}
+
+impl WorkerCtx {
+    fn new(
+        rank: usize,
+        tp: usize,
+        batch: usize,
+        arch: Arch,
+        dir: &Path,
+        weights: &WeightStore,
+        coll: Arc<SharedCollective>,
+    ) -> Result<WorkerCtx> {
+        let exec = ExecCache::new(ArtifactDir::open(dir)?);
+        let cfg = exec.artifacts().config.clone();
+        let state = RankState::new(&cfg, weights, rank, tp, batch)?;
+        Ok(WorkerCtx { rank, tp, layers: cfg.layers, arch, exec, state, coll, seq: 0 })
+    }
+
+    /// The per-rank counterpart of `TpEngine::forward` + the head shard.
+    fn forward(
+        &mut self,
+        x0: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        last: &[usize],
+    ) -> Result<HostTensor> {
+        let final_x = match self.arch {
+            Arch::Standard => self.fwd_synced(x0, phase, lens, slot, self.layers)?,
+            Arch::Ladder => self.fwd_synced(x0, phase, lens, slot, 0)?,
+            Arch::Hybrid => self.fwd_synced(x0, phase, lens, slot, self.layers / 2)?,
+            Arch::Parallel => self.fwd_parallel(x0, phase, lens, slot)?,
+            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, slot, n)?,
+            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, slot)?,
+        };
+        self.state.lm_head_rows(&self.exec, &final_x, last)
+    }
+
+    /// Deposit this rank's partial for the next collective in the schedule.
+    fn launch(&mut self, part: HostTensor, op: ReduceOp) -> Result<u64> {
+        let seq = self.seq;
+        self.seq += 1;
+        self.coll.deposit(self.rank, seq, part, op)?;
+        Ok(seq)
+    }
+
+    /// Wait a launched collective and add the reduced delta into `x`.
+    fn absorb(&mut self, x: &mut HostTensor, seq: u64) -> Result<()> {
+        let (delta, _exposed) = self.coll.wait(self.rank, seq)?;
+        add_assign(x, &delta);
+        Ok(())
+    }
+
+    /// Standard / Ladder / Hybrid (rank-local view of Algorithm 1): for
+    /// ladder layers the AllReduce is waited only after the next module has
+    /// been issued, so the modeled link time runs while this core computes.
+    fn fwd_synced(
+        &mut self,
+        mut x: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        ladder_from: usize,
+    ) -> Result<HostTensor> {
+        let mut pend_attn: Option<u64> = None;
+        let mut pend_mlp: Option<u64> = None;
+        for i in 0..self.layers {
+            if i >= ladder_from {
+                if let Some(seq) = pend_attn.take() {
+                    self.absorb(&mut x, seq)?;
+                }
+                let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot)?;
+                let attn_seq = self.launch(attn, ReduceOp::Sum)?;
+                if let Some(seq) = pend_mlp.take() {
+                    self.absorb(&mut x, seq)?;
+                }
+                let mlp = self.state.mlp(&self.exec, i, &x)?; // overlaps attn_seq
+                let mlp_seq = self.launch(mlp, ReduceOp::Sum)?;
+                pend_attn = Some(attn_seq);
+                pend_mlp = Some(mlp_seq);
+            } else {
+                let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot)?;
+                let seq = self.launch(attn, ReduceOp::Sum)?;
+                self.absorb(&mut x, seq)?;
+                let mlp = self.state.mlp(&self.exec, i, &x)?;
+                let seq = self.launch(mlp, ReduceOp::Sum)?;
+                self.absorb(&mut x, seq)?;
+            }
+        }
+        if let Some(seq) = pend_attn.take() {
+            self.absorb(&mut x, seq)?;
+        }
+        if let Some(seq) = pend_mlp.take() {
+            self.absorb(&mut x, seq)?;
+        }
+        Ok(x)
+    }
+
+    /// PaLM parallel attention+MLP: one blocking reduce per layer.
+    fn fwd_parallel(
+        &mut self,
+        mut x: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+    ) -> Result<HostTensor> {
+        for i in 0..self.layers {
+            let partial = self.state.fused(&self.exec, i, &x, phase, lens, slot)?;
+            let seq = self.launch(partial, ReduceOp::Sum)?;
+            self.absorb(&mut x, seq)?;
+        }
+        Ok(x)
+    }
+
+    /// Desync-nx: this rank's residual stream diverges between retained
+    /// reduces; a retained reduce carries `partial + r/tp`, re-synchronizing
+    /// all streams to the reduced value.
+    fn fwd_desync(
+        &mut self,
+        x0: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        n: usize,
+    ) -> Result<HostTensor> {
+        let tp = self.tp as f32;
+        let mut r = x0;
+        let mut c = 0usize;
+        let mut synced = true;
+        for i in 0..self.layers {
+            for kind in [BlockSel::Attn, BlockSel::Mlp] {
+                let mut p = match kind {
+                    BlockSel::Attn => self.state.attn(&self.exec, i, &r, phase, lens, slot)?,
+                    BlockSel::Mlp => self.state.mlp(&self.exec, i, &r)?,
+                };
+                c += 1;
+                if c % n == 0 {
+                    // retained reduce: message = partial + residual/tp
+                    for (a, b) in p.data.iter_mut().zip(&r.data) {
+                        *a += b / tp;
+                    }
+                    let seq = self.launch(p, ReduceOp::Sum)?;
+                    let (x, _) = self.coll.wait(self.rank, seq)?;
+                    r = (*x).clone();
+                    synced = true;
+                } else {
+                    add_assign(&mut r, &p);
+                    synced = false;
+                }
+            }
+        }
+        if !synced {
+            // final resync (mean) so the head sees one residual
+            let msg =
+                HostTensor::new(r.shape.clone(), r.data.iter().map(|v| v / tp).collect());
+            let seq = self.launch(msg, ReduceOp::Sum)?;
+            let (x, _) = self.coll.wait(self.rank, seq)?;
+            r = (*x).clone();
+        }
+        Ok(r)
+    }
+
+    /// Upperbound: communication deleted. The ranks still rendezvous on rank
+    /// 0's partial (free, unmetered) so every rank's residual stays bitwise
+    /// identical to the sequential oracle's single shared stream.
+    fn fwd_upperbound(
+        &mut self,
+        mut x: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+    ) -> Result<HostTensor> {
+        for i in 0..self.layers {
+            let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot)?;
+            let seq = self.launch(attn, ReduceOp::TakeRank0)?;
+            self.absorb(&mut x, seq)?;
+            let mlp = self.state.mlp(&self.exec, i, &x)?;
+            let seq = self.launch(mlp, ReduceOp::TakeRank0)?;
+            self.absorb(&mut x, seq)?;
+        }
+        Ok(x)
+    }
+}
+
+#[derive(Clone, Copy)]
+enum BlockSel {
+    Attn,
+    Mlp,
+}
+
+fn add_assign(x: &mut HostTensor, delta: &HostTensor) {
+    debug_assert_eq!(x.shape, delta.shape);
+    for (a, b) in x.data.iter_mut().zip(&delta.data) {
+        *a += b;
+    }
+}

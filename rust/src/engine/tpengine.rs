@@ -6,15 +6,56 @@
 //! [`CollectiveEngine`] which performs the real reduction and charges the
 //! modeled link time as a deadline — so the Ladder schedule's overlap is a
 //! genuine wall-clock effect.
+//!
+//! Two rank runtimes share the numerics (bitwise — see the
+//! `runtime_determinism` test):
+//!
+//! * [`RuntimeKind::Threaded`] (default) — one worker thread per rank,
+//!   rendezvous collectives; per-rank module time genuinely overlaps across
+//!   cores, so `tp`-way compute no longer serializes onto one thread.
+//! * [`RuntimeKind::Sequential`] — the single-threaded reference oracle:
+//!   ranks execute in sequence on the caller's thread and per-rank module
+//!   time is summed. Kept for engine-vs-engine numeric diffs and tracing.
 
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
-use super::rank::{Phase, RankState};
+use super::rank::{Embedder, Phase, RankState};
+use super::threaded::ThreadedRuntime;
 use crate::comm::{CollectiveEngine, CommHandle, Interconnect};
 use crate::model::{Arch, HostTensor, LlamaConfig, WeightStore};
 use crate::runtime::ExecCache;
+
+/// Which rank execution runtime an engine uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RuntimeKind {
+    /// Single-threaded reference oracle: ranks run in sequence on the
+    /// caller's thread; per-rank module time is summed, not overlapped.
+    Sequential,
+    /// One worker thread per rank with rendezvous collectives (default):
+    /// per-rank module time overlaps on sibling cores, the measured
+    /// counterpart of the paper's concurrent TP ranks.
+    #[default]
+    Threaded,
+}
+
+impl RuntimeKind {
+    pub fn parse(s: &str) -> Result<RuntimeKind> {
+        Ok(match s {
+            "sequential" | "seq" => RuntimeKind::Sequential,
+            "threaded" | "thread" => RuntimeKind::Threaded,
+            _ => bail!("unknown runtime {s:?} (sequential|threaded)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuntimeKind::Sequential => "sequential",
+            RuntimeKind::Threaded => "threaded",
+        }
+    }
+}
 
 /// Multi-rank tensor-parallel engine for one (arch, tp, batch) setting.
 pub struct TpEngine {
@@ -22,18 +63,27 @@ pub struct TpEngine {
     pub tp: usize,
     pub arch: Arch,
     pub batch: usize,
+    pub runtime: RuntimeKind,
     pub comm: CollectiveEngine,
     exec: Rc<ExecCache>,
+    /// Sequential runtime's rank states (empty under the threaded runtime,
+    /// whose workers own their rank state thread-locally).
     ranks: Vec<RankState>,
+    /// Worker threads (threaded runtime only).
+    threaded: Option<ThreadedRuntime>,
+    /// Coordinator-side embedding runner (threaded runtime only).
+    embedder: Option<Embedder>,
     /// Current sequence length per batch slot (continuous batching state).
     pub lens: Vec<i32>,
     buckets: Vec<usize>,
     /// Optional wall-clock execution tracer (Figure 6 counterpart); enable
-    /// with [`TpEngine::enable_trace`].
+    /// with [`TpEngine::enable_trace`]. Sequential runtime only — worker
+    /// threads do not feed the tracer.
     pub tracer: Option<super::trace::EngineTracer>,
 }
 
 impl TpEngine {
+    /// Build an engine on the default (threaded) runtime.
     pub fn new(
         exec: Rc<ExecCache>,
         weights: &WeightStore,
@@ -41,6 +91,20 @@ impl TpEngine {
         arch: Arch,
         batch: usize,
         interconnect: Interconnect,
+    ) -> Result<TpEngine> {
+        Self::with_runtime(exec, weights, tp, arch, batch, interconnect, RuntimeKind::default())
+    }
+
+    /// Build an engine on an explicit runtime (`--runtime` toggle; the
+    /// sequential oracle is kept so numerics can be diffed engine-vs-engine).
+    pub fn with_runtime(
+        exec: Rc<ExecCache>,
+        weights: &WeightStore,
+        tp: usize,
+        arch: Arch,
+        batch: usize,
+        interconnect: Interconnect,
+        runtime: RuntimeKind,
     ) -> Result<TpEngine> {
         let cfg = exec.artifacts().config.clone();
         let (tps, batches, buckets) = exec.artifacts().serving_params()?;
@@ -53,9 +117,6 @@ impl TpEngine {
         if cfg.heads % tp != 0 || cfg.kv_heads % tp != 0 {
             bail!("tp={tp} does not divide heads/kv_heads");
         }
-        let ranks = (0..tp)
-            .map(|t| RankState::new(&cfg, weights, t, tp, batch))
-            .collect::<Result<Vec<_>>>()?;
         // Upperbound deletes ALL communication (paper: "removes all
         // communication operations"), including the lm-head AllGather — so
         // its collective engine runs on the free local fabric.
@@ -64,14 +125,37 @@ impl TpEngine {
         } else {
             interconnect
         };
+        let comm = CollectiveEngine::new(tp, interconnect);
+        let (ranks, threaded, embedder) = match runtime {
+            RuntimeKind::Sequential => {
+                let ranks = (0..tp)
+                    .map(|t| RankState::new(&cfg, weights, t, tp, batch))
+                    .collect::<Result<Vec<_>>>()?;
+                (ranks, None, None)
+            }
+            RuntimeKind::Threaded => {
+                let rt = ThreadedRuntime::spawn(
+                    &exec.artifacts().dir,
+                    weights,
+                    tp,
+                    arch,
+                    batch,
+                    comm.rendezvous(),
+                )?;
+                (Vec::new(), Some(rt), Some(Embedder::new(weights)?))
+            }
+        };
         Ok(TpEngine {
             cfg,
             tp,
             arch,
             batch,
-            comm: CollectiveEngine::new(tp, interconnect),
+            runtime,
+            comm,
             exec,
             ranks,
+            threaded,
+            embedder,
             lens: vec![0; batch],
             buckets,
             tracer: None,
@@ -79,8 +163,14 @@ impl TpEngine {
     }
 
     /// Start (or restart) wall-clock tracing of module + AllReduce spans.
-    pub fn enable_trace(&mut self) {
+    /// Sequential runtime only — worker threads do not feed the tracer, so
+    /// enabling it on a threaded engine would silently record nothing.
+    pub fn enable_trace(&mut self) -> Result<()> {
+        if self.runtime == RuntimeKind::Threaded {
+            bail!("tracing requires the sequential runtime (--runtime sequential)");
+        }
         self.tracer = Some(super::trace::EngineTracer::new());
+        Ok(())
     }
 
     /// Smallest exported prefill bucket that fits `prompt_len`.
@@ -106,13 +196,13 @@ impl TpEngine {
         if tokens.len() != b * bucket || true_lens.len() != b {
             bail!("prefill shapes: {} tokens, {} lens", tokens.len(), true_lens.len());
         }
-        let x0 = self.ranks[0].embed(&self.exec, tokens, b, bucket)?;
-        let finals = self.forward(x0, Phase::Prefill, None, None)?;
+        let x0 = self.embed(tokens, b, bucket)?;
+        let last: Vec<usize> = true_lens.iter().map(|&l| l - 1).collect();
+        let logits = self.run(x0, Phase::Prefill, None, None, &last)?;
         for (slot, &l) in true_lens.iter().enumerate() {
             self.lens[slot] = l as i32;
         }
-        let last: Vec<usize> = true_lens.iter().map(|&l| l - 1).collect();
-        self.head(&finals, &last)
+        Ok(logits)
     }
 
     /// Single-slot prefill into `slot` (continuous batching): `tokens` is
@@ -121,10 +211,9 @@ impl TpEngine {
         if slot >= self.batch {
             bail!("slot {slot} out of range");
         }
-        let x0 = self.ranks[0].embed(&self.exec, tokens, 1, bucket)?;
-        let finals = self.forward(x0, Phase::Prefill, None, Some(slot))?;
+        let x0 = self.embed(tokens, 1, bucket)?;
+        let logits = self.run(x0, Phase::Prefill, None, Some(slot), &[true_len - 1])?;
         self.lens[slot] = true_len as i32;
-        let logits = self.head(&finals, &[true_len - 1])?;
         Ok(logits.data)
     }
 
@@ -137,26 +226,35 @@ impl TpEngine {
             bail!("decode wants {b} tokens, got {}", tokens.len());
         }
         let lens = self.lens.clone();
-        let x0 = self.ranks[0].embed(&self.exec, tokens, b, 1)?;
-        let finals = self.forward(x0, Phase::Decode, Some(&lens), None)?;
+        let x0 = self.embed(tokens, b, 1)?;
+        let last = vec![0usize; b];
+        let logits = self.run(x0, Phase::Decode, Some(&lens), None, &last)?;
         for l in self.lens.iter_mut() {
             *l += 1;
         }
-        let last = vec![0usize; b];
-        self.head(&finals, &last)
+        Ok(logits)
     }
 
     /// Release a slot (request finished/evicted).
     pub fn release_slot(&mut self, slot: usize) {
         self.lens[slot] = 0;
-        for rank in &mut self.ranks {
-            rank.kv.clear_slot(slot);
+        match self.runtime {
+            RuntimeKind::Sequential => {
+                for rank in &mut self.ranks {
+                    rank.kv.clear_slot(slot);
+                }
+            }
+            RuntimeKind::Threaded => {
+                self.threaded.as_ref().expect("threaded runtime").release_slot(slot);
+            }
         }
     }
 
     /// KV bytes one slot occupies across all ranks (batcher admission unit).
+    /// Computed from the config — identical to summing each rank's
+    /// `KvCache::bytes_per_slot`, and available without a worker round-trip.
     pub fn kv_bytes_per_slot(&self) -> usize {
-        self.ranks.iter().map(|r| r.kv.bytes_per_slot()).sum()
+        super::kv::KvCache::bytes_per_slot_all_ranks(&self.cfg, self.tp)
     }
 
     pub fn exec(&self) -> &ExecCache {
@@ -164,7 +262,48 @@ impl TpEngine {
     }
 
     // ---------------------------------------------------------------------
-    // the per-architecture forward schedules
+    // runtime dispatch
+    // ---------------------------------------------------------------------
+
+    /// Embed on the coordinator (the activation is then broadcast to the
+    /// rank workers under the threaded runtime).
+    fn embed(&self, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
+        match self.runtime {
+            RuntimeKind::Sequential => self.ranks[0].embed(&self.exec, tokens, b, s),
+            RuntimeKind::Threaded => {
+                self.embedder.as_ref().expect("threaded runtime").embed(&self.exec, tokens, b, s)
+            }
+        }
+    }
+
+    /// Full forward + LM head on the active runtime. `last[b]` is the
+    /// position whose logits each row wants.
+    fn run(
+        &mut self,
+        x0: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        last: &[usize],
+    ) -> Result<HostTensor> {
+        match self.runtime {
+            RuntimeKind::Sequential => {
+                let finals = self.forward(x0, phase, lens, slot)?;
+                self.head(&finals, last)
+            }
+            RuntimeKind::Threaded => {
+                let shards = self
+                    .threaded
+                    .as_ref()
+                    .expect("threaded runtime")
+                    .forward(x0, phase, lens, slot, last)?;
+                self.comm.allgather_concat(shards)
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------------
+    // the per-architecture forward schedules (sequential runtime)
     // ---------------------------------------------------------------------
 
     /// Run all layers; returns per-rank final residuals.
@@ -381,22 +520,9 @@ impl TpEngine {
     /// lm head: slice each row's `last[b]` position, run per-rank head
     /// shards, AllGather the vocab dimension. Returns [B, V].
     fn head(&self, finals: &[HostTensor], last: &[usize]) -> Result<HostTensor> {
-        let h = self.cfg.hidden;
-        let b = last.len();
         let mut shards = Vec::with_capacity(self.tp);
         for t in 0..self.tp {
-            let xt = &finals[t];
-            let s = xt.shape[1];
-            let mut rows = Vec::with_capacity(b * h);
-            for (bi, &pos) in last.iter().enumerate() {
-                if pos >= s {
-                    bail!("last position {pos} out of range (S={s})");
-                }
-                let base = (bi * s + pos) * h;
-                rows.extend_from_slice(&xt.data[base..base + h]);
-            }
-            let x_last = HostTensor::new(vec![b, h], rows);
-            shards.push(self.ranks[t].lm_head(&self.exec, &x_last)?);
+            shards.push(self.ranks[t].lm_head_rows(&self.exec, &finals[t], last)?);
         }
         self.comm.allgather_concat(shards)
     }

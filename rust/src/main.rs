@@ -14,7 +14,7 @@ use std::rc::Rc;
 
 use anyhow::Result;
 use ladder_infer::comm::Interconnect;
-use ladder_infer::engine::{generate, Sampler, TpEngine};
+use ladder_infer::engine::{generate, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::perfmodel::tables;
 use ladder_infer::runtime::ExecCache;
@@ -51,6 +51,7 @@ fn engine_args(program: &str, about: &str) -> Args {
         .opt("tp", Some("2"), "tensor-parallel degree")
         .opt("batch", Some("2"), "batch slots")
         .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local")
+        .opt("runtime", Some("threaded"), "rank runtime: threaded|sequential (oracle)")
         .opt("seed", Some("42"), "weight seed (tiny uses shipped test weights)")
 }
 
@@ -64,13 +65,14 @@ fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
     } else {
         WeightStore::random(&cfg, args.get_usize("seed")? as u64)
     };
-    let engine = TpEngine::new(
+    let engine = TpEngine::with_runtime(
         exec,
         &weights,
         args.get_usize("tp")?,
         Arch::parse(&args.get("arch")?)?,
         args.get_usize("batch")?,
         Interconnect::parse(&args.get("fabric")?)?,
+        RuntimeKind::parse(&args.get("runtime")?)?,
     )?;
     let tok = Tokenizer::bytes_only(cfg.vocab);
     Ok((engine, tok))
@@ -89,7 +91,8 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
         println!("slot {i}: {:?}", tok.decode(t));
     }
     println!(
-        "prefill {:.1}ms, decode {:.1}ms, {:.1} tok/s, comm hidden {:.0}%",
+        "[{}] prefill {:.1}ms, decode {:.1}ms, {:.1} tok/s, comm hidden {:.0}%",
+        report.runtime,
         report.prefill_time.as_secs_f64() * 1e3,
         report.decode_time.as_secs_f64() * 1e3,
         report.tokens_per_sec(),
@@ -108,10 +111,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
     let (jobs, port) = api::spawn_listener(&addr, tok)?;
     println!(
-        "serving {} [{}] tp={} on 127.0.0.1:{port} — protocol: one JSON per line",
+        "serving {} [{}] tp={} runtime={} on 127.0.0.1:{port} — protocol: one JSON per line",
         args.get("model")?,
         args.get("arch")?,
-        args.get_usize("tp")?
+        args.get_usize("tp")?,
+        args.get("runtime")?
     );
     api::serve_forever(&mut batcher, jobs, args.get_usize("max-requests")?)
 }

@@ -4,6 +4,12 @@
 //! the client is **thread-local**: each engine thread owns one CPU client
 //! and its own compilations. Within a thread, the N simulated TP ranks and
 //! every layer share a single compilation per (module, phase, shape).
+//!
+//! The threaded rank runtime leans on exactly this escape hatch: every rank
+//! worker thread constructs its own `ExecCache` over the shared artifact
+//! directory (see [`crate::engine::ThreadedRuntime`]), so each rank compiles
+//! against — and executes on — its own thread-local client, and nothing
+//! XLA-shaped ever crosses a thread boundary.
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -37,9 +37,13 @@ struct SlotState {
     generated: Vec<i32>,
     next_token: i32,
     prefill_done: Instant,
+    /// Queue wait measured at admission, carried into the result.
+    queued_secs: f64,
 }
 
-/// The continuous batcher. Owns the engine (single-threaded PJRT).
+/// The continuous batcher. Owns the engine (whose ranks run on either the
+/// sequential or the threaded runtime; the batcher itself stays on one
+/// scheduler thread).
 pub struct Batcher {
     pub engine: TpEngine,
     pub config: BatcherConfig,
@@ -114,6 +118,7 @@ impl Batcher {
                 generated: vec![next],
                 next_token: next,
                 prefill_done: Instant::now(),
+                queued_secs: queued,
             });
         }
 
@@ -149,7 +154,7 @@ impl Batcher {
                         let result = RequestResult {
                             id: st.request.id,
                             tokens: st.generated,
-                            queued_secs: 0.0,
+                            queued_secs: st.queued_secs,
                             ttft_secs: (st.prefill_done - st.request.arrived).as_secs_f64(),
                             e2e_secs: (now - st.request.arrived).as_secs_f64(),
                         };

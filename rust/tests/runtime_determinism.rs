@@ -1,0 +1,138 @@
+//! Engine-vs-engine oracle: the threaded rank runtime must produce
+//! **bitwise-identical** logits to the sequential reference runtime for
+//! every architecture variant — prefill plus 8 teacher-forced decode steps
+//! on the tiny model.
+//!
+//! This is the determinism contract of the rendezvous collective: partials
+//! are always reduced in rank order 0..tp no matter which worker arrives
+//! last, every worker issues the exact module sequence the sequential
+//! scheduler would, and Upperbound's ranks rendezvous on rank 0's partial
+//! so its single shared residual stream is preserved.
+
+use std::rc::Rc;
+
+use ladder_infer::comm::{Fabric, Interconnect};
+use ladder_infer::engine::{RuntimeKind, TpEngine};
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::runtime::ExecCache;
+
+const PROMPT: usize = 16;
+const DECODE_STEPS: usize = 8;
+
+/// Run prefill + teacher-forced decode; return every step's logits as raw
+/// f32 bit patterns (so NaN-safe exact comparison is possible).
+fn logits_stream(arch: Arch, runtime: RuntimeKind) -> Vec<Vec<u32>> {
+    let exec = Rc::new(ExecCache::open("tiny").expect("run `make artifacts` first"));
+    let cfg = exec.artifacts().config.clone();
+    let flat = exec.artifacts().read_f32("testvec_weights.f32").unwrap();
+    let weights =
+        WeightStore::from_flat(&flat, exec.artifacts().packing().unwrap(), cfg.layers).unwrap();
+    let mut engine = TpEngine::with_runtime(
+        exec,
+        &weights,
+        2,
+        arch,
+        2,
+        Interconnect::new(Fabric::Local),
+        runtime,
+    )
+    .unwrap();
+
+    let tokens: Vec<i32> = (0..(2 * PROMPT) as i32).map(|i| i % 13 + 1).collect();
+    let mut stream = Vec::with_capacity(DECODE_STEPS + 1);
+    let logits = engine.prefill(&tokens, PROMPT, &[PROMPT, PROMPT]).unwrap();
+    stream.push(logits.data.iter().map(|x| x.to_bits()).collect());
+    for t in 0..DECODE_STEPS as i32 {
+        let logits = engine.decode(&[t % 7 + 1, t % 5 + 2]).unwrap();
+        stream.push(logits.data.iter().map(|x| x.to_bits()).collect());
+    }
+    stream
+}
+
+fn check_bitwise(arch: Arch) {
+    let seq = logits_stream(arch, RuntimeKind::Sequential);
+    let thr = logits_stream(arch, RuntimeKind::Threaded);
+    assert_eq!(seq.len(), thr.len());
+    for (step, (a, b)) in seq.iter().zip(&thr).enumerate() {
+        assert_eq!(
+            a,
+            b,
+            "{}: step {step} logits diverge bitwise between runtimes",
+            arch.name()
+        );
+    }
+}
+
+#[test]
+fn standard_bitwise_identical() {
+    check_bitwise(Arch::Standard);
+}
+
+#[test]
+fn ladder_bitwise_identical() {
+    check_bitwise(Arch::Ladder);
+}
+
+#[test]
+fn hybrid_bitwise_identical() {
+    check_bitwise(Arch::Hybrid);
+}
+
+#[test]
+fn parallel_bitwise_identical() {
+    check_bitwise(Arch::Parallel);
+}
+
+#[test]
+fn desync2_bitwise_identical() {
+    check_bitwise(Arch::Desync(2));
+}
+
+#[test]
+fn desync4_bitwise_identical() {
+    check_bitwise(Arch::Desync(4));
+}
+
+#[test]
+fn upperbound_bitwise_identical() {
+    check_bitwise(Arch::Upperbound);
+}
+
+#[test]
+fn continuous_batching_slots_bitwise_identical() {
+    // prefill_slot + release_slot round-trip through worker KV caches: admit
+    // slot 1 alone, decode, release, re-admit — both runtimes must agree.
+    let drive = |runtime: RuntimeKind| -> Vec<u32> {
+        let exec = Rc::new(ExecCache::open("tiny").expect("run `make artifacts` first"));
+        let cfg = exec.artifacts().config.clone();
+        let flat = exec.artifacts().read_f32("testvec_weights.f32").unwrap();
+        let weights =
+            WeightStore::from_flat(&flat, exec.artifacts().packing().unwrap(), cfg.layers)
+                .unwrap();
+        let mut engine = TpEngine::with_runtime(
+            exec,
+            &weights,
+            2,
+            Arch::Ladder,
+            2,
+            Interconnect::new(Fabric::Local),
+            runtime,
+        )
+        .unwrap();
+        let prompt: Vec<i32> = (0..PROMPT as i32).map(|i| i % 11 + 1).collect();
+        let mut bits = Vec::new();
+        let l = engine.prefill_slot(1, &prompt, PROMPT, PROMPT).unwrap();
+        bits.extend(l.iter().map(|x| x.to_bits()));
+        let d = engine.decode(&[0, 3]).unwrap();
+        bits.extend(d.data.iter().map(|x| x.to_bits()));
+        engine.release_slot(1);
+        let l = engine.prefill_slot(0, &prompt, PROMPT, PROMPT).unwrap();
+        bits.extend(l.iter().map(|x| x.to_bits()));
+        bits
+    };
+    assert_eq!(
+        drive(RuntimeKind::Sequential),
+        drive(RuntimeKind::Threaded),
+        "continuous-batching logits diverge between runtimes"
+    );
+}
