@@ -1,0 +1,26 @@
+# ladder-infer build entry points.
+#
+# The default (native) backend needs NO artifacts: `make artifacts` is only
+# required for the artifact-backed PJRT path (`cargo build --features xla`)
+# and for the golden-logit parity tests, which skip themselves when
+# artifacts/ is absent.
+
+.PHONY: build test bench artifacts clean-artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench paper_suite -- table1
+	cargo bench --bench engine_hotpath -- --smoke
+
+# AOT-export the HLO module artifacts (tiny/small/parity) via the python
+# L1/L2 layer. Requires JAX; a no-op requirement for the native backend.
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+clean-artifacts:
+	rm -rf artifacts

@@ -2,7 +2,12 @@
 //! decode-step latency per architecture x rank runtime on the tiny model,
 //! collective throughput, and the host-side overhead split — the measured
 //! counterpart of the perfmodel numbers and the input to the §Perf
-//! optimization log. Dumps the machine-readable report to `BENCH_pr1.json`.
+//! optimization log. Dumps the machine-readable report to
+//! `BENCH_engine_hotpath.json` (the committed `BENCH_pr1.json` is the PR 1
+//! reference capture from an 8-core dev host).
+//!
+//! Runs on the default native backend with no artifacts. `--smoke` switches
+//! to a reduced-iteration mode for CI: same coverage, minimal wall time.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -10,7 +15,7 @@ use std::rc::Rc;
 use ladder_infer::comm::{CollectiveEngine, Fabric, Interconnect};
 use ladder_infer::engine::{RuntimeKind, TpEngine};
 use ladder_infer::model::{Arch, HostTensor, WeightStore};
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::Exec;
 use ladder_infer::util::bench::{time_it, Table};
 use ladder_infer::util::json::Json;
 
@@ -24,10 +29,16 @@ const ARCHES: [Arch; 6] = [
 ];
 
 fn main() -> anyhow::Result<()> {
-    let exec = Rc::new(ExecCache::open("tiny")?);
-    let cfg = exec.artifacts().config.clone();
-    let flat = exec.artifacts().read_f32("testvec_weights.f32")?;
-    let weights = WeightStore::from_flat(&flat, exec.artifacts().packing()?, cfg.layers)?;
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let exec = Rc::new(Exec::native_named("tiny")?);
+    let weights = match exec.artifacts_opt() {
+        Some(art) => WeightStore::from_flat(
+            &art.read_f32("testvec_weights.f32")?,
+            art.packing()?,
+            exec.cfg().layers,
+        )?,
+        None => WeightStore::random(exec.cfg(), 42),
+    };
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
     // -- collective microbench ------------------------------------------------
@@ -35,26 +46,27 @@ fn main() -> anyhow::Result<()> {
     // bench cloned inside it, so the "collective" number was dominated by
     // host memcpy. The memcpy is timed separately below to keep it visible.
     println!("== collective engine ==");
-    const WARMUP: usize = 3;
-    const ITERS: usize = 20;
+    let (warmup, iters) = if smoke { (1, 3) } else { (3, 20) };
     for tp in [2usize, 4, 8] {
         let ce = CollectiveEngine::new(tp, Interconnect::new(Fabric::Local));
         let parts: Vec<HostTensor> = (0..tp)
             .map(|_| HostTensor::new(vec![4, 64, 256], vec![1.0; 4 * 64 * 256]))
             .collect();
         let mut pool: VecDeque<Vec<HostTensor>> =
-            (0..WARMUP + ITERS).map(|_| parts.clone()).collect();
-        time_it(&format!("allreduce 256KiB x tp{tp}"), WARMUP, ITERS, || {
+            (0..warmup + iters).map(|_| parts.clone()).collect();
+        time_it(&format!("allreduce 256KiB x tp{tp}"), warmup, iters, || {
             let p = pool.pop_front().expect("pool sized to warmup+iters");
             let _ = ce.allreduce(p).unwrap().wait();
         });
-        time_it(&format!("  (clone 256KiB x tp{tp} memcpy)"), WARMUP, ITERS, || {
+        time_it(&format!("  (clone 256KiB x tp{tp} memcpy)"), warmup, iters, || {
             std::hint::black_box(parts.clone());
         });
     }
 
     // -- decode-step latency per architecture x runtime -----------------------
-    println!("\n== decode step (tiny model, tp=2, real modules, {cores} cores) ==");
+    let backend = exec.backend_name();
+    println!("\n== decode step (tiny model, tp=2, {backend} modules, {cores} cores) ==");
+    let (dwarm, diters) = if smoke { (1, 5) } else { (3, 15) };
     let mut table = Table::new(
         "decode-step latency (sequential vs threaded runtime)",
         &["arch", "seq mean ms", "thr mean ms", "thr speedup"],
@@ -78,8 +90,8 @@ fn main() -> anyhow::Result<()> {
             engine.prefill(&tokens, 16, &[16, 16])?;
             let s = time_it(
                 &format!("decode step [{} / {}]", arch.name(), runtime.name()),
-                3,
-                15,
+                dwarm,
+                diters,
                 || {
                     let _ = engine.decode(&[1, 2]).unwrap();
                 },
@@ -107,6 +119,8 @@ fn main() -> anyhow::Result<()> {
     let report = Json::obj()
         .set("bench", "engine_hotpath")
         .set("model", "tiny")
+        .set("backend", backend)
+        .set("smoke", smoke)
         .set("tp", 2usize)
         .set("batch", 2usize)
         .set("fabric", "pcie")
@@ -116,7 +130,10 @@ fn main() -> anyhow::Result<()> {
             "threaded_speedup",
             Json::Obj(speedups.into_iter().map(|(a, s)| (a, Json::Num(s))).collect()),
         );
-    std::fs::write("BENCH_pr1.json", report.to_pretty())?;
-    println!("\nwrote BENCH_pr1.json");
+    // anchor at the workspace root: cargo runs bench binaries with cwd =
+    // the package root (rust/), which is not where CI's upload glob looks
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_engine_hotpath.json");
+    std::fs::write(&out, report.to_pretty())?;
+    println!("\nwrote {}", out.display());
     Ok(())
 }

@@ -5,7 +5,7 @@
 //!
 //!   cargo run --release --example adapt_hybrid -- --base-steps 200 --adapt-steps 60
 
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::trainer::parity::{hybrid_adaptation, hybrid_table};
 use ladder_infer::util::args::Args;
 
@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
         .opt("eval-batches", Some("8"), "held-out eval batches")
         .parse_env()?;
 
-    let exec = ExecCache::open("parity")?;
+    // training graphs are xla-backend only (build with --features xla)
+    let exec = Exec::open("parity", BackendKind::Xla)?;
     let report = hybrid_adaptation(
         &exec,
         args.get_usize("base-steps")?,

@@ -1,14 +1,16 @@
-//! Quickstart: load the tiny artifact config, build a TP=2 Ladder engine,
-//! generate a few tokens, and print throughput + comm-overlap stats.
+//! Quickstart: build a TP=2 Ladder engine on the native backend (no
+//! artifacts needed), generate a few tokens, and print throughput +
+//! comm-overlap stats.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
+//!   cargo run --release --example quickstart -- --backend xla   # after make artifacts
 
 use std::rc::Rc;
 
 use ladder_infer::comm::Interconnect;
 use ladder_infer::engine::{generate, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::tokenizer::Tokenizer;
 use ladder_infer::util::args::Args;
 
@@ -17,26 +19,39 @@ fn main() -> anyhow::Result<()> {
         .opt("arch", Some("ladder"), "standard|ladder|parallel|desync2|desync4|upperbound")
         .opt("tp", Some("2"), "tensor-parallel degree")
         .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local")
+        .opt("backend", Some("native"), "execution backend: native|xla")
         .opt("gen", Some("24"), "tokens to generate")
         .parse_env()?;
 
     let arch = Arch::parse(&args.get("arch")?)?;
-    let exec = Rc::new(ExecCache::open("tiny")?);
-    let cfg = exec.artifacts().config.clone();
+    let exec = Rc::new(Exec::open("tiny", BackendKind::parse(&args.get("backend")?)?)?);
+    let cfg = exec.cfg().clone();
     println!(
         "model '{}': {} layers, hidden {}, vocab {} ({} params)",
         cfg.name, cfg.layers, cfg.hidden, cfg.vocab, cfg.params
     );
 
-    // The tiny config ships seeded test weights; it is an untrained model,
-    // so the text is gibberish — the point is the full pipeline.
-    let flat = exec.artifacts().read_f32("testvec_weights.f32")?;
-    let weights = WeightStore::from_flat(&flat, exec.artifacts().packing()?, cfg.layers)?;
+    // The tiny config ships seeded test weights with its artifacts; without
+    // them, a seeded random init. Either way it is an untrained model, so
+    // the text is gibberish — the point is the full pipeline.
+    let weights = match exec.artifacts_opt() {
+        Some(art) => WeightStore::from_flat(
+            &art.read_f32("testvec_weights.f32")?,
+            art.packing()?,
+            cfg.layers,
+        )?,
+        None => WeightStore::random(&cfg, 42),
+    };
 
     let tp = args.get_usize("tp")?;
     let fabric = Interconnect::parse(&args.get("fabric")?)?;
     let mut engine = TpEngine::new(exec.clone(), &weights, tp, arch, 2, fabric)?;
-    println!("engine: arch={} tp={tp} fabric={}", arch.name(), engine.comm.interconnect.name());
+    println!(
+        "engine: arch={} tp={tp} fabric={} backend={}",
+        arch.name(),
+        engine.comm.interconnect.name(),
+        engine.backend_name()
+    );
 
     let tok = Tokenizer::bytes_only(cfg.vocab);
     let prompts: Vec<Vec<i32>> = vec![

@@ -12,7 +12,7 @@ use std::time::Instant;
 use ladder_infer::comm::Interconnect;
 use ladder_infer::engine::TpEngine;
 use ladder_infer::model::{Arch, WeightStore};
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::server::{Batcher, BatcherConfig, Request};
 use ladder_infer::util::args::Args;
 use ladder_infer::util::bench::Table;
@@ -27,10 +27,12 @@ fn main() -> anyhow::Result<()> {
         .opt("gen", Some("24"), "tokens per request")
         .opt("fabric", Some("slow"), "nvlink|pcie|infiniband|local|slow (slow: ms-scale latency, proportionate to CPU-testbed module times)")
         .opt("arches", Some("standard,parallel,ladder,desync2,desync4,upperbound"), "comma list")
+        .opt("backend", Some("native"), "execution backend: native|xla")
         .parse_env()?;
 
-    let exec = Rc::new(ExecCache::open(&args.get("model")?)?);
-    let cfg = exec.artifacts().config.clone();
+    let exec =
+        Rc::new(Exec::open(&args.get("model")?, BackendKind::parse(&args.get("backend")?)?)?);
+    let cfg = exec.cfg().clone();
     let weights = WeightStore::random(&cfg, 42);
     let tp = args.get_usize("tp")?;
     let batch = args.get_usize("batch")?;

@@ -6,7 +6,7 @@
 //!   cargo run --release --example train_parity -- --steps 150
 //!   cargo run --release --example train_parity -- --desync --steps 150
 
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::trainer::parity::{parity_table, pretrain_parity};
 use ladder_infer::util::args::Args;
 
@@ -19,7 +19,8 @@ fn main() -> anyhow::Result<()> {
         .flag("ablation", "desync-2x placement ablation: drop attention's AR (paper's choice) vs drop MLP's")
         .parse_env()?;
 
-    let exec = ExecCache::open("parity")?;
+    // training graphs are xla-backend only (build with --features xla)
+    let exec = Exec::open("parity", BackendKind::Xla)?;
     let steps = args.get_usize("steps")?;
     let lr = args.get_f64("lr")? as f32;
     let eval_batches = args.get_usize("eval-batches")?;
@@ -34,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "training {:?} for {steps} steps each (model: {} params, tp=2 in-graph)",
         arches,
-        exec.artifacts().config.params
+        exec.cfg().params
     );
 
     let rows = pretrain_parity(&exec, &arches, steps, lr, eval_batches)?;

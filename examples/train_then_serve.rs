@@ -16,7 +16,7 @@ use std::rc::Rc;
 use ladder_infer::comm::Interconnect;
 use ladder_infer::engine::{generate, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::trainer::{Corpus, Trainer};
 use ladder_infer::util::args::Args;
 
@@ -29,8 +29,9 @@ fn main() -> anyhow::Result<()> {
     let arch_name = args.get("arch")?;
     let steps = args.get_usize("steps")?;
 
-    let exec = Rc::new(ExecCache::open("parity")?);
-    let cfg = exec.artifacts().config.clone();
+    // training runs on the xla backend; the trained weights then serve on it too
+    let exec = Rc::new(Exec::open("parity", BackendKind::Xla)?);
+    let cfg = exec.cfg().clone();
 
     // -- 1. train ---------------------------------------------------------
     println!("training '{arch_name}' ({} params) for {steps} steps...", cfg.params);
@@ -46,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // -- 2. shard the trained flat vector --------------------------------
-    let weights = WeightStore::from_flat(&trainer.w, exec.artifacts().packing()?, cfg.layers)?;
+    let weights = WeightStore::from_flat(&trainer.w, exec.artifacts()?.packing()?, cfg.layers)?;
 
     // -- 3. serve ---------------------------------------------------------
     let arch = Arch::parse(&arch_name)?;

@@ -1,7 +1,8 @@
 //! The multi-rank TP execution engine (the paper's system, L3).
 //!
-//! N simulated ranks each execute their *real* weight-sharded HLO modules on
-//! the PJRT CPU client; the engine owns the residual stream, performs the
+//! N simulated ranks each execute their *real* weight-sharded modules on the
+//! configured backend (pure-Rust native by default, PJRT HLO executables
+//! with `--features xla`); the engine owns the residual stream, performs the
 //! AllReduces (real sums + modeled link time), and schedules module
 //! execution per architecture — Standard blocks on every reduce, Ladder
 //! launches the next module first (paper Algorithm 1), Parallel fuses
@@ -26,3 +27,21 @@ pub use rank::{Embedder, RankState};
 pub use threaded::ThreadedRuntime;
 pub use tpengine::{RuntimeKind, TpEngine};
 pub use trace::EngineTracer;
+
+/// Accumulate a reduced delta into the residual stream. Shared by both rank
+/// runtimes on purpose: the bitwise determinism contract
+/// (`runtime_determinism`) requires sequential and threaded schedules to
+/// accumulate identically, so there must be exactly one definition.
+pub(crate) fn add_assign(x: &mut crate::model::HostTensor, delta: &crate::model::HostTensor) {
+    debug_assert_eq!(x.shape, delta.shape);
+    for (a, b) in x.data.iter_mut().zip(&delta.data) {
+        *a += b;
+    }
+}
+
+/// Which block a Desync-nx step runs (shared by both runtimes' schedulers).
+#[derive(Clone, Copy)]
+pub(crate) enum BlockSel {
+    Attn,
+    Mlp,
+}

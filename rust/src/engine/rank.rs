@@ -1,20 +1,20 @@
-//! Per-rank state: sharded weight literals (converted once) + KV cache, and
-//! the module invocations for one rank.
+//! Per-rank state: sharded weight values (uploaded to the backend once) +
+//! KV cache, and the module invocations for one rank. Backend-agnostic: the
+//! same code drives the native executor and the PJRT executables.
 
 use anyhow::{anyhow, bail, Result};
-use xla::Literal;
 
 use super::kv::KvCache;
 use crate::model::{HostTensor, LlamaConfig, RankWeights, WeightStore};
-use crate::runtime::{literal_i32, tensor_from_literal, ExecCache};
+use crate::runtime::{Exec, Value};
 
-/// Per-layer weight literals in module argument order.
-struct LayerLits {
-    attn: Vec<Literal>, // norm, wq, wk, wv, wo
-    mlp: Vec<Literal>,  // norm, wg, wu, wd
+/// Per-layer weight values in module argument order.
+struct LayerVals {
+    attn: Vec<Value>, // norm, wq, wk, wv, wo
+    mlp: Vec<Value>,  // norm, wg, wu, wd
 }
 
-/// Inference phase (selects the exported module variant).
+/// Inference phase (selects the module variant).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     Prefill,
@@ -26,39 +26,41 @@ pub struct RankState {
     pub rank: usize,
     pub tp: usize,
     pub kv: KvCache,
-    layers: Vec<LayerLits>,
-    /// The replicated embedding table — only rank 0 ever runs the embed
-    /// module (the threaded runtime's workers never do), so only rank 0
-    /// pays for the literal conversion.
-    emb: Option<Literal>,
-    final_norm: Literal,
-    lm: Literal,
+    layers: Vec<LayerVals>,
+    /// The replicated embedding table — uploaded only when this state will
+    /// actually run the embed module (sequential rank 0; the threaded
+    /// runtime's workers never do, its coordinator uses [`Embedder`]).
+    emb: Option<Value>,
+    final_norm: Value,
+    lm: Value,
 }
 
 impl RankState {
     pub fn new(
+        exec: &Exec,
         cfg: &LlamaConfig,
         weights: &WeightStore,
         rank: usize,
         tp: usize,
         batch: usize,
+        need_embed: bool,
     ) -> Result<RankState> {
         let mut layers = Vec::with_capacity(cfg.layers);
         for i in 0..cfg.layers {
             let rw: RankWeights = weights.rank_layer(i, rank, tp)?;
-            layers.push(LayerLits {
+            layers.push(LayerVals {
                 attn: vec![
-                    rw.attn_norm.to_literal()?,
-                    rw.wq.to_literal()?,
-                    rw.wk.to_literal()?,
-                    rw.wv.to_literal()?,
-                    rw.wo.to_literal()?,
+                    exec.upload_owned(rw.attn_norm)?,
+                    exec.upload_owned(rw.wq)?,
+                    exec.upload_owned(rw.wk)?,
+                    exec.upload_owned(rw.wv)?,
+                    exec.upload_owned(rw.wo)?,
                 ],
                 mlp: vec![
-                    rw.mlp_norm.to_literal()?,
-                    rw.wg.to_literal()?,
-                    rw.wu.to_literal()?,
-                    rw.wd.to_literal()?,
+                    exec.upload_owned(rw.mlp_norm)?,
+                    exec.upload_owned(rw.wg)?,
+                    exec.upload_owned(rw.wu)?,
+                    exec.upload_owned(rw.wd)?,
                 ],
             });
         }
@@ -67,18 +69,17 @@ impl RankState {
             tp,
             kv: KvCache::new(cfg.layers, batch, cfg.kv_heads / tp, cfg.max_seq, cfg.head_dim),
             layers,
-            emb: if rank == 0 { Some(weights.get("emb")?.to_literal()?) } else { None },
-            final_norm: weights.get("final_norm")?.to_literal()?,
-            lm: weights.rank_lm(rank, tp)?.to_literal()?,
+            emb: if need_embed { Some(exec.upload(weights.get("emb")?)?) } else { None },
+            final_norm: exec.upload(weights.get("final_norm")?)?,
+            lm: exec.upload_owned(weights.rank_lm(rank, tp)?)?,
         })
     }
 
     /// Run the embedding module (replicated; only rank 0 holds the table).
-    pub fn embed(&self, exec: &ExecCache, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
-        let emb = self
-            .emb
-            .as_ref()
-            .ok_or_else(|| anyhow!("embedding table lives on rank 0, not rank {}", self.rank))?;
+    pub fn embed(&self, exec: &Exec, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
+        let emb = self.emb.as_ref().ok_or_else(|| {
+            anyhow!("rank {} was built without the embedding table (coordinator embeds)", self.rank)
+        })?;
         run_embed(exec, emb, tokens, b, s)
     }
 
@@ -88,7 +89,7 @@ impl RankState {
     /// batching).
     pub fn attn(
         &mut self,
-        exec: &ExecCache,
+        exec: &Exec,
         layer: usize,
         x: &HostTensor,
         phase: Phase,
@@ -101,7 +102,7 @@ impl RankState {
     /// Fused attention+MLP module (Parallel architecture).
     pub fn fused(
         &mut self,
-        exec: &ExecCache,
+        exec: &Exec,
         layer: usize,
         x: &HostTensor,
         phase: Phase,
@@ -111,9 +112,10 @@ impl RankState {
         self.block(exec, layer, x, phase, lens, slot, BlockKind::Fused)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn block(
         &mut self,
-        exec: &ExecCache,
+        exec: &Exec,
         layer: usize,
         x: &HostTensor,
         phase: Phase,
@@ -124,7 +126,11 @@ impl RankState {
         let (b, s) = (x.shape[0], x.shape[1]);
         // §Perf: full-batch calls *take* the cache tensors (they are
         // replaced by the module outputs below) instead of cloning ~2x the
-        // KV slab per attention call. Slot calls still copy (subrange).
+        // KV slab per attention call on the host side. Slot calls still
+        // copy (subrange). NB the backend may still copy internally: xla
+        // converts to literals, and the native executor clones the slabs to
+        // produce its functional kc'/vc' outputs — an in-place native cache
+        // path would need a consuming `run` variant (future work).
         let empty = || HostTensor::new(vec![0], Vec::new());
         let (kc, vc) = match slot {
             Some(slot_b) => self.kv.read_slot(layer, slot_b),
@@ -133,15 +139,15 @@ impl RankState {
                 std::mem::replace(&mut self.kv.v[layer], empty()),
             ),
         };
-        let x_lit = x.to_literal()?;
-        let kc_lit = kc.to_literal()?;
-        let vc_lit = vc.to_literal()?;
-        let lens_lit = match (phase, lens) {
-            (Phase::Decode, Some(l)) => Some(literal_i32(l, &[b])?),
+        let x_v = exec.upload(x)?;
+        let kc_v = exec.upload_owned(kc)?;
+        let vc_v = exec.upload_owned(vc)?;
+        let lens_v = match (phase, lens) {
+            (Phase::Decode, Some(l)) => Some(exec.upload_i32(l, &[b])?),
             (Phase::Decode, None) => bail!("decode needs lens"),
             _ => None,
         };
-        let mut args: Vec<&Literal> = vec![&x_lit];
+        let mut args: Vec<&Value> = vec![&x_v];
         let lw = &self.layers[layer];
         match kind {
             BlockKind::Attn => args.extend(lw.attn.iter()),
@@ -151,8 +157,8 @@ impl RankState {
                 args.extend(lw.mlp.iter().skip(1)); // wg, wu, wd
             }
         }
-        args.push(&kc_lit);
-        args.push(&vc_lit);
+        args.push(&kc_v);
+        args.push(&vc_v);
         let prefix = match kind {
             BlockKind::Attn => "attn",
             BlockKind::Fused => "fused",
@@ -160,14 +166,17 @@ impl RankState {
         let name = match phase {
             Phase::Prefill => format!("{prefix}_prefill__tp{}__b{b}__s{s}", self.tp),
             Phase::Decode => {
-                args.push(lens_lit.as_ref().unwrap());
+                args.push(lens_v.as_ref().unwrap());
                 format!("{prefix}_decode__tp{}__b{b}", self.tp)
             }
         };
-        let outs = exec.run(&name, &args)?;
-        let partial = tensor_from_literal(&outs[0])?;
-        let k_new = tensor_from_literal(&outs[1])?;
-        let v_new = tensor_from_literal(&outs[2])?;
+        let mut outs = exec.run(&name, &args)?;
+        if outs.len() != 3 {
+            bail!("{name}: expected 3 outputs, got {}", outs.len());
+        }
+        let v_new = outs.pop().unwrap().into_f32()?;
+        let k_new = outs.pop().unwrap().into_f32()?;
+        let partial = outs.pop().unwrap().into_f32()?;
         match slot {
             Some(slot_b) => self.kv.write_slot(layer, slot_b, &k_new, &v_new)?,
             None => {
@@ -179,29 +188,29 @@ impl RankState {
     }
 
     /// MLP module for one layer (no cache interaction).
-    pub fn mlp(&self, exec: &ExecCache, layer: usize, x: &HostTensor) -> Result<HostTensor> {
+    pub fn mlp(&self, exec: &Exec, layer: usize, x: &HostTensor) -> Result<HostTensor> {
         let (b, s) = (x.shape[0], x.shape[1]);
         let name = format!("mlp__tp{}__b{b}__s{s}", self.tp);
-        let x_lit = x.to_literal()?;
-        let mut args: Vec<&Literal> = vec![&x_lit];
+        let x_v = exec.upload(x)?;
+        let mut args: Vec<&Value> = vec![&x_v];
         args.extend(self.layers[layer].mlp.iter());
         let outs = exec.run(&name, &args)?;
-        tensor_from_literal(&outs[0])
+        first_f32(outs, &name)
     }
 
     /// Final norm + this rank's LM-head vocab shard: x [B,H] -> [B, V/tp].
-    pub fn lm_head(&self, exec: &ExecCache, x: &HostTensor) -> Result<HostTensor> {
+    pub fn lm_head(&self, exec: &Exec, x: &HostTensor) -> Result<HostTensor> {
         let b = x.shape[0];
         let name = format!("lm_head__tp{}__b{b}", self.tp);
-        let x_lit = x.to_literal()?;
-        let outs = exec.run(&name, &[&x_lit, &self.final_norm, &self.lm])?;
-        tensor_from_literal(&outs[0])
+        let x_v = exec.upload(x)?;
+        let outs = exec.run(&name, &[&x_v, &self.final_norm, &self.lm])?;
+        first_f32(outs, &name)
     }
 
     /// Slice each row's `last[b]` position out of the final residual
     /// [B, S, H] and run this rank's LM-head shard: returns [B, V/tp].
     /// Shared by the sequential head and the threaded rank workers.
-    pub fn lm_head_rows(&self, exec: &ExecCache, x: &HostTensor, last: &[usize]) -> Result<HostTensor> {
+    pub fn lm_head_rows(&self, exec: &Exec, x: &HostTensor, last: &[usize]) -> Result<HostTensor> {
         if x.shape.len() != 3 {
             bail!("lm_head_rows wants [B,S,H], got {:?}", x.shape);
         }
@@ -220,30 +229,37 @@ impl RankState {
 }
 
 /// Coordinator-side embedding runner for the threaded runtime: the
-/// replicated embedding table only, without any per-layer weight literals
+/// replicated embedding table only, without any per-layer weight uploads
 /// (those live thread-locally inside the rank workers).
 pub struct Embedder {
-    emb: Literal,
+    emb: Value,
 }
 
 impl Embedder {
-    pub fn new(weights: &WeightStore) -> Result<Embedder> {
-        Ok(Embedder { emb: weights.get("emb")?.to_literal()? })
+    pub fn new(exec: &Exec, weights: &WeightStore) -> Result<Embedder> {
+        Ok(Embedder { emb: exec.upload(weights.get("emb")?)? })
     }
 
-    pub fn embed(&self, exec: &ExecCache, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
+    pub fn embed(&self, exec: &Exec, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
         run_embed(exec, &self.emb, tokens, b, s)
     }
 }
 
-fn run_embed(exec: &ExecCache, emb: &Literal, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
+fn run_embed(exec: &Exec, emb: &Value, tokens: &[i32], b: usize, s: usize) -> Result<HostTensor> {
     if tokens.len() != b * s {
         bail!("embed: {} tokens for [{b},{s}]", tokens.len());
     }
     let name = format!("embed__b{b}__s{s}");
-    let toks = literal_i32(tokens, &[b, s])?;
+    let toks = exec.upload_i32(tokens, &[b, s])?;
     let outs = exec.run(&name, &[&toks, emb])?;
-    tensor_from_literal(&outs[0])
+    first_f32(outs, &name)
+}
+
+fn first_f32(outs: Vec<Value>, name: &str) -> Result<HostTensor> {
+    outs.into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("{name}: module returned no outputs"))?
+        .into_f32()
 }
 
 #[derive(Clone, Copy)]

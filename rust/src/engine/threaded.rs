@@ -2,15 +2,16 @@
 //! rank, coordinated over channels, synchronized through the rendezvous
 //! collective.
 //!
-//! The `xla` crate's PJRT handles are `Rc`-based (not `Send`), so nothing
-//! XLA-shaped crosses a thread boundary: each worker builds its own
-//! thread-local PJRT client, its own [`ExecCache`] over the shared artifact
-//! directory, and its own [`RankState`] (weight literals + KV cache) from
-//! the host-side [`WeightStore`], which is plain `Send` data. The
-//! coordinator ([`super::TpEngine`]) broadcasts the embedded residual
-//! activation to the workers as an `Arc<HostTensor>`; each worker converts
-//! it to a literal once per module call on its own thread — the sequential
-//! engine performs that conversion `tp` times per module on one core.
+//! Backend instances are not `Send` (the xla backend's PJRT handles are
+//! `Rc`-based and thread-local; the native backend simply follows the same
+//! discipline), so nothing backend-shaped crosses a thread boundary: each
+//! worker rebuilds its own [`Exec`] from the engine's [`BackendSpec`] and
+//! its own [`RankState`] (uploaded weight shards + KV cache) from the
+//! host-side [`WeightStore`], which is plain `Send` data. The coordinator
+//! ([`super::TpEngine`]) broadcasts the embedded residual activation to the
+//! workers as an `Arc<HostTensor>`; each worker uploads it once per module
+//! call on its own thread — the sequential engine performs that upload `tp`
+//! times per module on one core.
 //!
 //! Determinism contract: every worker executes the *same* per-rank schedule
 //! the sequential engine would (same module sequence, same collective
@@ -19,7 +20,6 @@
 //! sequential oracle's — asserted per architecture by the
 //! `runtime_determinism` integration test.
 
-use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -27,9 +27,10 @@ use std::thread;
 use anyhow::{anyhow, Result};
 
 use super::rank::{Phase, RankState};
+use super::{add_assign, BlockSel};
 use crate::comm::rendezvous::{ReduceOp, SharedCollective};
 use crate::model::{Arch, HostTensor, WeightStore};
-use crate::runtime::{ArtifactDir, ExecCache};
+use crate::runtime::{BackendSpec, Exec};
 
 /// Coordinator -> worker commands. One `Forward` per engine prefill/decode;
 /// the worker replies with its LM-head vocab shard.
@@ -68,11 +69,12 @@ pub struct ThreadedRuntime {
 }
 
 impl ThreadedRuntime {
-    /// Spawn one worker per rank. Workers reopen the artifact directory and
-    /// shard the (`Arc`-shared) weights themselves, so compilation and
-    /// literal conversion happen concurrently across ranks at startup too.
+    /// Spawn one worker per rank. Workers rebuild their backend from the
+    /// spec and shard the (`Arc`-shared) weights themselves, so backend
+    /// setup and weight upload happen concurrently across ranks at startup
+    /// too.
     pub fn spawn(
-        artifact_dir: &Path,
+        spec: BackendSpec,
         weights: &WeightStore,
         tp: usize,
         arch: Arch,
@@ -80,7 +82,7 @@ impl ThreadedRuntime {
         coll: Arc<SharedCollective>,
     ) -> Result<ThreadedRuntime> {
         // one shared host copy for all workers, dropped when the last
-        // worker finishes building its literals
+        // worker finishes uploading its shards
         let weights = Arc::new(weights.clone());
         let mut cmds = Vec::with_capacity(tp);
         let mut replies = Vec::with_capacity(tp);
@@ -88,12 +90,12 @@ impl ThreadedRuntime {
         for rank in 0..tp {
             let (cmd_tx, cmd_rx) = mpsc::channel();
             let (rep_tx, rep_rx) = mpsc::channel();
-            let dir: PathBuf = artifact_dir.to_path_buf();
+            let spec = spec.clone();
             let weights = weights.clone();
             let coll_w = coll.clone();
             let handle = thread::Builder::new()
                 .name(format!("tp-rank-{rank}"))
-                .spawn(move || worker_main(rank, tp, batch, arch, dir, weights, coll_w, cmd_rx, rep_tx))
+                .spawn(move || worker_main(rank, tp, batch, arch, spec, weights, coll_w, cmd_rx, rep_tx))
                 .map_err(|e| anyhow!("spawn rank {rank} worker: {e}"))?;
             cmds.push(cmd_tx);
             replies.push(rep_rx);
@@ -191,14 +193,14 @@ fn worker_main(
     tp: usize,
     batch: usize,
     arch: Arch,
-    dir: PathBuf,
+    spec: BackendSpec,
     weights: Arc<WeightStore>,
     coll: Arc<SharedCollective>,
     cmds: mpsc::Receiver<Cmd>,
     replies: mpsc::Sender<Reply>,
 ) {
     let _panic_guard = PanicGuard { rank, coll: coll.clone() };
-    let mut ctx = match WorkerCtx::new(rank, tp, batch, arch, &dir, &weights, coll.clone()) {
+    let mut ctx = match WorkerCtx::new(rank, tp, batch, arch, &spec, &weights, coll.clone()) {
         Ok(ctx) => ctx,
         Err(e) => {
             let msg = format!("rank {rank} init failed: {e:#}");
@@ -217,7 +219,7 @@ fn worker_main(
             return;
         }
     };
-    drop(weights); // literals are built; release this worker's share of the host copy
+    drop(weights); // shards are uploaded; release this worker's share of the host copy
 
     while let Ok(cmd) = cmds.recv() {
         match cmd {
@@ -238,7 +240,7 @@ fn worker_main(
     }
 }
 
-/// Thread-local state of one rank worker: its own PJRT compilation cache and
+/// Thread-local state of one rank worker: its own backend instance and
 /// rank weights, plus its collective sequence counter. All ranks issue the
 /// same schedule, so the counters stay aligned without coordination.
 struct WorkerCtx {
@@ -246,7 +248,7 @@ struct WorkerCtx {
     tp: usize,
     layers: usize,
     arch: Arch,
-    exec: ExecCache,
+    exec: Exec,
     state: RankState,
     coll: Arc<SharedCollective>,
     seq: u64,
@@ -258,13 +260,15 @@ impl WorkerCtx {
         tp: usize,
         batch: usize,
         arch: Arch,
-        dir: &Path,
+        spec: &BackendSpec,
         weights: &WeightStore,
         coll: Arc<SharedCollective>,
     ) -> Result<WorkerCtx> {
-        let exec = ExecCache::new(ArtifactDir::open(dir)?);
-        let cfg = exec.artifacts().config.clone();
-        let state = RankState::new(&cfg, weights, rank, tp, batch)?;
+        let exec = spec.build()?;
+        let cfg = exec.cfg().clone();
+        // need_embed = false: the coordinator's Embedder runs the embed
+        // module; workers receive the embedded activation over the channel
+        let state = RankState::new(&exec, &cfg, weights, rank, tp, batch, false)?;
         Ok(WorkerCtx { rank, tp, layers: cfg.layers, arch, exec, state, coll, seq: 0 })
     }
 
@@ -431,18 +435,5 @@ impl WorkerCtx {
             self.absorb(&mut x, seq)?;
         }
         Ok(x)
-    }
-}
-
-#[derive(Clone, Copy)]
-enum BlockSel {
-    Attn,
-    Mlp,
-}
-
-fn add_assign(x: &mut HostTensor, delta: &HostTensor) {
-    debug_assert_eq!(x.shape, delta.shape);
-    for (a, b) in x.data.iter_mut().zip(&delta.data) {
-        *a += b;
     }
 }

@@ -23,9 +23,10 @@ use anyhow::{bail, Result};
 
 use super::rank::{Embedder, Phase, RankState};
 use super::threaded::ThreadedRuntime;
+use super::{add_assign, BlockSel};
 use crate::comm::{CollectiveEngine, CommHandle, Interconnect};
 use crate::model::{Arch, HostTensor, LlamaConfig, WeightStore};
-use crate::runtime::ExecCache;
+use crate::runtime::Exec;
 
 /// Which rank execution runtime an engine uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -65,7 +66,7 @@ pub struct TpEngine {
     pub batch: usize,
     pub runtime: RuntimeKind,
     pub comm: CollectiveEngine,
-    exec: Rc<ExecCache>,
+    exec: Rc<Exec>,
     /// Sequential runtime's rank states (empty under the threaded runtime,
     /// whose workers own their rank state thread-locally).
     ranks: Vec<RankState>,
@@ -85,7 +86,7 @@ pub struct TpEngine {
 impl TpEngine {
     /// Build an engine on the default (threaded) runtime.
     pub fn new(
-        exec: Rc<ExecCache>,
+        exec: Rc<Exec>,
         weights: &WeightStore,
         tp: usize,
         arch: Arch,
@@ -98,7 +99,7 @@ impl TpEngine {
     /// Build an engine on an explicit runtime (`--runtime` toggle; the
     /// sequential oracle is kept so numerics can be diffed engine-vs-engine).
     pub fn with_runtime(
-        exec: Rc<ExecCache>,
+        exec: Rc<Exec>,
         weights: &WeightStore,
         tp: usize,
         arch: Arch,
@@ -106,16 +107,26 @@ impl TpEngine {
         interconnect: Interconnect,
         runtime: RuntimeKind,
     ) -> Result<TpEngine> {
-        let cfg = exec.artifacts().config.clone();
-        let (tps, batches, buckets) = exec.artifacts().serving_params()?;
-        if !tps.contains(&tp) {
-            bail!("tp={tp} not exported (available: {tps:?})");
+        let cfg = exec.cfg().clone();
+        let sp = exec.serving();
+        // compiled-shape backends only have executables for the exported
+        // (tp, batch) grid; the native executor is shape-agnostic, so its
+        // lists are advisory and only the structural rules below apply
+        if sp.compiled_shapes && !sp.tps.contains(&tp) {
+            bail!("tp={tp} not exported (available: {:?})", sp.tps);
         }
-        if !batches.contains(&batch) {
-            bail!("batch={batch} not exported (available: {batches:?})");
+        if sp.compiled_shapes && !sp.batches.contains(&batch) {
+            bail!("batch={batch} not exported (available: {:?})", sp.batches);
         }
-        if cfg.heads % tp != 0 || cfg.kv_heads % tp != 0 {
+        if batch == 0 {
+            bail!("batch must be at least 1");
+        }
+        let buckets = sp.buckets.clone();
+        if tp == 0 || cfg.heads % tp != 0 || cfg.kv_heads % tp != 0 {
             bail!("tp={tp} does not divide heads/kv_heads");
+        }
+        if cfg.ffn % tp != 0 || cfg.vocab % tp != 0 {
+            bail!("tp={tp} does not divide ffn/vocab");
         }
         // Upperbound deletes ALL communication (paper: "removes all
         // communication operations"), including the lm-head AllGather — so
@@ -129,20 +140,20 @@ impl TpEngine {
         let (ranks, threaded, embedder) = match runtime {
             RuntimeKind::Sequential => {
                 let ranks = (0..tp)
-                    .map(|t| RankState::new(&cfg, weights, t, tp, batch))
+                    .map(|t| RankState::new(&exec, &cfg, weights, t, tp, batch, t == 0))
                     .collect::<Result<Vec<_>>>()?;
                 (ranks, None, None)
             }
             RuntimeKind::Threaded => {
                 let rt = ThreadedRuntime::spawn(
-                    &exec.artifacts().dir,
+                    exec.spec().clone(),
                     weights,
                     tp,
                     arch,
                     batch,
                     comm.rendezvous(),
                 )?;
-                (Vec::new(), Some(rt), Some(Embedder::new(weights)?))
+                (Vec::new(), Some(rt), Some(Embedder::new(&exec, weights)?))
             }
         };
         Ok(TpEngine {
@@ -257,8 +268,13 @@ impl TpEngine {
         super::kv::KvCache::bytes_per_slot_all_ranks(&self.cfg, self.tp)
     }
 
-    pub fn exec(&self) -> &ExecCache {
+    pub fn exec(&self) -> &Exec {
         &self.exec
+    }
+
+    /// Which execution backend this engine runs on ("native" / "xla").
+    pub fn backend_name(&self) -> &'static str {
+        self.exec.backend_name()
     }
 
     // ---------------------------------------------------------------------
@@ -328,7 +344,7 @@ impl TpEngine {
     /// (`== layers/2`) share one loop. For ladder layers the AllReduce of a
     /// module is waited on only *after* the next module has been issued —
     /// paper Algorithm 1 — so the modeled link time runs concurrently with
-    /// the next module's PJRT execution.
+    /// the next module's execution.
     fn fwd_synced(
         &mut self,
         mut x: HostTensor,
@@ -525,18 +541,5 @@ impl TpEngine {
             shards.push(self.ranks[t].lm_head_rows(&self.exec, &finals[t], last)?);
         }
         self.comm.allgather_concat(shards)
-    }
-}
-
-#[derive(Clone, Copy)]
-enum BlockSel {
-    Attn,
-    Mlp,
-}
-
-fn add_assign(x: &mut HostTensor, delta: &HostTensor) {
-    debug_assert_eq!(x.shape, delta.shape);
-    for (a, b) in x.data.iter_mut().zip(&delta.data) {
-        *a += b;
     }
 }

@@ -6,9 +6,9 @@
 //!
 //! Three-layer architecture:
 //!
-//! * **L1/L2 (build-time Python)** — Pallas kernels + a Llama-style JAX model
-//!   exported per-TP-rank, split at every AllReduce edge, AOT-lowered to HLO
-//!   text in `artifacts/`.
+//! * **L1/L2 (build-time Python, optional)** — Pallas kernels + a Llama-style
+//!   JAX model exported per-TP-rank, split at every AllReduce edge,
+//!   AOT-lowered to HLO text in `artifacts/`.
 //! * **L3 (this crate)** — the coordinator: a multi-rank TP engine whose
 //!   per-architecture schedulers (Standard / Ladder / Parallel / Desync-nx /
 //!   comm-free upper bound) own the residual stream, the collectives and the
@@ -17,8 +17,11 @@
 //!   and figure in the paper; and a training driver for the quality-parity
 //!   experiments.
 //!
-//! Python never runs on the request path: the rust binary is self-contained
-//! once `make artifacts` has produced the HLO modules.
+//! Module execution is pluggable ([`runtime::Backend`]): the default
+//! **native** backend runs the per-rank forward in pure Rust — no artifacts,
+//! no toolchain beyond rustc — while `--features xla` compiles the exported
+//! HLO modules on the PJRT CPU client. Python never runs on the request
+//! path on either backend.
 
 pub mod comm;
 pub mod engine;

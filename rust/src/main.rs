@@ -17,7 +17,7 @@ use ladder_infer::comm::Interconnect;
 use ladder_infer::engine::{generate, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::perfmodel::tables;
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::server::{api, Batcher, BatcherConfig};
 use ladder_infer::tokenizer::Tokenizer;
 use ladder_infer::trainer::parity;
@@ -46,24 +46,31 @@ fn main() -> Result<()> {
 
 fn engine_args(program: &str, about: &str) -> Args {
     Args::new(program, about)
-        .opt("model", Some("tiny"), "artifact config (tiny|small)")
+        .opt("model", Some("tiny"), "model config (tiny|small|parity, or any exported artifact)")
         .opt("arch", Some("ladder"), "standard|ladder|parallel|desync2|desync4|upperbound|hybrid")
         .opt("tp", Some("2"), "tensor-parallel degree")
         .opt("batch", Some("2"), "batch slots")
         .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local")
         .opt("runtime", Some("threaded"), "rank runtime: threaded|sequential (oracle)")
-        .opt("seed", Some("42"), "weight seed (tiny uses shipped test weights)")
+        .opt("backend", Some("native"), "execution backend: native|xla (xla: --features xla + make artifacts)")
+        .opt("seed", Some("42"), "weight seed (tiny prefers shipped test weights when artifacts exist)")
 }
 
 fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
     let model = args.get("model")?;
-    let exec = Rc::new(ExecCache::open(&model)?);
-    let cfg = exec.artifacts().config.clone();
-    let weights = if model == "tiny" {
-        let flat = exec.artifacts().read_f32("testvec_weights.f32")?;
-        WeightStore::from_flat(&flat, exec.artifacts().packing()?, cfg.layers)?
-    } else {
-        WeightStore::random(&cfg, args.get_usize("seed")? as u64)
+    let backend = BackendKind::parse(&args.get("backend")?)?;
+    let exec = Rc::new(Exec::open(&model, backend)?);
+    let cfg = exec.cfg().clone();
+    // deterministic weights: the tiny config uses the shipped test vector
+    // when an artifact dir is present (a broken artifact dir is an error,
+    // not a silent fall back to different weights); everything else — and
+    // the artifact-free native path — gets a seeded random init
+    let weights = match (model.as_str(), exec.artifacts_opt()) {
+        ("tiny", Some(art)) => {
+            let flat = art.read_f32("testvec_weights.f32")?;
+            WeightStore::from_flat(&flat, art.packing()?, cfg.layers)?
+        }
+        _ => WeightStore::random(&cfg, args.get_usize("seed")? as u64),
     };
     let engine = TpEngine::with_runtime(
         exec,
@@ -91,8 +98,9 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
         println!("slot {i}: {:?}", tok.decode(t));
     }
     println!(
-        "[{}] prefill {:.1}ms, decode {:.1}ms, {:.1} tok/s, comm hidden {:.0}%",
+        "[{} / {}] prefill {:.1}ms, decode {:.1}ms, {:.1} tok/s, comm hidden {:.0}%",
         report.runtime,
+        engine.backend_name(),
         report.prefill_time.as_secs_f64() * 1e3,
         report.decode_time.as_secs_f64() * 1e3,
         report.tokens_per_sec(),
@@ -107,11 +115,12 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt("max-requests", Some("0"), "stop after N completions (0 = forever)")
         .parse(argv)?;
     let (engine, tok) = build_engine(&args)?;
+    let backend = engine.backend_name();
     let mut batcher = Batcher::new(engine, BatcherConfig::default());
     let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
     let (jobs, port) = api::spawn_listener(&addr, tok)?;
     println!(
-        "serving {} [{}] tp={} runtime={} on 127.0.0.1:{port} — protocol: one JSON per line",
+        "serving {} [{}] tp={} runtime={} backend={backend} on 127.0.0.1:{port} — protocol: one JSON per line",
         args.get("model")?,
         args.get("arch")?,
         args.get_usize("tp")?,
@@ -154,8 +163,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         .opt("arches", Some("standard,ladder"), "comma list of architectures")
         .opt("steps", Some("100"), "training steps")
         .opt("lr", Some("0.0015"), "peak learning rate")
+        .opt("backend", Some("xla"), "training graphs need the xla backend (--features xla)")
         .parse(argv)?;
-    let exec = ExecCache::open("parity")?;
+    let exec = Exec::open("parity", BackendKind::parse(&args.get("backend")?)?)?;
     let arches: Vec<String> = args.get("arches")?.split(',').map(str::to_string).collect();
     let refs: Vec<&str> = arches.iter().map(String::as_str).collect();
     let rows = parity::pretrain_parity(&exec, &refs, args.get_usize("steps")?, args.get_f64("lr")? as f32, 8)?;

@@ -100,6 +100,46 @@ impl LlamaConfig {
         })
     }
 
+    /// The built-in config registry, mirroring `python/compile/model.py`'s
+    /// `CONFIGS` table. This is what lets the native backend boot with no
+    /// `artifacts/` directory: config identity no longer requires a manifest.
+    pub fn builtin(name: &str) -> Result<LlamaConfig> {
+        let (vocab, hidden, layers, heads, kv_heads, head_dim, ffn, max_seq) = match name {
+            "tiny" => (256, 64, 4, 4, 2, 16, 192, 128),
+            "small" => (2048, 256, 8, 8, 4, 32, 768, 320),
+            "parity" => (512, 128, 6, 4, 4, 32, 384, 128),
+            _ => bail!(
+                "unknown built-in config {name:?} (tiny|small|parity) and no \
+                 artifacts/{name}/manifest.json — run `make artifacts` for exported configs"
+            ),
+        };
+        let mut cfg = LlamaConfig {
+            name: name.to_string(),
+            vocab,
+            hidden,
+            layers,
+            heads,
+            kv_heads,
+            head_dim,
+            ffn,
+            max_seq,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            params: 0,
+        };
+        cfg.params = cfg.param_count();
+        Ok(cfg)
+    }
+
+    /// Total parameter count (embedding + blocks + head), matching the
+    /// python `ModelConfig.params()` formula.
+    pub fn param_count(&self) -> usize {
+        let (h, f) = (self.hidden, self.ffn);
+        let per_layer =
+            h * (self.q_dim() + 2 * self.kv_dim()) + self.q_dim() * h + 3 * h * f + 2 * h;
+        self.vocab * h * 2 + self.layers * per_layer + h
+    }
+
     pub fn q_dim(&self) -> usize {
         self.heads * self.head_dim
     }
@@ -177,6 +217,19 @@ mod tests {
             assert!(m.heads % m.kv_heads == 0, "{}", m.name);
         }
         assert_eq!(PaperModel::by_name("70B").unwrap().layers, 80);
+    }
+
+    #[test]
+    fn builtin_configs_mirror_python_registry() {
+        for name in ["tiny", "small", "parity"] {
+            let c = LlamaConfig::builtin(name).unwrap();
+            assert_eq!(c.name, name);
+            assert_eq!(c.params, c.param_count());
+            assert_eq!(c.heads % c.kv_heads, 0, "{name}");
+        }
+        let tiny = LlamaConfig::builtin("tiny").unwrap();
+        assert_eq!((tiny.hidden, tiny.layers, tiny.ffn), (64, 4, 192));
+        assert!(LlamaConfig::builtin("llama-405b").is_err());
     }
 
     #[test]

@@ -43,20 +43,33 @@ impl ArtifactDir {
     }
 
     /// Locate the artifact dir for a named config, trying the conventional
-    /// locations relative to the working directory and the crate root.
+    /// locations relative to the working directory, the crate root, and the
+    /// workspace root (cargo runs test/bench binaries with cwd = the
+    /// package root `rust/`, while `make artifacts` exports to the repo
+    /// root).
     pub fn open_named(name: &str) -> Result<ArtifactDir> {
+        Self::open_named_opt(name)?.ok_or_else(|| {
+            anyhow!("artifact config {name:?} not found; run `make artifacts`")
+        })
+    }
+
+    /// Like [`open_named`], but distinguishes *absent* (`Ok(None)`) from
+    /// *present but unreadable/corrupt* (`Err`) — callers that treat
+    /// artifacts as optional must not silently ignore a broken directory.
+    ///
+    /// [`open_named`]: ArtifactDir::open_named
+    pub fn open_named_opt(name: &str) -> Result<Option<ArtifactDir>> {
         let candidates = [
             PathBuf::from("artifacts").join(name),
             PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name),
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts").join(name),
         ];
         for c in &candidates {
             if c.join("manifest.json").exists() {
-                return ArtifactDir::open(c);
+                return ArtifactDir::open(c).map(Some);
             }
         }
-        Err(anyhow!(
-            "artifact config {name:?} not found (tried {candidates:?}); run `make artifacts`"
-        ))
+        Ok(None)
     }
 
     pub fn module(&self, name: &str) -> Result<ModuleSpec> {

@@ -1,0 +1,411 @@
+//! The pluggable execution backend abstraction.
+//!
+//! Everything above this layer (schedulers, runtimes, collectives, batcher,
+//! server, trainer) talks to a [`Backend`] through host-side [`Value`]s and
+//! named module calls — the same module vocabulary the AOT export emits
+//! (`attn_prefill__tp2__b1__s16`, `mlp__...`, `lm_head__...`, ...). Two
+//! implementations exist:
+//!
+//! * [`NativeBackend`] (default) — executes the per-rank Llama shard forward
+//!   directly over [`HostTensor`] in pure Rust ([`crate::runtime::native`]).
+//!   No artifacts, no PJRT, runs on any stock machine.
+//! * `XlaBackend` (`--features xla`) — compiles the exported HLO modules on
+//!   the PJRT CPU client ([`crate::runtime::executable`]). Requires
+//!   `artifacts/<config>/` from `make artifacts` and the real vendored
+//!   xla-rs toolchain.
+//!
+//! An [`Exec`] bundles a backend instance with the model config, the serving
+//! export parameters, and (optionally) the artifact directory; a
+//! [`BackendSpec`] is the `Send` recipe worker threads use to rebuild their
+//! own backend instance (PJRT handles are thread-local by construction).
+//!
+//! [`HostTensor`]: crate::model::HostTensor
+//! [`NativeBackend`]: crate::runtime::NativeBackend
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::ArtifactDir;
+use super::native::NativeBackend;
+use crate::model::{HostTensor, LlamaConfig};
+
+/// A backend-resident value: weights are uploaded once at engine build,
+/// activations per module call. The native backend stores plain host
+/// tensors; the xla backend stores PJRT literals.
+pub enum Value {
+    F32(HostTensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    #[cfg(feature = "xla")]
+    Xla(xla::Literal),
+}
+
+impl Value {
+    /// View as an f32 host tensor, copying out of device-side storage.
+    pub fn to_f32(&self) -> Result<HostTensor> {
+        match self {
+            Value::F32(t) => Ok(t.clone()),
+            Value::I32 { .. } => bail!("value is i32, wanted f32"),
+            #[cfg(feature = "xla")]
+            Value::Xla(lit) => super::literal::tensor_from_literal(lit),
+        }
+    }
+
+    /// Consume into an f32 host tensor (zero-copy on the native backend).
+    pub fn into_f32(self) -> Result<HostTensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32 { .. } => bail!("value is i32, wanted f32"),
+            #[cfg(feature = "xla")]
+            Value::Xla(lit) => super::literal::tensor_from_literal(&lit),
+        }
+    }
+
+    /// The raw f32 data (flattened).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32(t) => Ok(t.data.clone()),
+            Value::I32 { .. } => bail!("value is i32, wanted f32"),
+            #[cfg(feature = "xla")]
+            Value::Xla(lit) => Ok(lit.to_vec::<f32>()?),
+        }
+    }
+
+    /// The raw i32 data (flattened).
+    pub fn to_i32_vec(&self) -> Result<Vec<i32>> {
+        match self {
+            Value::F32(_) => bail!("value is f32, wanted i32"),
+            Value::I32 { data, .. } => Ok(data.clone()),
+            #[cfg(feature = "xla")]
+            Value::Xla(lit) => Ok(lit.to_vec::<i32>()?),
+        }
+    }
+}
+
+/// One execution backend: value upload + named module execution.
+///
+/// Implementations are *not* required to be `Send` (the PJRT client is
+/// thread-local); worker threads rebuild their own instance from a
+/// [`BackendSpec`].
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// f32 host data -> backend value of the given shape.
+    fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<Value>;
+
+    /// Consume an owned host tensor (native: zero-copy wrap).
+    fn upload_owned(&self, t: HostTensor) -> Result<Value>;
+
+    /// i32 host data -> backend value of the given shape.
+    fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value>;
+
+    /// Execute a named module; outputs in the module's declared order.
+    fn run(&self, module: &str, args: &[&Value]) -> Result<Vec<Value>>;
+
+    /// Number of module executables compiled/instantiated so far.
+    fn compiled_count(&self) -> usize;
+}
+
+/// Which backend to construct (CLI `--backend` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust reference executor over host tensors (default).
+    #[default]
+    Native,
+    /// AOT HLO artifacts on the PJRT CPU client (`--features xla`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "native" => BackendKind::Native,
+            "xla" | "pjrt" => BackendKind::Xla,
+            _ => bail!("unknown backend {s:?} (native|xla)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// `Send` recipe for building a backend instance on any thread.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    Native { cfg: LlamaConfig },
+    Xla { dir: PathBuf },
+}
+
+impl BackendSpec {
+    /// Build a fresh [`Exec`] for the current thread.
+    pub fn build(&self) -> Result<Exec> {
+        match self {
+            BackendSpec::Native { cfg } => Ok(Exec::native(cfg.clone())),
+            #[cfg(feature = "xla")]
+            BackendSpec::Xla { dir } => Exec::xla(Rc::new(ArtifactDir::open(dir)?)),
+            #[cfg(not(feature = "xla"))]
+            BackendSpec::Xla { dir } => bail!(
+                "xla backend spec ({dir:?}) in a build without the `xla` feature — \
+                 rebuild with `--features xla`"
+            ),
+        }
+    }
+}
+
+/// Serving export parameters: which (tp, batch, bucket) combinations an
+/// engine may be built with. Artifact-backed backends read these from the
+/// manifest and treat them as hard limits (`compiled_shapes = true` — the
+/// executables only exist for those shapes); the native executor dispatches
+/// on argument shapes, so its defaults are advisory (divisibility rules
+/// still apply) and membership is not enforced.
+#[derive(Debug, Clone)]
+pub struct ServingParams {
+    pub tps: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub buckets: Vec<usize>,
+    /// True when the lists are compiled-shape constraints (manifest-backed)
+    /// rather than shape-agnostic defaults.
+    pub compiled_shapes: bool,
+}
+
+impl ServingParams {
+    /// Native-backend defaults: every TP degree that divides the sharded
+    /// dims, power-of-two prefill buckets up to `max_seq`. Advisory only.
+    pub fn native_default(cfg: &LlamaConfig) -> ServingParams {
+        let tps = (1..=cfg.kv_heads)
+            .filter(|t| {
+                cfg.heads % t == 0 && cfg.kv_heads % t == 0 && cfg.ffn % t == 0 && cfg.vocab % t == 0
+            })
+            .collect();
+        let batches = (1..=16).collect();
+        let mut buckets = Vec::new();
+        let mut b = 8;
+        while b < cfg.max_seq {
+            buckets.push(b);
+            b *= 2;
+        }
+        buckets.push(cfg.max_seq);
+        ServingParams { tps, batches, buckets, compiled_shapes: false }
+    }
+}
+
+/// An execution context: backend + config + serving params + optional
+/// artifact directory. This is what the engine, trainer and CLI hold where
+/// they used to hold the xla `ExecCache`.
+pub struct Exec {
+    cfg: LlamaConfig,
+    serving: ServingParams,
+    spec: BackendSpec,
+    artifacts: Option<Rc<ArtifactDir>>,
+    backend: Box<dyn Backend>,
+}
+
+impl Exec {
+    /// Open a named config on the requested backend.
+    ///
+    /// Native: uses `artifacts/<name>/` for config + serving params + weight
+    /// files when present, otherwise falls back to the built-in config
+    /// registry — an artifact directory is optional, never a startup
+    /// hard-fail. Xla: artifacts are mandatory (they hold the HLO modules).
+    pub fn open(name: &str, kind: BackendKind) -> Result<Exec> {
+        // absent artifacts are fine (native path); a present-but-corrupt
+        // directory is a real error, never a silent fallback
+        let artifacts = ArtifactDir::open_named_opt(name)?.map(Rc::new);
+        match kind {
+            BackendKind::Native => {
+                let cfg = match &artifacts {
+                    Some(a) => a.config.clone(),
+                    None => LlamaConfig::builtin(name)?,
+                };
+                // always the shape-agnostic defaults: inheriting manifest
+                // serving lists would shrink what the native executor can
+                // serve (e.g. manifest buckets cap prompts below max_seq)
+                let serving = ServingParams::native_default(&cfg);
+                Ok(Exec {
+                    spec: BackendSpec::Native { cfg: cfg.clone() },
+                    backend: Box::new(NativeBackend::new(cfg.clone())),
+                    cfg,
+                    serving,
+                    artifacts,
+                })
+            }
+            BackendKind::Xla => {
+                // feature check first: without it, "run `make artifacts`"
+                // would send the user on a round-trip that can't help
+                #[cfg(not(feature = "xla"))]
+                {
+                    let _ = artifacts;
+                    bail!(
+                        "backend \"xla\" requires building with `--features xla` \
+                         (and the real vendored xla-rs toolchain); the default build is native-only"
+                    );
+                }
+                #[cfg(feature = "xla")]
+                {
+                    let artifacts = artifacts.ok_or_else(|| {
+                        anyhow!(
+                            "xla backend needs artifacts/{name}/manifest.json — run `make artifacts`"
+                        )
+                    })?;
+                    Self::xla_from(artifacts)
+                }
+            }
+        }
+    }
+
+    /// Shorthand: `open(name, BackendKind::Native)`.
+    pub fn native_named(name: &str) -> Result<Exec> {
+        Exec::open(name, BackendKind::Native)
+    }
+
+    /// A native exec straight from a config (no artifact lookup). Used by
+    /// rank worker threads and by callers that already hold a config.
+    pub fn native(cfg: LlamaConfig) -> Exec {
+        Exec {
+            spec: BackendSpec::Native { cfg: cfg.clone() },
+            backend: Box::new(NativeBackend::new(cfg.clone())),
+            serving: ServingParams::native_default(&cfg),
+            cfg,
+            artifacts: None,
+        }
+    }
+
+    /// An artifact-backed PJRT exec.
+    #[cfg(feature = "xla")]
+    pub fn xla(artifacts: Rc<ArtifactDir>) -> Result<Exec> {
+        Self::xla_from(artifacts)
+    }
+
+    #[cfg(feature = "xla")]
+    fn xla_from(artifacts: Rc<ArtifactDir>) -> Result<Exec> {
+        let (tps, batches, buckets) = artifacts.serving_params()?;
+        Ok(Exec {
+            cfg: artifacts.config.clone(),
+            serving: ServingParams { tps, batches, buckets, compiled_shapes: true },
+            spec: BackendSpec::Xla { dir: artifacts.dir.clone() },
+            backend: Box::new(super::executable::XlaBackend::new(
+                super::executable::ExecCache::new(artifacts.clone()),
+            )),
+            artifacts: Some(artifacts),
+        })
+    }
+
+    pub fn cfg(&self) -> &LlamaConfig {
+        &self.cfg
+    }
+
+    pub fn serving(&self) -> &ServingParams {
+        &self.serving
+    }
+
+    pub fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The artifact directory, or a guiding error for callers that truly
+    /// need one (trainer graphs, golden test vectors, shipped weights).
+    pub fn artifacts(&self) -> Result<&ArtifactDir> {
+        self.artifacts_opt().ok_or_else(|| {
+            anyhow!(
+                "no artifact directory for config {:?} — run `make artifacts` \
+                 (the native serving path does not need one, but this operation does)",
+                self.cfg.name
+            )
+        })
+    }
+
+    pub fn artifacts_opt(&self) -> Option<&ArtifactDir> {
+        self.artifacts.as_deref()
+    }
+
+    // -- execution (delegates to the backend) ------------------------------
+
+    pub fn upload(&self, t: &HostTensor) -> Result<Value> {
+        self.backend.upload_f32(&t.data, &t.shape)
+    }
+
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<Value> {
+        self.backend.upload_f32(data, shape)
+    }
+
+    pub fn upload_owned(&self, t: HostTensor) -> Result<Value> {
+        self.backend.upload_owned(t)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value> {
+        self.backend.upload_i32(data, shape)
+    }
+
+    pub fn run(&self, module: &str, args: &[&Value]) -> Result<Vec<Value>> {
+        self.backend.run(module, args)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.backend.compiled_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_open_without_artifacts() {
+        // must not require artifacts/ to exist anywhere
+        let exec = Exec::native_named("tiny").unwrap();
+        assert_eq!(exec.backend_name(), "native");
+        assert_eq!(exec.cfg().hidden, 64);
+        assert!(exec.serving().tps.contains(&2));
+        assert!(exec.serving().buckets.contains(&16));
+        // native serving params span the whole context window regardless of
+        // whether an artifact dir with narrower export lists is present
+        assert!(exec.serving().buckets.contains(&exec.cfg().max_seq));
+        assert!(!exec.serving().compiled_shapes);
+    }
+
+    #[test]
+    fn native_spec_rebuilds_on_any_thread() {
+        let exec = Exec::native_named("tiny").unwrap();
+        let spec = exec.spec().clone();
+        let handle = std::thread::spawn(move || {
+            let worker = spec.build().unwrap();
+            worker.cfg().layers
+        });
+        assert_eq!(handle.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_errors_without_feature() {
+        // the feature gap is reported first — "run `make artifacts`" alone
+        // could not fix a native-only build
+        let err = Exec::open("tiny", BackendKind::Xla).unwrap_err().to_string();
+        assert!(err.contains("--features xla"), "{err}");
+    }
+
+    #[test]
+    fn serving_defaults_respect_divisibility() {
+        let cfg = LlamaConfig::builtin("tiny").unwrap();
+        let sp = ServingParams::native_default(&cfg);
+        assert_eq!(sp.tps, vec![1, 2]); // kv_heads=2 caps TP at 2
+        for t in &sp.tps {
+            assert_eq!(cfg.heads % t, 0);
+        }
+    }
+}

@@ -19,6 +19,9 @@ use anyhow::{anyhow, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::artifact::ArtifactDir;
+use super::backend::{Backend, Value};
+use super::literal::{literal_f32, literal_i32};
+use crate::model::HostTensor;
 
 thread_local! {
     static CLIENT: PjRtClient = PjRtClient::cpu().expect("create PJRT CPU client");
@@ -31,18 +34,18 @@ pub fn client() -> PjRtClient {
 
 /// Lazy compile-on-first-use cache over an artifact directory.
 pub struct ExecCache {
-    artifacts: ArtifactDir,
+    artifacts: Rc<ArtifactDir>,
     cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
 }
 
 impl ExecCache {
-    pub fn new(artifacts: ArtifactDir) -> ExecCache {
+    pub fn new(artifacts: Rc<ArtifactDir>) -> ExecCache {
         ExecCache { artifacts, cache: RefCell::new(HashMap::new()) }
     }
 
     /// Open the conventional artifact dir for `name` and wrap it.
     pub fn open(name: &str) -> Result<ExecCache> {
-        Ok(ExecCache::new(ArtifactDir::open_named(name)?))
+        Ok(ExecCache::new(Rc::new(ArtifactDir::open_named(name)?)))
     }
 
     pub fn artifacts(&self) -> &ArtifactDir {
@@ -82,5 +85,51 @@ impl ExecCache {
     /// Number of compiled executables currently cached.
     pub fn compiled_count(&self) -> usize {
         self.cache.borrow().len()
+    }
+}
+
+/// The artifact-backed PJRT implementation of the [`Backend`] trait: values
+/// are `xla::Literal`s, module execution compiles-and-caches the exported
+/// HLO text through the thread-local CPU client.
+pub struct XlaBackend {
+    exec: ExecCache,
+}
+
+impl XlaBackend {
+    pub fn new(exec: ExecCache) -> XlaBackend {
+        XlaBackend { exec }
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<Value> {
+        Ok(Value::Xla(literal_f32(data, shape)?))
+    }
+
+    fn upload_owned(&self, t: HostTensor) -> Result<Value> {
+        Ok(Value::Xla(literal_f32(&t.data, &t.shape)?))
+    }
+
+    fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value> {
+        Ok(Value::Xla(literal_i32(data, shape)?))
+    }
+
+    fn run(&self, module: &str, args: &[&Value]) -> Result<Vec<Value>> {
+        let lits: Vec<&Literal> = args
+            .iter()
+            .map(|v| match v {
+                Value::Xla(lit) => Ok(lit),
+                _ => Err(anyhow!("xla backend got a non-xla value for module {module:?}")),
+            })
+            .collect::<Result<_>>()?;
+        Ok(self.exec.run(module, &lits)?.into_iter().map(Value::Xla).collect())
+    }
+
+    fn compiled_count(&self) -> usize {
+        self.exec.compiled_count()
     }
 }

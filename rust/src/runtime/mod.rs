@@ -1,13 +1,30 @@
-//! L3 runtime: load AOT artifacts (HLO text + manifest) and execute them on
-//! the PJRT CPU client. This is the only module that touches the `xla`
-//! crate; everything above it deals in [`HostTensor`]s.
+//! L3 runtime: pluggable execution backends behind the [`Backend`] trait.
+//!
+//! * [`native`] (default) — pure-Rust reference executor over
+//!   [`HostTensor`]s; no artifacts or PJRT toolchain required.
+//! * [`executable`] (`--features xla`) — AOT HLO artifacts compiled on the
+//!   PJRT CPU client; the only module that touches the `xla` crate.
+//!
+//! [`artifact`] (manifest parsing) is backend-independent: the native
+//! backend uses it opportunistically for shipped weights/goldens, the xla
+//! backend requires it.
 //!
 //! [`HostTensor`]: crate::model::HostTensor
 
 pub mod artifact;
+pub mod backend;
+pub mod native;
+
+#[cfg(feature = "xla")]
 pub mod executable;
+#[cfg(feature = "xla")]
 pub mod literal;
 
 pub use artifact::{ArtifactDir, ModuleSpec};
-pub use executable::{client, ExecCache};
+pub use backend::{Backend, BackendKind, BackendSpec, Exec, ServingParams, Value};
+pub use native::NativeBackend;
+
+#[cfg(feature = "xla")]
+pub use executable::{client, ExecCache, XlaBackend};
+#[cfg(feature = "xla")]
 pub use literal::{literal_f32, literal_i32, tensor_from_literal};

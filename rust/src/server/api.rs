@@ -3,8 +3,8 @@
 //! Protocol: one JSON object per line.
 //!
 //! request:  {"id": 1, "prompt": "text", "max_new_tokens": 32}
-//! response: {"id": 1, "text": "...", "tokens": [...], "ttft_ms": ..,
-//!            "e2e_ms": ..}
+//! response: {"id": 1, "text": "...", "tokens": [...], "queued_ms": ..,
+//!            "ttft_ms": .., "e2e_ms": ..}
 //!
 //! The acceptor and connection readers run on their own threads; the engine
 //! loop (PJRT is not Send) stays on the caller's thread and is driven by
@@ -98,6 +98,7 @@ fn render_result(r: &RequestResult, tok: &Tokenizer) -> Json {
             "tokens",
             Json::Arr(r.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
         )
+        .set("queued_ms", r.queued_secs * 1e3)
         .set("ttft_ms", r.ttft_secs * 1e3)
         .set("e2e_ms", r.e2e_secs * 1e3)
 }

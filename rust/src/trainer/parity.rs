@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use super::data::Corpus;
 use super::train_loop::{EvalMetrics, TrainRun, Trainer};
-use crate::runtime::ExecCache;
+use crate::runtime::Exec;
 use crate::util::bench::Table;
 
 const TRAIN_SEED: u64 = 11;
@@ -28,7 +28,7 @@ pub struct ParityRow {
 
 /// Train each architecture for `steps` from the shared init; equal data.
 pub fn pretrain_parity(
-    exec: &ExecCache,
+    exec: &Exec,
     arches: &[&str],
     steps: usize,
     peak_lr: f32,
@@ -37,7 +37,7 @@ pub fn pretrain_parity(
     let mut out = Vec::new();
     for &arch in arches {
         let mut trainer = Trainer::new(exec)?;
-        let vocab = exec.artifacts().config.vocab;
+        let vocab = exec.cfg().vocab;
         let mut corpus = Corpus::new(vocab, BRANCHING, TRAIN_SEED);
         let run: TrainRun = trainer.run(arch, steps, peak_lr, &mut corpus, EVAL_SEED, eval_batches)?;
         let tail = &run.losses[run.losses.len().saturating_sub(5)..];
@@ -74,13 +74,13 @@ pub struct HybridReport {
 }
 
 pub fn hybrid_adaptation(
-    exec: &ExecCache,
+    exec: &Exec,
     base_steps: usize,
     adapt_steps: usize,
     peak_lr: f32,
     eval_batches: usize,
 ) -> Result<HybridReport> {
-    let vocab = exec.artifacts().config.vocab;
+    let vocab = exec.cfg().vocab;
 
     // 1. pretrain the standard model
     let mut trainer = Trainer::new(exec)?;

@@ -1,10 +1,15 @@
 //! The train/eval loop over the AOT-compiled flat-vector graphs.
+//!
+//! Training executes the exported `train_<arch>` / `eval_<arch>` graphs
+//! (forward + backward + AdamW in one module), which only the xla backend
+//! provides — the native backend rejects them with a pointer to
+//! `--features xla`. The driver itself is backend-agnostic: it talks to
+//! [`Exec`] in host values only.
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
 
 use super::data::Corpus;
-use crate::runtime::{literal_f32, literal_i32, ExecCache};
+use crate::runtime::{Exec, Value};
 
 /// Held-out evaluation metrics.
 #[derive(Debug, Clone, Copy)]
@@ -26,7 +31,7 @@ pub struct TrainRun {
 
 /// Drives `train_<arch>` / `eval_<arch>` graphs for the parity config.
 pub struct Trainer<'a> {
-    exec: &'a ExecCache,
+    exec: &'a Exec,
     pub train_batch: usize,
     pub train_seq: usize,
     pub eval_batch: usize,
@@ -40,13 +45,14 @@ pub struct Trainer<'a> {
 
 impl<'a> Trainer<'a> {
     /// Initialize from the artifact manifest's seeded `init_weights` vector.
-    pub fn new(exec: &'a ExecCache) -> Result<Trainer<'a>> {
-        let man = &exec.artifacts().manifest;
+    /// Needs an artifact directory even on the native backend (the init
+    /// vector and training params live in the manifest).
+    pub fn new(exec: &'a Exec) -> Result<Trainer<'a>> {
+        let art = exec.artifacts()?;
+        let man = &art.manifest;
         let tr = man.get("training")?;
-        let w = exec
-            .artifacts()
-            .read_f32(tr.get("init_weights")?.as_str()?)?;
-        let n = exec.artifacts().packing()?.get("total")?.as_usize()?;
+        let w = art.read_f32(tr.get("init_weights")?.as_str()?)?;
+        let n = art.packing()?.get("total")?.as_usize()?;
         if w.len() != n {
             return Err(anyhow!("init weights: {} elems, packing wants {n}", w.len()));
         }
@@ -66,11 +72,9 @@ impl<'a> Trainer<'a> {
     /// Reset parameters to a fresh copy (for running several arches from
     /// the same seed point).
     pub fn reset(&mut self) -> Result<()> {
-        let tr = self.exec.artifacts().manifest.get("training")?;
-        self.w = self
-            .exec
-            .artifacts()
-            .read_f32(tr.get("init_weights")?.as_str()?)?;
+        let art = self.exec.artifacts()?;
+        let tr = art.manifest.get("training")?;
+        self.w = art.read_f32(tr.get("init_weights")?.as_str()?)?;
         self.m.fill(0.0);
         self.v.fill(0.0);
         self.step = 0;
@@ -80,20 +84,23 @@ impl<'a> Trainer<'a> {
     /// One AdamW step; returns the batch loss.
     pub fn train_step(&mut self, arch: &str, lr: f32, tokens: &[i32]) -> Result<f32> {
         let n = self.w.len();
-        let args: Vec<Literal> = vec![
-            literal_f32(&self.w, &[n])?,
-            literal_f32(&self.m, &[n])?,
-            literal_f32(&self.v, &[n])?,
-            Literal::scalar(self.step),
-            Literal::scalar(lr),
-            literal_i32(tokens, &[self.train_batch, self.train_seq])?,
+        let args: Vec<Value> = vec![
+            self.exec.upload_f32(&self.w, &[n])?,
+            self.exec.upload_f32(&self.m, &[n])?,
+            self.exec.upload_f32(&self.v, &[n])?,
+            self.exec.upload_i32(&[self.step], &[])?,
+            self.exec.upload_f32(&[lr], &[])?,
+            self.exec.upload_i32(tokens, &[self.train_batch, self.train_seq])?,
         ];
-        let arg_refs: Vec<&Literal> = args.iter().collect();
+        let arg_refs: Vec<&Value> = args.iter().collect();
         let outs = self.exec.run(&format!("train_{arch}"), &arg_refs)?;
-        let loss = outs[0].to_vec::<f32>()?[0];
-        self.w = outs[1].to_vec::<f32>()?;
-        self.m = outs[2].to_vec::<f32>()?;
-        self.v = outs[3].to_vec::<f32>()?;
+        if outs.len() < 4 {
+            return Err(anyhow!("train_{arch}: expected 4 outputs, got {}", outs.len()));
+        }
+        let loss = outs[0].to_f32_vec()?[0];
+        self.w = outs[1].to_f32_vec()?;
+        self.m = outs[2].to_f32_vec()?;
+        self.v = outs[3].to_f32_vec()?;
         self.step += 1;
         Ok(loss)
     }
@@ -106,14 +113,14 @@ impl<'a> Trainer<'a> {
         let n_pred_per_batch = self.eval_batch * (self.eval_seq - 1);
         for _ in 0..batches {
             let tokens = corpus.batch(self.eval_batch, self.eval_seq);
-            let args: Vec<Literal> = vec![
-                literal_f32(&self.w, &[n])?,
-                literal_i32(&tokens, &[self.eval_batch, self.eval_seq])?,
+            let args: Vec<Value> = vec![
+                self.exec.upload_f32(&self.w, &[n])?,
+                self.exec.upload_i32(&tokens, &[self.eval_batch, self.eval_seq])?,
             ];
-            let arg_refs: Vec<&Literal> = args.iter().collect();
+            let arg_refs: Vec<&Value> = args.iter().collect();
             let outs = self.exec.run(&format!("eval_{arch}"), &arg_refs)?;
-            loss_sum += outs[0].to_vec::<f32>()?[0] as f64;
-            hits += outs[1].to_vec::<i32>()?[0] as i64;
+            loss_sum += outs[0].to_f32_vec()?[0] as f64;
+            hits += outs[1].to_i32_vec()?[0] as i64;
         }
         let n_pred = (batches * n_pred_per_batch) as f64;
         let loss = loss_sum / n_pred;

@@ -1,19 +1,23 @@
-//! Integration: the Rust TP engine (real HLO modules + rust scheduling +
-//! rust collectives) must reproduce the python SimEngine's golden logits for
+//! Integration: the Rust TP engine (native modules + rust scheduling + rust
+//! collectives) must reproduce the python SimEngine's golden logits for
 //! every architecture, for prefill and teacher-forced KV-cache decode.
 //!
 //! Golden vectors are produced at artifact-build time (aot.py
 //! export_testvectors) — seeded weights, seeded tokens, per-step logits.
+//! They are plain `.f32` files, so this parity check needs `make artifacts`
+//! but **not** the xla toolchain; without an artifact directory the tests
+//! skip with a note (the native backend itself is covered artifact-free by
+//! `runtime_determinism` and the unit suites).
 
 use ladder_infer::comm::{Fabric, Interconnect};
 use ladder_infer::engine::TpEngine;
 use ladder_infer::model::{Arch, WeightStore};
-use ladder_infer::runtime::{ArtifactDir, ExecCache};
+use ladder_infer::runtime::{ArtifactDir, Exec};
 
 use std::rc::Rc;
 
 struct TestVec {
-    exec: Rc<ExecCache>,
+    exec: Rc<Exec>,
     weights: WeightStore,
     tokens: Vec<i32>,
     tp: usize,
@@ -23,8 +27,14 @@ struct TestVec {
     vocab: usize,
 }
 
-fn load() -> TestVec {
-    let art = ArtifactDir::open_named("tiny").expect("run `make artifacts` first");
+/// Load the golden test vectors, or None when artifacts are absent.
+fn load() -> Option<TestVec> {
+    if ArtifactDir::open_named("tiny").is_err() {
+        eprintln!("skipping golden-logit parity: no artifacts/tiny (run `make artifacts`)");
+        return None;
+    }
+    let exec = Rc::new(Exec::native_named("tiny").unwrap());
+    let art = exec.artifacts().unwrap();
     let tv = art.manifest.get("testvec").unwrap();
     let tp = tv.get("tp").unwrap().as_usize().unwrap();
     let batch = tv.get("batch").unwrap().as_usize().unwrap();
@@ -35,11 +45,12 @@ fn load() -> TestVec {
         WeightStore::from_flat(&flat, art.packing().unwrap(), art.config.layers).unwrap();
     let tokens = art.read_i32("testvec_tokens.i32").unwrap();
     let vocab = art.config.vocab;
-    TestVec { exec: Rc::new(ExecCache::new(art)), weights, tokens, tp, batch, prompt, steps, vocab }
+    Some(TestVec { exec, weights, tokens, tp, batch, prompt, steps, vocab })
 }
 
-fn expected(exec: &ExecCache, arch: &str) -> Vec<f32> {
+fn expected(exec: &Exec, arch: &str) -> Vec<f32> {
     exec.artifacts()
+        .unwrap()
         .read_f32(&format!("testvec_logits_{arch}.f32"))
         .unwrap()
 }
@@ -49,7 +60,7 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 }
 
 fn check_arch(arch: Arch) {
-    let tv = load();
+    let Some(tv) = load() else { return };
     let want = expected(&tv.exec, &arch.name());
     let step_len = tv.batch * tv.vocab;
     assert_eq!(want.len(), (tv.steps + 1) * step_len, "golden file size");
@@ -74,8 +85,8 @@ fn check_arch(arch: Arch) {
     let true_lens = vec![tv.prompt; tv.batch];
     let logits = engine.prefill(&prefill_tokens, tv.prompt, &true_lens).unwrap();
     let diff = max_abs_diff(&logits.data, &want[..step_len]);
-    // tiny artifacts use Pallas kernels, the oracle uses ref kernels: small
-    // fp divergence from different reduction orders is expected.
+    // tiny artifacts use Pallas kernels, this oracle uses the native ref
+    // math: small fp divergence from different reduction orders is expected.
     assert!(diff < 2e-3, "{}: prefill logits diff {diff}", arch.name());
 
     // teacher-forced decode
@@ -122,7 +133,7 @@ fn desync4_matches_golden() {
 
 #[test]
 fn upperbound_runs_and_diverges_from_standard() {
-    let tv = load();
+    let Some(tv) = load() else { return };
     let mut engine = TpEngine::new(
         tv.exec.clone(),
         &tv.weights,
@@ -149,25 +160,28 @@ fn upperbound_runs_and_diverges_from_standard() {
 
 #[test]
 fn tp1_equals_tp2_standard() {
-    let tv = load();
-    let total = tv.prompt + tv.steps;
-    let mut prefill_tokens = vec![0i32; tv.batch * tv.prompt];
-    for b in 0..tv.batch {
-        prefill_tokens[b * tv.prompt..(b + 1) * tv.prompt]
-            .copy_from_slice(&tv.tokens[b * total..b * total + tv.prompt]);
-    }
+    // TP invariance needs no goldens — run it artifact-free on the native
+    // backend with seeded random weights when artifacts are missing.
+    let (exec, weights, prompt, batch) = match load() {
+        Some(tv) => (tv.exec, tv.weights, tv.prompt, tv.batch),
+        None => {
+            let exec = Rc::new(Exec::native_named("tiny").unwrap());
+            let weights = WeightStore::random(exec.cfg(), 99);
+            (exec, weights, 16usize, 2usize)
+        }
+    };
+    let tokens: Vec<i32> = (0..(batch * prompt) as i32).map(|i| i % 29 + 1).collect();
     let run = |tp: usize| {
         let mut e = TpEngine::new(
-            tv.exec.clone(),
-            &tv.weights,
+            exec.clone(),
+            &weights,
             tp,
             Arch::Standard,
-            tv.batch,
+            batch,
             Interconnect::new(Fabric::Local),
         )
         .unwrap();
-        e.prefill(&prefill_tokens, tv.prompt, &vec![tv.prompt; tv.batch])
-            .unwrap()
+        e.prefill(&tokens, prompt, &vec![prompt; batch]).unwrap()
     };
     let a = run(1);
     let b = run(2);

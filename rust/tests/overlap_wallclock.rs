@@ -13,14 +13,13 @@ use std::rc::Rc;
 use ladder_infer::comm::{Fabric, Interconnect};
 use ladder_infer::engine::{generate, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::Exec;
 
 fn run_rt(arch: Arch, fabric: Fabric, runtime: RuntimeKind) -> (f64, f64, f64) {
-    let exec = Rc::new(ExecCache::open("tiny").expect("make artifacts first"));
-    let cfg = exec.artifacts().config.clone();
-    let flat = exec.artifacts().read_f32("testvec_weights.f32").unwrap();
-    let weights =
-        WeightStore::from_flat(&flat, exec.artifacts().packing().unwrap(), cfg.layers).unwrap();
+    // native backend: wall-clock overlap is an architecture property, so no
+    // artifacts (and no particular weights) are required to measure it
+    let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+    let weights = WeightStore::random(exec.cfg(), 1);
     let mut engine =
         TpEngine::with_runtime(exec, &weights, 2, arch, 2, Interconnect::new(fabric), runtime)
             .unwrap();

@@ -1,4 +1,5 @@
-//! Integration: continuous batcher + TCP API over the real tiny engine.
+//! Integration: continuous batcher + TCP API over the real tiny engine,
+//! running on the native backend (no artifacts required).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -7,16 +8,14 @@ use std::rc::Rc;
 use ladder_infer::comm::{Fabric, Interconnect};
 use ladder_infer::engine::TpEngine;
 use ladder_infer::model::{Arch, WeightStore};
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::Exec;
 use ladder_infer::server::{api, Batcher, BatcherConfig, Request};
 use ladder_infer::tokenizer::Tokenizer;
 use ladder_infer::util::json::parse;
 
 fn build_batcher(arch: Arch, batch: usize) -> Batcher {
-    let exec = Rc::new(ExecCache::open("tiny").expect("make artifacts first"));
-    let cfg = exec.artifacts().config.clone();
-    let flat = exec.artifacts().read_f32("testvec_weights.f32").unwrap();
-    let weights = WeightStore::from_flat(&flat, exec.artifacts().packing().unwrap(), cfg.layers).unwrap();
+    let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+    let weights = WeightStore::random(exec.cfg(), 0xbeef);
     let engine = TpEngine::new(
         exec,
         &weights,
@@ -118,5 +117,13 @@ fn tcp_api_roundtrip() {
     let reply = parse(&line).unwrap();
     assert!(reply.opt("error").is_none(), "{line}");
     assert_eq!(reply.get("tokens").unwrap().as_arr().unwrap().len(), 3);
-    assert!(reply.get("e2e_ms").unwrap().as_f64().unwrap() > 0.0);
+    let e2e_ms = reply.get("e2e_ms").unwrap().as_f64().unwrap();
+    assert!(e2e_ms > 0.0);
+    // the batcher's measured queue wait must reach the wire alongside
+    // ttft/e2e, and the latency breakdown must be internally consistent
+    let queued_ms = reply.get("queued_ms").unwrap().as_f64().unwrap();
+    let ttft_ms = reply.get("ttft_ms").unwrap().as_f64().unwrap();
+    assert!(queued_ms >= 0.0);
+    assert!(queued_ms <= ttft_ms, "queued {queued_ms} > ttft {ttft_ms}");
+    assert!(ttft_ms <= e2e_ms, "ttft {ttft_ms} > e2e {e2e_ms}");
 }

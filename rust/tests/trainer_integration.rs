@@ -1,17 +1,27 @@
 //! Integration: the Rust training driver over the AOT train/eval graphs.
+//!
+//! The train/eval graphs only exist on the xla backend (they embed the
+//! backward pass + AdamW), so this whole suite is feature-gated; it
+//! additionally skips at runtime when `artifacts/parity` is missing.
+#![cfg(feature = "xla")]
 
-use ladder_infer::runtime::ExecCache;
+use ladder_infer::runtime::{ArtifactDir, BackendKind, Exec};
 use ladder_infer::trainer::{Corpus, Trainer};
 
-fn exec() -> ExecCache {
-    ExecCache::open("parity").expect("make artifacts first")
+/// The parity exec, or None (skip) when artifacts are absent.
+fn exec() -> Option<Exec> {
+    if ArtifactDir::open_named("parity").is_err() {
+        eprintln!("skipping trainer integration: no artifacts/parity (run `make artifacts`)");
+        return None;
+    }
+    Some(Exec::open("parity", BackendKind::Xla).expect("open parity artifacts on xla backend"))
 }
 
 #[test]
 fn initial_loss_is_near_uniform() {
-    let e = exec();
+    let Some(e) = exec() else { return };
     let trainer = Trainer::new(&e).unwrap();
-    let vocab = e.artifacts().config.vocab as f64;
+    let vocab = e.cfg().vocab as f64;
     let mut corpus = Corpus::new(vocab as usize, 4, 123);
     let m = trainer.eval("standard", &mut corpus, 2).unwrap();
     assert!((m.loss - vocab.ln()).abs() < 1.0, "loss {} vs ln(V) {}", m.loss, vocab.ln());
@@ -20,10 +30,10 @@ fn initial_loss_is_near_uniform() {
 
 #[test]
 fn train_step_reduces_loss_for_each_arch() {
-    let e = exec();
+    let Some(e) = exec() else { return };
     for arch in ["standard", "ladder", "desync2"] {
         let mut trainer = Trainer::new(&e).unwrap();
-        let mut corpus = Corpus::new(e.artifacts().config.vocab, 4, 7);
+        let mut corpus = Corpus::new(e.cfg().vocab, 4, 7);
         let batch = corpus.batch(trainer.train_batch, trainer.train_seq);
         let first = trainer.train_step(arch, 2e-3, &batch).unwrap();
         let mut last = first;
@@ -37,10 +47,10 @@ fn train_step_reduces_loss_for_each_arch() {
 
 #[test]
 fn eval_is_deterministic_for_fixed_weights() {
-    let e = exec();
+    let Some(e) = exec() else { return };
     let trainer = Trainer::new(&e).unwrap();
-    let m1 = trainer.eval("ladder", &mut Corpus::new(e.artifacts().config.vocab, 4, 99), 2).unwrap();
-    let m2 = trainer.eval("ladder", &mut Corpus::new(e.artifacts().config.vocab, 4, 99), 2).unwrap();
+    let m1 = trainer.eval("ladder", &mut Corpus::new(e.cfg().vocab, 4, 99), 2).unwrap();
+    let m2 = trainer.eval("ladder", &mut Corpus::new(e.cfg().vocab, 4, 99), 2).unwrap();
     assert_eq!(m1.loss, m2.loss);
     assert_eq!(m1.accuracy, m2.accuracy);
 }
@@ -50,25 +60,25 @@ fn hybrid_zeroshot_differs_from_standard_eval() {
     // Same weights evaluated under standard vs hybrid computation flows
     // must differ (that is the representation shift the paper retrains
     // away).
-    let e = exec();
+    let Some(e) = exec() else { return };
     let mut trainer = Trainer::new(&e).unwrap();
     // a few training steps so the weights are not at the symmetric init
-    let mut corpus = Corpus::new(e.artifacts().config.vocab, 4, 3);
+    let mut corpus = Corpus::new(e.cfg().vocab, 4, 3);
     for _ in 0..3 {
         let tokens = corpus.batch(trainer.train_batch, trainer.train_seq);
         trainer.train_step("standard", 2e-3, &tokens).unwrap();
     }
-    let std_eval = trainer.eval("standard", &mut Corpus::new(e.artifacts().config.vocab, 4, 55), 2).unwrap();
-    let hyb_eval = trainer.eval("hybrid", &mut Corpus::new(e.artifacts().config.vocab, 4, 55), 2).unwrap();
+    let std_eval = trainer.eval("standard", &mut Corpus::new(e.cfg().vocab, 4, 55), 2).unwrap();
+    let hyb_eval = trainer.eval("hybrid", &mut Corpus::new(e.cfg().vocab, 4, 55), 2).unwrap();
     assert!((std_eval.loss - hyb_eval.loss).abs() > 1e-4);
 }
 
 #[test]
 fn reset_restores_the_seeded_init() {
-    let e = exec();
+    let Some(e) = exec() else { return };
     let mut trainer = Trainer::new(&e).unwrap();
     let w0 = trainer.w.clone();
-    let mut corpus = Corpus::new(e.artifacts().config.vocab, 4, 1);
+    let mut corpus = Corpus::new(e.cfg().vocab, 4, 1);
     let tokens = corpus.batch(trainer.train_batch, trainer.train_seq);
     trainer.train_step("standard", 1e-3, &tokens).unwrap();
     assert_ne!(trainer.w, w0);

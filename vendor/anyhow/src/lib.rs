@@ -1,0 +1,145 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build must succeed on machines with no crates.io access (the tier-1
+//! gate runs offline), so the error crate is vendored as a path dependency.
+//! Only the surface this workspace actually uses is implemented: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, the blanket
+//! `From<E: std::error::Error>` conversion, and `{:#}` source-chain
+//! formatting. Context/downcasting/backtraces are intentionally absent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A lightweight dynamic error: a message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// The root message (without the source chain).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the source chain (for `{:#}` / `{:?}` rendering).
+    fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> =
+            self.source.as_deref().map(|e| e as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+// The blanket conversion `?` relies on. `Error` itself deliberately does NOT
+// implement `std::error::Error`, which is what makes this impl coherent
+// (same trick as the real anyhow crate).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                let cause = cause.to_string();
+                // the message already embeds the direct source's text (see
+                // `From` above); skip exact duplicates to avoid "x: x"
+                if cause != self.msg {
+                    write!(f, ": {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> =
+            self.chain().map(|c| c.to_string()).filter(|c| c != &self.msg).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 7");
+        let e = anyhow!("bad {} of {}", "kind", 3);
+        assert_eq!(e.to_string(), "bad kind of 3");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn alternate_format_is_stable() {
+        let e = Error::from(io_err());
+        // message text embeds the source already; `{:#}` must not duplicate
+        assert_eq!(format!("{e:#}"), "disk on fire");
+    }
+}

@@ -1,0 +1,130 @@
+//! API-shaped stub of the offline `xla-rs` PJRT toolchain.
+//!
+//! The real crate (PJRT CPU client + HLO compilation) is only present in the
+//! baked toolchain image and is not redistributable here. This stub exposes
+//! the same type/method surface so that `--features xla` *type-checks* on
+//! any machine; every runtime entry point returns an explanatory error (or
+//! panics via the caller's `.expect`). To run the artifact-backed PJRT
+//! backend for real, drop the actual `xla-rs` crate into `vendor/xla/`.
+//!
+//! The default (native) backend never touches this crate.
+
+use std::fmt;
+
+/// Error type matching the real crate's `std::error::Error` shape.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} is unavailable — vendor/xla is an API stub; install the real \
+         offline xla-rs toolchain in vendor/xla to use the PJRT backend"
+    )))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host-side literal (stub: holds nothing).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        stub("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub("Literal::array_shape")
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        stub("Literal::decompose_tuple")
+    }
+}
+
+#[derive(Debug)]
+pub struct ArrayShape(Vec<i64>);
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.0
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+}
