@@ -30,7 +30,9 @@ fn main() -> anyhow::Result<()> {
     hybrid_table(&report).print();
     let drop = (report.zeroshot.perplexity / report.base.perplexity - 1.0) * 100.0;
     let recovered = (report.retrained.perplexity / report.base.perplexity - 1.0) * 100.0;
-    println!("\nzero-shot conversion: ppl {drop:+.1}% vs base (the paper's GSM8K 85->10 style drop)");
+    println!(
+        "\nzero-shot conversion: ppl {drop:+.1}% vs base (the paper's GSM8K 85->10 style drop)"
+    );
     println!(
         "after {} retraining steps ({}% of pretraining): ppl {recovered:+.1}% vs base",
         report.adapt_steps,

@@ -25,7 +25,12 @@ fn main() -> anyhow::Result<()> {
         .opt("batch", Some("4"), "decode batch slots")
         .opt("requests", Some("12"), "requests in the trace")
         .opt("gen", Some("24"), "tokens per request")
-        .opt("fabric", Some("slow"), "nvlink|pcie|infiniband|local|slow (slow: ms-scale latency, proportionate to CPU-testbed module times)")
+        .opt(
+            "fabric",
+            Some("slow"),
+            "nvlink|pcie|infiniband|local|slow (slow: ms-scale latency, proportionate to \
+             CPU-testbed module times)",
+        )
         .opt("arches", Some("standard,parallel,ladder,desync2,desync4,upperbound"), "comma list")
         .opt("backend", Some("native"), "execution backend: native|xla")
         .parse_env()?;
@@ -57,7 +62,15 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(
         "serve_e2e: real-engine serving comparison",
-        &["arch", "wall (s)", "tok/s", "ttft p50 (ms)", "e2e p99 (ms)", "comm hidden %"],
+        &[
+            "arch",
+            "wall (s)",
+            "tok/s",
+            "ttft p50 (ms)",
+            "itl p50 (ms)",
+            "e2e p99 (ms)",
+            "comm hidden %",
+        ],
     );
     let mut baseline_tps = None;
     for arch_name in args.get("arches")?.split(',') {
@@ -84,6 +97,7 @@ fn main() -> anyhow::Result<()> {
                     .unwrap_or_default()
             ),
             format!("{:.1}", report.get("ttft_p50_ms")?.as_f64()?),
+            format!("{:.2}", report.get("itl_p50_ms")?.as_f64()?),
             format!("{:.1}", report.get("e2e_p99_ms")?.as_f64()?),
             format!("{:.0}", comm.hidden_fraction() * 100.0),
         ]);
@@ -92,6 +106,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.print();
-    println!("\n(ladder should beat standard; gaps grow as the fabric slows — try --fabric infiniband)");
+    println!(
+        "\n(ladder should beat standard; gaps grow as the fabric slows — try --fabric infiniband)"
+    );
     Ok(())
 }

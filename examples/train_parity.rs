@@ -16,7 +16,10 @@ fn main() -> anyhow::Result<()> {
         .opt("lr", Some("0.0015"), "peak learning rate")
         .opt("eval-batches", Some("8"), "held-out eval batches")
         .flag("desync", "run the desync variants too (Table 5 analog)")
-        .flag("ablation", "desync-2x placement ablation: drop attention's AR (paper's choice) vs drop MLP's")
+        .flag(
+            "ablation",
+            "desync-2x placement ablation: drop attention's AR (paper's choice) vs drop MLP's",
+        )
         .parse_env()?;
 
     // training graphs are xla-backend only (build with --features xla)

@@ -92,7 +92,11 @@ pub struct SharedCollective {
 }
 
 impl SharedCollective {
-    pub fn new(tp: usize, interconnect: Interconnect, stats: Arc<Mutex<CommStats>>) -> SharedCollective {
+    pub fn new(
+        tp: usize,
+        interconnect: Interconnect,
+        stats: Arc<Mutex<CommStats>>,
+    ) -> SharedCollective {
         SharedCollective {
             tp,
             interconnect,

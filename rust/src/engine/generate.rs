@@ -29,9 +29,7 @@ impl Sampler {
                 match self {
                     Sampler::Greedy => argmax(row) as i32,
                     Sampler::TopK { k, temperature, .. } => {
-                        let mut idx: Vec<usize> = (0..v).collect();
-                        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
-                        idx.truncate((*k).max(1));
+                        let idx = top_k_indices(row, *k);
                         let weights: Vec<f64> = idx
                             .iter()
                             .map(|&i| ((row[i] as f64) / temperature.max(1e-6)).exp())
@@ -42,6 +40,28 @@ impl Sampler {
             })
             .collect()
     }
+}
+
+/// The `k` highest-logit indices in descending logit order (ties broken by
+/// lower index, i.e. exactly what a stable full-vocab descending sort
+/// yields) — but via `select_nth_unstable`, so a decode step costs
+/// O(V + k log k) per slot instead of O(V log V).
+fn top_k_indices(row: &[f32], k: usize) -> Vec<usize> {
+    let v = row.len();
+    if v == 0 {
+        return Vec::new();
+    }
+    let k = k.clamp(1, v);
+    // logit desc, index asc: a total order, so the selected set and its
+    // final ordering are deterministic even through the unstable partition
+    let order = |&a: &usize, &b: &usize| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b));
+    let mut idx: Vec<usize> = (0..v).collect();
+    if k < v {
+        idx.select_nth_unstable_by(k - 1, order);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(order);
+    idx
 }
 
 fn argmax(row: &[f32]) -> usize {
@@ -67,13 +87,19 @@ pub struct GenerateReport {
 }
 
 impl GenerateReport {
+    /// End-to-end throughput: **generated** tokens (prompt and padding rows
+    /// never count — the numerator is the sum of per-row generated lengths)
+    /// over the prefill + decode wall clock.
     pub fn tokens_per_sec(&self) -> f64 {
+        let generated: usize = self.tokens.iter().map(Vec::len).sum();
         let total = (self.prefill_time + self.decode_time).as_secs_f64();
-        (self.tokens.len() * self.tokens[0].len()) as f64 / total
+        generated as f64 / total.max(1e-12)
     }
 
+    /// Decode-phase throughput: decode-step tokens over the decode wall
+    /// clock (the prefill-sampled token is excluded from both).
     pub fn decode_tok_per_sec(&self) -> f64 {
-        (self.tokens.len() * self.decode_steps) as f64 / self.decode_time.as_secs_f64()
+        (self.tokens.len() * self.decode_steps) as f64 / self.decode_time.as_secs_f64().max(1e-12)
     }
 }
 
@@ -168,5 +194,93 @@ mod tests {
         for _ in 0..20 {
             assert_eq!(s.sample(&l, &mut rng)[0], 1);
         }
+    }
+
+    /// The replaced O(V log V) selection: full-vocab stable descending sort.
+    fn top_k_sorted(row: &[f32], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        idx.truncate(k.max(1));
+        idx
+    }
+
+    #[test]
+    fn topk_selection_matches_sorted_path() {
+        let mut rng = Rng::new(0xfeed);
+        for v in [1usize, 2, 7, 64, 500] {
+            for k in [1usize, 2, 5, 64, 1000] {
+                let row: Vec<f32> = (0..v).map(|_| rng.normal() as f32).collect();
+                assert_eq!(
+                    top_k_indices(&row, k),
+                    top_k_sorted(&row, k),
+                    "v={v} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topk_selection_breaks_ties_like_stable_sort() {
+        // duplicated logits everywhere: stable sort keeps lower indices
+        // first within a tie class, and so must the select_nth path
+        let row = [1.0f32, 3.0, 3.0, 1.0, 3.0, 0.0, 1.0, 3.0];
+        for k in 1..=row.len() {
+            assert_eq!(top_k_indices(&row, k), top_k_sorted(&row, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn topk_sampling_identical_to_legacy_rng_stream() {
+        // same seed, same logits: the select_nth sampler must consume the
+        // RNG identically to the sorted implementation it replaced
+        let mut rng = Rng::new(3);
+        let row: Vec<f32> = (0..200).map(|_| rng.normal() as f32).collect();
+        let l = HostTensor::new(vec![1, row.len()], row.clone());
+        let s = Sampler::TopK { k: 10, temperature: 0.8, seed: 11 };
+        let mut ra = Rng::new(11);
+        let mut rb = Rng::new(11);
+        for _ in 0..50 {
+            let fast = s.sample(&l, &mut ra)[0];
+            // legacy draw, inlined
+            let idx = top_k_sorted(&row, 10);
+            let w: Vec<f64> = idx.iter().map(|&i| ((row[i] as f64) / 0.8).exp()).collect();
+            let slow = idx[rb.categorical(&w)] as i32;
+            assert_eq!(fast, slow);
+        }
+    }
+
+    fn report(
+        tokens: Vec<Vec<i32>>,
+        prefill_ms: u64,
+        decode_ms: u64,
+        steps: usize,
+    ) -> GenerateReport {
+        GenerateReport {
+            tokens,
+            prefill_time: Duration::from_millis(prefill_ms),
+            decode_time: Duration::from_millis(decode_ms),
+            decode_steps: steps,
+            comm: CommStats::default(),
+            runtime: "sequential",
+        }
+    }
+
+    #[test]
+    fn tokens_per_sec_counts_generated_only() {
+        // 2 rows x 4 generated tokens over 2s total: prompt length and
+        // padding never enter the numerator
+        let r = report(vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]], 500, 1500, 3);
+        assert!((r.tokens_per_sec() - 4.0).abs() < 1e-9, "{}", r.tokens_per_sec());
+        // ragged rows count their true generated lengths
+        let r = report(vec![vec![1, 2, 3], vec![4]], 0, 1000, 2);
+        assert!((r.tokens_per_sec() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_rates_survive_degenerate_runs() {
+        // zero rows / zero time must not panic or divide by zero
+        let r = report(Vec::new(), 0, 0, 0);
+        assert_eq!(r.tokens_per_sec(), 0.0);
+        assert_eq!(r.decode_tok_per_sec(), 0.0);
     }
 }

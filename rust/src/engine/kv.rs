@@ -17,7 +17,13 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    pub fn new(layers: usize, batch: usize, kv_heads_l: usize, max_seq: usize, head_dim: usize) -> KvCache {
+    pub fn new(
+        layers: usize,
+        batch: usize,
+        kv_heads_l: usize,
+        max_seq: usize,
+        head_dim: usize,
+    ) -> KvCache {
         let shape = vec![batch, kv_heads_l, max_seq, head_dim];
         KvCache {
             k: (0..layers).map(|_| HostTensor::zeros(shape.clone())).collect(),
@@ -54,7 +60,13 @@ impl KvCache {
     /// Overwrite slot `b` of layer `layer` from a single-slot cache tensor
     /// (shape [1, KVl, M, D]) — used when a b=1 prefill lands in a multi-slot
     /// decode batch (continuous batching).
-    pub fn write_slot(&mut self, layer: usize, b: usize, k1: &HostTensor, v1: &HostTensor) -> Result<()> {
+    pub fn write_slot(
+        &mut self,
+        layer: usize,
+        b: usize,
+        k1: &HostTensor,
+        v1: &HostTensor,
+    ) -> Result<()> {
         let stride = self.slot_stride();
         if k1.data.len() != stride || v1.data.len() != stride {
             bail!(
@@ -75,10 +87,9 @@ impl KvCache {
     pub fn read_slot(&self, layer: usize, b: usize) -> (HostTensor, HostTensor) {
         let stride = self.slot_stride();
         let shape = vec![1, self.kv_heads_l, self.max_seq, self.head_dim];
-        (
-            HostTensor::new(shape.clone(), self.k[layer].data[b * stride..(b + 1) * stride].to_vec()),
-            HostTensor::new(shape, self.v[layer].data[b * stride..(b + 1) * stride].to_vec()),
-        )
+        let k = self.k[layer].data[b * stride..(b + 1) * stride].to_vec();
+        let v = self.v[layer].data[b * stride..(b + 1) * stride].to_vec();
+        (HostTensor::new(shape.clone(), k), HostTensor::new(shape, v))
     }
 
     /// Zero a slot (request eviction).

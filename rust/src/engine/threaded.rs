@@ -95,7 +95,9 @@ impl ThreadedRuntime {
             let coll_w = coll.clone();
             let handle = thread::Builder::new()
                 .name(format!("tp-rank-{rank}"))
-                .spawn(move || worker_main(rank, tp, batch, arch, spec, weights, coll_w, cmd_rx, rep_tx))
+                .spawn(move || {
+                    worker_main(rank, tp, batch, arch, spec, weights, coll_w, cmd_rx, rep_tx)
+                })
                 .map_err(|e| anyhow!("spawn rank {rank} worker: {e}"))?;
             cmds.push(cmd_tx);
             replies.push(rep_rx);

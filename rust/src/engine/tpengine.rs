@@ -202,7 +202,12 @@ impl TpEngine {
 
     /// Batched prefill: `tokens` is [B, bucket] (padded); `true_lens[b]` is
     /// each row's real prompt length. Returns last-position logits [B, V].
-    pub fn prefill(&mut self, tokens: &[i32], bucket: usize, true_lens: &[usize]) -> Result<HostTensor> {
+    pub fn prefill(
+        &mut self,
+        tokens: &[i32],
+        bucket: usize,
+        true_lens: &[usize],
+    ) -> Result<HostTensor> {
         let b = self.batch;
         if tokens.len() != b * bucket || true_lens.len() != b {
             bail!("prefill shapes: {} tokens, {} lens", tokens.len(), true_lens.len());
@@ -218,7 +223,13 @@ impl TpEngine {
 
     /// Single-slot prefill into `slot` (continuous batching): `tokens` is
     /// [1, bucket]. Returns last-position logits [V].
-    pub fn prefill_slot(&mut self, slot: usize, tokens: &[i32], bucket: usize, true_len: usize) -> Result<Vec<f32>> {
+    pub fn prefill_slot(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        bucket: usize,
+        true_len: usize,
+    ) -> Result<Vec<f32>> {
         if slot >= self.batch {
             bail!("slot {slot} out of range");
         }
@@ -428,7 +439,9 @@ impl TpEngine {
                 let mut partials = Vec::with_capacity(tp);
                 for t in 0..tp {
                     let p = match kind {
-                        BlockSel::Attn => self.ranks[t].attn(&self.exec, i, &rs[t], phase, lens, slot)?,
+                        BlockSel::Attn => {
+                            self.ranks[t].attn(&self.exec, i, &rs[t], phase, lens, slot)?
+                        }
                         BlockSel::Mlp => self.ranks[t].mlp(&self.exec, i, &rs[t])?,
                     };
                     partials.push(p);
@@ -462,7 +475,10 @@ impl TpEngine {
             // final resync (mean) so the head sees one residual
             let msgs: Vec<HostTensor> = rs
                 .iter()
-                .map(|r| HostTensor::new(r.shape.clone(), r.data.iter().map(|v| v / tp as f32).collect()))
+                .map(|r| {
+                    let scaled = r.data.iter().map(|v| v / tp as f32).collect();
+                    HostTensor::new(r.shape.clone(), scaled)
+                })
                 .collect();
             let h = self.comm.allreduce(msgs)?;
             let (x, exposed) = h.wait();

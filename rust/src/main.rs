@@ -52,8 +52,16 @@ fn engine_args(program: &str, about: &str) -> Args {
         .opt("batch", Some("2"), "batch slots")
         .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local")
         .opt("runtime", Some("threaded"), "rank runtime: threaded|sequential (oracle)")
-        .opt("backend", Some("native"), "execution backend: native|xla (xla: --features xla + make artifacts)")
-        .opt("seed", Some("42"), "weight seed (tiny prefers shipped test weights when artifacts exist)")
+        .opt(
+            "backend",
+            Some("native"),
+            "execution backend: native|xla (xla: --features xla + make artifacts)",
+        )
+        .opt(
+            "seed",
+            Some("42"),
+            "weight seed (tiny prefers shipped test weights when artifacts exist)",
+        )
 }
 
 fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
@@ -89,11 +97,24 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
     let args = engine_args("ladder-infer generate", "one-shot batched generation")
         .opt("prompt", Some("hello world"), "prompt text (repeated per slot)")
         .opt("gen", Some("16"), "tokens to generate")
+        .opt("temperature", Some("0"), "sampling temperature (0 = greedy)")
+        .opt("top-k", Some("40"), "top-k cutoff when sampling")
+        .opt("sample-seed", Some("7"), "sampling RNG seed")
         .parse(argv)?;
     let (mut engine, tok) = build_engine(&args)?;
     let prompt = tok.encode(&args.get("prompt")?);
     let prompts = vec![prompt; engine.batch];
-    let report = generate::generate(&mut engine, &prompts, args.get_usize("gen")?, &Sampler::Greedy)?;
+    let temperature = args.get_f64("temperature")?;
+    let sampler = if temperature > 0.0 {
+        Sampler::TopK {
+            k: args.get_usize("top-k")?,
+            temperature,
+            seed: args.get_usize("sample-seed")? as u64,
+        }
+    } else {
+        Sampler::Greedy
+    };
+    let report = generate::generate(&mut engine, &prompts, args.get_usize("gen")?, &sampler)?;
     for (i, t) in report.tokens.iter().enumerate() {
         println!("slot {i}: {:?}", tok.decode(t));
     }
@@ -110,17 +131,25 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
-    let args = engine_args("ladder-infer serve", "line-JSON TCP serving API")
+    let args = engine_args("ladder-infer serve", "line-JSON TCP serving API (protocol v2)")
         .opt("port", Some("8771"), "listen port (0 = ephemeral)")
         .opt("max-requests", Some("0"), "stop after N completions (0 = forever)")
+        .opt("decode-burst", Some("1"), "decode steps per scheduler iteration")
+        .opt("kv-budget-mb", Some("0"), "KV admission budget in MiB (0 = slots only)")
         .parse(argv)?;
     let (engine, tok) = build_engine(&args)?;
     let backend = engine.backend_name();
-    let mut batcher = Batcher::new(engine, BatcherConfig::default());
+    let config = BatcherConfig {
+        decode_burst: args.get_usize("decode-burst")?,
+        kv_budget_bytes: args.get_usize("kv-budget-mb")? * (1 << 20),
+    };
+    let mut batcher = Batcher::with_tokenizer(engine, config, tok.clone());
     let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
     let (jobs, port) = api::spawn_listener(&addr, tok)?;
     println!(
-        "serving {} [{}] tp={} runtime={} backend={backend} on 127.0.0.1:{port} — protocol: one JSON per line",
+        "serving {} [{}] tp={} runtime={} backend={backend} on 127.0.0.1:{port} — \
+         line-JSON protocol v2 (docs/API.md): set \"stream\":true for per-token \
+         frames, {{\"cancel\":id}} to abort",
         args.get("model")?,
         args.get("arch")?,
         args.get_usize("tp")?,
@@ -168,7 +197,13 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let exec = Exec::open("parity", BackendKind::parse(&args.get("backend")?)?)?;
     let arches: Vec<String> = args.get("arches")?.split(',').map(str::to_string).collect();
     let refs: Vec<&str> = arches.iter().map(String::as_str).collect();
-    let rows = parity::pretrain_parity(&exec, &refs, args.get_usize("steps")?, args.get_f64("lr")? as f32, 8)?;
+    let rows = parity::pretrain_parity(
+        &exec,
+        &refs,
+        args.get_usize("steps")?,
+        args.get_f64("lr")? as f32,
+        8,
+    )?;
     parity::parity_table("pretraining parity", &rows).print();
     Ok(())
 }

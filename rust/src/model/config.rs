@@ -163,17 +163,32 @@ pub struct PaperModel {
     pub vocab: usize,
 }
 
+/// Shorthand for the table below: (name, B params, hidden, layers, heads,
+/// kv_heads, ffn, vocab).
+const fn pm(
+    name: &'static str,
+    params_b: f64,
+    hidden: usize,
+    layers: usize,
+    heads: usize,
+    kv_heads: usize,
+    ffn: usize,
+    vocab: usize,
+) -> PaperModel {
+    PaperModel { name, params_b, hidden, layers, heads, kv_heads, ffn, vocab }
+}
+
 /// The size sweep of paper Table 1. 1B/3B use the paper's trained configs
 /// (Llama-3.2-like), 8B..405B are the Llama-3.1 family, 176B is
 /// Bloom/Falcon-class, 34B is CodeLlama-class.
 pub const PAPER_MODELS: &[PaperModel] = &[
-    PaperModel { name: "1B", params_b: 1.2, hidden: 2048, layers: 16, heads: 32, kv_heads: 8, ffn: 8192, vocab: 128256 },
-    PaperModel { name: "3B", params_b: 3.2, hidden: 3072, layers: 28, heads: 24, kv_heads: 8, ffn: 8192, vocab: 128256 },
-    PaperModel { name: "8B", params_b: 8.0, hidden: 4096, layers: 32, heads: 32, kv_heads: 8, ffn: 14336, vocab: 128256 },
-    PaperModel { name: "34B", params_b: 34.0, hidden: 8192, layers: 48, heads: 64, kv_heads: 8, ffn: 22016, vocab: 32000 },
-    PaperModel { name: "70B", params_b: 70.0, hidden: 8192, layers: 80, heads: 64, kv_heads: 8, ffn: 28672, vocab: 128256 },
-    PaperModel { name: "176B", params_b: 176.0, hidden: 14336, layers: 70, heads: 112, kv_heads: 8, ffn: 57344, vocab: 250880 },
-    PaperModel { name: "405B", params_b: 405.0, hidden: 16384, layers: 126, heads: 128, kv_heads: 8, ffn: 53248, vocab: 128256 },
+    pm("1B", 1.2, 2048, 16, 32, 8, 8192, 128256),
+    pm("3B", 3.2, 3072, 28, 24, 8, 8192, 128256),
+    pm("8B", 8.0, 4096, 32, 32, 8, 14336, 128256),
+    pm("34B", 34.0, 8192, 48, 64, 8, 22016, 32000),
+    pm("70B", 70.0, 8192, 80, 64, 8, 28672, 128256),
+    pm("176B", 176.0, 14336, 70, 112, 8, 57344, 250880),
+    pm("405B", 405.0, 16384, 126, 128, 8, 53248, 128256),
 ];
 
 impl PaperModel {

@@ -85,7 +85,11 @@ pub struct RankWeights {
 
 impl WeightStore {
     /// Load from a flat f32 file using the manifest's packing table.
-    pub fn from_flat_file(path: &std::path::Path, packing: &Json, layers: usize) -> Result<WeightStore> {
+    pub fn from_flat_file(
+        path: &std::path::Path,
+        packing: &Json,
+        layers: usize,
+    ) -> Result<WeightStore> {
         let bytes = std::fs::read(path).map_err(|e| anyhow!("read {path:?}: {e}"))?;
         if bytes.len() % 4 != 0 {
             bail!("{path:?}: not a f32 file ({} bytes)", bytes.len());
@@ -129,11 +133,13 @@ impl WeightStore {
             tensors.insert(p("wq"), HostTensor::new(vec![h, qd], rng.normal_vec(h * qd, std)));
             tensors.insert(p("wk"), HostTensor::new(vec![h, kvd], rng.normal_vec(h * kvd, std)));
             tensors.insert(p("wv"), HostTensor::new(vec![h, kvd], rng.normal_vec(h * kvd, std)));
-            tensors.insert(p("wo"), HostTensor::new(vec![qd, h], rng.normal_vec(qd * h, std * 0.3)));
+            let wo = HostTensor::new(vec![qd, h], rng.normal_vec(qd * h, std * 0.3));
+            tensors.insert(p("wo"), wo);
             tensors.insert(p("mlp_norm"), HostTensor::new(vec![h], vec![1.0; h]));
             tensors.insert(p("wg"), HostTensor::new(vec![h, f], rng.normal_vec(h * f, std)));
             tensors.insert(p("wu"), HostTensor::new(vec![h, f], rng.normal_vec(h * f, std)));
-            tensors.insert(p("wd"), HostTensor::new(vec![f, h], rng.normal_vec(f * h, (f as f32).powf(-0.5) * 0.3)));
+            let wd_std = (f as f32).powf(-0.5) * 0.3;
+            tensors.insert(p("wd"), HostTensor::new(vec![f, h], rng.normal_vec(f * h, wd_std)));
         }
         tensors.insert("final_norm".into(), HostTensor::new(vec![h], vec![1.0; h]));
         tensors.insert("lm".into(), HostTensor::new(vec![h, v], rng.normal_vec(h * v, std)));

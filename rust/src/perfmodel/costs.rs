@@ -37,7 +37,12 @@ pub struct CostModel {
 }
 
 impl CostModel {
-    pub fn new(model: PaperModel, gpu: GpuSpec, tp: usize, interconnect: Interconnect) -> CostModel {
+    pub fn new(
+        model: PaperModel,
+        gpu: GpuSpec,
+        tp: usize,
+        interconnect: Interconnect,
+    ) -> CostModel {
         CostModel { model, gpu, tp, interconnect, cross_node: None }
     }
 
@@ -76,8 +81,9 @@ impl CostModel {
         let f = m.ffn as f64;
 
         // projections + attention scores/values (causal halves the matrix)
-        let attn_flops =
-            2.0 * b * s * h * (qd + 2.0 * kvd) / t + 2.0 * b * s * qd / t * h + 2.0 * heads_l * b * s * s * hd;
+        let attn_flops = 2.0 * b * s * h * (qd + 2.0 * kvd) / t
+            + 2.0 * b * s * qd / t * h
+            + 2.0 * heads_l * b * s * s * hd;
         let attn_bytes = (h * (qd + 2.0 * kvd) + qd * h) / t * ELEM_BYTES;
         let mlp_flops = 6.0 * b * s * h * f / t;
         let mlp_bytes = 3.0 * h * f / t * ELEM_BYTES;

@@ -174,7 +174,11 @@ pub fn fig4() -> Table {
 /// paper's claim: ladder dominates the frontier).
 pub fn fig4_pareto_counts() -> Vec<(String, usize)> {
     let t = fig4();
-    let mut counts = vec![("standard".to_string(), 0), ("parallel".to_string(), 0), ("ladder".to_string(), 0)];
+    let mut counts = vec![
+        ("standard".to_string(), 0),
+        ("parallel".to_string(), 0),
+        ("ladder".to_string(), 0),
+    ];
     for row in table_rows(&t) {
         for (name, c) in counts.iter_mut() {
             if row.starts_with(name.as_str()) {

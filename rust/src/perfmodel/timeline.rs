@@ -36,7 +36,12 @@ pub struct TraceEvent {
 }
 
 /// Simulate one forward pass of `layers` transformer layers.
-pub fn simulate_forward(arch: Arch, layers: usize, mt: &ModuleTimes, with_trace: bool) -> TimelineResult {
+pub fn simulate_forward(
+    arch: Arch,
+    layers: usize,
+    mt: &ModuleTimes,
+    with_trace: bool,
+) -> TimelineResult {
     let mut sim = Sim::new(with_trace);
     match arch {
         Arch::Standard => {

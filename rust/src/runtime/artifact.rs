@@ -84,7 +84,10 @@ impl ArtifactDir {
                 .iter()
                 .map(|t| {
                     Ok(TensorSpec {
-                        name: t.opt("name").and_then(|n| n.as_str().ok().map(String::from)).unwrap_or_default(),
+                        name: t
+                            .opt("name")
+                            .and_then(|n| n.as_str().ok().map(String::from))
+                            .unwrap_or_default(),
                         shape: t.get("shape")?.usize_vec()?,
                         dtype: t.get("dtype")?.as_str()?.to_string(),
                     })

@@ -179,7 +179,10 @@ impl ServingParams {
     pub fn native_default(cfg: &LlamaConfig) -> ServingParams {
         let tps = (1..=cfg.kv_heads)
             .filter(|t| {
-                cfg.heads % t == 0 && cfg.kv_heads % t == 0 && cfg.ffn % t == 0 && cfg.vocab % t == 0
+                cfg.heads % t == 0
+                    && cfg.kv_heads % t == 0
+                    && cfg.ffn % t == 0
+                    && cfg.vocab % t == 0
             })
             .collect();
         let batches = (1..=16).collect();

@@ -308,7 +308,8 @@ impl NativeBackend {
         }
 
         // output projection back to the residual width
-        let mut partial = HostTensor::new(x.shape.clone(), matmul(&attn_out, rows, hl * d, &wo.data, h));
+        let mut partial =
+            HostTensor::new(x.shape.clone(), matmul(&attn_out, rows, hl * d, &wo.data, h));
 
         if fused {
             let wg = f32_arg(module, args, 6)?;

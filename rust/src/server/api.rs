@@ -1,31 +1,55 @@
-//! Line-JSON TCP API.
+//! Line-JSON TCP API — wire protocol v2 (see `docs/API.md`).
 //!
-//! Protocol: one JSON object per line.
+//! One JSON object per line, both directions.
 //!
-//! request:  {"id": 1, "prompt": "text", "max_new_tokens": 32}
-//! response: {"id": 1, "text": "...", "tokens": [...], "queued_ms": ..,
-//!            "ttft_ms": .., "e2e_ms": ..}
+//! Non-streaming request (v1-compatible, the default):
+//!   -> {"prompt": "text", "max_new_tokens": 32}
+//!   <- {"id": 1, "text": "...", "tokens": [...], "queued_ms": ..,
+//!       "ttft_ms": .., "e2e_ms": ..}
+//!
+//! Streaming request (`"stream": true`) produces typed event frames:
+//!   <- {"event":"admitted","id":1,"queued_ms":..}
+//!   <- {"event":"token","id":1,"index":0,"token":42,"text_delta":"*"}
+//!   <- ...
+//!   <- {"event":"done","id":1,"finish_reason":"length","text":"...",
+//!       "tokens":[...],"queued_ms":..,"ttft_ms":..,"itl_ms_p50":..,
+//!       "e2e_ms":..}
+//!
+//! Sampling is per-request (`temperature`, `top_k`, `seed`), decoding stops
+//! on `stop` strings or the `eos` id, and `{"cancel": <id>}` aborts an
+//! in-flight request (its stream ends with `finish_reason:"cancelled"`).
 //!
 //! The acceptor and connection readers run on their own threads; the engine
 //! loop (PJRT is not Send) stays on the caller's thread and is driven by
-//! [`serve_forever`]. Responses are routed back over per-request channels.
+//! [`serve_forever`], which routes [`GenerationEvent`]s back over
+//! per-request channels. A per-request forwarder thread renders events into
+//! frames; writes share one per-connection mutex so frames stay
+//! line-atomic.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use super::batcher::Batcher;
-use super::request::{Request, RequestResult};
+use super::request::{GenerationEvent, Request, RequestResult};
+use crate::engine::Sampler;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{parse, Json};
 
-/// A request paired with its response channel.
-pub struct ApiJob {
-    pub request: Request,
-    pub respond: Sender<RequestResult>,
+/// How long a request may go without producing an event before the wire
+/// layer gives up on it (the dropped channel then cancels it engine-side).
+const EVENT_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// What the socket side hands the engine loop.
+pub enum ApiJob {
+    /// A new request plus the sink its events must be routed to.
+    Submit { request: Request, respond: Sender<GenerationEvent> },
+    /// Abort an in-flight or queued request.
+    Cancel { id: u64 },
 }
 
 /// Spawn the TCP acceptor; returns the job channel the engine loop drains.
@@ -33,6 +57,7 @@ pub fn spawn_listener(addr: &str, tokenizer: Tokenizer) -> Result<(Receiver<ApiJ
     let listener = TcpListener::bind(addr)?;
     let port = listener.local_addr()?.port();
     let (tx, rx) = channel::<ApiJob>();
+    let tokenizer = Arc::new(tokenizer);
     std::thread::spawn(move || {
         let mut next_id: u64 = 1;
         for stream in listener.incoming() {
@@ -49,8 +74,23 @@ pub fn spawn_listener(addr: &str, tokenizer: Tokenizer) -> Result<(Receiver<ApiJ
     Ok((rx, port))
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<ApiJob>, tok: Tokenizer, base_id: u64) -> Result<()> {
-    let mut writer = stream.try_clone()?;
+/// Serialize one reply line under the connection's write lock. Returns
+/// false when the client is gone.
+fn write_line(writer: &Arc<Mutex<TcpStream>>, json: &Json) -> bool {
+    let mut w = match writer.lock() {
+        Ok(w) => w,
+        Err(_) => return false,
+    };
+    w.write_all(json.to_string().as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<ApiJob>,
+    tok: Arc<Tokenizer>,
+    base_id: u64,
+) -> Result<()> {
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
     let mut local_id = 0u64;
     for line in reader.lines() {
@@ -58,38 +98,153 @@ fn handle_conn(stream: TcpStream, tx: Sender<ApiJob>, tok: Tokenizer, base_id: u
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse(&line) {
-            Ok(req_json) => {
-                local_id += 1;
-                match build_request(&req_json, &tok, base_id + local_id) {
-                    Ok(request) => {
-                        let (rtx, rrx) = channel();
-                        let id = request.id;
-                        tx.send(ApiJob { request, respond: rtx })
-                            .map_err(|_| anyhow::anyhow!("engine loop gone"))?;
-                        match rrx.recv_timeout(Duration::from_secs(300)) {
-                            Ok(result) => render_result(&result, &tok),
-                            Err(_) => Json::obj().set("id", id).set("error", "timeout"),
-                        }
+        let msg = match parse(&line) {
+            Ok(msg) => msg,
+            Err(e) => {
+                write_line(&writer, &Json::obj().set("error", format!("bad json: {e}")));
+                continue;
+            }
+        };
+        if let Some(cancel) = msg.opt("cancel") {
+            match cancel.as_usize() {
+                Ok(id) => {
+                    if tx.send(ApiJob::Cancel { id: id as u64 }).is_err() {
+                        write_line(&writer, &Json::obj().set("error", "engine loop gone"));
+                        return Ok(());
                     }
-                    Err(e) => Json::obj().set("error", e.to_string()),
+                }
+                Err(e) => {
+                    write_line(&writer, &Json::obj().set("error", format!("bad cancel: {e}")));
                 }
             }
-            Err(e) => Json::obj().set("error", format!("bad json: {e}")),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+            continue;
+        }
+        local_id += 1;
+        let id = base_id + local_id;
+        match build_request(&msg, &tok, id) {
+            Ok((request, stream_mode)) => {
+                let (etx, erx) = channel();
+                if tx.send(ApiJob::Submit { request, respond: etx }).is_err() {
+                    write_line(&writer, &Json::obj().set("error", "engine loop gone"));
+                    return Ok(());
+                }
+                let w = writer.clone();
+                let t = tok.clone();
+                std::thread::spawn(move || forward_events(erx, w, t, id, stream_mode));
+            }
+            Err(e) => {
+                write_line(&writer, &Json::obj().set("error", e.to_string()));
+            }
+        }
     }
     Ok(())
 }
 
-fn build_request(j: &Json, tok: &Tokenizer, id: u64) -> Result<Request> {
-    let prompt_text = j.get("prompt")?.as_str()?;
-    let prompt = tok.encode(prompt_text);
-    let max_new = j.opt("max_new_tokens").map_or(Ok(16), |v| v.as_usize())?;
-    Ok(Request::new(id, prompt, max_new))
+/// Render one request's event stream onto the shared connection writer.
+/// Streaming mode emits a frame per event; non-streaming mode stays silent
+/// until `Finished` and then replies with the v1 single-object shape.
+fn forward_events(
+    erx: Receiver<GenerationEvent>,
+    writer: Arc<Mutex<TcpStream>>,
+    tok: Arc<Tokenizer>,
+    id: u64,
+    stream_mode: bool,
+) {
+    loop {
+        match erx.recv_timeout(EVENT_TIMEOUT) {
+            Ok(GenerationEvent::Admitted { id, queued_secs }) => {
+                if stream_mode {
+                    let frame = Json::obj()
+                        .set("event", "admitted")
+                        .set("id", id)
+                        .set("queued_ms", queued_secs * 1e3);
+                    if !write_line(&writer, &frame) {
+                        return; // client gone: dropping erx cancels engine-side
+                    }
+                }
+            }
+            Ok(GenerationEvent::Token { id, index, token, text_delta }) => {
+                if stream_mode {
+                    let frame = Json::obj()
+                        .set("event", "token")
+                        .set("id", id)
+                        .set("index", index)
+                        .set("token", token)
+                        .set("text_delta", text_delta);
+                    if !write_line(&writer, &frame) {
+                        return;
+                    }
+                }
+            }
+            Ok(GenerationEvent::Finished { result }) => {
+                let frame = if stream_mode {
+                    render_done(&result, &tok)
+                } else {
+                    render_result(&result, &tok)
+                };
+                write_line(&writer, &frame);
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // tell the client, then drop erx so the batcher reclaims
+                // the slot instead of decoding tokens nobody reads
+                let frame = if stream_mode {
+                    // typed terminal frame so event-dispatching clients
+                    // always see a `done`
+                    Json::obj()
+                        .set("event", "done")
+                        .set("id", id)
+                        .set("finish_reason", "error")
+                        .set("error", "timeout")
+                } else {
+                    Json::obj().set("id", id).set("error", "timeout")
+                };
+                write_line(&writer, &frame);
+                return;
+            }
+            Err(RecvTimeoutError::Disconnected) => return, // engine loop gone
+        }
+    }
 }
 
+fn build_request(j: &Json, tok: &Tokenizer, id: u64) -> Result<(Request, bool)> {
+    let prompt_text = j.get("prompt")?.as_str()?;
+    let prompt = tok.encode(prompt_text);
+    if prompt.is_empty() {
+        anyhow::bail!("empty prompt");
+    }
+    let max_new = j.opt("max_new_tokens").map_or(Ok(16), |v| v.as_usize())?;
+    let stream = j.opt("stream").map_or(Ok(false), |v| v.as_bool())?;
+    let temperature = j.opt("temperature").map_or(Ok(0.0), |v| v.as_f64())?;
+    let top_k = j.opt("top_k").map_or(Ok(0), |v| v.as_usize())?;
+    let seed = j.opt("seed").map_or(Ok(id), |v| v.as_usize().map(|s| s as u64))?;
+    let sampler = if temperature > 0.0 {
+        Sampler::TopK { k: if top_k == 0 { 50 } else { top_k }, temperature, seed }
+    } else {
+        Sampler::Greedy
+    };
+    let stop: Vec<Vec<i32>> = match j.opt("stop") {
+        Some(v) => v
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(tok.encode(s.as_str()?)))
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    let eos = match j.opt("eos") {
+        Some(Json::Null) => None,
+        Some(v) => Some(v.as_usize()? as i32),
+        None => tok.eos_id(),
+    };
+    let request = Request::new(id, prompt, max_new)
+        .with_sampler(sampler)
+        .with_stop(stop)
+        .with_eos(eos);
+    Ok((request, stream))
+}
+
+/// v1-compatible single-object reply (non-streaming requests): exactly the
+/// key set protocol v1 used — byte-compatible for existing clients.
 fn render_result(r: &RequestResult, tok: &Tokenizer) -> Json {
     Json::obj()
         .set("id", r.id)
@@ -103,23 +258,50 @@ fn render_result(r: &RequestResult, tok: &Tokenizer) -> Json {
         .set("e2e_ms", r.e2e_secs * 1e3)
 }
 
-/// Engine-thread serve loop: drain jobs into the batcher, step it, route
-/// completions back. Runs until `max_requests` completions (0 = forever).
+/// Terminal frame of a streamed request.
+fn render_done(r: &RequestResult, tok: &Tokenizer) -> Json {
+    Json::obj()
+        .set("event", "done")
+        .set("id", r.id)
+        .set("finish_reason", r.finish_reason.as_str())
+        .set("text", tok.decode(&r.tokens))
+        .set(
+            "tokens",
+            Json::Arr(r.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        )
+        .set("queued_ms", r.queued_secs * 1e3)
+        .set("ttft_ms", r.ttft_secs * 1e3)
+        .set("itl_ms_p50", r.itl_p50_secs * 1e3)
+        .set("e2e_ms", r.e2e_secs * 1e3)
+}
+
+/// Feed one socket-side job into the batcher; returns how many requests
+/// reached a terminal state doing so.
+fn apply_job(batcher: &mut Batcher, job: ApiJob) -> usize {
+    match job {
+        ApiJob::Submit { request, respond } => {
+            batcher.submit_streaming(request, respond);
+            0
+        }
+        ApiJob::Cancel { id } => usize::from(batcher.cancel(id).is_some()),
+    }
+}
+
+/// Engine-thread serve loop: an event router. Drains socket jobs into the
+/// batcher, steps it, and counts terminal events; the batcher itself routes
+/// every event to its request's sink as it happens. Runs until
+/// `max_requests` terminal events (0 = forever).
 pub fn serve_forever(
     batcher: &mut Batcher,
     jobs: Receiver<ApiJob>,
     max_requests: usize,
 ) -> Result<()> {
-    let mut pending: Vec<(u64, Sender<RequestResult>)> = Vec::new();
     let mut served = 0usize;
     loop {
         // admit everything currently queued on the socket side
         loop {
             match jobs.try_recv() {
-                Ok(job) => {
-                    pending.push((job.request.id, job.respond));
-                    batcher.submit(job.request);
-                }
+                Ok(job) => served += apply_job(batcher, job),
                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => return Ok(()),
             }
@@ -127,23 +309,18 @@ pub fn serve_forever(
         if batcher.pending() == 0 {
             // idle: block briefly for the next job
             match jobs.recv_timeout(Duration::from_millis(50)) {
-                Ok(job) => {
-                    pending.push((job.request.id, job.respond));
-                    batcher.submit(job.request);
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+                Ok(job) => served += apply_job(batcher, job),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
             }
         }
-        for result in batcher.step()? {
-            if let Some(pos) = pending.iter().position(|(id, _)| *id == result.id) {
-                let (_, tx) = pending.swap_remove(pos);
-                let _ = tx.send(result);
+        for ev in batcher.step()? {
+            if matches!(ev, GenerationEvent::Finished { .. }) {
                 served += 1;
-                if max_requests > 0 && served >= max_requests {
-                    return Ok(());
-                }
             }
+        }
+        if max_requests > 0 && served >= max_requests {
+            return Ok(());
         }
     }
 }

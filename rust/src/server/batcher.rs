@@ -6,15 +6,27 @@
 //! per iteration. Prefill-priority policy (admit whenever a slot is free)
 //! matches the paper's gpt-fast-derived serving setup; admission is gated
 //! by the KV budget.
+//!
+//! The batcher's output is a typed **event stream**: [`Batcher::step`]
+//! emits [`GenerationEvent`]s (`Admitted` → `Token`* → `Finished`) and
+//! routes each request's events to its per-request sink when one was
+//! registered via [`Batcher::submit_streaming`]. A sink whose receiver has
+//! been dropped (client timeout / disconnect) cancels the request instead
+//! of decoding tokens nobody will read. [`Batcher::cancel`] aborts a
+//! request mid-flight, freeing its slot and KV immediately.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::metrics::ServerMetrics;
-use super::request::{Request, RequestResult};
+use super::request::{itl_p50, FinishReason, GenerationEvent, Request, RequestResult};
 use crate::engine::TpEngine;
+use crate::model::HostTensor;
+use crate::tokenizer::{DecodeStream, Tokenizer};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -37,8 +49,17 @@ struct SlotState {
     generated: Vec<i32>,
     next_token: i32,
     prefill_done: Instant,
+    /// When the previous token was sampled (inter-token latency anchor).
+    last_token_at: Instant,
     /// Queue wait measured at admission, carried into the result.
     queued_secs: f64,
+    /// Inter-token gaps observed so far (seconds).
+    itl: Vec<f64>,
+    /// Private sampling stream, seeded from the request — never shared, so
+    /// sampled output is independent of batch interleaving.
+    rng: Rng,
+    /// Incremental detokenizer feeding `Token::text_delta`.
+    decoder: Option<DecodeStream>,
 }
 
 /// The continuous batcher. Owns the engine (whose ranks run on either the
@@ -50,7 +71,10 @@ pub struct Batcher {
     pub metrics: ServerMetrics,
     queue: VecDeque<Request>,
     slots: Vec<Option<SlotState>>,
-    rng: Rng,
+    /// Per-request event sinks (streaming submissions only).
+    sinks: HashMap<u64, Sender<GenerationEvent>>,
+    /// Tokenizer for `text_delta`s; without one, deltas are empty strings.
+    tokenizer: Option<Arc<Tokenizer>>,
 }
 
 impl Batcher {
@@ -62,8 +86,19 @@ impl Batcher {
             metrics: ServerMetrics::default(),
             queue: VecDeque::new(),
             slots,
-            rng: Rng::new(0xbac4),
+            sinks: HashMap::new(),
+            tokenizer: None,
         }
+    }
+
+    /// A batcher that also detokenizes incrementally: `Token` events carry
+    /// the exact text each token appends (a trailing incomplete UTF-8
+    /// sequence is held back; the terminal result's full decode renders it
+    /// as U+FFFD).
+    pub fn with_tokenizer(engine: TpEngine, config: BatcherConfig, tok: Tokenizer) -> Batcher {
+        let mut b = Batcher::new(engine, config);
+        b.tokenizer = Some(Arc::new(tok));
+        b
     }
 
     pub fn submit(&mut self, request: Request) {
@@ -71,8 +106,20 @@ impl Batcher {
         self.queue.push_back(request);
     }
 
+    /// Submit with a per-request event sink. Every event for this request
+    /// is sent to `sink` as it happens; if the receiver is dropped the
+    /// request is cancelled at the next event boundary.
+    pub fn submit_streaming(&mut self, request: Request, sink: Sender<GenerationEvent>) {
+        self.sinks.insert(request.id, sink);
+        self.submit(request);
+    }
+
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.slots.iter().filter(|s| s.is_some()).count()
+        self.queue.len() + self.live()
+    }
+
+    fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
     }
 
     /// Number of requests the KV budget admits simultaneously.
@@ -84,47 +131,106 @@ impl Batcher {
             .clamp(1, self.engine.batch)
     }
 
+    /// Send an event to its request's sink, if registered. Returns false
+    /// when the receiver is gone — the caller must cancel the request.
+    fn route(&mut self, ev: &GenerationEvent) -> bool {
+        let id = ev.id();
+        if let Some(sink) = self.sinks.get(&id) {
+            if sink.send(ev.clone()).is_err() {
+                self.sinks.remove(&id);
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Abort an in-flight or queued request. The slot and its KV are freed
+    /// immediately; the terminal `Finished` event (reason `Cancelled`,
+    /// partial tokens) is routed to the sink and returned. `None` if the id
+    /// is unknown (already finished, or never submitted).
+    pub fn cancel(&mut self, id: u64) -> Option<GenerationEvent> {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            let request = self.queue.remove(pos).expect("position came from iter");
+            let queued = request.arrived.elapsed().as_secs_f64();
+            return Some(self.finish_unstarted(request, queued, FinishReason::Cancelled));
+        }
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|st| st.request.id == id))?;
+        Some(self.finish_slot(slot, FinishReason::Cancelled))
+    }
+
     /// One scheduler iteration: admit + prefill waiting requests into free
     /// slots, then run `decode_burst` decode steps for live slots. Returns
-    /// results completed this iteration.
-    pub fn step(&mut self) -> Result<Vec<RequestResult>> {
-        let mut done = Vec::new();
+    /// every event this iteration produced (sinks receive them too).
+    pub fn step(&mut self) -> Result<Vec<GenerationEvent>> {
+        let mut events = Vec::new();
 
         // -- admission (prefill-priority, FIFO) --
         let limit = self.kv_slot_limit();
         for slot in 0..self.slots.len() {
-            let live = self.slots.iter().filter(|s| s.is_some()).count();
-            if live >= limit {
-                break;
-            }
             if self.slots[slot].is_some() {
                 continue;
             }
-            let Some(request) = self.queue.pop_front() else { break };
-            let bucket = self.engine.pick_bucket(request.prompt.len())?;
+            if self.live() >= limit {
+                break;
+            }
+            // pop until a request that is servable and still has a client
+            let admitted = loop {
+                let Some(request) = self.queue.pop_front() else { break None };
+                let queued = request.arrived.elapsed().as_secs_f64();
+                if request.prompt.is_empty() {
+                    events.push(self.finish_unstarted(request, queued, FinishReason::Error));
+                    continue;
+                }
+                let bucket = match self.engine.pick_bucket(request.prompt.len()) {
+                    Ok(b) => b,
+                    Err(_) => {
+                        // unservable prompt: fail this request, not the loop
+                        let ev = self.finish_unstarted(request, queued, FinishReason::Error);
+                        events.push(ev);
+                        continue;
+                    }
+                };
+                let ev = GenerationEvent::Admitted { id: request.id, queued_secs: queued };
+                if !self.route(&ev) {
+                    // client vanished while queued: skip the prefill entirely
+                    let ev = self.finish_unstarted(request, queued, FinishReason::Cancelled);
+                    events.push(ev);
+                    continue;
+                }
+                events.push(ev);
+                break Some((request, queued, bucket));
+            };
+            let Some((request, queued, bucket)) = admitted else { break };
             let mut padded = vec![0i32; bucket];
             padded[..request.prompt.len()].copy_from_slice(&request.prompt);
-            let queued = request.arrived.elapsed().as_secs_f64();
             let logits = self
                 .engine
                 .prefill_slot(slot, &padded, bucket, request.prompt.len())?;
-            let logits_t =
-                crate::model::HostTensor::new(vec![1, logits.len()], logits);
-            let next = request.sampler.sample(&logits_t, &mut self.rng)[0];
+            let logits_t = HostTensor::new(vec![1, logits.len()], logits);
+            let mut rng = Rng::new(request.rng_seed());
+            let first = request.sampler.sample(&logits_t, &mut rng)[0];
             self.metrics.queued_secs.add(queued);
             self.metrics.prefills += 1;
+            let now = Instant::now();
             self.slots[slot] = Some(SlotState {
+                decoder: self.tokenizer.as_ref().map(|t| DecodeStream::new(t.clone())),
                 request,
-                generated: vec![next],
-                next_token: next,
-                prefill_done: Instant::now(),
+                generated: Vec::new(),
+                next_token: first,
+                prefill_done: now,
+                last_token_at: now,
                 queued_secs: queued,
+                itl: Vec::new(),
+                rng,
             });
+            self.push_token(slot, first, &mut events);
         }
 
         // -- decode burst --
-        let any_live = self.slots.iter().any(|s| s.is_some());
-        if any_live {
+        if self.live() > 0 {
             for _ in 0..self.config.decode_burst.max(1) {
                 // tokens for all slots (idle slots feed token 0, ignored)
                 let tokens: Vec<i32> = self
@@ -135,47 +241,126 @@ impl Batcher {
                 let logits = self.engine.decode(&tokens)?;
                 self.metrics.decode_steps += 1;
                 let v = logits.shape[1];
-                for (slot, state) in self.slots.iter_mut().enumerate() {
-                    let Some(st) = state else { continue };
-                    let row = crate::model::HostTensor::new(
-                        vec![1, v],
-                        logits.data[slot * v..(slot + 1) * v].to_vec(),
-                    );
-                    let tok = st.request.sampler.sample(&row, &mut self.rng)[0];
-                    st.generated.push(tok);
-                    st.next_token = tok;
-                    self.metrics.tokens_out += 1;
-                    let finished = st.generated.len() >= st.request.max_new_tokens
-                        || st.request.eos == Some(tok)
-                        || self.engine.lens[slot] as usize >= self.engine.cfg.max_seq - 1;
-                    if finished {
-                        let st = state.take().unwrap();
-                        let now = Instant::now();
-                        let result = RequestResult {
-                            id: st.request.id,
-                            tokens: st.generated,
-                            queued_secs: st.queued_secs,
-                            ttft_secs: (st.prefill_done - st.request.arrived).as_secs_f64(),
-                            e2e_secs: (now - st.request.arrived).as_secs_f64(),
-                        };
-                        self.metrics.record_completion(&result);
-                        self.engine.release_slot(slot);
-                        done.push(result);
-                    }
+                for slot in 0..self.slots.len() {
+                    let tok = {
+                        let Some(st) = self.slots[slot].as_mut() else { continue };
+                        let row = HostTensor::new(
+                            vec![1, v],
+                            logits.data[slot * v..(slot + 1) * v].to_vec(),
+                        );
+                        st.request.sampler.sample(&row, &mut st.rng)[0]
+                    };
+                    self.push_token(slot, tok, &mut events);
                 }
-                if self.slots.iter().all(|s| s.is_none()) {
+                if self.live() == 0 {
                     break;
                 }
             }
         }
-        Ok(done)
+        Ok(events)
+    }
+
+    /// Record one sampled token into `slot`: emit its `Token` event, then
+    /// finish the slot if a terminal condition (or a dead sink) is hit.
+    fn push_token(&mut self, slot: usize, tok: i32, events: &mut Vec<GenerationEvent>) {
+        let (id, index, text_delta, finish) = {
+            let st = self.slots[slot].as_mut().expect("push_token on empty slot");
+            let now = Instant::now();
+            if !st.generated.is_empty() {
+                let gap = (now - st.last_token_at).as_secs_f64();
+                st.itl.push(gap);
+                self.metrics.itl_secs.add(gap);
+            }
+            st.last_token_at = now;
+            st.generated.push(tok);
+            st.next_token = tok;
+            let text_delta = st.decoder.as_mut().map_or(String::new(), |d| d.push(tok));
+            let index = st.generated.len() - 1;
+            let finish = if st.request.eos == Some(tok) {
+                Some(FinishReason::Eos)
+            } else if st
+                .request
+                .stop
+                .iter()
+                .any(|s| !s.is_empty() && st.generated.ends_with(s))
+            {
+                Some(FinishReason::Stop)
+            } else if st.generated.len() >= st.request.max_new_tokens
+                || self.engine.lens[slot] as usize >= self.engine.cfg.max_seq - 1
+            {
+                Some(FinishReason::Length)
+            } else {
+                None
+            };
+            (st.request.id, index, text_delta, finish)
+        };
+        self.metrics.tokens_out += 1;
+        let ev = GenerationEvent::Token { id, index, token: tok, text_delta };
+        let client_alive = self.route(&ev);
+        events.push(ev);
+        if !client_alive {
+            // nobody is reading: free the slot instead of decoding on
+            events.push(self.finish_slot(slot, FinishReason::Cancelled));
+        } else if let Some(reason) = finish {
+            events.push(self.finish_slot(slot, reason));
+        }
+    }
+
+    /// Terminate a live slot: release its KV, record metrics, route and
+    /// return the `Finished` event.
+    fn finish_slot(&mut self, slot: usize, reason: FinishReason) -> GenerationEvent {
+        let st = self.slots[slot].take().expect("finish_slot on empty slot");
+        let now = Instant::now();
+        let result = RequestResult {
+            id: st.request.id,
+            itl_p50_secs: itl_p50(&st.itl),
+            tokens: st.generated,
+            finish_reason: reason,
+            queued_secs: st.queued_secs,
+            ttft_secs: (st.prefill_done - st.request.arrived).as_secs_f64(),
+            e2e_secs: (now - st.request.arrived).as_secs_f64(),
+        };
+        self.metrics.record_completion(&result);
+        self.engine.release_slot(slot);
+        let ev = GenerationEvent::Finished { result };
+        self.route(&ev);
+        self.sinks.remove(&ev.id());
+        ev
+    }
+
+    /// Terminate a request that never reached a slot (cancelled or
+    /// unservable while queued).
+    fn finish_unstarted(
+        &mut self,
+        request: Request,
+        queued: f64,
+        reason: FinishReason,
+    ) -> GenerationEvent {
+        let result = RequestResult {
+            id: request.id,
+            tokens: Vec::new(),
+            finish_reason: reason,
+            queued_secs: queued,
+            ttft_secs: 0.0,
+            itl_p50_secs: 0.0,
+            e2e_secs: request.arrived.elapsed().as_secs_f64(),
+        };
+        self.metrics.record_completion(&result);
+        let ev = GenerationEvent::Finished { result };
+        self.route(&ev);
+        self.sinks.remove(&ev.id());
+        ev
     }
 
     /// Drive until the queue and all slots drain; returns all results.
     pub fn run_to_completion(&mut self) -> Result<Vec<RequestResult>> {
         let mut out = Vec::new();
         while self.pending() > 0 {
-            out.extend(self.step()?);
+            for ev in self.step()? {
+                if let GenerationEvent::Finished { result } = ev {
+                    out.push(result);
+                }
+            }
         }
         Ok(out)
     }

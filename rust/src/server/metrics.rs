@@ -3,37 +3,51 @@
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
-use super::request::RequestResult;
+use super::request::{FinishReason, RequestResult};
 
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
     pub submitted: usize,
     pub completed: usize,
+    pub cancelled: usize,
     pub prefills: usize,
     pub decode_steps: usize,
     pub tokens_out: usize,
     pub queued_secs: Summary,
     pub ttft_secs: Summary,
+    /// Inter-token latency samples (one per decode-phase token) — the
+    /// per-token metric a TP-sharded server's users actually observe.
+    pub itl_secs: Summary,
     pub e2e_secs: Summary,
 }
 
 impl ServerMetrics {
     pub fn record_completion(&mut self, r: &RequestResult) {
         self.completed += 1;
-        self.ttft_secs.add(r.ttft_secs);
-        self.e2e_secs.add(r.e2e_secs);
+        if r.finish_reason == FinishReason::Cancelled {
+            self.cancelled += 1;
+        }
+        // requests torn down before their first token have no latency
+        // breakdown worth folding into the percentiles
+        if !r.tokens.is_empty() {
+            self.ttft_secs.add(r.ttft_secs);
+            self.e2e_secs.add(r.e2e_secs);
+        }
     }
 
     pub fn report(&self, wall_secs: f64) -> Json {
         Json::obj()
             .set("submitted", self.submitted)
             .set("completed", self.completed)
+            .set("cancelled", self.cancelled)
             .set("prefills", self.prefills)
             .set("decode_steps", self.decode_steps)
             .set("tokens_out", self.tokens_out)
             .set("throughput_tok_per_s", self.tokens_out as f64 / wall_secs.max(1e-9))
             .set("ttft_p50_ms", self.ttft_secs.p50() * 1e3)
             .set("ttft_p99_ms", self.ttft_secs.p99() * 1e3)
+            .set("itl_p50_ms", self.itl_secs.p50() * 1e3)
+            .set("itl_p95_ms", self.itl_secs.p95() * 1e3)
             .set("e2e_p50_ms", self.e2e_secs.p50() * 1e3)
             .set("e2e_p99_ms", self.e2e_secs.p99() * 1e3)
             .set("queue_p50_ms", self.queued_secs.p50() * 1e3)
@@ -44,19 +58,41 @@ impl ServerMetrics {
 mod tests {
     use super::*;
 
+    fn result(tokens: Vec<i32>, finish_reason: FinishReason) -> RequestResult {
+        RequestResult {
+            id: 1,
+            tokens,
+            finish_reason,
+            queued_secs: 0.0,
+            ttft_secs: 0.1,
+            itl_p50_secs: 0.02,
+            e2e_secs: 0.5,
+        }
+    }
+
     #[test]
     fn records_completions() {
         let mut m = ServerMetrics::default();
-        m.record_completion(&RequestResult {
-            id: 1,
-            tokens: vec![1, 2, 3],
-            queued_secs: 0.0,
-            ttft_secs: 0.1,
-            e2e_secs: 0.5,
-        });
+        m.record_completion(&result(vec![1, 2, 3], FinishReason::Length));
         assert_eq!(m.completed, 1);
+        assert_eq!(m.cancelled, 0);
         assert!((m.e2e_secs.p50() - 0.5).abs() < 1e-9);
         let rep = m.report(2.0);
         assert!(rep.get("ttft_p50_ms").unwrap().as_f64().unwrap() > 99.0);
+    }
+
+    #[test]
+    fn counts_cancellations_and_itl() {
+        let mut m = ServerMetrics::default();
+        m.record_completion(&result(vec![1, 2], FinishReason::Cancelled));
+        m.record_completion(&result(Vec::new(), FinishReason::Cancelled));
+        assert_eq!((m.completed, m.cancelled), (2, 2));
+        // unstarted cancel must not pollute the latency percentiles
+        assert_eq!(m.ttft_secs.count(), 1);
+        m.itl_secs.add(0.010);
+        m.itl_secs.add(0.030);
+        let rep = m.report(1.0);
+        assert!((rep.get("itl_p50_ms").unwrap().as_f64().unwrap() - 20.0).abs() < 1e-9);
+        assert_eq!(rep.get("cancelled").unwrap().as_usize().unwrap(), 2);
     }
 }

@@ -1,6 +1,12 @@
 //! Serving coordinator: request queue, continuous batcher, metrics and a
 //! line-JSON TCP API — the vLLM-router-shaped stack around the TP engine.
 //!
+//! The engine↔server boundary is a typed per-request **event stream**
+//! ([`GenerationEvent`]): the batcher emits `Admitted` / `Token` /
+//! `Finished` events into per-request sinks, the wire layer renders them as
+//! line-JSON frames (protocol v2, see `docs/API.md`), and cancellation
+//! propagates back through [`Batcher::cancel`].
+//!
 //! Threading: PJRT handles are not `Send`, so the engine loop owns its
 //! thread; the TCP acceptor and per-connection readers are separate threads
 //! that communicate through `std::sync::mpsc` channels of plain data.
@@ -12,4 +18,4 @@ pub mod request;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::ServerMetrics;
-pub use request::{Request, RequestResult};
+pub use request::{FinishReason, GenerationEvent, Request, RequestResult};

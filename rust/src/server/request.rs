@@ -1,8 +1,15 @@
-//! Request / response types for the serving stack.
+//! Request / response / event types for the serving stack.
+//!
+//! The engine↔server boundary is a typed **event stream**: every request
+//! produces `Admitted` → `Token`* → `Finished`, routed to its submitter
+//! through a per-request sink (see [`crate::server::Batcher`]). A terminal
+//! [`RequestResult`] still exists for batch-style callers, carried inside
+//! the `Finished` event.
 
 use std::time::Instant;
 
 use crate::engine::Sampler;
+use crate::util::stats::Summary;
 
 /// An inference request as admitted to the queue.
 #[derive(Debug)]
@@ -10,9 +17,13 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// Per-request sampling strategy (greedy / seeded top-k).
     pub sampler: Sampler,
     /// Stop decoding at this token id (e.g. tokenizer EOS), if any.
     pub eos: Option<i32>,
+    /// Stop token-sequences: generation finishes (reason `Stop`) as soon as
+    /// the generated tail matches any one of them.
+    pub stop: Vec<Vec<i32>>,
     pub arrived: Instant,
 }
 
@@ -24,7 +35,84 @@ impl Request {
             max_new_tokens,
             sampler: Sampler::Greedy,
             eos: None,
+            stop: Vec::new(),
             arrived: Instant::now(),
+        }
+    }
+
+    pub fn with_sampler(mut self, sampler: Sampler) -> Request {
+        self.sampler = sampler;
+        self
+    }
+
+    pub fn with_eos(mut self, eos: Option<i32>) -> Request {
+        self.eos = eos;
+        self
+    }
+
+    pub fn with_stop(mut self, stop: Vec<Vec<i32>>) -> Request {
+        self.stop = stop;
+        self
+    }
+
+    /// Seed of this request's private sampling RNG stream. Seeding from the
+    /// request — never from shared batcher state — makes sampled output
+    /// reproducible regardless of how requests interleave in the batch.
+    pub fn rng_seed(&self) -> u64 {
+        match self.sampler {
+            Sampler::TopK { seed, .. } => seed,
+            Sampler::Greedy => self.id,
+        }
+    }
+}
+
+/// Why a request stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens` (or the engine's KV capacity).
+    Length,
+    /// Sampled the request's EOS token.
+    Eos,
+    /// Generated tail matched one of the request's stop sequences.
+    Stop,
+    /// Cancelled mid-flight (explicit cancel, or the client went away).
+    Cancelled,
+    /// The request itself was unservable (e.g. prompt exceeds every bucket).
+    Error,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Eos => "eos",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Error => "error",
+        }
+    }
+}
+
+/// One step of a request's life, as emitted by `Batcher::step` and routed
+/// to the request's sink.
+#[derive(Debug, Clone)]
+pub enum GenerationEvent {
+    /// The request left the queue and its prefill ran.
+    Admitted { id: u64, queued_secs: f64 },
+    /// One generated token. `index` counts from 0 and is strictly monotone
+    /// per request; `text_delta` is the incremental detokenization (empty
+    /// when the batcher has no tokenizer or the token ends mid-character).
+    Token { id: u64, index: usize, token: i32, text_delta: String },
+    /// Terminal: carries the full result (every request gets exactly one).
+    Finished { result: RequestResult },
+}
+
+impl GenerationEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            GenerationEvent::Admitted { id, .. } => *id,
+            GenerationEvent::Token { id, .. } => *id,
+            GenerationEvent::Finished { result } => result.id,
         }
     }
 }
@@ -34,19 +122,80 @@ impl Request {
 pub struct RequestResult {
     pub id: u64,
     pub tokens: Vec<i32>,
+    pub finish_reason: FinishReason,
     /// Queue wait before prefill started.
     pub queued_secs: f64,
     /// Time to first token (arrival -> first logits sampled).
     pub ttft_secs: f64,
+    /// Median inter-token latency (0.0 with fewer than two tokens).
+    pub itl_p50_secs: f64,
     /// Total latency (arrival -> last token).
     pub e2e_secs: f64,
 }
 
 impl RequestResult {
+    /// Decode-phase throughput: tokens after the first over the decode wall
+    /// clock. Requests that never reached a second token have no decode
+    /// phase and report 0.0.
     pub fn decode_tok_per_sec(&self) -> f64 {
         if self.tokens.len() <= 1 {
             return 0.0;
         }
         (self.tokens.len() - 1) as f64 / (self.e2e_secs - self.ttft_secs).max(1e-12)
+    }
+}
+
+/// p50 of a request's inter-token gaps (helper shared by batcher + tests).
+pub(crate) fn itl_p50(itl: &[f64]) -> f64 {
+    if itl.is_empty() {
+        return 0.0;
+    }
+    let mut s = Summary::new();
+    for &x in itl {
+        s.add(x);
+    }
+    s.p50()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(tokens: Vec<i32>, ttft: f64, e2e: f64) -> RequestResult {
+        RequestResult {
+            id: 1,
+            tokens,
+            finish_reason: FinishReason::Length,
+            queued_secs: 0.0,
+            ttft_secs: ttft,
+            itl_p50_secs: 0.0,
+            e2e_secs: e2e,
+        }
+    }
+
+    #[test]
+    fn decode_tok_per_sec_short_outputs() {
+        // 0 or 1 token: no decode phase — must not divide by ~0 wall clock
+        assert_eq!(result(vec![], 0.0, 0.0).decode_tok_per_sec(), 0.0);
+        assert_eq!(result(vec![7], 0.1, 0.1).decode_tok_per_sec(), 0.0);
+        // 3 tokens over 1s of decode: 2 decode tokens / 1s
+        let r = result(vec![7, 8, 9], 0.5, 1.5);
+        assert!((r.decode_tok_per_sec() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rng_seed_is_per_request() {
+        use crate::engine::Sampler;
+        let a = Request::new(1, vec![1], 4);
+        let b = Request::new(2, vec![1], 4);
+        assert_ne!(a.rng_seed(), b.rng_seed());
+        let s = Sampler::TopK { k: 4, temperature: 1.0, seed: 99 };
+        assert_eq!(a.with_sampler(s).rng_seed(), 99);
+    }
+
+    #[test]
+    fn itl_p50_empty_is_zero() {
+        assert_eq!(itl_p50(&[]), 0.0);
+        assert!((itl_p50(&[0.1, 0.3, 0.2]) - 0.2).abs() < 1e-12);
     }
 }

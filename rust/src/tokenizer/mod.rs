@@ -7,6 +7,7 @@
 //! every id is valid for the tiny test models.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -94,6 +95,19 @@ impl Tokenizer {
         String::from_utf8_lossy(&bytes).into_owned()
     }
 
+    /// The EOS id requests default to, when this vocab has one (the plain
+    /// byte mapping used by the tiny test configs has no specials).
+    pub fn eos_id(&self) -> Option<i32> {
+        (self.vocab > EOS as usize).then_some(EOS)
+    }
+
+    /// Start an incremental decode stream (one per in-flight request).
+    /// Clones this tokenizer once; callers with many streams should share
+    /// an `Arc<Tokenizer>` and use [`DecodeStream::new`] directly.
+    pub fn decode_stream(&self) -> DecodeStream {
+        DecodeStream::new(Arc::new(self.clone()))
+    }
+
     fn push_bytes(&self, id: i32, out: &mut Vec<u8>) {
         if id < 256 {
             out.push(id as u8);
@@ -108,6 +122,67 @@ impl Tokenizer {
                 out.push(b'?');
             }
         }
+    }
+}
+
+/// Incremental detokenizer: feed token ids one at a time, get back exactly
+/// the text each id appends. A token can end mid-way through a multi-byte
+/// UTF-8 character (byte-level vocab) — those trailing bytes are held back
+/// until the next token completes them, so concatenating every delta (plus
+/// [`DecodeStream::finish`]) reproduces [`Tokenizer::decode`] byte-for-byte,
+/// replacement characters included.
+#[derive(Debug, Clone)]
+pub struct DecodeStream {
+    tok: Arc<Tokenizer>,
+    pending: Vec<u8>,
+}
+
+impl DecodeStream {
+    /// A stream over a shared tokenizer (no per-stream deep clone).
+    pub fn new(tok: Arc<Tokenizer>) -> DecodeStream {
+        DecodeStream { tok, pending: Vec::new() }
+    }
+
+    /// Decode one more token; returns the completed text it contributes.
+    pub fn push(&mut self, id: i32) -> String {
+        self.tok.push_bytes(id, &mut self.pending);
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.pending) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.pending.clear();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&self.pending[..valid]).unwrap());
+                    match e.error_len() {
+                        // Genuinely invalid bytes: substitute, keep going —
+                        // the same maximal-subpart rule `from_utf8_lossy`
+                        // applies in `Tokenizer::decode`.
+                        Some(n) => {
+                            out.push('\u{fffd}');
+                            self.pending.drain(..valid + n);
+                        }
+                        // Incomplete trailing sequence: hold it for the
+                        // next token.
+                        None => {
+                            self.pending.drain(..valid);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Flush any held-back incomplete sequence (end of generation).
+    pub fn finish(&mut self) -> String {
+        let s = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        s
     }
 }
 
@@ -165,5 +240,62 @@ mod tests {
     #[test]
     fn train_rejects_small_vocab() {
         assert!(Tokenizer::train("abc", 100).is_err());
+    }
+
+    #[test]
+    fn eos_only_with_specials() {
+        assert_eq!(Tokenizer::bytes_only(256).eos_id(), None);
+        let corpus = "the cat sat on the mat. ".repeat(20);
+        assert_eq!(Tokenizer::train(&corpus, 300).unwrap().eos_id(), Some(EOS));
+    }
+
+    /// Stream deltas must concatenate to exactly the batch decode.
+    fn assert_stream_matches(t: &Tokenizer, ids: &[i32]) {
+        let mut stream = t.decode_stream();
+        let mut acc = String::new();
+        for &id in ids {
+            acc.push_str(&stream.push(id));
+        }
+        acc.push_str(&stream.finish());
+        assert_eq!(acc, t.decode(ids), "ids {ids:?}");
+    }
+
+    #[test]
+    fn decode_stream_matches_batch_decode() {
+        let t = Tokenizer::bytes_only(256);
+        // multi-byte chars arrive one byte (= one token) at a time
+        assert_stream_matches(&t, &t.encode("héllo wörld — ünïcode ✓"));
+        assert_stream_matches(&t, &t.encode("ascii only"));
+        assert_stream_matches(&t, &[]);
+    }
+
+    #[test]
+    fn decode_stream_holds_incomplete_utf8() {
+        let t = Tokenizer::bytes_only(256);
+        let mut s = t.decode_stream();
+        // 'é' = 0xC3 0xA9: first byte alone must produce no text yet
+        assert_eq!(s.push(0xC3), "");
+        assert_eq!(s.push(0xA9), "é");
+        assert_eq!(s.finish(), "");
+    }
+
+    #[test]
+    fn decode_stream_substitutes_invalid_bytes() {
+        let t = Tokenizer::bytes_only(256);
+        // 0xFF is never valid; a dangling lead byte flushes on finish
+        assert_stream_matches(&t, &[0xFF, b'a' as i32, 0xC3]);
+        let mut s = t.decode_stream();
+        assert_eq!(s.push(0xFF), "\u{fffd}");
+        assert_eq!(s.push(0xC3), "");
+        assert_eq!(s.finish(), "\u{fffd}");
+    }
+
+    #[test]
+    fn decode_stream_bpe_and_specials() {
+        let corpus = "the cat sat on the mat. the cat sat on the hat. ".repeat(20);
+        let t = Tokenizer::train(&corpus, 300).unwrap();
+        let mut ids = t.encode("the cat sat on the mat");
+        ids.push(EOS); // specials contribute no text
+        assert_stream_matches(&t, &ids);
     }
 }

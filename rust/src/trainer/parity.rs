@@ -39,7 +39,8 @@ pub fn pretrain_parity(
         let mut trainer = Trainer::new(exec)?;
         let vocab = exec.cfg().vocab;
         let mut corpus = Corpus::new(vocab, BRANCHING, TRAIN_SEED);
-        let run: TrainRun = trainer.run(arch, steps, peak_lr, &mut corpus, EVAL_SEED, eval_batches)?;
+        let run: TrainRun =
+            trainer.run(arch, steps, peak_lr, &mut corpus, EVAL_SEED, eval_batches)?;
         let tail = &run.losses[run.losses.len().saturating_sub(5)..];
         out.push(ParityRow {
             arch: arch.to_string(),

@@ -177,7 +177,11 @@ impl Json {
 }
 
 fn write_num(out: &mut String, n: f64) {
-    if n.fract() == 0.0 && n.abs() < 1e15 {
+    if !n.is_finite() {
+        // JSON has no NaN/Infinity literal; emitting one would corrupt the
+        // whole document (empty-percentile metrics are the usual source)
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
         let _ = write!(out, "{}", n as i64);
     } else {
         let _ = write!(out, "{n}");
@@ -214,6 +218,11 @@ impl From<usize> for Json {
 }
 impl From<i64> for Json {
     fn from(v: i64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<i32> for Json {
+    fn from(v: i32) -> Json {
         Json::Num(v as f64)
     }
 }
@@ -459,6 +468,13 @@ mod tests {
     fn builder_api() {
         let v = Json::obj().set("x", 3usize).set("y", "z");
         assert_eq!(v.to_string(), r#"{"x":3,"y":"z"}"#);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        let v = Json::obj().set("nan", f64::NAN).set("inf", f64::INFINITY);
+        assert_eq!(v.to_string(), r#"{"inf":null,"nan":null}"#);
+        assert_eq!(parse(&v.to_string()).unwrap().get("nan").unwrap(), &Json::Null);
     }
 
     #[test]

@@ -31,7 +31,11 @@ pub fn check<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value)
     }
 }
 
-fn shrink_loop<G: Gen>(gen: &G, mut failing: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut failing: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+) -> G::Value {
     // Greedy descent, bounded to avoid pathological generators.
     for _ in 0..64 {
         let mut advanced = false;
@@ -124,8 +128,12 @@ mod tests {
 
     #[test]
     fn passing_property() {
-        check("add-commutes", 100, &PairGen(UsizeGen { lo: 0, hi: 100 }, UsizeGen { lo: 0, hi: 100 }),
-            |(a, b)| a + b == b + a);
+        check(
+            "add-commutes",
+            100,
+            &PairGen(UsizeGen { lo: 0, hi: 100 }, UsizeGen { lo: 0, hi: 100 }),
+            |(a, b)| a + b == b + a,
+        );
     }
 
     #[test]

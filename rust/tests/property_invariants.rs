@@ -77,7 +77,10 @@ fn prop_makespan_monotone_in_link_latency() {
 
 #[test]
 fn prop_allreduce_sum_matches_scalar_sum() {
-    let gen = PairGen(UsizeGen { lo: 1, hi: 6 }, VecF32Gen { min_len: 1, max_len: 64, scale: 10.0 });
+    let gen = PairGen(
+        UsizeGen { lo: 1, hi: 6 },
+        VecF32Gen { min_len: 1, max_len: 64, scale: 10.0 },
+    );
     check("allreduce-sum", 150, &gen, |(tp, data)| {
         let ce = CollectiveEngine::new(*tp, Interconnect::new(Fabric::Local));
         let parts: Vec<HostTensor> = (0..*tp)
