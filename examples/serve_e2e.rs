@@ -10,7 +10,7 @@ use std::rc::Rc;
 use std::time::Instant;
 
 use ladder_infer::comm::Interconnect;
-use ladder_infer::engine::TpEngine;
+use ladder_infer::engine::{KvLayout, RuntimeKind, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::server::{Batcher, BatcherConfig, Request};
@@ -33,6 +33,13 @@ fn main() -> anyhow::Result<()> {
         )
         .opt("arches", Some("standard,parallel,ladder,desync2,desync4,upperbound"), "comma list")
         .opt("backend", Some("native"), "execution backend: native|xla")
+        .opt(
+            "page-size",
+            Some("0"),
+            "KV page size in tokens (0 = fixed-slot slabs; >0 = paged pool + chunked prefill)",
+        )
+        .opt("kv-budget-mb", Some("0"), "KV admission budget in MiB (0 = capacity only)")
+        .opt("prefill-chunk", Some("16"), "paged: prompt tokens prefilled per iteration")
         .parse_env()?;
 
     let exec =
@@ -44,10 +51,24 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.get_usize("requests")?;
     let gen = args.get_usize("gen")?;
     let fabric = Interconnect::parse(&args.get("fabric")?)?;
+    let page_size = args.get_usize("page-size")?;
+    let layout = if page_size == 0 {
+        KvLayout::Slab
+    } else {
+        let budget = args.get_usize("kv-budget-mb")? << 20;
+        KvLayout::paged_from_budget(&cfg, tp, page_size, budget, batch)
+    };
 
     println!(
-        "serve_e2e: model={} ({} params) tp={tp} batch={batch} fabric={} requests={n_requests} gen={gen}",
-        cfg.name, cfg.params, fabric.name(),
+        "serve_e2e: model={} ({} params) tp={tp} batch={batch} fabric={} requests={n_requests} \
+         gen={gen} kv={}",
+        cfg.name,
+        cfg.params,
+        fabric.name(),
+        match layout {
+            KvLayout::Slab => "slabs".to_string(),
+            KvLayout::Paged { page_size, pages } => format!("paged({page_size}tok x {pages})"),
+        },
     );
 
     // shared request trace: Poisson arrivals are simulated by submitting in
@@ -69,14 +90,29 @@ fn main() -> anyhow::Result<()> {
             "ttft p50 (ms)",
             "itl p50 (ms)",
             "e2e p99 (ms)",
+            "kv hw (pages)",
             "comm hidden %",
         ],
     );
     let mut baseline_tps = None;
     for arch_name in args.get("arches")?.split(',') {
         let arch = Arch::parse(arch_name)?;
-        let engine = TpEngine::new(exec.clone(), &weights, tp, arch, batch, fabric)?;
-        let mut batcher = Batcher::new(engine, BatcherConfig::default());
+        let engine = TpEngine::with_layout(
+            exec.clone(),
+            &weights,
+            tp,
+            arch,
+            batch,
+            fabric,
+            RuntimeKind::default(),
+            layout,
+        )?;
+        let config = BatcherConfig {
+            kv_budget_bytes: args.get_usize("kv-budget-mb")? << 20,
+            prefill_chunk: args.get_usize("prefill-chunk")?,
+            ..BatcherConfig::default()
+        };
+        let mut batcher = Batcher::new(engine, config);
         for (i, p) in prompts.iter().enumerate() {
             batcher.submit(Request::new(i as u64, p.clone(), gen));
         }
@@ -99,6 +135,10 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", report.get("ttft_p50_ms")?.as_f64()?),
             format!("{:.2}", report.get("itl_p50_ms")?.as_f64()?),
             format!("{:.1}", report.get("e2e_p99_ms")?.as_f64()?),
+            match batcher.allocator() {
+                Some(a) => format!("{}/{}", a.high_water(), a.total_pages()),
+                None => "-".to_string(),
+            },
             format!("{:.0}", comm.hidden_fraction() * 100.0),
         ]);
         if arch == Arch::Standard {

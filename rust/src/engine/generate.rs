@@ -3,8 +3,9 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use super::kv::{BlockAllocator, KvLayout};
 use super::tpengine::TpEngine;
 use crate::comm::CommStats;
 use crate::model::HostTensor;
@@ -104,7 +105,11 @@ impl GenerateReport {
 }
 
 /// Static-batch generation (the paper's benchmark setting: all rows share a
-/// prompt length, generate `gen_len` tokens together).
+/// prompt length, generate `gen_len` tokens together). Works on both KV
+/// layouts: slab engines run the batched prefill + decode, paged engines
+/// allocate a throwaway page table per slot and route through the paged
+/// modules — producing bitwise-identical tokens (every kernel is row-local
+/// and keys are visited in logical order).
 pub fn generate(
     engine: &mut TpEngine,
     prompts: &[Vec<i32>],
@@ -120,27 +125,76 @@ pub fn generate(
         _ => 0,
     });
 
-    // pad prompts into the bucket
-    let mut tokens = vec![0i32; engine.batch * bucket];
-    let mut true_lens = vec![0usize; engine.batch];
-    for (b, p) in prompts.iter().enumerate() {
-        tokens[b * bucket..b * bucket + p.len()].copy_from_slice(p);
-        true_lens[b] = p.len();
-    }
+    let paged = match engine.kv_layout() {
+        KvLayout::Slab => None,
+        KvLayout::Paged { page_size, pages } => {
+            if prompt_len + gen_len > engine.cfg.max_seq {
+                bail!(
+                    "paged generate: {} prompt + {gen_len} generated tokens exceed max_seq {}",
+                    prompt_len,
+                    engine.cfg.max_seq
+                );
+            }
+            let mut alloc = BlockAllocator::new(pages, page_size, engine.kv_page_bytes());
+            for (b, p) in prompts.iter().enumerate() {
+                alloc.admit(b as u64, p.len(), p.len() + gen_len)?;
+            }
+            Some(alloc)
+        }
+    };
 
+    let b_count = engine.batch;
     let t0 = Instant::now();
-    let logits = engine.prefill(&tokens, bucket, &true_lens)?;
+    let logits = match &paged {
+        None => {
+            // pad prompts into the bucket
+            let mut tokens = vec![0i32; b_count * bucket];
+            let mut true_lens = vec![0usize; b_count];
+            for (b, p) in prompts.iter().enumerate() {
+                tokens[b * bucket..b * bucket + p.len()].copy_from_slice(p);
+                true_lens[b] = p.len();
+            }
+            engine.prefill(&tokens, bucket, &true_lens)?
+        }
+        Some(alloc) => {
+            // per-slot paged prefill; rows are gathered back into [B, V] so
+            // sampling consumes the RNG in the same order as the slab path
+            let mut rows = Vec::new();
+            let mut v = 0;
+            for (b, p) in prompts.iter().enumerate() {
+                let table = &alloc.table(b as u64).expect("admitted above").pages;
+                let row = engine.prefill_chunk_slot(b, p, 0, table)?;
+                v = row.len();
+                rows.extend(row);
+            }
+            HostTensor::new(vec![b_count, v], rows)
+        }
+    };
     let prefill_time = t0.elapsed();
 
-    let mut out: Vec<Vec<i32>> = vec![Vec::with_capacity(gen_len); engine.batch];
+    let mut out: Vec<Vec<i32>> = vec![Vec::with_capacity(gen_len); b_count];
     let mut next = sampler.sample(&logits, &mut rng);
     for (b, &t) in next.iter().enumerate() {
         out[b].push(t);
     }
 
     let t1 = Instant::now();
-    for _ in 1..gen_len {
-        let logits = engine.decode(&next)?;
+    let max_pages = engine.kv_max_pages_per_seq();
+    let mut alloc = paged;
+    for step in 1..gen_len {
+        let logits = match &mut alloc {
+            None => engine.decode(&next)?,
+            Some(alloc) => {
+                let mut tables = vec![-1i32; b_count * max_pages];
+                for (b, p) in prompts.iter().enumerate() {
+                    // the incoming token writes position prompt_len+step-1
+                    alloc.ensure(b as u64, p.len() + step)?;
+                    let row = &mut tables[b * max_pages..(b + 1) * max_pages];
+                    alloc.fill_table_row(b as u64, row)?;
+                }
+                engine.decode_paged(&next, &vec![true; b_count], tables, max_pages)?
+            }
+        };
         next = sampler.sample(&logits, &mut rng);
         for (b, &t) in next.iter().enumerate() {
             out[b].push(t);

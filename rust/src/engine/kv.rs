@@ -1,11 +1,90 @@
-//! KV-cache slabs: one [B, KVl, M, D] tensor pair per (rank, layer), plus
-//! per-slot length bookkeeping for continuous batching.
+//! KV-cache storage and accounting: the legacy fixed-slot slabs, the paged
+//! pool + block allocator behind continuous batching, and the byte-accurate
+//! budget arithmetic the batcher admits against.
+//!
+//! Two layouts coexist ([`KvLayout`]):
+//!
+//! * **Slab** — one `[B, KVl, M, D]` tensor pair per (rank, layer); every
+//!   slot owns a full `max_seq` region. Simple, and the bitwise oracle the
+//!   paged path is tested against.
+//! * **Paged** — one `[P, KVl, page_size, D]` pool pair per (rank, layer);
+//!   requests own page *lists* handed out by a [`BlockAllocator`], so KV
+//!   memory scales with tokens actually written, not with `max_seq`.
+//!
+//! The allocator uses **reservation-based admission**: a request is admitted
+//! only if its worst-case page count (prompt + `max_new_tokens`, clamped to
+//! `max_seq`) fits in the unreserved capacity. Physical pages are then
+//! allocated lazily as tokens are written. Because physical use never
+//! exceeds reservations and reservations never exceed capacity, an admitted
+//! request can always grow to its reserved length — no deadlock, no
+//! preemption, and every accepted request finishes (the paged stress
+//! harness asserts exactly this).
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
 use crate::model::{HostTensor, LlamaConfig};
 
-/// Host-resident KV cache for one rank: `layers x {k, v}` slabs.
+/// Which KV storage layout an engine is built with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLayout {
+    /// Fixed `max_seq`-sized region per batch slot (the legacy layout).
+    Slab,
+    /// Block-granular pool: `pages` pages of `page_size` tokens each,
+    /// shared by all slots through per-request page tables.
+    Paged { page_size: usize, pages: usize },
+}
+
+impl KvLayout {
+    pub fn is_paged(&self) -> bool {
+        matches!(self, KvLayout::Paged { .. })
+    }
+
+    /// The one pool-sizing rule shared by every builder (CLI, examples):
+    /// `budget_bytes / page_bytes` pages, but never fewer than one
+    /// `max_seq`-long request (so the server can always make progress —
+    /// the paged mirror of the fixed-slot clamp to >= 1 slot); a zero
+    /// budget sizes the pool to `batch` full-length sequences, the same
+    /// worst-case capacity the slabs reserve.
+    pub fn paged_from_budget(
+        cfg: &LlamaConfig,
+        tp: usize,
+        page_size: usize,
+        budget_bytes: usize,
+        batch: usize,
+    ) -> KvLayout {
+        let page_bytes = PagedKvCache::page_bytes_all_ranks(cfg, tp, page_size);
+        let per_seq = cfg.max_seq.div_ceil(page_size);
+        let pages = if budget_bytes == 0 {
+            batch * per_seq
+        } else {
+            (budget_bytes / page_bytes.max(1)).max(per_seq)
+        };
+        KvLayout::Paged { page_size, pages }
+    }
+}
+
+/// Per-forward paged routing data, broadcast to every rank: the padded
+/// page-table matrix for the batch plus the chunk start position (chunked
+/// prefill). Rows of `tables` are `-1`-padded; decode rows for inactive
+/// slots are all `-1` and their `lens` entry is `-1` (the module skips
+/// them entirely — no pool read or write).
+#[derive(Debug, Clone)]
+pub struct PagedFwd {
+    /// `[B, max_pages]` page ids, row-major, `-1` padded.
+    pub tables: Vec<i32>,
+    /// Pages per row in `tables`.
+    pub max_pages: usize,
+    /// First global position of this chunk (prefill only; decode ignores).
+    pub start: i32,
+}
+
+// ---------------------------------------------------------------------------
+// fixed-slot slabs (legacy layout, and the paged path's bitwise oracle)
+// ---------------------------------------------------------------------------
+
+/// Host-resident fixed-slot KV cache for one rank: `layers x {k, v}` slabs.
 #[derive(Debug, Clone)]
 pub struct KvCache {
     pub k: Vec<HostTensor>,
@@ -92,13 +171,351 @@ impl KvCache {
         (HostTensor::new(shape.clone(), k), HostTensor::new(shape, v))
     }
 
-    /// Zero a slot (request eviction).
-    pub fn clear_slot(&mut self, b: usize) {
-        let stride = self.slot_stride();
-        for layer in 0..self.k.len() {
-            self.k[layer].data[b * stride..(b + 1) * stride].fill(0.0);
-            self.v[layer].data[b * stride..(b + 1) * stride].fill(0.0);
+    /// Zero a slot's *written prefix* (request eviction). `written` is the
+    /// engine's tracked length for the slot; positions beyond it may still
+    /// hold stale data (bucket-padded prefill and idle-slot decodes write
+    /// past the tracked length), but that data is unreachable: attention
+    /// masks every read to the tracked length, and decode writes a
+    /// position before the mask ever covers it. Zeroing the whole
+    /// `max_seq` slab — what this method used to do — therefore bought
+    /// nothing except an `O(max_seq - written)` memset per (layer, head).
+    pub fn clear_slot(&mut self, b: usize, written: usize) {
+        let (m, d) = (self.max_seq, self.head_dim);
+        let upto = written.min(m);
+        if upto == 0 {
+            return;
         }
+        for layer in 0..self.k.len() {
+            for kh in 0..self.kv_heads_l {
+                let base = (b * self.kv_heads_l + kh) * m * d;
+                self.k[layer].data[base..base + upto * d].fill(0.0);
+                self.v[layer].data[base..base + upto * d].fill(0.0);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paged pool storage (one per rank)
+// ---------------------------------------------------------------------------
+
+/// Host-resident paged KV pool for one rank: `layers x {k, v}` tensors of
+/// shape `[pages, KVl, page_size, D]`. Which request owns which page is the
+/// [`BlockAllocator`]'s business (it lives with the batcher); the pool only
+/// stores and scatters rows.
+#[derive(Debug, Clone)]
+pub struct PagedKvCache {
+    pub k: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub pages: usize,
+    pub kv_heads_l: usize,
+    pub page_size: usize,
+    pub head_dim: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(
+        layers: usize,
+        pages: usize,
+        kv_heads_l: usize,
+        page_size: usize,
+        head_dim: usize,
+    ) -> PagedKvCache {
+        let shape = vec![pages, kv_heads_l, page_size, head_dim];
+        PagedKvCache {
+            k: (0..layers).map(|_| HostTensor::zeros(shape.clone())).collect(),
+            v: (0..layers).map(|_| HostTensor::zeros(shape.clone())).collect(),
+            pages,
+            kv_heads_l,
+            page_size,
+            head_dim,
+        }
+    }
+
+    /// Bytes one page occupies across all `tp` ranks (K + V, all layers) —
+    /// the paged counterpart of [`KvCache::bytes_per_slot_all_ranks`] and
+    /// the unit `--kv-budget-mb` is accounted in.
+    pub fn page_bytes_all_ranks(cfg: &LlamaConfig, tp: usize, page_size: usize) -> usize {
+        tp * 2 * cfg.layers * (cfg.kv_heads / tp) * page_size * cfg.head_dim * 4
+    }
+
+    /// Move one layer's pool tensors out (zero-copy upload into a module
+    /// call); the caller puts them back with [`PagedKvCache::put_layer`].
+    pub fn take_layer(&mut self, layer: usize) -> (HostTensor, HostTensor) {
+        let empty = || HostTensor::new(vec![0], Vec::new());
+        (
+            std::mem::replace(&mut self.k[layer], empty()),
+            std::mem::replace(&mut self.v[layer], empty()),
+        )
+    }
+
+    pub fn put_layer(&mut self, layer: usize, k: HostTensor, v: HostTensor) {
+        self.k[layer] = k;
+        self.v[layer] = v;
+    }
+
+    /// Scatter freshly written K/V rows into the pool. `rows` is
+    /// `[n, KVl, D]` flattened; `dst[i]` is the (page, in-page offset) each
+    /// row lands at.
+    pub fn scatter_rows(
+        &mut self,
+        layer: usize,
+        dst: &[(u32, usize)],
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<()> {
+        let (kvl, p, d) = (self.kv_heads_l, self.page_size, self.head_dim);
+        if k_rows.len() != dst.len() * kvl * d || v_rows.len() != k_rows.len() {
+            bail!("scatter_rows: {} rows for {} destinations", k_rows.len() / (kvl * d), dst.len());
+        }
+        for (i, &(page, off)) in dst.iter().enumerate() {
+            let page = page as usize;
+            if page >= self.pages || off >= p {
+                bail!("scatter_rows: page {page} offset {off} out of range");
+            }
+            for kh in 0..kvl {
+                let src = (i * kvl + kh) * d;
+                let at = ((page * kvl + kh) * p + off) * d;
+                self.k[layer].data[at..at + d].copy_from_slice(&k_rows[src..src + d]);
+                self.v[layer].data[at..at + d].copy_from_slice(&v_rows[src..src + d]);
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// block allocator (free-list + per-request page tables + budget accounting)
+// ---------------------------------------------------------------------------
+
+/// One request's view of the pool.
+#[derive(Debug, Clone)]
+pub struct PageTable {
+    /// Physical pages in logical order: token position `t` lives in
+    /// `pages[t / page_size]` at in-page offset `t % page_size`.
+    pub pages: Vec<u32>,
+    /// Tokens with allocated backing (`pages.len() == ceil(len/page_size)`).
+    pub len: usize,
+    /// Worst-case pages this request may grow to (admission commitment).
+    pub reserved_pages: usize,
+}
+
+/// Free-list page allocator with per-request page tables and byte-accurate
+/// budget accounting. Admission reserves worst-case capacity; physical
+/// pages are handed out lazily as tokens are written and returned in full
+/// the instant a request finishes or is cancelled.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    page_size: usize,
+    /// Bytes one page occupies across all ranks (K + V, all layers).
+    page_bytes: usize,
+    total_pages: usize,
+    /// LIFO free list of physical page ids.
+    free: Vec<u32>,
+    tables: HashMap<u64, PageTable>,
+    reserved_total: usize,
+    high_water: usize,
+}
+
+impl BlockAllocator {
+    pub fn new(total_pages: usize, page_size: usize, page_bytes: usize) -> BlockAllocator {
+        assert!(page_size > 0, "page_size must be positive");
+        BlockAllocator {
+            page_size,
+            page_bytes,
+            total_pages,
+            // LIFO and descending so page 0 is handed out first.
+            free: (0..total_pages as u32).rev().collect(),
+            tables: HashMap::new(),
+            reserved_total: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Pages needed to back `tokens` token positions.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Admission rule: would a request with this worst-case token count fit
+    /// in the unreserved capacity right now?
+    pub fn can_admit(&self, reserve_tokens: usize) -> bool {
+        self.reserved_total + self.pages_for(reserve_tokens) <= self.total_pages
+    }
+
+    /// Admit `owner`: reserve `reserve_tokens` worth of pages and allocate
+    /// backing for the `prompt_tokens` that are about to be written.
+    pub fn admit(&mut self, owner: u64, prompt_tokens: usize, reserve_tokens: usize) -> Result<()> {
+        if self.tables.contains_key(&owner) {
+            bail!("owner {owner} already has a page table");
+        }
+        if prompt_tokens > reserve_tokens {
+            bail!("prompt {prompt_tokens} exceeds reservation {reserve_tokens}");
+        }
+        if !self.can_admit(reserve_tokens) {
+            bail!(
+                "cannot admit {owner}: {} pages reserved of {}, want {} more",
+                self.reserved_total,
+                self.total_pages,
+                self.pages_for(reserve_tokens)
+            );
+        }
+        let reserved_pages = self.pages_for(reserve_tokens);
+        self.reserved_total += reserved_pages;
+        self.tables.insert(owner, PageTable { pages: Vec::new(), len: 0, reserved_pages });
+        self.ensure(owner, prompt_tokens)
+    }
+
+    /// Grow `owner`'s backing to cover `new_len` tokens. Guaranteed to
+    /// succeed within the reservation (the free list cannot be empty while
+    /// any owner is below its reserved page count).
+    pub fn ensure(&mut self, owner: u64, new_len: usize) -> Result<()> {
+        let need = self.pages_for(new_len);
+        let table = self
+            .tables
+            .get_mut(&owner)
+            .ok_or_else(|| anyhow::anyhow!("owner {owner} has no page table"))?;
+        if need > table.reserved_pages {
+            bail!(
+                "owner {owner}: {new_len} tokens need {need} pages, reserved {}",
+                table.reserved_pages
+            );
+        }
+        while table.pages.len() < need {
+            let page = self.free.pop().ok_or_else(|| {
+                anyhow::anyhow!("free list empty inside a reservation — allocator corrupt")
+            })?;
+            table.pages.push(page);
+        }
+        table.len = table.len.max(new_len);
+        let in_use = self.total_pages - self.free.len();
+        self.high_water = self.high_water.max(in_use);
+        Ok(())
+    }
+
+    /// Release everything `owner` holds (finish / cancel): physical pages go
+    /// straight back to the free list, the reservation is dropped. Returns
+    /// the number of pages freed; unknown owners free nothing.
+    pub fn free(&mut self, owner: u64) -> usize {
+        let Some(table) = self.tables.remove(&owner) else { return 0 };
+        self.reserved_total -= table.reserved_pages;
+        let n = table.pages.len();
+        self.free.extend(table.pages);
+        n
+    }
+
+    pub fn table(&self, owner: u64) -> Option<&PageTable> {
+        self.tables.get(&owner)
+    }
+
+    /// Encode `owner`'s page list into one `-1`-padded row of the
+    /// per-forward page-table matrix — the single definition of the wire
+    /// format the paged attention modules consume (shared by the batcher's
+    /// decode path and `generate`).
+    pub fn fill_table_row(&self, owner: u64, row: &mut [i32]) -> Result<()> {
+        let table = self
+            .tables
+            .get(&owner)
+            .ok_or_else(|| anyhow::anyhow!("owner {owner} has no page table"))?;
+        if table.pages.len() > row.len() {
+            bail!("owner {owner}: {} pages do not fit a {}-wide row", table.pages.len(), row.len());
+        }
+        for (i, dst) in row.iter_mut().enumerate() {
+            *dst = table.pages.get(i).map_or(-1, |&p| p as i32);
+        }
+        Ok(())
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved_total
+    }
+
+    /// Most pages ever simultaneously allocated (the `kv_pages_high_water`
+    /// metric).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.pages_in_use() * self.page_bytes
+    }
+
+    /// Full structural audit, run by the stress harness after every step:
+    /// conservation (free + owned == total), no page double-owned or both
+    /// owned and free, per-owner backing exactly matches its length, and
+    /// reservations within capacity.
+    pub fn check(&self) -> Result<()> {
+        let mut seen: Vec<u32> = self.free.clone();
+        let mut owned = 0usize;
+        let mut reserved = 0usize;
+        for (owner, t) in &self.tables {
+            if t.pages.len() != self.pages_for(t.len) {
+                bail!(
+                    "owner {owner}: {} pages backing {} tokens (want {})",
+                    t.pages.len(),
+                    t.len,
+                    self.pages_for(t.len)
+                );
+            }
+            if t.pages.len() > t.reserved_pages {
+                bail!(
+                    "owner {owner}: holds {} pages, reserved {}",
+                    t.pages.len(),
+                    t.reserved_pages
+                );
+            }
+            owned += t.pages.len();
+            reserved += t.reserved_pages;
+            seen.extend(&t.pages);
+        }
+        if self.free.len() + owned != self.total_pages {
+            bail!(
+                "page leak: {} free + {} owned != {} total",
+                self.free.len(),
+                owned,
+                self.total_pages
+            );
+        }
+        seen.sort_unstable();
+        for w in seen.windows(2) {
+            if w[0] == w[1] {
+                bail!("page {} is double-owned (or owned and free)", w[0]);
+            }
+        }
+        if let Some(&max) = seen.last() {
+            if max as usize >= self.total_pages {
+                bail!("page id {max} out of range ({} pages)", self.total_pages);
+            }
+        }
+        if reserved != self.reserved_total || reserved > self.total_pages {
+            bail!(
+                "reservation accounting: {} summed vs {} tracked of {} total",
+                reserved,
+                self.reserved_total,
+                self.total_pages
+            );
+        }
+        Ok(())
     }
 }
 
@@ -119,8 +536,38 @@ mod tests {
         // other slots untouched
         let (k0, _) = kv.read_slot(1, 0);
         assert!(k0.data.iter().all(|&x| x == 0.0));
-        kv.clear_slot(2);
+        kv.clear_slot(2, 4);
         let (k, _) = kv.read_slot(1, 2);
+        assert!(k.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn clear_slot_zeroes_exactly_the_written_prefix() {
+        let (layers, kvl, m, d) = (2, 2, 8, 2);
+        let mut kv = KvCache::new(layers, 2, kvl, m, d);
+        let stride = kvl * m * d;
+        let ones = HostTensor::new(vec![1, kvl, m, d], vec![1.0; stride]);
+        kv.write_slot(0, 1, &ones, &ones).unwrap();
+        kv.write_slot(1, 1, &ones, &ones).unwrap();
+        // only 3 positions were really written: clearing with written=3
+        // must zero positions 0..3 of every (layer, head) and not touch the
+        // rest of the slab (which a reused slot never reads — its masked
+        // attention covers only its own written prefix)
+        kv.clear_slot(1, 3);
+        for layer in 0..layers {
+            let (k, v) = kv.read_slot(layer, 1);
+            for kh in 0..kvl {
+                for j in 0..m {
+                    let at = (kh * m + j) * d;
+                    let want = if j < 3 { 0.0 } else { 1.0 };
+                    assert_eq!(k.data[at], want, "layer {layer} head {kh} pos {j}");
+                    assert_eq!(v.data[at], want, "layer {layer} head {kh} pos {j}");
+                }
+            }
+        }
+        // written beyond max_seq clamps instead of panicking
+        kv.clear_slot(1, 99);
+        let (k, _) = kv.read_slot(0, 1);
         assert!(k.data.iter().all(|&x| x == 0.0));
     }
 
@@ -139,9 +586,8 @@ mod tests {
         assert_eq!(kv.bytes_per_slot(), 2 * 2 * 2 * 8 * 4 * 4);
     }
 
-    #[test]
-    fn bytes_per_slot_all_ranks_matches_instances() {
-        let cfg = LlamaConfig {
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
             name: "t".into(),
             vocab: 32,
             hidden: 16,
@@ -154,7 +600,12 @@ mod tests {
             rope_theta: 1e4,
             norm_eps: 1e-5,
             params: 0,
-        };
+        }
+    }
+
+    #[test]
+    fn bytes_per_slot_all_ranks_matches_instances() {
+        let cfg = tiny_cfg();
         for tp in [1usize, 2, 4] {
             let per_rank =
                 KvCache::new(cfg.layers, 2, cfg.kv_heads / tp, cfg.max_seq, cfg.head_dim);
@@ -163,5 +614,137 @@ mod tests {
                 tp * per_rank.bytes_per_slot()
             );
         }
+    }
+
+    #[test]
+    fn paged_from_budget_sizing() {
+        let cfg = tiny_cfg(); // max_seq 8 -> 2 pages per sequence at page 4
+        let page_bytes = PagedKvCache::page_bytes_all_ranks(&cfg, 2, 4);
+        let paged = |pages| KvLayout::Paged { page_size: 4, pages };
+        // zero budget: batch x worst case (slab-equivalent capacity)
+        assert_eq!(KvLayout::paged_from_budget(&cfg, 2, 4, 0, 3), paged(6));
+        // budget-driven
+        assert_eq!(KvLayout::paged_from_budget(&cfg, 2, 4, 5 * page_bytes, 3), paged(5));
+        // clamped to at least one full-length request
+        assert_eq!(KvLayout::paged_from_budget(&cfg, 2, 4, 1, 3), paged(2));
+    }
+
+    #[test]
+    fn page_bytes_sum_to_slab_bytes() {
+        // ceil(max_seq / page_size) pages cover exactly one slab when the
+        // page size divides max_seq — the budget units agree
+        let cfg = tiny_cfg();
+        for tp in [1usize, 2] {
+            let page = PagedKvCache::page_bytes_all_ranks(&cfg, tp, 4);
+            let slab = KvCache::bytes_per_slot_all_ranks(&cfg, tp);
+            assert_eq!(page * (cfg.max_seq / 4), slab);
+        }
+    }
+
+    #[test]
+    fn paged_scatter_lands_rows() {
+        let (kvl, p, d) = (2, 4, 2);
+        let mut pool = PagedKvCache::new(2, 3, kvl, p, d);
+        let rows: Vec<f32> = (0..2 * kvl * d).map(|x| x as f32 + 1.0).collect();
+        let vrows: Vec<f32> = rows.iter().map(|x| -x).collect();
+        pool.scatter_rows(1, &[(2, 1), (0, 3)], &rows, &vrows).unwrap();
+        // row 0 -> page 2 offset 1; row 1 -> page 0 offset 3
+        for kh in 0..kvl {
+            let at = ((2 * kvl + kh) * p + 1) * d;
+            assert_eq!(pool.k[1].data[at..at + d], rows[kh * d..(kh + 1) * d]);
+            let at = (kh * p + 3) * d;
+            assert_eq!(pool.v[1].data[at..at + d], vrows[(kvl + kh) * d..(kvl + kh + 1) * d]);
+        }
+        // layer 0 untouched
+        assert!(pool.k[0].data.iter().all(|&x| x == 0.0));
+        // out-of-range destinations are errors, not UB
+        assert!(pool.scatter_rows(0, &[(9, 0)], &rows[..kvl * d], &vrows[..kvl * d]).is_err());
+        assert!(pool.scatter_rows(0, &[(0, 9)], &rows[..kvl * d], &vrows[..kvl * d]).is_err());
+    }
+
+    #[test]
+    fn take_put_layer_roundtrip() {
+        let mut pool = PagedKvCache::new(2, 2, 1, 2, 2);
+        pool.k[1].data[3] = 7.0;
+        let (k, v) = pool.take_layer(1);
+        assert_eq!(k.data[3], 7.0);
+        assert!(pool.k[1].data.is_empty());
+        pool.put_layer(1, k, v);
+        assert_eq!(pool.k[1].data[3], 7.0);
+    }
+
+    #[test]
+    fn allocator_admit_ensure_free_lifecycle() {
+        let mut a = BlockAllocator::new(8, 4, 100);
+        assert!(a.can_admit(32));
+        assert!(!a.can_admit(33));
+        // prompt 5 tokens (2 pages), worst case 10 tokens (3 pages)
+        a.admit(1, 5, 10).unwrap();
+        a.check().unwrap();
+        assert_eq!(a.pages_in_use(), 2);
+        assert_eq!(a.reserved_pages(), 3);
+        assert_eq!(a.table(1).unwrap().pages, vec![0, 1]);
+        // growing within the current page allocates nothing
+        a.ensure(1, 8).unwrap();
+        assert_eq!(a.pages_in_use(), 2);
+        // crossing the boundary takes the third page; beyond the
+        // reservation is an error
+        a.ensure(1, 9).unwrap();
+        assert_eq!(a.pages_in_use(), 3);
+        assert!(a.ensure(1, 13).is_err());
+        a.check().unwrap();
+        assert_eq!(a.bytes_in_use(), 300);
+        assert_eq!(a.high_water(), 3);
+        assert_eq!(a.free(1), 3);
+        a.check().unwrap();
+        assert_eq!((a.pages_in_use(), a.reserved_pages(), a.free_pages()), (0, 0, 8));
+        assert_eq!(a.high_water(), 3, "high water survives the free");
+        assert_eq!(a.free(1), 0, "double free is a no-op");
+    }
+
+    #[test]
+    fn allocator_admission_is_reservation_gated() {
+        let mut a = BlockAllocator::new(4, 2, 1);
+        a.admit(1, 1, 6).unwrap(); // reserves 3 pages, holds 1
+        assert_eq!(a.pages_in_use(), 1);
+        // 1 page of unreserved capacity left: a 2-page request must wait
+        // even though 3 physical pages are free (they are promised to 1)
+        assert!(a.can_admit(2));
+        assert!(!a.can_admit(3));
+        assert!(a.admit(2, 1, 4).is_err());
+        a.admit(2, 1, 2).unwrap();
+        // both requests can always grow to their full reservation
+        a.ensure(1, 6).unwrap();
+        a.ensure(2, 2).unwrap();
+        a.check().unwrap();
+        assert_eq!(a.free_pages(), 0);
+    }
+
+    #[test]
+    fn allocator_rejects_double_admit_and_unknown_owner() {
+        let mut a = BlockAllocator::new(4, 2, 1);
+        a.admit(7, 2, 4).unwrap();
+        assert!(a.admit(7, 2, 4).is_err());
+        assert!(a.ensure(8, 2).is_err());
+        assert!(a.admit(9, 5, 4).is_err(), "prompt beyond reservation");
+    }
+
+    #[test]
+    fn page_table_maps_positions() {
+        let mut a = BlockAllocator::new(8, 4, 1);
+        a.admit(1, 9, 12).unwrap();
+        let t = a.table(1).unwrap();
+        assert_eq!(t.pages.len(), 3);
+        assert_eq!(t.len, 9);
+        // token position 6 -> pages[1], offset 2
+        assert_eq!(t.pages[6 / 4], t.pages[1]);
+        assert_eq!(6 % 4, 2);
+        // the per-forward row encoding: pages in order, -1 padded
+        let mut row = [9i32; 5];
+        a.fill_table_row(1, &mut row).unwrap();
+        assert_eq!(row, [0, 1, 2, -1, -1]);
+        let mut tight = [9i32; 2];
+        assert!(a.fill_table_row(1, &mut tight).is_err(), "row narrower than the table");
+        assert!(a.fill_table_row(7, &mut row).is_err(), "unknown owner");
     }
 }

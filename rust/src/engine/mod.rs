@@ -22,8 +22,8 @@ pub mod tpengine;
 pub mod trace;
 
 pub use generate::{GenerateReport, Sampler};
-pub use kv::KvCache;
-pub use rank::{Embedder, RankState};
+pub use kv::{BlockAllocator, KvCache, KvLayout, PageTable, PagedFwd, PagedKvCache};
+pub use rank::{Embedder, RankKv, RankState};
 pub use threaded::ThreadedRuntime;
 pub use tpengine::{RuntimeKind, TpEngine};
 pub use trace::EngineTracer;

@@ -4,7 +4,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::kv::KvCache;
+use super::kv::{KvCache, KvLayout, PagedFwd, PagedKvCache};
 use crate::model::{HostTensor, LlamaConfig, RankWeights, WeightStore};
 use crate::runtime::{Exec, Value};
 
@@ -21,11 +21,21 @@ pub enum Phase {
     Decode,
 }
 
+/// This rank's KV storage, matching the engine's [`KvLayout`].
+pub enum RankKv {
+    /// Fixed per-slot slabs (legacy layout; the paged path's oracle).
+    Slab(KvCache),
+    /// Shared page pool; ownership is tracked by the batcher's
+    /// [`super::kv::BlockAllocator`] and arrives per-forward as a
+    /// [`PagedFwd`] page-table view.
+    Paged(PagedKvCache),
+}
+
 /// One simulated TP rank: weights + caches + module runners.
 pub struct RankState {
     pub rank: usize,
     pub tp: usize,
-    pub kv: KvCache,
+    pub kv: RankKv,
     layers: Vec<LayerVals>,
     /// The replicated embedding table — uploaded only when this state will
     /// actually run the embed module (sequential rank 0; the threaded
@@ -36,6 +46,7 @@ pub struct RankState {
 }
 
 impl RankState {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         exec: &Exec,
         cfg: &LlamaConfig,
@@ -44,6 +55,7 @@ impl RankState {
         tp: usize,
         batch: usize,
         need_embed: bool,
+        layout: KvLayout,
     ) -> Result<RankState> {
         let mut layers = Vec::with_capacity(cfg.layers);
         for i in 0..cfg.layers {
@@ -64,10 +76,19 @@ impl RankState {
                 ],
             });
         }
+        let kvl = cfg.kv_heads / tp;
+        let kv = match layout {
+            KvLayout::Slab => {
+                RankKv::Slab(KvCache::new(cfg.layers, batch, kvl, cfg.max_seq, cfg.head_dim))
+            }
+            KvLayout::Paged { page_size, pages } => {
+                RankKv::Paged(PagedKvCache::new(cfg.layers, pages, kvl, page_size, cfg.head_dim))
+            }
+        };
         Ok(RankState {
             rank,
             tp,
-            kv: KvCache::new(cfg.layers, batch, cfg.kv_heads / tp, cfg.max_seq, cfg.head_dim),
+            kv,
             layers,
             emb: if need_embed { Some(exec.upload(weights.get("emb")?)?) } else { None },
             final_norm: exec.upload(weights.get("final_norm")?)?,
@@ -84,9 +105,11 @@ impl RankState {
     }
 
     /// Attention module (prefill or decode) for one layer. Updates this
-    /// rank's KV cache in place; single-slot prefill (`slot=Some(b)`) runs
+    /// rank's KV storage in place; single-slot prefill (`slot=Some(b)`) runs
     /// the b=1 module against that slot's cache region (continuous
-    /// batching).
+    /// batching), and `paged=Some(..)` routes reads/writes through the page
+    /// tables instead of the slot slabs.
+    #[allow(clippy::too_many_arguments)]
     pub fn attn(
         &mut self,
         exec: &Exec,
@@ -95,11 +118,13 @@ impl RankState {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
-        self.block(exec, layer, x, phase, lens, slot, BlockKind::Attn)
+        self.block(exec, layer, x, phase, lens, slot, paged, BlockKind::Attn)
     }
 
     /// Fused attention+MLP module (Parallel architecture).
+    #[allow(clippy::too_many_arguments)]
     pub fn fused(
         &mut self,
         exec: &Exec,
@@ -108,8 +133,20 @@ impl RankState {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
-        self.block(exec, layer, x, phase, lens, slot, BlockKind::Fused)
+        self.block(exec, layer, x, phase, lens, slot, paged, BlockKind::Fused)
+    }
+
+    /// Release a batch slot: slab layouts zero the slot's written prefix
+    /// (`written` = the engine's tracked length); paged layouts keep pool
+    /// bytes as-is — the allocator already reclaimed the pages, and a
+    /// page's next owner always writes a position before reading it.
+    pub fn release_slot(&mut self, slot: usize, written: usize) {
+        match &mut self.kv {
+            RankKv::Slab(kv) => kv.clear_slot(slot, written),
+            RankKv::Paged(_) => {}
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -121,8 +158,30 @@ impl RankState {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
         kind: BlockKind,
     ) -> Result<HostTensor> {
+        let paged_kv = matches!(self.kv, RankKv::Paged(_));
+        match (paged_kv, paged) {
+            (false, None) => self.block_slab(exec, layer, x, phase, lens, slot, kind),
+            (true, Some(p)) => self.block_paged(exec, layer, x, phase, lens, p, kind),
+            (false, Some(_)) => bail!("paged forward issued to a slab-layout rank"),
+            (true, None) => bail!("slab forward issued to a paged-layout rank (no page tables)"),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn block_slab(
+        &mut self,
+        exec: &Exec,
+        layer: usize,
+        x: &HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        slot: Option<usize>,
+        kind: BlockKind,
+    ) -> Result<HostTensor> {
+        let RankKv::Slab(kv) = &mut self.kv else { unreachable!("checked by block()") };
         let (b, s) = (x.shape[0], x.shape[1]);
         // §Perf: full-batch calls *take* the cache tensors (they are
         // replaced by the module outputs below) instead of cloning ~2x the
@@ -133,10 +192,10 @@ impl RankState {
         // path would need a consuming `run` variant (future work).
         let empty = || HostTensor::new(vec![0], Vec::new());
         let (kc, vc) = match slot {
-            Some(slot_b) => self.kv.read_slot(layer, slot_b),
+            Some(slot_b) => kv.read_slot(layer, slot_b),
             None => (
-                std::mem::replace(&mut self.kv.k[layer], empty()),
-                std::mem::replace(&mut self.kv.v[layer], empty()),
+                std::mem::replace(&mut kv.k[layer], empty()),
+                std::mem::replace(&mut kv.v[layer], empty()),
             ),
         };
         let x_v = exec.upload(x)?;
@@ -178,12 +237,119 @@ impl RankState {
         let k_new = outs.pop().unwrap().into_f32()?;
         let partial = outs.pop().unwrap().into_f32()?;
         match slot {
-            Some(slot_b) => self.kv.write_slot(layer, slot_b, &k_new, &v_new)?,
+            Some(slot_b) => kv.write_slot(layer, slot_b, &k_new, &v_new)?,
             None => {
-                self.kv.k[layer] = k_new;
-                self.kv.v[layer] = v_new;
+                kv.k[layer] = k_new;
+                kv.v[layer] = v_new;
             }
         }
+        Ok(partial)
+    }
+
+    /// The paged counterpart of [`RankState::block_slab`]: pool tensors go
+    /// in (zero-copy on the native backend), only the freshly written K/V
+    /// rows come out and are scattered into the pool at the positions the
+    /// page table dictates. Reads happen *inside* the module, routed
+    /// through the same table.
+    #[allow(clippy::too_many_arguments)]
+    fn block_paged(
+        &mut self,
+        exec: &Exec,
+        layer: usize,
+        x: &HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        paged: &PagedFwd,
+        kind: BlockKind,
+    ) -> Result<HostTensor> {
+        let RankKv::Paged(pool) = &mut self.kv else { unreachable!("checked by block()") };
+        let (b, s) = (x.shape[0], x.shape[1]);
+        if paged.tables.len() != b * paged.max_pages {
+            bail!(
+                "paged forward: {} table entries for [{b}, {}]",
+                paged.tables.len(),
+                paged.max_pages
+            );
+        }
+        // per-row write positions (and rope/positions argument)
+        let pos: Vec<i32> = match phase {
+            Phase::Prefill => vec![paged.start; b],
+            Phase::Decode => match lens {
+                Some(l) if l.len() == b => l.to_vec(),
+                Some(l) => bail!("paged decode: {} lens for batch {b}", l.len()),
+                None => bail!("decode needs lens"),
+            },
+        };
+        let (kp, vp) = pool.take_layer(layer);
+        let x_v = exec.upload(x)?;
+        let kp_v = exec.upload_owned(kp)?;
+        let vp_v = exec.upload_owned(vp)?;
+        let table_v = exec.upload_i32(&paged.tables, &[b, paged.max_pages])?;
+        let pos_v = exec.upload_i32(&pos, &[b])?;
+        let mut args: Vec<&Value> = vec![&x_v];
+        let lw = &self.layers[layer];
+        match kind {
+            BlockKind::Attn => args.extend(lw.attn.iter()),
+            BlockKind::Fused => {
+                args.extend(lw.attn.iter());
+                args.extend(lw.mlp.iter().skip(1)); // wg, wu, wd
+            }
+        }
+        args.push(&kp_v);
+        args.push(&vp_v);
+        args.push(&table_v);
+        args.push(&pos_v);
+        let prefix = match kind {
+            BlockKind::Attn => "attn",
+            BlockKind::Fused => "fused",
+        };
+        let name = match phase {
+            Phase::Prefill => format!("{prefix}_prefill_paged__tp{}__b{b}__s{s}", self.tp),
+            Phase::Decode => format!("{prefix}_decode_paged__tp{}__b{b}", self.tp),
+        };
+        let mut outs = exec.run(&name, &args)?;
+        if outs.len() != 3 {
+            bail!("{name}: expected 3 outputs, got {}", outs.len());
+        }
+        let v_rows = outs.pop().unwrap().into_f32()?;
+        let k_rows = outs.pop().unwrap().into_f32()?;
+        let partial = outs.pop().unwrap().into_f32()?;
+
+        // reclaim the pool (zero-copy round-trip on the native backend) and
+        // scatter the fresh rows. Inactive decode rows (lens < 0) own no
+        // pages and are skipped.
+        let kp = kp_v.into_f32()?;
+        let vp = vp_v.into_f32()?;
+        pool.put_layer(layer, kp, vp);
+        let page_size = pool.page_size;
+        let (kvl, d) = (pool.kv_heads_l, pool.head_dim);
+        let row_stride = kvl * d;
+        let mut dst = Vec::with_capacity(b * s);
+        let mut sel_k = Vec::with_capacity(b * s * row_stride);
+        let mut sel_v = Vec::with_capacity(b * s * row_stride);
+        for bi in 0..b {
+            if phase == Phase::Decode && pos[bi] < 0 {
+                continue;
+            }
+            for si in 0..s {
+                let at = pos[bi] as usize + if phase == Phase::Prefill { si } else { 0 };
+                // bound within the ROW so an overflow cannot scatter into
+                // the next request's pages
+                let pi = at / page_size;
+                if pi >= paged.max_pages {
+                    bail!("{name}: row {bi} write position {at} beyond its page table");
+                }
+                let page = paged.tables[bi * paged.max_pages + pi];
+                if page < 0 {
+                    bail!("{name}: row {bi} writes position {at} without a page");
+                }
+                dst.push((page as u32, at % page_size));
+                let src = (bi * s + si) * row_stride;
+                sel_k.extend_from_slice(&k_rows.data[src..src + row_stride]);
+                sel_v.extend_from_slice(&v_rows.data[src..src + row_stride]);
+            }
+        }
+        pool.scatter_rows(layer, &dst, &sel_k, &sel_v)?;
         Ok(partial)
     }
 

@@ -26,6 +26,7 @@ use std::thread;
 
 use anyhow::{anyhow, Result};
 
+use super::kv::{KvLayout, PagedFwd};
 use super::rank::{Phase, RankState};
 use super::{add_assign, BlockSel};
 use crate::comm::rendezvous::{ReduceOp, SharedCollective};
@@ -40,10 +41,14 @@ enum Cmd {
         phase: Phase,
         lens: Option<Vec<i32>>,
         slot: Option<usize>,
+        /// Page-table view for paged-layout engines (shared, read-only).
+        paged: Option<Arc<PagedFwd>>,
         /// Per-row last positions to slice before the LM head.
         last: Vec<usize>,
     },
-    Release(usize),
+    /// Clear a slot; the second field is its written length (slab layouts
+    /// zero exactly that prefix, paged layouts ignore it).
+    Release(usize, usize),
     Shutdown,
 }
 
@@ -79,6 +84,7 @@ impl ThreadedRuntime {
         tp: usize,
         arch: Arch,
         batch: usize,
+        layout: KvLayout,
         coll: Arc<SharedCollective>,
     ) -> Result<ThreadedRuntime> {
         // one shared host copy for all workers, dropped when the last
@@ -96,7 +102,9 @@ impl ThreadedRuntime {
             let handle = thread::Builder::new()
                 .name(format!("tp-rank-{rank}"))
                 .spawn(move || {
-                    worker_main(rank, tp, batch, arch, spec, weights, coll_w, cmd_rx, rep_tx)
+                    worker_main(
+                        rank, tp, batch, arch, layout, spec, weights, coll_w, cmd_rx, rep_tx,
+                    )
                 })
                 .map_err(|e| anyhow!("spawn rank {rank} worker: {e}"))?;
             cmds.push(cmd_tx);
@@ -114,15 +122,18 @@ impl ThreadedRuntime {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
         last: &[usize],
     ) -> Result<Vec<HostTensor>> {
         let x0 = Arc::new(x0);
+        let paged = paged.map(|p| Arc::new(p.clone()));
         for (rank, tx) in self.cmds.iter().enumerate() {
             tx.send(Cmd::Forward {
                 x0: x0.clone(),
                 phase,
                 lens: lens.map(<[i32]>::to_vec),
                 slot,
+                paged: paged.clone(),
                 last: last.to_vec(),
             })
             .map_err(|_| anyhow!("rank {rank} worker hung up"))?;
@@ -150,11 +161,13 @@ impl ThreadedRuntime {
         }
     }
 
-    /// Clear slot state on every rank (request finished/evicted). Channel
-    /// FIFO ordering guarantees the clear lands before any later `Forward`.
-    pub fn release_slot(&self, slot: usize) {
+    /// Clear slot state on every rank (request finished/evicted); `written`
+    /// is the slot's tracked length so slab layouts zero only the prefix
+    /// that was actually touched. Channel FIFO ordering guarantees the
+    /// clear lands before any later `Forward`.
+    pub fn release_slot(&self, slot: usize, written: usize) {
         for tx in &self.cmds {
-            let _ = tx.send(Cmd::Release(slot));
+            let _ = tx.send(Cmd::Release(slot, written));
         }
     }
 }
@@ -195,6 +208,7 @@ fn worker_main(
     tp: usize,
     batch: usize,
     arch: Arch,
+    layout: KvLayout,
     spec: BackendSpec,
     weights: Arc<WeightStore>,
     coll: Arc<SharedCollective>,
@@ -202,7 +216,8 @@ fn worker_main(
     replies: mpsc::Sender<Reply>,
 ) {
     let _panic_guard = PanicGuard { rank, coll: coll.clone() };
-    let mut ctx = match WorkerCtx::new(rank, tp, batch, arch, &spec, &weights, coll.clone()) {
+    let mut ctx = match WorkerCtx::new(rank, tp, batch, arch, layout, &spec, &weights, coll.clone())
+    {
         Ok(ctx) => ctx,
         Err(e) => {
             let msg = format!("rank {rank} init failed: {e:#}");
@@ -214,7 +229,7 @@ fn worker_main(
                             break;
                         }
                     }
-                    Cmd::Release(_) => {}
+                    Cmd::Release(..) => {}
                     Cmd::Shutdown => break,
                 }
             }
@@ -225,8 +240,15 @@ fn worker_main(
 
     while let Ok(cmd) = cmds.recv() {
         match cmd {
-            Cmd::Forward { x0, phase, lens, slot, last } => {
-                let shard = ctx.forward((*x0).clone(), phase, lens.as_deref(), slot, &last);
+            Cmd::Forward { x0, phase, lens, slot, paged, last } => {
+                let shard = ctx.forward(
+                    (*x0).clone(),
+                    phase,
+                    lens.as_deref(),
+                    slot,
+                    paged.as_deref(),
+                    &last,
+                );
                 if let Err(e) = &shard {
                     // wake siblings blocked on a rendezvous this rank will
                     // never reach
@@ -236,7 +258,7 @@ fn worker_main(
                     break;
                 }
             }
-            Cmd::Release(slot) => ctx.state.kv.clear_slot(slot),
+            Cmd::Release(slot, written) => ctx.state.release_slot(slot, written),
             Cmd::Shutdown => break,
         }
     }
@@ -257,11 +279,13 @@ struct WorkerCtx {
 }
 
 impl WorkerCtx {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         rank: usize,
         tp: usize,
         batch: usize,
         arch: Arch,
+        layout: KvLayout,
         spec: &BackendSpec,
         weights: &WeightStore,
         coll: Arc<SharedCollective>,
@@ -270,7 +294,7 @@ impl WorkerCtx {
         let cfg = exec.cfg().clone();
         // need_embed = false: the coordinator's Embedder runs the embed
         // module; workers receive the embedded activation over the channel
-        let state = RankState::new(&exec, &cfg, weights, rank, tp, batch, false)?;
+        let state = RankState::new(&exec, &cfg, weights, rank, tp, batch, false, layout)?;
         Ok(WorkerCtx { rank, tp, layers: cfg.layers, arch, exec, state, coll, seq: 0 })
     }
 
@@ -281,15 +305,16 @@ impl WorkerCtx {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
         last: &[usize],
     ) -> Result<HostTensor> {
         let final_x = match self.arch {
-            Arch::Standard => self.fwd_synced(x0, phase, lens, slot, self.layers)?,
-            Arch::Ladder => self.fwd_synced(x0, phase, lens, slot, 0)?,
-            Arch::Hybrid => self.fwd_synced(x0, phase, lens, slot, self.layers / 2)?,
-            Arch::Parallel => self.fwd_parallel(x0, phase, lens, slot)?,
-            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, slot, n)?,
-            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, slot)?,
+            Arch::Standard => self.fwd_synced(x0, phase, lens, slot, paged, self.layers)?,
+            Arch::Ladder => self.fwd_synced(x0, phase, lens, slot, paged, 0)?,
+            Arch::Hybrid => self.fwd_synced(x0, phase, lens, slot, paged, self.layers / 2)?,
+            Arch::Parallel => self.fwd_parallel(x0, phase, lens, slot, paged)?,
+            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, slot, paged, n)?,
+            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, slot, paged)?,
         };
         self.state.lm_head_rows(&self.exec, &final_x, last)
     }
@@ -312,12 +337,14 @@ impl WorkerCtx {
     /// Standard / Ladder / Hybrid (rank-local view of Algorithm 1): for
     /// ladder layers the AllReduce is waited only after the next module has
     /// been issued, so the modeled link time runs while this core computes.
+    #[allow(clippy::too_many_arguments)]
     fn fwd_synced(
         &mut self,
         mut x: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
         ladder_from: usize,
     ) -> Result<HostTensor> {
         let mut pend_attn: Option<u64> = None;
@@ -327,7 +354,7 @@ impl WorkerCtx {
                 if let Some(seq) = pend_attn.take() {
                     self.absorb(&mut x, seq)?;
                 }
-                let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot)?;
+                let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot, paged)?;
                 let attn_seq = self.launch(attn, ReduceOp::Sum)?;
                 if let Some(seq) = pend_mlp.take() {
                     self.absorb(&mut x, seq)?;
@@ -337,7 +364,7 @@ impl WorkerCtx {
                 pend_attn = Some(attn_seq);
                 pend_mlp = Some(mlp_seq);
             } else {
-                let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot)?;
+                let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot, paged)?;
                 let seq = self.launch(attn, ReduceOp::Sum)?;
                 self.absorb(&mut x, seq)?;
                 let mlp = self.state.mlp(&self.exec, i, &x)?;
@@ -361,9 +388,10 @@ impl WorkerCtx {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
         for i in 0..self.layers {
-            let partial = self.state.fused(&self.exec, i, &x, phase, lens, slot)?;
+            let partial = self.state.fused(&self.exec, i, &x, phase, lens, slot, paged)?;
             let seq = self.launch(partial, ReduceOp::Sum)?;
             self.absorb(&mut x, seq)?;
         }
@@ -373,12 +401,14 @@ impl WorkerCtx {
     /// Desync-nx: this rank's residual stream diverges between retained
     /// reduces; a retained reduce carries `partial + r/tp`, re-synchronizing
     /// all streams to the reduced value.
+    #[allow(clippy::too_many_arguments)]
     fn fwd_desync(
         &mut self,
         x0: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
         n: usize,
     ) -> Result<HostTensor> {
         let tp = self.tp as f32;
@@ -388,7 +418,9 @@ impl WorkerCtx {
         for i in 0..self.layers {
             for kind in [BlockSel::Attn, BlockSel::Mlp] {
                 let mut p = match kind {
-                    BlockSel::Attn => self.state.attn(&self.exec, i, &r, phase, lens, slot)?,
+                    BlockSel::Attn => {
+                        self.state.attn(&self.exec, i, &r, phase, lens, slot, paged)?
+                    }
                     BlockSel::Mlp => self.state.mlp(&self.exec, i, &r)?,
                 };
                 c += 1;
@@ -427,9 +459,10 @@ impl WorkerCtx {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
         for i in 0..self.layers {
-            let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot)?;
+            let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot, paged)?;
             let seq = self.launch(attn, ReduceOp::TakeRank0)?;
             self.absorb(&mut x, seq)?;
             let mlp = self.state.mlp(&self.exec, i, &x)?;

@@ -21,6 +21,7 @@ use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
+use super::kv::{KvLayout, PagedFwd, PagedKvCache};
 use super::rank::{Embedder, Phase, RankState};
 use super::threaded::ThreadedRuntime;
 use super::{add_assign, BlockSel};
@@ -66,6 +67,8 @@ pub struct TpEngine {
     pub batch: usize,
     pub runtime: RuntimeKind,
     pub comm: CollectiveEngine,
+    /// KV storage layout (fixed-slot slabs or the paged pool).
+    layout: KvLayout,
     exec: Rc<Exec>,
     /// Sequential runtime's rank states (empty under the threaded runtime,
     /// whose workers own their rank state thread-locally).
@@ -97,7 +100,8 @@ impl TpEngine {
     }
 
     /// Build an engine on an explicit runtime (`--runtime` toggle; the
-    /// sequential oracle is kept so numerics can be diffed engine-vs-engine).
+    /// sequential oracle is kept so numerics can be diffed engine-vs-engine)
+    /// with the default fixed-slot KV layout.
     pub fn with_runtime(
         exec: Rc<Exec>,
         weights: &WeightStore,
@@ -106,6 +110,24 @@ impl TpEngine {
         batch: usize,
         interconnect: Interconnect,
         runtime: RuntimeKind,
+    ) -> Result<TpEngine> {
+        Self::with_layout(exec, weights, tp, arch, batch, interconnect, runtime, KvLayout::Slab)
+    }
+
+    /// Build an engine with an explicit KV layout. `KvLayout::Paged` sizes
+    /// every rank's pool to `pages` pages of `page_size` tokens; requests
+    /// then route their attention through per-request page tables
+    /// ([`TpEngine::prefill_chunk_slot`] / [`TpEngine::decode_paged`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_layout(
+        exec: Rc<Exec>,
+        weights: &WeightStore,
+        tp: usize,
+        arch: Arch,
+        batch: usize,
+        interconnect: Interconnect,
+        runtime: RuntimeKind,
+        layout: KvLayout,
     ) -> Result<TpEngine> {
         let cfg = exec.cfg().clone();
         let sp = exec.serving();
@@ -128,6 +150,17 @@ impl TpEngine {
         if cfg.ffn % tp != 0 || cfg.vocab % tp != 0 {
             bail!("tp={tp} does not divide ffn/vocab");
         }
+        if let KvLayout::Paged { page_size, pages } = layout {
+            if page_size == 0 || pages == 0 {
+                bail!("paged KV layout needs page_size > 0 and pages > 0");
+            }
+            if sp.compiled_shapes {
+                bail!(
+                    "paged KV attention is not in the compiled-shape export set — \
+                     use the native backend for paged engines"
+                );
+            }
+        }
         // Upperbound deletes ALL communication (paper: "removes all
         // communication operations"), including the lm-head AllGather — so
         // its collective engine runs on the free local fabric.
@@ -140,7 +173,7 @@ impl TpEngine {
         let (ranks, threaded, embedder) = match runtime {
             RuntimeKind::Sequential => {
                 let ranks = (0..tp)
-                    .map(|t| RankState::new(&exec, &cfg, weights, t, tp, batch, t == 0))
+                    .map(|t| RankState::new(&exec, &cfg, weights, t, tp, batch, t == 0, layout))
                     .collect::<Result<Vec<_>>>()?;
                 (ranks, None, None)
             }
@@ -151,6 +184,7 @@ impl TpEngine {
                     tp,
                     arch,
                     batch,
+                    layout,
                     comm.rendezvous(),
                 )?;
                 (Vec::new(), Some(rt), Some(Embedder::new(&exec, weights)?))
@@ -163,6 +197,7 @@ impl TpEngine {
             batch,
             runtime,
             comm,
+            layout,
             exec,
             ranks,
             threaded,
@@ -208,13 +243,14 @@ impl TpEngine {
         bucket: usize,
         true_lens: &[usize],
     ) -> Result<HostTensor> {
+        self.want_slab("prefill")?;
         let b = self.batch;
         if tokens.len() != b * bucket || true_lens.len() != b {
             bail!("prefill shapes: {} tokens, {} lens", tokens.len(), true_lens.len());
         }
         let x0 = self.embed(tokens, b, bucket)?;
         let last: Vec<usize> = true_lens.iter().map(|&l| l - 1).collect();
-        let logits = self.run(x0, Phase::Prefill, None, None, &last)?;
+        let logits = self.run(x0, Phase::Prefill, None, None, &last, None)?;
         for (slot, &l) in true_lens.iter().enumerate() {
             self.lens[slot] = l as i32;
         }
@@ -230,11 +266,12 @@ impl TpEngine {
         bucket: usize,
         true_len: usize,
     ) -> Result<Vec<f32>> {
+        self.want_slab("prefill_slot")?;
         if slot >= self.batch {
             bail!("slot {slot} out of range");
         }
         let x0 = self.embed(tokens, 1, bucket)?;
-        let logits = self.run(x0, Phase::Prefill, None, Some(slot), &[true_len - 1])?;
+        let logits = self.run(x0, Phase::Prefill, None, Some(slot), &[true_len - 1], None)?;
         self.lens[slot] = true_len as i32;
         Ok(logits.data)
     }
@@ -243,6 +280,7 @@ impl TpEngine {
     /// and advances every slot's length. Inactive slots decode garbage that
     /// is never read (their cache writes land beyond any live region).
     pub fn decode(&mut self, tokens: &[i32]) -> Result<HostTensor> {
+        self.want_slab("decode")?;
         let b = self.batch;
         if tokens.len() != b {
             bail!("decode wants {b} tokens, got {}", tokens.len());
@@ -250,26 +288,122 @@ impl TpEngine {
         let lens = self.lens.clone();
         let x0 = self.embed(tokens, b, 1)?;
         let last = vec![0usize; b];
-        let logits = self.run(x0, Phase::Decode, Some(&lens), None, &last)?;
+        let logits = self.run(x0, Phase::Decode, Some(&lens), None, &last, None)?;
         for l in self.lens.iter_mut() {
             *l += 1;
         }
         Ok(logits)
     }
 
-    /// Release a slot (request finished/evicted).
+    /// Prefill one chunk of `slot`'s prompt through the paged pool
+    /// (continuous batching with chunked prefill): `tokens` are the chunk's
+    /// token ids, `start` its first global position, `table` the request's
+    /// page table (which must back `start + tokens.len()` positions).
+    /// Returns last-position logits [V] — only meaningful for the final
+    /// chunk. Because every kernel is row-local and keys are visited in
+    /// logical order, the final chunk's logits are bitwise identical to a
+    /// one-shot slab prefill of the whole prompt.
+    pub fn prefill_chunk_slot(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        start: usize,
+        table: &[u32],
+    ) -> Result<Vec<f32>> {
+        self.want_paged("prefill_chunk_slot")?;
+        if slot >= self.batch {
+            bail!("slot {slot} out of range");
+        }
+        if tokens.is_empty() {
+            bail!("empty prefill chunk");
+        }
+        let end = start + tokens.len();
+        let KvLayout::Paged { page_size, .. } = self.layout else { unreachable!() };
+        if table.len() * page_size < end {
+            bail!("page table backs {} tokens, chunk ends at {end}", table.len() * page_size);
+        }
+        let paged = PagedFwd {
+            tables: table.iter().map(|&p| p as i32).collect(),
+            max_pages: table.len(),
+            start: start as i32,
+        };
+        let x0 = self.embed(tokens, 1, tokens.len())?;
+        let logits =
+            self.run(x0, Phase::Prefill, None, Some(slot), &[tokens.len() - 1], Some(&paged))?;
+        self.lens[slot] = end as i32;
+        Ok(logits.data)
+    }
+
+    /// One paged decode step: `tokens` is [B], `active[b]` says which slots
+    /// really decode (inactive slots are skipped inside the module — no
+    /// page access, no length advance), and `tables` is the `-1`-padded
+    /// `[B, max_pages]` page-table matrix. Returns logits [B, V]; inactive
+    /// rows are garbage and must not be read.
+    pub fn decode_paged(
+        &mut self,
+        tokens: &[i32],
+        active: &[bool],
+        tables: Vec<i32>,
+        max_pages: usize,
+    ) -> Result<HostTensor> {
+        self.want_paged("decode_paged")?;
+        let b = self.batch;
+        if tokens.len() != b || active.len() != b || tables.len() != b * max_pages {
+            bail!(
+                "decode_paged shapes: {} tokens, {} active, {} table entries for batch {b}",
+                tokens.len(),
+                active.len(),
+                tables.len()
+            );
+        }
+        let mut lens = self.lens.clone();
+        for (l, &a) in lens.iter_mut().zip(active) {
+            if !a {
+                *l = -1;
+            }
+        }
+        let paged = PagedFwd { tables, max_pages, start: 0 };
+        let x0 = self.embed(tokens, b, 1)?;
+        let last = vec![0usize; b];
+        let logits = self.run(x0, Phase::Decode, Some(&lens), None, &last, Some(&paged))?;
+        for (slot, &a) in active.iter().enumerate() {
+            if a {
+                self.lens[slot] += 1;
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Release a slot (request finished/evicted). Slab layouts zero the
+    /// slot's written prefix; paged layouts only reset the length (the
+    /// batcher's allocator reclaims the pages).
     pub fn release_slot(&mut self, slot: usize) {
+        let written = self.lens[slot].max(0) as usize;
         self.lens[slot] = 0;
         match self.runtime {
             RuntimeKind::Sequential => {
                 for rank in &mut self.ranks {
-                    rank.kv.clear_slot(slot);
+                    rank.release_slot(slot, written);
                 }
             }
             RuntimeKind::Threaded => {
-                self.threaded.as_ref().expect("threaded runtime").release_slot(slot);
+                self.threaded.as_ref().expect("threaded runtime").release_slot(slot, written);
             }
         }
+    }
+
+    fn want_slab(&self, what: &str) -> Result<()> {
+        if self.layout.is_paged() {
+            bail!("{what} is a slab-layout entry point; this engine is paged");
+        }
+        Ok(())
+    }
+
+    fn want_paged(&self, what: &str) -> Result<()> {
+        if !self.layout.is_paged() {
+            bail!("{what} needs a paged engine (KvLayout::Paged)");
+        }
+        Ok(())
     }
 
     /// KV bytes one slot occupies across all ranks (batcher admission unit).
@@ -277,6 +411,30 @@ impl TpEngine {
     /// `KvCache::bytes_per_slot`, and available without a worker round-trip.
     pub fn kv_bytes_per_slot(&self) -> usize {
         super::kv::KvCache::bytes_per_slot_all_ranks(&self.cfg, self.tp)
+    }
+
+    /// This engine's KV storage layout.
+    pub fn kv_layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    /// Bytes one KV page occupies across all ranks (paged admission unit).
+    pub fn kv_page_bytes(&self) -> usize {
+        match self.layout {
+            KvLayout::Slab => 0,
+            KvLayout::Paged { page_size, .. } => {
+                PagedKvCache::page_bytes_all_ranks(&self.cfg, self.tp, page_size)
+            }
+        }
+    }
+
+    /// Pages a maximal (`max_seq`-long) sequence needs — the fixed width of
+    /// the per-forward page-table matrix.
+    pub fn kv_max_pages_per_seq(&self) -> usize {
+        match self.layout {
+            KvLayout::Slab => 0,
+            KvLayout::Paged { page_size, .. } => self.cfg.max_seq.div_ceil(page_size),
+        }
     }
 
     pub fn exec(&self) -> &Exec {
@@ -304,7 +462,8 @@ impl TpEngine {
     }
 
     /// Full forward + LM head on the active runtime. `last[b]` is the
-    /// position whose logits each row wants.
+    /// position whose logits each row wants; `paged` carries the page-table
+    /// view when this engine routes KV through the paged pool.
     fn run(
         &mut self,
         x0: HostTensor,
@@ -312,10 +471,11 @@ impl TpEngine {
         lens: Option<&[i32]>,
         slot: Option<usize>,
         last: &[usize],
+        paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
         match self.runtime {
             RuntimeKind::Sequential => {
-                let finals = self.forward(x0, phase, lens, slot)?;
+                let finals = self.forward(x0, phase, lens, slot, paged)?;
                 self.head(&finals, last)
             }
             RuntimeKind::Threaded => {
@@ -323,7 +483,7 @@ impl TpEngine {
                     .threaded
                     .as_ref()
                     .expect("threaded runtime")
-                    .forward(x0, phase, lens, slot, last)?;
+                    .forward(x0, phase, lens, slot, paged, last)?;
                 self.comm.allgather_concat(shards)
             }
         }
@@ -340,14 +500,15 @@ impl TpEngine {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
     ) -> Result<Vec<HostTensor>> {
         match self.arch {
-            Arch::Standard => self.fwd_synced(x0, phase, lens, slot, self.cfg.layers),
-            Arch::Ladder => self.fwd_synced(x0, phase, lens, slot, 0),
-            Arch::Hybrid => self.fwd_synced(x0, phase, lens, slot, self.cfg.layers / 2),
-            Arch::Parallel => self.fwd_parallel(x0, phase, lens, slot),
-            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, slot, n),
-            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, slot),
+            Arch::Standard => self.fwd_synced(x0, phase, lens, slot, paged, self.cfg.layers),
+            Arch::Ladder => self.fwd_synced(x0, phase, lens, slot, paged, 0),
+            Arch::Hybrid => self.fwd_synced(x0, phase, lens, slot, paged, self.cfg.layers / 2),
+            Arch::Parallel => self.fwd_parallel(x0, phase, lens, slot, paged),
+            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, slot, paged, n),
+            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, slot, paged),
         }
     }
 
@@ -362,6 +523,7 @@ impl TpEngine {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
         ladder_from: usize,
     ) -> Result<Vec<HostTensor>> {
         let layers = self.cfg.layers;
@@ -373,7 +535,7 @@ impl TpEngine {
                 if let Some(h) = pend_attn.take() {
                     self.absorb(&mut x, h); // wait prev layer's attn reduce
                 }
-                let attn = self.run_attn_all(i, &x, phase, lens, slot)?;
+                let attn = self.run_attn_all(i, &x, phase, lens, slot, paged)?;
                 let attn_h = self.comm.allreduce(attn)?; // async
                 if let Some(h) = pend_mlp.take() {
                     self.absorb(&mut x, h); // wait prev layer's MLP reduce
@@ -384,7 +546,7 @@ impl TpEngine {
                 pend_mlp = Some(mlp_h);
             } else {
                 // -- standard block: blocking reduces --
-                let attn = self.run_attn_all(i, &x, phase, lens, slot)?;
+                let attn = self.run_attn_all(i, &x, phase, lens, slot, paged)?;
                 let h = self.comm.allreduce(attn)?;
                 self.absorb(&mut x, h);
                 let mlp = self.run_mlp_all(i, &x)?;
@@ -408,11 +570,12 @@ impl TpEngine {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
     ) -> Result<Vec<HostTensor>> {
         for i in 0..self.cfg.layers {
             let mut partials = Vec::with_capacity(self.tp);
             for t in 0..self.tp {
-                partials.push(self.ranks[t].fused(&self.exec, i, &x, phase, lens, slot)?);
+                partials.push(self.ranks[t].fused(&self.exec, i, &x, phase, lens, slot, paged)?);
             }
             let h = self.comm.allreduce(partials)?;
             self.absorb(&mut x, h);
@@ -428,6 +591,7 @@ impl TpEngine {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
         n: usize,
     ) -> Result<Vec<HostTensor>> {
         let tp = self.tp;
@@ -440,7 +604,7 @@ impl TpEngine {
                 for t in 0..tp {
                     let p = match kind {
                         BlockSel::Attn => {
-                            self.ranks[t].attn(&self.exec, i, &rs[t], phase, lens, slot)?
+                            self.ranks[t].attn(&self.exec, i, &rs[t], phase, lens, slot, paged)?
                         }
                         BlockSel::Mlp => self.ranks[t].mlp(&self.exec, i, &rs[t])?,
                     };
@@ -495,9 +659,10 @@ impl TpEngine {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
     ) -> Result<Vec<HostTensor>> {
         for i in 0..self.cfg.layers {
-            let attn = self.run_attn_all(i, &x, phase, lens, slot)?;
+            let attn = self.run_attn_all(i, &x, phase, lens, slot, paged)?;
             add_assign(&mut x, &attn[0]);
             let mlp = self.run_mlp_all(i, &x)?;
             add_assign(&mut x, &mlp[0]);
@@ -509,6 +674,7 @@ impl TpEngine {
     // helpers
     // ---------------------------------------------------------------------
 
+    #[allow(clippy::too_many_arguments)]
     fn run_attn_all(
         &mut self,
         layer: usize,
@@ -516,10 +682,11 @@ impl TpEngine {
         phase: Phase,
         lens: Option<&[i32]>,
         slot: Option<usize>,
+        paged: Option<&PagedFwd>,
     ) -> Result<Vec<HostTensor>> {
         let t0 = std::time::Instant::now();
         let out: Result<Vec<HostTensor>> = (0..self.tp)
-            .map(|t| self.ranks[t].attn(&self.exec, layer, x, phase, lens, slot))
+            .map(|t| self.ranks[t].attn(&self.exec, layer, x, phase, lens, slot, paged))
             .collect();
         if let Some(tr) = &mut self.tracer {
             tr.record(&format!("attn{layer}"), 0, t0, std::time::Instant::now());

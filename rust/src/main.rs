@@ -14,7 +14,7 @@ use std::rc::Rc;
 
 use anyhow::Result;
 use ladder_infer::comm::Interconnect;
-use ladder_infer::engine::{generate, RuntimeKind, Sampler, TpEngine};
+use ladder_infer::engine::{generate, KvLayout, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::perfmodel::tables;
 use ladder_infer::runtime::{BackendKind, Exec};
@@ -62,6 +62,33 @@ fn engine_args(program: &str, about: &str) -> Args {
             Some("42"),
             "weight seed (tiny prefers shipped test weights when artifacts exist)",
         )
+        .opt(
+            "page-size",
+            Some("0"),
+            "KV page size in tokens (0 = legacy fixed-slot slabs; >0 = paged KV pool)",
+        )
+        .opt(
+            "kv-budget-mb",
+            Some("0"),
+            "KV admission budget in MiB (0 = storage capacity is the only limit)",
+        )
+}
+
+/// KV layout from the shared flags: `--page-size 0` keeps the fixed-slot
+/// slabs; a positive page size builds a paged pool sized from
+/// `--kv-budget-mb` by [`KvLayout::paged_from_budget`].
+fn kv_layout(args: &Args, cfg: &ladder_infer::model::LlamaConfig) -> anyhow::Result<KvLayout> {
+    let page_size = args.get_usize("page-size")?;
+    if page_size == 0 {
+        return Ok(KvLayout::Slab);
+    }
+    Ok(KvLayout::paged_from_budget(
+        cfg,
+        args.get_usize("tp")?,
+        page_size,
+        args.get_usize("kv-budget-mb")? << 20,
+        args.get_usize("batch")?,
+    ))
 }
 
 fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
@@ -80,7 +107,7 @@ fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
         }
         _ => WeightStore::random(&cfg, args.get_usize("seed")? as u64),
     };
-    let engine = TpEngine::with_runtime(
+    let engine = TpEngine::with_layout(
         exec,
         &weights,
         args.get_usize("tp")?,
@@ -88,6 +115,7 @@ fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
         args.get_usize("batch")?,
         Interconnect::parse(&args.get("fabric")?)?,
         RuntimeKind::parse(&args.get("runtime")?)?,
+        kv_layout(args, &cfg)?,
     )?;
     let tok = Tokenizer::bytes_only(cfg.vocab);
     Ok((engine, tok))
@@ -135,13 +163,18 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt("port", Some("8771"), "listen port (0 = ephemeral)")
         .opt("max-requests", Some("0"), "stop after N completions (0 = forever)")
         .opt("decode-burst", Some("1"), "decode steps per scheduler iteration")
-        .opt("kv-budget-mb", Some("0"), "KV admission budget in MiB (0 = slots only)")
+        .opt(
+            "prefill-chunk",
+            Some("32"),
+            "paged engines: prompt tokens prefilled per scheduler iteration (0 = whole prompt)",
+        )
         .parse(argv)?;
     let (engine, tok) = build_engine(&args)?;
     let backend = engine.backend_name();
     let config = BatcherConfig {
         decode_burst: args.get_usize("decode-burst")?,
         kv_budget_bytes: args.get_usize("kv-budget-mb")? * (1 << 20),
+        prefill_chunk: args.get_usize("prefill-chunk")?,
     };
     let mut batcher = Batcher::with_tokenizer(engine, config, tok.clone());
     let addr = format!("127.0.0.1:{}", args.get_usize("port")?);

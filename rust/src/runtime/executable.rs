@@ -119,6 +119,16 @@ impl Backend for XlaBackend {
     }
 
     fn run(&self, module: &str, args: &[&Value]) -> Result<Vec<Value>> {
+        // Paged-KV modules are not part of the AOT export set yet: fail
+        // with the actual gap instead of a generic missing-module error
+        // from the artifact manifest.
+        if module.split("__").next().is_some_and(|k| k.ends_with("_paged")) {
+            return Err(anyhow!(
+                "module {module:?}: paged-KV attention is not in the HLO export set — \
+                 run paged engines on the native backend (`--backend native`), or extend \
+                 python/compile to export paged modules"
+            ));
+        }
         let lits: Vec<&Literal> = args
             .iter()
             .map(|v| match v {

@@ -74,6 +74,10 @@ impl Backend for NativeBackend {
             "attn_decode" => self.attn(module, args, Phase::Decode, false),
             "fused_prefill" => self.attn(module, args, Phase::Prefill, true),
             "fused_decode" => self.attn(module, args, Phase::Decode, true),
+            "attn_prefill_paged" => self.attn_paged(module, args, Phase::Prefill, false),
+            "attn_decode_paged" => self.attn_paged(module, args, Phase::Decode, false),
+            "fused_prefill_paged" => self.attn_paged(module, args, Phase::Prefill, true),
+            "fused_decode_paged" => self.attn_paged(module, args, Phase::Decode, true),
             "mlp" => self.mlp(module, args),
             "lm_head" => self.lm_head(module, args),
             k if k.starts_with("train_") || k.starts_with("eval_") => bail!(
@@ -326,6 +330,214 @@ impl NativeBackend {
             Value::F32(partial),
             Value::F32(HostTensor::new(kc.shape.clone(), kc2)),
             Value::F32(HostTensor::new(vc.shape.clone(), vc2)),
+        ])
+    }
+
+    /// `attn_*_paged` / `fused_*_paged`: the attention block with its K/V
+    /// reads and writes routed through **page tables** instead of per-slot
+    /// slabs (plus the MLP branch when fused).
+    ///
+    /// Prefill args: x, norm, wq, wk, wv, wo, [wg, wu, wd,] k_pool, v_pool,
+    ///               table i32 [B, maxp], start i32 [B]
+    /// Decode args:  ..., k_pool, v_pool, table i32 [B, maxp], lens i32 [B]
+    ///
+    /// Pools are `[P, KVl, page_size, D]`; token position `t` of row `b`
+    /// lives in page `table[b][t / page_size]` at offset `t % page_size`.
+    /// Outputs are `(partial, k_rows, v_rows)` where the row tensors are
+    /// `[B, S, KVl, D]` — only the *freshly written* entries, which the
+    /// caller scatters into its pool (the module never mutates the pool, so
+    /// it stays functional like every other exported module while avoiding
+    /// a whole-pool copy in its outputs).
+    ///
+    /// Bitwise contract: for every query, keys are visited in ascending
+    /// logical position (pool pages for the cached prefix, then the fresh
+    /// chunk), which is exactly the slab path's accumulation order — so
+    /// chunked-paged logits are bit-identical to one-shot slab logits
+    /// (asserted by the unit tests below and the paged stress harness).
+    ///
+    /// A decode row with `lens[b] < 0` is **inactive** (idle batch slot):
+    /// its attention is skipped entirely — no pool read, `partial` row
+    /// zeros from the attention branch — and the caller must not scatter
+    /// its `k_rows`/`v_rows`.
+    fn attn_paged(
+        &self,
+        module: &str,
+        args: &[&Value],
+        phase: Phase,
+        fused: bool,
+    ) -> Result<Vec<Value>> {
+        let base = if fused { 9 } else { 6 };
+        let want = base + 4;
+        if args.len() != want {
+            bail!("{module}: want {want} args, got {}", args.len());
+        }
+        let x = f32_arg(module, args, 0)?;
+        let norm = f32_arg(module, args, 1)?;
+        let wq = f32_arg(module, args, 2)?;
+        let wk = f32_arg(module, args, 3)?;
+        let wv = f32_arg(module, args, 4)?;
+        let wo = f32_arg(module, args, 5)?;
+        let k_pool = f32_arg(module, args, base)?;
+        let v_pool = f32_arg(module, args, base + 1)?;
+        let (table, tshape) = i32_arg(module, args, base + 2)?;
+        let (pos_arg, pshape) = i32_arg(module, args, base + 3)?;
+
+        if x.shape.len() != 3 {
+            bail!("{module}: x wants [B,S,H], got {:?}", x.shape);
+        }
+        let (b, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
+        if k_pool.shape.len() != 4 || k_pool.shape != v_pool.shape {
+            bail!("{module}: pool shape {:?} vs {:?}", k_pool.shape, v_pool.shape);
+        }
+        let (pages, kvl, page_size, d) =
+            (k_pool.shape[0], k_pool.shape[1], k_pool.shape[2], k_pool.shape[3]);
+        if d != self.cfg.head_dim {
+            bail!("{module}: pool head_dim {d} != config {}", self.cfg.head_dim);
+        }
+        if self.cfg.kv_heads % kvl != 0 {
+            bail!("{module}: {kvl} local kv heads do not divide kv_heads {}", self.cfg.kv_heads);
+        }
+        let tp = self.cfg.kv_heads / kvl;
+        let hl = self.cfg.heads / tp; // local q heads
+        if wq.shape != vec![h, hl * d] || wk.shape != vec![h, kvl * d] {
+            bail!(
+                "{module}: weight shards wq {:?} / wk {:?} inconsistent with tp={tp}",
+                wq.shape,
+                wk.shape
+            );
+        }
+        if tshape.len() != 2 || tshape[0] != b {
+            bail!("{module}: table shape {tshape:?}, want [{b}, maxp]");
+        }
+        let maxp = tshape[1];
+        if pshape != [b] {
+            bail!("{module}: positions shape {pshape:?}, want [{b}]");
+        }
+        if phase == Phase::Decode && s != 1 {
+            bail!("{module}: decode wants S=1, got {s}");
+        }
+
+        // projections on the normed input (rows = B*S, layout [row, head*d])
+        let rows = b * s;
+        let y = rmsnorm(&x.data, h, &norm.data, self.cfg.norm_eps as f32);
+        let mut q = matmul(&y, rows, h, &wq.data, hl * d);
+        let mut k = matmul(&y, rows, h, &wk.data, kvl * d);
+        let v = matmul(&y, rows, h, &wv.data, kvl * d);
+
+        // rotary positions: start[b] + si (chunked prefill) or lens[b]
+        // (decode). Inactive decode rows (lens < 0) rotate by a garbage
+        // position; their projections are never read.
+        let theta = self.cfg.rope_theta as f32;
+        let pos_of = |bi: usize, si: usize| -> f32 {
+            match phase {
+                Phase::Prefill => (pos_arg[bi] + si as i32) as f32,
+                Phase::Decode => pos_arg[bi].max(0) as f32,
+            }
+        };
+        rope(&mut q, b, s, hl, d, theta, &pos_of);
+        rope(&mut k, b, s, kvl, d, theta, &pos_of);
+
+        // one key/value slice per logical position: the cached prefix comes
+        // from the pool through the page table, the fresh chunk from k/v.
+        let pool_at = |bi: usize, kh: usize, j: usize| -> Result<usize> {
+            // bound within the ROW: an overflow on a non-last row would
+            // otherwise silently read the next request's page id
+            let pi = j / page_size;
+            if pi >= maxp {
+                bail!("{module}: row {bi} position {j} beyond its {maxp}-page table");
+            }
+            let page = table[bi * maxp + pi];
+            if page < 0 || page as usize >= pages {
+                bail!("{module}: row {bi} position {j} maps to invalid page {page}");
+            }
+            Ok(((page as usize * kvl + kh) * page_size + j % page_size) * d)
+        };
+
+        let group = hl / kvl;
+        let scale = (d as f32).powf(-0.5);
+        let mut attn_out = vec![0.0f32; rows * hl * d]; // [row, head*d]
+        let mut probs = vec![0.0f32; maxp * page_size + s];
+        for bi in 0..b {
+            // logical positions below `boundary` live in the pool; at or
+            // above it they are rows of this call's fresh K/V
+            let boundary = match phase {
+                Phase::Prefill => pos_arg[bi].max(0) as usize,
+                Phase::Decode => {
+                    if pos_arg[bi] < 0 {
+                        continue; // inactive slot: attention skipped
+                    }
+                    pos_arg[bi] as usize
+                }
+            };
+            for head in 0..hl {
+                let kh = head / group;
+                for qi in 0..s {
+                    let qoff = (bi * s + qi) * hl * d + head * d;
+                    let ctx = boundary + qi + 1; // causal over logical positions
+                    if ctx > probs.len() {
+                        bail!(
+                            "{module}: row {bi} context {ctx} exceeds the page table's \
+                             {maxp} pages"
+                        );
+                    }
+                    let qrow = &q[qoff..qoff + d];
+                    let mut m = f32::NEG_INFINITY;
+                    for (j, p) in probs.iter_mut().enumerate().take(ctx) {
+                        let keys: &[f32] = if j < boundary { &k_pool.data } else { &k };
+                        let koff = if j < boundary {
+                            pool_at(bi, kh, j)?
+                        } else {
+                            (bi * s + (j - boundary)) * kvl * d + kh * d
+                        };
+                        let mut dot = 0.0f32;
+                        for (a, kb) in qrow.iter().zip(&keys[koff..koff + d]) {
+                            dot += a * kb;
+                        }
+                        *p = dot * scale;
+                        m = m.max(*p);
+                    }
+                    let mut denom = 0.0f32;
+                    for p in probs.iter_mut().take(ctx) {
+                        *p = (*p - m).exp();
+                        denom += *p;
+                    }
+                    let out = &mut attn_out[qoff..qoff + d];
+                    for (j, p) in probs.iter().enumerate().take(ctx) {
+                        let w = p / denom;
+                        let vals: &[f32] = if j < boundary { &v_pool.data } else { &v };
+                        let voff = if j < boundary {
+                            pool_at(bi, kh, j)?
+                        } else {
+                            (bi * s + (j - boundary)) * kvl * d + kh * d
+                        };
+                        for (o, vv) in out.iter_mut().zip(&vals[voff..voff + d]) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+            }
+        }
+
+        // output projection back to the residual width
+        let mut partial =
+            HostTensor::new(x.shape.clone(), matmul(&attn_out, rows, hl * d, &wo.data, h));
+
+        if fused {
+            let wg = f32_arg(module, args, 6)?;
+            let wu = f32_arg(module, args, 7)?;
+            let wd = f32_arg(module, args, 8)?;
+            // PaLM fusion: the MLP branch reuses the shared pre-norm weights
+            let mlp = self.mlp_partial(module, x, norm, wg, wu, wd)?;
+            for (a, m) in partial.data.iter_mut().zip(&mlp.data) {
+                *a += m;
+            }
+        }
+
+        let row_shape = vec![b, s, kvl, d];
+        Ok(vec![
+            Value::F32(partial),
+            Value::F32(HostTensor::new(row_shape.clone(), k)),
+            Value::F32(HostTensor::new(row_shape, v)),
         ])
     }
 
@@ -600,6 +812,178 @@ mod tests {
         for ((f, a), m) in fused_t.data.iter().zip(&attn_t.data).zip(&mlp_t.data) {
             assert!((f - (a + m)).abs() < 1e-6);
         }
+    }
+
+    /// Scatter `[1, s, kvl, d]` fresh rows into a `[P, kvl, page, d]` pool
+    /// at logical positions `start..start+s` — the host-side write the
+    /// engine's rank state performs after every paged module call.
+    fn scatter(pool: &mut HostTensor, rows: &HostTensor, start: usize, table: &[i32]) {
+        let (kvl, page, d) = (pool.shape[1], pool.shape[2], pool.shape[3]);
+        let s = rows.shape[1];
+        for si in 0..s {
+            let pos = start + si;
+            let pg = table[pos / page] as usize;
+            for kh in 0..kvl {
+                let src = (si * kvl + kh) * d;
+                let at = ((pg * kvl + kh) * page + pos % page) * d;
+                pool.data[at..at + d].copy_from_slice(&rows.data[src..src + d]);
+            }
+        }
+    }
+
+    /// Chunked prefill + decode through page tables must reproduce the slab
+    /// path BITWISE (same values, same accumulation order) — this is the
+    /// contract that lets the fixed-slot determinism suites stay the oracle
+    /// for the paged serving path.
+    #[test]
+    fn paged_attention_is_bitwise_identical_to_slab() {
+        let be = backend();
+        let cfg = LlamaConfig::builtin("tiny").unwrap();
+        let (h, d) = (cfg.hidden, cfg.head_dim);
+        let tp = 2;
+        let (hl, kvl) = (cfg.heads / tp, cfg.kv_heads / tp);
+        let mut rng = crate::util::rng::Rng::new(0x9a6e);
+        let mut t = |r: usize, c: usize, scale: f32| {
+            HostTensor::new(vec![r, c], rng.normal_vec(r * c, scale))
+        };
+        let norm = f32v(HostTensor::new(vec![h], rng.normal_vec(h, 1.0)));
+        let wq = f32v(t(h, hl * d, 0.1));
+        let wk = f32v(t(h, kvl * d, 0.1));
+        let wv = f32v(t(h, kvl * d, 0.1));
+        let wo = f32v(t(hl * d, h, 0.1));
+        let prompt_len = 5;
+        let x_full = t(1, (prompt_len + 1) * h, 0.5).data; // prompt + 1 decode row
+
+        // -- slab reference: one-shot prefill over 5 rows, then a decode --
+        let max_seq = 8;
+        let kc0 = f32v(HostTensor::zeros(vec![1, kvl, max_seq, d]));
+        let vc0 = f32v(HostTensor::zeros(vec![1, kvl, max_seq, d]));
+        let x_a = f32v(HostTensor::new(vec![1, prompt_len, h], x_full[..prompt_len * h].to_vec()));
+        let slab_pre = be
+            .run("attn_prefill__tp2__b1__s5", &[&x_a, &norm, &wq, &wk, &wv, &wo, &kc0, &vc0])
+            .unwrap();
+        let slab_partial = slab_pre[0].to_f32().unwrap();
+        let x_d = f32v(HostTensor::new(vec![1, 1, h], x_full[prompt_len * h..].to_vec()));
+        let lens = be.upload_i32(&[prompt_len as i32], &[1]).unwrap();
+        let slab_dec = be
+            .run(
+                "attn_decode__tp2__b1",
+                &[&x_d, &norm, &wq, &wk, &wv, &wo, &slab_pre[1], &slab_pre[2], &lens],
+            )
+            .unwrap();
+        let slab_dec_partial = slab_dec[0].to_f32().unwrap();
+
+        // -- paged: page_size 2, prefill in chunks of 3 + 2, then decode --
+        let (pages, page) = (4usize, 2usize);
+        let table: Vec<i32> = vec![0, 1, 2, 3];
+        let mut k_pool = HostTensor::zeros(vec![pages, kvl, page, d]);
+        let mut v_pool = HostTensor::zeros(vec![pages, kvl, page, d]);
+        let table_v = be.upload_i32(&table, &[1, pages]).unwrap();
+        let run_chunk = |kp_h: &mut HostTensor, vp_h: &mut HostTensor, start: usize, s: usize| {
+            let x = f32v(HostTensor::new(
+                vec![1, s, h],
+                x_full[start * h..(start + s) * h].to_vec(),
+            ));
+            let kp = f32v(kp_h.clone());
+            let vp = f32v(vp_h.clone());
+            let st = be.upload_i32(&[start as i32], &[1]).unwrap();
+            let out = be
+                .run(
+                    &format!("attn_prefill_paged__tp2__b1__s{s}"),
+                    &[&x, &norm, &wq, &wk, &wv, &wo, &kp, &vp, &table_v, &st],
+                )
+                .unwrap();
+            let partial = out[0].to_f32().unwrap();
+            scatter(kp_h, &out[1].to_f32().unwrap(), start, &table);
+            scatter(vp_h, &out[2].to_f32().unwrap(), start, &table);
+            partial
+        };
+        let chunk_a = run_chunk(&mut k_pool, &mut v_pool, 0, 3);
+        let chunk_b = run_chunk(&mut k_pool, &mut v_pool, 3, 2);
+        // chunk rows must equal the corresponding one-shot prefill rows,
+        // bit for bit (assert_eq on f32: exact equality)
+        assert_eq!(chunk_a.data[..], slab_partial.data[..3 * h]);
+        assert_eq!(chunk_b.data[..], slab_partial.data[3 * h..]);
+
+        let kp = f32v(k_pool.clone());
+        let vp = f32v(v_pool.clone());
+        let paged_dec = be
+            .run(
+                "attn_decode_paged__tp2__b1",
+                &[&x_d, &norm, &wq, &wk, &wv, &wo, &kp, &vp, &table_v, &lens],
+            )
+            .unwrap();
+        assert_eq!(paged_dec[0].to_f32().unwrap().data, slab_dec_partial.data);
+        // the fresh decode rows the caller would scatter are the rotated
+        // K/V of position 5 — identical to what the slab wrote there
+        let slab_kc = slab_dec[1].to_f32().unwrap();
+        let k_rows = paged_dec[1].to_f32().unwrap();
+        for kh in 0..kvl {
+            let slab_at = (kh * max_seq + prompt_len) * d;
+            assert_eq!(k_rows.data[kh * d..(kh + 1) * d], slab_kc.data[slab_at..slab_at + d]);
+        }
+    }
+
+    #[test]
+    fn paged_decode_skips_inactive_rows() {
+        let be = backend();
+        let cfg = LlamaConfig::builtin("tiny").unwrap();
+        let (h, d) = (cfg.hidden, cfg.head_dim);
+        let (hl, kvl) = (cfg.heads / 2, cfg.kv_heads / 2);
+        let mut rng = crate::util::rng::Rng::new(0x51ee);
+        let mut t = |r: usize, c: usize| HostTensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+        let norm = f32v(HostTensor::new(vec![h], vec![1.0; h]));
+        let (wq, wk, wv, wo) =
+            (f32v(t(h, hl * d)), f32v(t(h, kvl * d)), f32v(t(h, kvl * d)), f32v(t(hl * d, h)));
+        let (pages, page) = (2usize, 4usize);
+        let mut k_pool = HostTensor::zeros(vec![pages, kvl, page, d]);
+        let mut v_pool = HostTensor::zeros(vec![pages, kvl, page, d]);
+        // seed the pool with a 2-token prefix for the active row
+        let x_pre = f32v(HostTensor::new(vec![1, 2, h], rng.normal_vec(2 * h, 0.5)));
+        let table1 = be.upload_i32(&[0, 1], &[1, 2]).unwrap();
+        let start = be.upload_i32(&[0], &[1]).unwrap();
+        let kp = f32v(k_pool.clone());
+        let vp = f32v(v_pool.clone());
+        let pre = be
+            .run(
+                "attn_prefill_paged__tp2__b1__s2",
+                &[&x_pre, &norm, &wq, &wk, &wv, &wo, &kp, &vp, &table1, &start],
+            )
+            .unwrap();
+        scatter(&mut k_pool, &pre[1].to_f32().unwrap(), 0, &[0, 1]);
+        scatter(&mut v_pool, &pre[2].to_f32().unwrap(), 0, &[0, 1]);
+
+        let x_row = rng.normal_vec(h, 0.5);
+        // b=1 reference decode for the active row
+        let kp = f32v(k_pool.clone());
+        let vp = f32v(v_pool.clone());
+        let x1 = f32v(HostTensor::new(vec![1, 1, h], x_row.clone()));
+        let lens1 = be.upload_i32(&[2], &[1]).unwrap();
+        let solo = be
+            .run(
+                "attn_decode_paged__tp2__b1",
+                &[&x1, &norm, &wq, &wk, &wv, &wo, &kp, &vp, &table1, &lens1],
+            )
+            .unwrap();
+        // b=2: row 0 inactive (lens -1, table -1), row 1 is the active row
+        let mut x2 = rng.normal_vec(h, 0.5); // garbage activation, ignored
+        x2.extend_from_slice(&x_row);
+        let x2 = f32v(HostTensor::new(vec![2, 1, h], x2));
+        let kp = f32v(k_pool.clone());
+        let vp = f32v(v_pool.clone());
+        let table2 = be.upload_i32(&[-1, -1, 0, 1], &[2, 2]).unwrap();
+        let lens2 = be.upload_i32(&[-1, 2], &[2]).unwrap();
+        let mixed = be
+            .run(
+                "attn_decode_paged__tp2__b2",
+                &[&x2, &norm, &wq, &wk, &wv, &wo, &kp, &vp, &table2, &lens2],
+            )
+            .unwrap();
+        let partial = mixed[0].to_f32().unwrap();
+        // inactive row: all-zero attention output, no pool access
+        assert!(partial.data[..h].iter().all(|&x| x == 0.0));
+        // active row: bitwise equal to the b=1 run
+        assert_eq!(partial.data[h..], solo[0].to_f32().unwrap().data[..]);
     }
 
     #[test]

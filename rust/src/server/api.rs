@@ -50,6 +50,10 @@ pub enum ApiJob {
     Submit { request: Request, respond: Sender<GenerationEvent> },
     /// Abort an in-flight or queued request.
     Cancel { id: u64 },
+    /// `{"stats": true}` — snapshot the server metrics
+    /// (throughput/latency percentiles, `kv_pages_in_use` /
+    /// `kv_pages_high_water` / `admission_blocked`; see docs/API.md).
+    Stats { respond: Sender<crate::util::json::Json> },
 }
 
 /// Spawn the TCP acceptor; returns the job channel the engine loop drains.
@@ -105,6 +109,25 @@ fn handle_conn(
                 continue;
             }
         };
+        if msg.opt("stats").is_some_and(|v| v.as_bool().unwrap_or(false)) {
+            let (stx, srx) = channel();
+            if tx.send(ApiJob::Stats { respond: stx }).is_err() {
+                write_line(&writer, &Json::obj().set("error", "engine loop gone"));
+                return Ok(());
+            }
+            let w = writer.clone();
+            std::thread::spawn(move || match srx.recv_timeout(EVENT_TIMEOUT) {
+                Ok(stats) => {
+                    write_line(&w, &stats);
+                }
+                // a wedged engine loop must not leave the client blocked
+                // on a read forever
+                Err(_) => {
+                    write_line(&w, &Json::obj().set("error", "stats timeout"));
+                }
+            });
+            continue;
+        }
         if let Some(cancel) = msg.opt("cancel") {
             match cancel.as_usize() {
                 Ok(id) => {
@@ -276,14 +299,20 @@ fn render_done(r: &RequestResult, tok: &Tokenizer) -> Json {
 }
 
 /// Feed one socket-side job into the batcher; returns how many requests
-/// reached a terminal state doing so.
-fn apply_job(batcher: &mut Batcher, job: ApiJob) -> usize {
+/// reached a terminal state doing so. `started` anchors the wall clock the
+/// stats snapshot's throughput is computed over.
+fn apply_job(batcher: &mut Batcher, job: ApiJob, started: std::time::Instant) -> usize {
     match job {
         ApiJob::Submit { request, respond } => {
             batcher.submit_streaming(request, respond);
             0
         }
         ApiJob::Cancel { id } => usize::from(batcher.cancel(id).is_some()),
+        ApiJob::Stats { respond } => {
+            // a dropped receiver (client gone) is fine — nothing to clean up
+            let _ = respond.send(batcher.metrics.report(started.elapsed().as_secs_f64()));
+            0
+        }
     }
 }
 
@@ -297,11 +326,12 @@ pub fn serve_forever(
     max_requests: usize,
 ) -> Result<()> {
     let mut served = 0usize;
+    let started = std::time::Instant::now();
     loop {
         // admit everything currently queued on the socket side
         loop {
             match jobs.try_recv() {
-                Ok(job) => served += apply_job(batcher, job),
+                Ok(job) => served += apply_job(batcher, job, started),
                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => return Ok(()),
             }
@@ -309,7 +339,7 @@ pub fn serve_forever(
         if batcher.pending() == 0 {
             // idle: block briefly for the next job
             match jobs.recv_timeout(Duration::from_millis(50)) {
-                Ok(job) => served += apply_job(batcher, job),
+                Ok(job) => served += apply_job(batcher, job, started),
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => return Ok(()),
             }

@@ -1,11 +1,24 @@
 //! Continuous batcher: the core serving loop.
 //!
-//! Slot-based continuous batching over the fixed-B decode executable:
-//! waiting requests are admitted into free slots via single-slot prefill
-//! (`prefill_slot`), then all live slots advance together one decode step
-//! per iteration. Prefill-priority policy (admit whenever a slot is free)
-//! matches the paper's gpt-fast-derived serving setup; admission is gated
-//! by the KV budget.
+//! Two admission regimes share one scheduler:
+//!
+//! * **Fixed-slot** (`KvLayout::Slab`): waiting requests are admitted into
+//!   free slots via single-slot prefill (`prefill_slot`) and every slot
+//!   reserves a full `max_seq`-sized KV region — one long prompt dictates
+//!   memory for every request. Kept as the bitwise oracle.
+//! * **Paged** (`KvLayout::Paged`): admission is gated by a
+//!   [`BlockAllocator`] — a request enters whenever its *worst-case* page
+//!   count (prompt + `max_new_tokens`) fits the unreserved pool, so
+//!   concurrency scales with what requests actually need. Prompts prefill
+//!   in chunks of `prefill_chunk` tokens, interleaved with decode bursts,
+//!   so a long prompt cannot stall in-flight decodes; cancellation and
+//!   completion return pages to the free list immediately.
+//!
+//! Per-request token streams are **bitwise identical** across both regimes
+//! (and any admission interleaving): every kernel is batch-row-local, keys
+//! are visited in logical order, and each slot samples from a private RNG
+//! seeded by the request. The paged stress harness asserts this against
+//! the fixed-slot oracle.
 //!
 //! The batcher's output is a typed **event stream**: [`Batcher::step`]
 //! emits [`GenerationEvent`]s (`Admitted` → `Token`* → `Finished`) and
@@ -24,7 +37,7 @@ use anyhow::Result;
 
 use super::metrics::ServerMetrics;
 use super::request::{itl_p50, FinishReason, GenerationEvent, Request, RequestResult};
-use crate::engine::TpEngine;
+use crate::engine::{BlockAllocator, KvLayout, TpEngine};
 use crate::model::HostTensor;
 use crate::tokenizer::{DecodeStream, Tokenizer};
 use crate::util::rng::Rng;
@@ -33,14 +46,27 @@ use crate::util::rng::Rng;
 pub struct BatcherConfig {
     /// Max tokens a decode step may produce before we re-check the queue.
     pub decode_burst: usize,
-    /// KV memory budget in bytes (0 = slots are the only limit).
+    /// KV memory budget in bytes (0 = storage capacity is the only limit).
     pub kv_budget_bytes: usize,
+    /// Paged engines: max prompt tokens prefetched per scheduler iteration
+    /// (0 = the whole prompt in one chunk). In-flight decodes advance
+    /// between chunks.
+    pub prefill_chunk: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> BatcherConfig {
-        BatcherConfig { decode_burst: 1, kv_budget_bytes: 0 }
+        BatcherConfig { decode_burst: 1, kv_budget_bytes: 0, prefill_chunk: 0 }
     }
+}
+
+/// Where a live slot is in its request's lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotPhase {
+    /// Chunked prefill in progress: this many prompt tokens are in KV.
+    Prefill { consumed: usize },
+    /// Prefill finished; the slot advances one token per decode step.
+    Decode,
 }
 
 /// Per-slot in-flight request state.
@@ -48,6 +74,7 @@ struct SlotState {
     request: Request,
     generated: Vec<i32>,
     next_token: i32,
+    phase: SlotPhase,
     prefill_done: Instant,
     /// When the previous token was sampled (inter-token latency anchor).
     last_token_at: Instant,
@@ -71,6 +98,9 @@ pub struct Batcher {
     pub metrics: ServerMetrics,
     queue: VecDeque<Request>,
     slots: Vec<Option<SlotState>>,
+    /// Page bookkeeping (paged engines only): free list, per-request page
+    /// tables, reservation accounting.
+    alloc: Option<BlockAllocator>,
     /// Per-request event sinks (streaming submissions only).
     sinks: HashMap<u64, Sender<GenerationEvent>>,
     /// Tokenizer for `text_delta`s; without one, deltas are empty strings.
@@ -80,12 +110,29 @@ pub struct Batcher {
 impl Batcher {
     pub fn new(engine: TpEngine, config: BatcherConfig) -> Batcher {
         let slots = (0..engine.batch).map(|_| None).collect();
+        let alloc = match engine.kv_layout() {
+            KvLayout::Slab => None,
+            KvLayout::Paged { page_size, pages } => {
+                let page_bytes = engine.kv_page_bytes();
+                // budget clamps the pool, but never below one max-length
+                // request (the paged mirror of the slab path's clamp(1, B))
+                let total = if config.kv_budget_bytes == 0 {
+                    pages
+                } else {
+                    (config.kv_budget_bytes / page_bytes.max(1))
+                        .max(engine.kv_max_pages_per_seq())
+                        .min(pages)
+                };
+                Some(BlockAllocator::new(total, page_size, page_bytes))
+            }
+        };
         Batcher {
             engine,
             config,
             metrics: ServerMetrics::default(),
             queue: VecDeque::new(),
             slots,
+            alloc,
             sinks: HashMap::new(),
             tokenizer: None,
         }
@@ -109,26 +156,73 @@ impl Batcher {
     /// Submit with a per-request event sink. Every event for this request
     /// is sent to `sink` as it happens; if the receiver is dropped the
     /// request is cancelled at the next event boundary.
+    ///
+    /// Request ids must be unique among live requests: a submission whose
+    /// id is already queued or in flight is rejected immediately on its
+    /// *own* sink (reason `Error`) — inserting it into the sinks map would
+    /// hijack the original request's stream.
     pub fn submit_streaming(&mut self, request: Request, sink: Sender<GenerationEvent>) {
+        if self.id_in_flight(request.id) {
+            self.metrics.submitted += 1;
+            let result = self.rejected_result(&request, 0.0);
+            let _ = sink.send(GenerationEvent::Finished { result });
+            return;
+        }
         self.sinks.insert(request.id, sink);
         self.submit(request);
+    }
+
+    /// Is `id` currently queued, occupying a slot, or bound to a sink?
+    fn id_in_flight(&self, id: u64) -> bool {
+        self.queue.iter().any(|r| r.id == id)
+            || self.slots.iter().any(|s| s.as_ref().is_some_and(|st| st.request.id == id))
+            || self.sinks.contains_key(&id)
+    }
+
+    /// Terminal `Error` record for a request rejected before it ever
+    /// reached a slot, recorded in the metrics. Shared by every rejection
+    /// path so the two regimes cannot drift.
+    fn rejected_result(&mut self, request: &Request, queued: f64) -> RequestResult {
+        let result = RequestResult {
+            id: request.id,
+            tokens: Vec::new(),
+            finish_reason: FinishReason::Error,
+            queued_secs: queued,
+            ttft_secs: 0.0,
+            itl_p50_secs: 0.0,
+            e2e_secs: request.arrived.elapsed().as_secs_f64(),
+        };
+        self.metrics.record_completion(&result);
+        result
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.live()
     }
 
+    /// The paged page-table bookkeeping, when this batcher runs a paged
+    /// engine (tests and the stress harness audit its invariants).
+    pub fn allocator(&self) -> Option<&BlockAllocator> {
+        self.alloc.as_ref()
+    }
+
     fn live(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Number of requests the KV budget admits simultaneously.
+    /// Number of requests the KV budget admits simultaneously (fixed-slot
+    /// engines; paged engines admit by pages instead).
     fn kv_slot_limit(&self) -> usize {
-        if self.config.kv_budget_bytes == 0 {
+        if self.alloc.is_some() || self.config.kv_budget_bytes == 0 {
             return self.engine.batch;
         }
         (self.config.kv_budget_bytes / self.engine.kv_bytes_per_slot().max(1))
             .clamp(1, self.engine.batch)
+    }
+
+    /// Worst-case KV tokens a request may write (admission reservation).
+    fn reserve_tokens(&self, request: &Request) -> usize {
+        (request.prompt.len() + request.max_new_tokens).min(self.engine.cfg.max_seq)
     }
 
     /// Send an event to its request's sink, if registered. Returns false
@@ -144,10 +238,11 @@ impl Batcher {
         true
     }
 
-    /// Abort an in-flight or queued request. The slot and its KV are freed
-    /// immediately; the terminal `Finished` event (reason `Cancelled`,
-    /// partial tokens) is routed to the sink and returned. `None` if the id
-    /// is unknown (already finished, or never submitted).
+    /// Abort an in-flight or queued request. The slot and its KV (slab
+    /// region or pages) are freed immediately; the terminal `Finished`
+    /// event (reason `Cancelled`, partial tokens) is routed to the sink and
+    /// returned. `None` if the id is unknown (already finished, or never
+    /// submitted).
     pub fn cancel(&mut self, id: u64) -> Option<GenerationEvent> {
         if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
             let request = self.queue.remove(pos).expect("position came from iter");
@@ -161,13 +256,27 @@ impl Batcher {
         Some(self.finish_slot(slot, FinishReason::Cancelled))
     }
 
-    /// One scheduler iteration: admit + prefill waiting requests into free
-    /// slots, then run `decode_burst` decode steps for live slots. Returns
-    /// every event this iteration produced (sinks receive them too).
+    /// One scheduler iteration: admit waiting requests (into free slots,
+    /// and — paged — into free pages), advance one prefill chunk per
+    /// admitted-but-unprefilled slot, then run `decode_burst` decode steps
+    /// for slots past their prefill. Returns every event this iteration
+    /// produced (sinks receive them too).
     pub fn step(&mut self) -> Result<Vec<GenerationEvent>> {
         let mut events = Vec::new();
+        self.admit(&mut events)?;
+        self.advance_prefills(&mut events)?;
+        self.decode_burst(&mut events)?;
+        if let Some(alloc) = &self.alloc {
+            self.metrics.kv_pages_in_use = alloc.pages_in_use();
+            self.metrics.kv_pages_high_water = alloc.high_water();
+        }
+        Ok(events)
+    }
 
-        // -- admission (prefill-priority, FIFO) --
+    /// Admission (prefill-priority, FIFO). Fixed-slot engines prefill the
+    /// whole prompt inline, exactly as before; paged engines only claim the
+    /// slot + reservation here and leave the prompt to `advance_prefills`.
+    fn admit(&mut self, events: &mut Vec<GenerationEvent>) -> Result<()> {
         let limit = self.kv_slot_limit();
         for slot in 0..self.slots.len() {
             if self.slots[slot].is_some() {
@@ -180,6 +289,19 @@ impl Batcher {
             let admitted = loop {
                 let Some(request) = self.queue.pop_front() else { break None };
                 let queued = request.arrived.elapsed().as_secs_f64();
+                // an id colliding with an in-flight slot is rejected FIRST,
+                // and inline: every later rejection path routes through the
+                // sinks map, whose entry for this id belongs to the
+                // original request's stream and must not be disturbed
+                let occupied = self
+                    .slots
+                    .iter()
+                    .any(|s| s.as_ref().is_some_and(|st| st.request.id == request.id));
+                if occupied {
+                    let result = self.rejected_result(&request, queued);
+                    events.push(GenerationEvent::Finished { result });
+                    continue;
+                }
                 if request.prompt.is_empty() {
                     events.push(self.finish_unstarted(request, queued, FinishReason::Error));
                     continue;
@@ -193,6 +315,27 @@ impl Batcher {
                         continue;
                     }
                 };
+                // paged admission rule: the head of the queue enters only
+                // when its worst case fits the unreserved pool — otherwise
+                // admission stops (FIFO; later requests must not starve it).
+                // A reservation larger than the whole pool can never fit:
+                // fail that request instead of blocking the queue forever.
+                if let Some(alloc) = &self.alloc {
+                    let reserve = self.reserve_tokens(&request);
+                    // a reservation larger than the whole pool can never be
+                    // admitted: fail it alone, never the loop (its id is
+                    // unique — checked above — so sink routing is safe)
+                    if alloc.pages_for(reserve) > alloc.total_pages() {
+                        let ev = self.finish_unstarted(request, queued, FinishReason::Error);
+                        events.push(ev);
+                        continue;
+                    }
+                    if !alloc.can_admit(reserve) {
+                        self.metrics.admission_blocked += 1;
+                        self.queue.push_front(request);
+                        return Ok(());
+                    }
+                }
                 let ev = GenerationEvent::Admitted { id: request.id, queued_secs: queued };
                 if !self.route(&ev) {
                     // client vanished while queued: skip the prefill entirely
@@ -204,60 +347,171 @@ impl Batcher {
                 break Some((request, queued, bucket));
             };
             let Some((request, queued, bucket)) = admitted else { break };
-            let mut padded = vec![0i32; bucket];
-            padded[..request.prompt.len()].copy_from_slice(&request.prompt);
-            let logits = self
-                .engine
-                .prefill_slot(slot, &padded, bucket, request.prompt.len())?;
-            let logits_t = HostTensor::new(vec![1, logits.len()], logits);
-            let mut rng = Rng::new(request.rng_seed());
-            let first = request.sampler.sample(&logits_t, &mut rng)[0];
-            self.metrics.queued_secs.add(queued);
-            self.metrics.prefills += 1;
+            let reserve = self.reserve_tokens(&request);
             let now = Instant::now();
-            self.slots[slot] = Some(SlotState {
+            let rng = Rng::new(request.rng_seed());
+            let mut st = SlotState {
                 decoder: self.tokenizer.as_ref().map(|t| DecodeStream::new(t.clone())),
                 request,
                 generated: Vec::new(),
-                next_token: first,
+                next_token: 0,
+                phase: SlotPhase::Prefill { consumed: 0 },
                 prefill_done: now,
                 last_token_at: now,
                 queued_secs: queued,
                 itl: Vec::new(),
                 rng,
-            });
-            self.push_token(slot, first, &mut events);
+            };
+            if let Some(alloc) = &mut self.alloc {
+                // reservation guarantees the request can always grow to
+                // prompt + max_new tokens — no deadlock, no preemption;
+                // the prompt itself runs chunk-wise in advance_prefills
+                alloc.admit(st.request.id, st.request.prompt.len(), reserve)?;
+                self.slots[slot] = Some(st);
+                continue;
+            }
+            // slab path: one-shot padded prefill into the slot
+            let plen = st.request.prompt.len();
+            let mut padded = vec![0i32; bucket];
+            padded[..plen].copy_from_slice(&st.request.prompt);
+            let logits = self.engine.prefill_slot(slot, &padded, bucket, plen)?;
+            self.slots[slot] = Some(st);
+            self.complete_prefill(slot, logits, events);
         }
+        Ok(())
+    }
 
-        // -- decode burst --
-        if self.live() > 0 {
-            for _ in 0..self.config.decode_burst.max(1) {
-                // tokens for all slots (idle slots feed token 0, ignored)
-                let tokens: Vec<i32> = self
-                    .slots
-                    .iter()
-                    .map(|s| s.as_ref().map_or(0, |st| st.next_token))
-                    .collect();
-                let logits = self.engine.decode(&tokens)?;
-                self.metrics.decode_steps += 1;
-                let v = logits.shape[1];
-                for slot in 0..self.slots.len() {
-                    let tok = {
-                        let Some(st) = self.slots[slot].as_mut() else { continue };
-                        let row = HostTensor::new(
-                            vec![1, v],
-                            logits.data[slot * v..(slot + 1) * v].to_vec(),
-                        );
-                        st.request.sampler.sample(&row, &mut st.rng)[0]
-                    };
-                    self.push_token(slot, tok, &mut events);
+    /// Shared prefill-completion tail (slab one-shot and paged final
+    /// chunk): sample the first token from the prefill logits, move the
+    /// slot to its decode phase, record metrics, emit the `Token` event.
+    /// One definition keeps both admission regimes bitwise-identical.
+    fn complete_prefill(
+        &mut self,
+        slot: usize,
+        logits: Vec<f32>,
+        events: &mut Vec<GenerationEvent>,
+    ) {
+        let st = self.slots[slot].as_mut().expect("complete_prefill on empty slot");
+        let logits_t = HostTensor::new(vec![1, logits.len()], logits);
+        let first = st.request.sampler.sample(&logits_t, &mut st.rng)[0];
+        self.metrics.queued_secs.add(st.queued_secs);
+        self.metrics.prefills += 1;
+        let now = Instant::now();
+        st.phase = SlotPhase::Decode;
+        st.next_token = first;
+        st.prefill_done = now;
+        st.last_token_at = now;
+        self.push_token(slot, first, events);
+    }
+
+    /// Paged chunked prefill: every slot still consuming its prompt runs
+    /// exactly one chunk per scheduler iteration, so decodes interleave
+    /// with long prompts. The final chunk's logits sample the first token.
+    ///
+    /// Known limitation: a client that disconnects mid-prefill is only
+    /// detected at the first token send (`std::sync::mpsc::Sender` has no
+    /// disconnect probe short of sending, and fabricating an extra event
+    /// would corrupt the stream contract), so up to one prompt's worth of
+    /// chunks can run for a dead client before the slot is reclaimed.
+    fn advance_prefills(&mut self, events: &mut Vec<GenerationEvent>) -> Result<()> {
+        if self.alloc.is_none() {
+            return Ok(());
+        }
+        for slot in 0..self.slots.len() {
+            let Some(st) = self.slots[slot].as_ref() else { continue };
+            let SlotPhase::Prefill { consumed } = st.phase else { continue };
+            let id = st.request.id;
+            let total = st.request.prompt.len();
+            let chunk = match self.config.prefill_chunk {
+                0 => total - consumed,
+                c => c.min(total - consumed),
+            };
+            let tokens = st.request.prompt[consumed..consumed + chunk].to_vec();
+            let table = self
+                .alloc
+                .as_ref()
+                .expect("paged mode")
+                .table(id)
+                .expect("admitted request has a table")
+                .pages
+                .clone();
+            let logits = self.engine.prefill_chunk_slot(slot, &tokens, consumed, &table)?;
+            if consumed + chunk < total {
+                let st = self.slots[slot].as_mut().expect("slot checked above");
+                st.phase = SlotPhase::Prefill { consumed: consumed + chunk };
+                continue;
+            }
+            self.complete_prefill(slot, logits, events);
+        }
+        Ok(())
+    }
+
+    /// Decode phase of one scheduler iteration.
+    fn decode_burst(&mut self, events: &mut Vec<GenerationEvent>) -> Result<()> {
+        let decoding = |slots: &[Option<SlotState>]| {
+            slots
+                .iter()
+                .filter(|s| s.as_ref().is_some_and(|st| st.phase == SlotPhase::Decode))
+                .count()
+        };
+        if decoding(&self.slots) == 0 {
+            return Ok(());
+        }
+        for _ in 0..self.config.decode_burst.max(1) {
+            // tokens for all slots (idle/prefilling slots feed 0, ignored)
+            let active: Vec<bool> = self
+                .slots
+                .iter()
+                .map(|s| s.as_ref().is_some_and(|st| st.phase == SlotPhase::Decode))
+                .collect();
+            let tokens: Vec<i32> = self
+                .slots
+                .iter()
+                .map(|s| match s {
+                    Some(st) if st.phase == SlotPhase::Decode => st.next_token,
+                    _ => 0,
+                })
+                .collect();
+            let logits = match &mut self.alloc {
+                None => self.engine.decode(&tokens)?,
+                Some(alloc) => {
+                    // grow each active request's backing for the incoming
+                    // token, then hand the engine the page-table matrix
+                    let max_pages = self.engine.kv_max_pages_per_seq();
+                    let mut tables = vec![-1i32; self.slots.len() * max_pages];
+                    for (slot, st) in self.slots.iter().enumerate() {
+                        let Some(st) = st else { continue };
+                        if st.phase != SlotPhase::Decode {
+                            continue;
+                        }
+                        alloc.ensure(st.request.id, self.engine.lens[slot] as usize + 1)?;
+                        let row = &mut tables[slot * max_pages..(slot + 1) * max_pages];
+                        alloc.fill_table_row(st.request.id, row)?;
+                    }
+                    self.engine.decode_paged(&tokens, &active, tables, max_pages)?
                 }
-                if self.live() == 0 {
-                    break;
-                }
+            };
+            self.metrics.decode_steps += 1;
+            let v = logits.shape[1];
+            for slot in 0..self.slots.len() {
+                let tok = {
+                    let Some(st) = self.slots[slot].as_mut() else { continue };
+                    if st.phase != SlotPhase::Decode {
+                        continue;
+                    }
+                    let row = HostTensor::new(
+                        vec![1, v],
+                        logits.data[slot * v..(slot + 1) * v].to_vec(),
+                    );
+                    st.request.sampler.sample(&row, &mut st.rng)[0]
+                };
+                self.push_token(slot, tok, events);
+            }
+            if decoding(&self.slots) == 0 {
+                break;
             }
         }
-        Ok(events)
+        Ok(())
     }
 
     /// Record one sampled token into `slot`: emit its `Token` event, then
@@ -306,7 +560,8 @@ impl Batcher {
         }
     }
 
-    /// Terminate a live slot: release its KV, record metrics, route and
+    /// Terminate a live slot: release its KV (pages return to the free
+    /// list immediately on paged engines), record metrics, route and
     /// return the `Finished` event.
     fn finish_slot(&mut self, slot: usize, reason: FinishReason) -> GenerationEvent {
         let st = self.slots[slot].take().expect("finish_slot on empty slot");
@@ -321,6 +576,10 @@ impl Batcher {
             e2e_secs: (now - st.request.arrived).as_secs_f64(),
         };
         self.metrics.record_completion(&result);
+        if let Some(alloc) = &mut self.alloc {
+            alloc.free(result.id);
+            self.metrics.kv_pages_in_use = alloc.pages_in_use();
+        }
         self.engine.release_slot(slot);
         let ev = GenerationEvent::Finished { result };
         self.route(&ev);

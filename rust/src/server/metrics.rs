@@ -13,6 +13,14 @@ pub struct ServerMetrics {
     pub prefills: usize,
     pub decode_steps: usize,
     pub tokens_out: usize,
+    /// KV pages currently allocated across all requests (paged engines;
+    /// gauge, updated by the batcher every scheduler iteration).
+    pub kv_pages_in_use: usize,
+    /// Most KV pages ever simultaneously allocated.
+    pub kv_pages_high_water: usize,
+    /// Times the head of the queue could not be admitted because its
+    /// worst-case page reservation did not fit the free pool.
+    pub admission_blocked: usize,
     pub queued_secs: Summary,
     pub ttft_secs: Summary,
     /// Inter-token latency samples (one per decode-phase token) — the
@@ -43,6 +51,9 @@ impl ServerMetrics {
             .set("prefills", self.prefills)
             .set("decode_steps", self.decode_steps)
             .set("tokens_out", self.tokens_out)
+            .set("kv_pages_in_use", self.kv_pages_in_use)
+            .set("kv_pages_high_water", self.kv_pages_high_water)
+            .set("admission_blocked", self.admission_blocked)
             .set("throughput_tok_per_s", self.tokens_out as f64 / wall_secs.max(1e-9))
             .set("ttft_p50_ms", self.ttft_secs.p50() * 1e3)
             .set("ttft_p99_ms", self.ttft_secs.p99() * 1e3)
@@ -94,5 +105,17 @@ mod tests {
         let rep = m.report(1.0);
         assert!((rep.get("itl_p50_ms").unwrap().as_f64().unwrap() - 20.0).abs() < 1e-9);
         assert_eq!(rep.get("cancelled").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn paged_kv_gauges_reach_the_report() {
+        let mut m = ServerMetrics::default();
+        m.kv_pages_in_use = 5;
+        m.kv_pages_high_water = 9;
+        m.admission_blocked = 2;
+        let rep = m.report(1.0);
+        assert_eq!(rep.get("kv_pages_in_use").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(rep.get("kv_pages_high_water").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(rep.get("admission_blocked").unwrap().as_usize().unwrap(), 2);
     }
 }

@@ -102,6 +102,39 @@ impl Gen for VecF32Gen {
     }
 }
 
+/// Generator for unicode strings mixing 1/2/3/4-byte characters (ASCII,
+/// Latin supplement, CJK, emoji) — the byte-level tokenizer's worst case,
+/// where every multi-byte character is split across several tokens. Shrinks
+/// by halving at a character boundary and by collapsing to ASCII.
+pub struct UnicodeGen {
+    pub max_chars: usize,
+}
+
+impl Gen for UnicodeGen {
+    type Value = String;
+    fn generate(&self, rng: &mut Rng) -> String {
+        let n = rng.range(0, self.max_chars);
+        (0..n)
+            .map(|_| {
+                let cp = match rng.below(4) {
+                    0 => rng.range(0x20, 0x7E),        // 1 byte
+                    1 => rng.range(0xA1, 0x7FF),       // 2 bytes
+                    2 => 0x4E00 + rng.below(0x2000),   // 3 bytes (CJK)
+                    _ => 0x1F300 + rng.below(0x200),   // 4 bytes (emoji)
+                };
+                char::from_u32(cp as u32).expect("ranges avoid surrogates")
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &String) -> Vec<String> {
+        if v.is_empty() {
+            return Vec::new();
+        }
+        let half = v.chars().count() / 2;
+        vec![v.chars().take(half).collect(), v.chars().map(|_| 'a').collect(), String::new()]
+    }
+}
+
 /// Pair two generators.
 pub struct PairGen<A, B>(pub A, pub B);
 
@@ -140,6 +173,19 @@ mod tests {
     #[should_panic(expected = "lt-10")]
     fn failing_property_shrinks() {
         check("lt-10", 200, &UsizeGen { lo: 0, hi: 100 }, |v| *v < 10);
+    }
+
+    #[test]
+    fn unicode_gen_covers_multibyte_chars() {
+        let g = UnicodeGen { max_chars: 30 };
+        let mut rng = Rng::new(9);
+        let mut multibyte = false;
+        for _ in 0..50 {
+            let s = g.generate(&mut rng);
+            assert!(s.chars().count() <= 30);
+            multibyte |= s.len() > s.chars().count();
+        }
+        assert!(multibyte, "generator never produced a multi-byte char");
     }
 
     #[test]

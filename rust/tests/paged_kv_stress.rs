@@ -1,0 +1,385 @@
+//! Deterministic randomized serving stress harness for the paged KV
+//! batcher (the proof obligation for continuous batching over a paged
+//! cache).
+//!
+//! A seeded workload of 200+ requests with mixed prompt lengths, random
+//! mid-flight cancels and client-timeout sink drops is driven through
+//! `Batcher::step` *manually*; after **every** step the harness audits the
+//! `BlockAllocator`:
+//!
+//! * no page leaked (free + owned == total),
+//! * no page double-owned,
+//! * `pages_in_use * page_bytes` never exceeds the `--kv-budget` bytes,
+//! * every accepted request reaches exactly one terminal event.
+//!
+//! A separate oracle test replays the same workload through the fixed-slot
+//! batcher and asserts per-request token streams are **bitwise identical**
+//! (same seeds) — and that at an equal byte budget the paged batcher admits
+//! strictly more concurrent requests than the fixed-slot baseline.
+//!
+//! The harness writes a JSON invariant report (one entry per seed) to
+//! `$PAGED_KV_REPORT`, or `target/tmp/PAGED_KV_STRESS.json` by default; CI
+//! uploads it next to the BENCH_*.json artifacts.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver};
+
+use ladder_infer::comm::{Fabric, Interconnect};
+use ladder_infer::engine::{KvLayout, RuntimeKind, TpEngine};
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::runtime::Exec;
+use ladder_infer::server::{Batcher, BatcherConfig, FinishReason, GenerationEvent, Request};
+use ladder_infer::util::json::Json;
+use ladder_infer::util::rng::Rng;
+
+const BATCH: usize = 4;
+
+fn build_engine(layout: KvLayout) -> TpEngine {
+    let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+    let weights = WeightStore::random(exec.cfg(), 0xfeed);
+    TpEngine::with_layout(
+        exec,
+        &weights,
+        2,
+        Arch::Ladder,
+        BATCH,
+        Interconnect::new(Fabric::Local),
+        RuntimeKind::default(),
+        layout,
+    )
+    .unwrap()
+}
+
+/// One request of the generated workload.
+#[derive(Clone)]
+struct Job {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    /// `Some(step)`: explicitly cancelled after that scheduler step.
+    cancel_at: Option<usize>,
+    /// `Some(step)`: the client "times out" — its event sink is dropped
+    /// after that step, and the batcher must reclaim the slot on its own.
+    drop_sink_at: Option<usize>,
+    /// Which scheduler step the request arrives at.
+    arrive_at: usize,
+}
+
+/// Mixed-length workload: ~50% short, ~35% medium, ~15% long prompts,
+/// arrivals spread over the first ~150 steps, ~8% cancels, ~5% timeouts.
+fn workload(seed: u64, n: usize) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    let mut arrive = 0usize;
+    (0..n)
+        .map(|i| {
+            let len = match rng.below(100) {
+                0..=49 => rng.range(1, 8),
+                50..=84 => rng.range(8, 40),
+                _ => rng.range(40, 90),
+            };
+            arrive += rng.below(3); // bursty Poisson-ish arrivals
+            let cancel = rng.below(100) < 8;
+            let timeout = !cancel && rng.below(100) < 5;
+            Job {
+                id: i as u64,
+                prompt: (0..len).map(|_| rng.below(256) as i32).collect(),
+                max_new: rng.range(1, 12),
+                cancel_at: cancel.then(|| arrive + rng.below(30)),
+                drop_sink_at: timeout.then(|| arrive + rng.below(30)),
+                arrive_at: arrive,
+            }
+        })
+        .collect()
+}
+
+/// Outcome of driving one workload to completion.
+struct RunStats {
+    /// id -> (tokens, finish reason); exactly one entry per request.
+    finished: HashMap<u64, (Vec<i32>, FinishReason)>,
+    max_live: usize,
+    high_water_pages: usize,
+    admission_blocked: usize,
+    steps: usize,
+}
+
+/// Drive `jobs` through a batcher step by step, auditing the allocator
+/// after every step. `budget_bytes` caps both the batcher config and the
+/// audit; 0 disables the byte assertion.
+fn drive(mut batcher: Batcher, jobs: &[Job], budget_bytes: usize) -> RunStats {
+    let mut finished: HashMap<u64, (Vec<i32>, FinishReason)> = HashMap::new();
+    let mut live_ids: HashSet<u64> = HashSet::new();
+    let mut max_live = 0usize;
+    let mut sinks: HashMap<u64, Receiver<GenerationEvent>> = HashMap::new();
+    let mut submitted = 0usize;
+    let mut step = 0usize;
+    let mut record = |evs: Vec<GenerationEvent>, live: &mut HashSet<u64>, max: &mut usize| {
+        for ev in evs {
+            match ev {
+                GenerationEvent::Admitted { id, .. } => {
+                    live.insert(id);
+                    *max = (*max).max(live.len());
+                }
+                GenerationEvent::Token { .. } => {}
+                GenerationEvent::Finished { result } => {
+                    live.remove(&result.id);
+                    let dup = finished.insert(result.id, (result.tokens, result.finish_reason));
+                    assert!(dup.is_none(), "request {} finished twice", result.id);
+                }
+            }
+        }
+    };
+    while submitted < jobs.len() || batcher.pending() > 0 {
+        assert!(step < 100_000, "workload failed to drain after {step} steps");
+        // arrivals scheduled for this step
+        while submitted < jobs.len() && jobs[submitted].arrive_at <= step {
+            let job = &jobs[submitted];
+            let request = Request::new(job.id, job.prompt.clone(), job.max_new);
+            if job.drop_sink_at.is_some() {
+                let (tx, rx) = channel();
+                sinks.insert(job.id, rx);
+                batcher.submit_streaming(request, tx);
+            } else {
+                batcher.submit(request);
+            }
+            submitted += 1;
+        }
+        let evs = batcher.step().expect("batcher step");
+        record(evs, &mut live_ids, &mut max_live);
+        // client timeouts: drop the sink, the batcher reclaims the slot
+        sinks.retain(|id, _| {
+            let job = &jobs[*id as usize];
+            !job.drop_sink_at.is_some_and(|at| at <= step)
+        });
+        // explicit cancels
+        for job in jobs[..submitted].iter() {
+            if job.cancel_at == Some(step) {
+                if let Some(ev) = batcher.cancel(job.id) {
+                    record(vec![ev], &mut live_ids, &mut max_live);
+                }
+            }
+        }
+        // -- the allocator audit, the heart of this harness --
+        if let Some(alloc) = batcher.allocator() {
+            alloc.check().unwrap_or_else(|e| panic!("step {step}: {e}"));
+            if budget_bytes > 0 {
+                assert!(
+                    alloc.bytes_in_use() <= budget_bytes,
+                    "step {step}: {} KV bytes in use exceed the {budget_bytes} budget",
+                    alloc.bytes_in_use()
+                );
+            }
+        }
+        step += 1;
+    }
+    let (high_water_pages, admission_blocked) = match batcher.allocator() {
+        Some(alloc) => {
+            // drained: every page must be back on the free list
+            alloc.check().unwrap();
+            assert_eq!(alloc.pages_in_use(), 0, "pages leaked after drain");
+            assert_eq!(alloc.reserved_pages(), 0, "reservations leaked after drain");
+            assert_eq!(alloc.free_pages(), alloc.total_pages());
+            (alloc.high_water(), batcher.metrics.admission_blocked)
+        }
+        None => (0, 0),
+    };
+    RunStats { finished, max_live, high_water_pages, admission_blocked, steps: step }
+}
+
+fn assert_outcomes(jobs: &[Job], stats: &RunStats) {
+    assert_eq!(stats.finished.len(), jobs.len(), "every request must reach a terminal event");
+    for job in jobs {
+        let (tokens, reason) = &stats.finished[&job.id];
+        match reason {
+            // untouched requests run to their full budget (greedy, no eos)
+            FinishReason::Length => assert_eq!(
+                tokens.len(),
+                job.max_new,
+                "request {} finished early without a cancel",
+                job.id
+            ),
+            FinishReason::Cancelled => assert!(
+                job.cancel_at.is_some() || job.drop_sink_at.is_some(),
+                "request {} cancelled without a cancel/timeout plan",
+                job.id
+            ),
+            other => panic!("request {} finished with unexpected {other:?}", job.id),
+        }
+    }
+}
+
+/// The tentpole harness: 3 fixed seeds x (page size, chunk, budget)
+/// variations, full allocator audit every step, JSON invariant report.
+#[test]
+fn stress_randomized_three_seeds() {
+    let configs = [
+        // (seed, page_size, prefill_chunk, budget_pages)
+        (0xa11ce_u64, 4usize, 0usize, 120usize),
+        (0xb0b, 8, 7, 48),
+        (0xc0ffee, 16, 16, 28),
+    ];
+    let mut entries = Vec::new();
+    for (seed, page_size, chunk, budget_pages) in configs {
+        let jobs = workload(seed, 200);
+        let per_seq = 128usize.div_ceil(page_size);
+        let alloc_pages = budget_pages.max(per_seq);
+        // pool strictly larger than the byte budget, so the budget clamp
+        // (not pool exhaustion) is what the harness actually audits
+        let pages = alloc_pages + 8;
+        let engine = build_engine(KvLayout::Paged { page_size, pages });
+        let page_bytes = engine.kv_page_bytes();
+        let budget_bytes = alloc_pages * page_bytes;
+        let config = BatcherConfig {
+            decode_burst: 1,
+            kv_budget_bytes: budget_bytes,
+            prefill_chunk: chunk,
+        };
+        let stats = drive(Batcher::new(engine, config), &jobs, budget_bytes);
+        assert_outcomes(&jobs, &stats);
+        let cancelled =
+            stats.finished.values().filter(|(_, r)| *r == FinishReason::Cancelled).count();
+        entries.push(
+            Json::obj()
+                .set("seed", format!("{seed:#x}"))
+                .set("requests", jobs.len())
+                .set("page_size", page_size)
+                .set("prefill_chunk", chunk)
+                .set("total_pages", pages)
+                .set("page_bytes", page_bytes)
+                .set("budget_bytes", budget_bytes)
+                .set("steps", stats.steps)
+                .set("completed", stats.finished.len())
+                .set("cancelled", cancelled)
+                .set("max_concurrent", stats.max_live)
+                .set("kv_pages_high_water", stats.high_water_pages)
+                .set("admission_blocked", stats.admission_blocked)
+                .set("invariants", "no-leak, no-double-own, budget-respected, all-finished"),
+        );
+    }
+    let report = Json::obj().set("harness", "paged_kv_stress").set("seeds", Json::Arr(entries));
+    let path = std::env::var("PAGED_KV_REPORT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("PAGED_KV_STRESS.json")
+    });
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(&path, report.to_string()).expect("write invariant report");
+}
+
+/// Acceptance oracle: under the same seeded workload (no cancels), the
+/// paged batcher's per-request token streams are bitwise identical to the
+/// fixed-slot batcher's — regardless of page size or prefill chunking,
+/// and even though admission interleaves differently.
+#[test]
+fn paged_streams_bitwise_match_fixed_slot_oracle() {
+    let jobs: Vec<Job> = workload(0xdead, 60)
+        .into_iter()
+        .map(|j| Job { cancel_at: None, drop_sink_at: None, ..j })
+        .collect();
+    let fixed = drive(
+        Batcher::new(build_engine(KvLayout::Slab), BatcherConfig::default()),
+        &jobs,
+        0,
+    );
+    assert_outcomes(&jobs, &fixed);
+    for (page_size, chunk) in [(4usize, 0usize), (16, 5)] {
+        let pages = BATCH * 128usize.div_ceil(page_size);
+        let engine = build_engine(KvLayout::Paged { page_size, pages });
+        let config = BatcherConfig { prefill_chunk: chunk, ..BatcherConfig::default() };
+        let paged = drive(Batcher::new(engine, config), &jobs, 0);
+        assert_outcomes(&jobs, &paged);
+        for job in &jobs {
+            assert_eq!(
+                paged.finished[&job.id].0, fixed.finished[&job.id].0,
+                "request {} diverged from the fixed-slot oracle \
+                 (page_size={page_size}, chunk={chunk})",
+                job.id
+            );
+        }
+    }
+}
+
+/// Acceptance: at the same byte budget, block-granular admission runs
+/// strictly more requests concurrently than `max_seq`-sized slots — while
+/// producing the same tokens.
+#[test]
+fn paged_admits_more_concurrent_requests_at_equal_budget() {
+    // budget = 2.5 fixed slots -> the slab batcher caps at 2 concurrent
+    let probe = build_engine(KvLayout::Slab);
+    let budget = probe.kv_bytes_per_slot() * 5 / 2;
+    let jobs: Vec<Job> = (0..8u64)
+        .map(|i| Job {
+            id: i,
+            prompt: (0..8).map(|t| ((i * 31 + t) % 256) as i32).collect(),
+            max_new: 4,
+            cancel_at: None,
+            drop_sink_at: None,
+            arrive_at: 0,
+        })
+        .collect();
+    let fixed = drive(
+        Batcher::new(probe, BatcherConfig { kv_budget_bytes: budget, ..Default::default() }),
+        &jobs,
+        0,
+    );
+    assert_outcomes(&jobs, &fixed);
+    assert_eq!(fixed.max_live, 2, "slab budget should cap at 2 slots");
+
+    let page_size = 16;
+    let engine = build_engine(KvLayout::Paged { page_size, pages: 64 });
+    let page_bytes = engine.kv_page_bytes();
+    let paged = drive(
+        Batcher::new(engine, BatcherConfig { kv_budget_bytes: budget, ..Default::default() }),
+        &jobs,
+        budget,
+    );
+    assert_outcomes(&jobs, &paged);
+    assert!(
+        paged.max_live > fixed.max_live,
+        "paged admitted {} concurrent vs slab {} at budget {budget} (page_bytes {page_bytes})",
+        paged.max_live,
+        fixed.max_live
+    );
+    for job in &jobs {
+        assert_eq!(paged.finished[&job.id].0, fixed.finished[&job.id].0);
+    }
+}
+
+/// Chunked prefill must not stall in-flight decodes: while a long prompt
+/// trickles in chunk by chunk, a short request admitted earlier keeps
+/// emitting a token every step.
+#[test]
+fn chunked_prefill_interleaves_with_decodes() {
+    let engine = build_engine(KvLayout::Paged { page_size: 8, pages: 64 });
+    let config = BatcherConfig { prefill_chunk: 8, ..BatcherConfig::default() };
+    let mut b = Batcher::new(engine, config);
+    b.submit(Request::new(1, vec![7; 4], 30));
+    b.step().unwrap(); // short request admitted, first token out
+    let long_prompt = vec![3i32; 80]; // 10 chunks of 8
+    b.submit(Request::new(2, long_prompt, 4));
+    let mut saw_interleave = 0;
+    for _ in 0..8 {
+        let evs = b.step().unwrap();
+        let short_tokens = evs
+            .iter()
+            .filter(|e| matches!(e, GenerationEvent::Token { id: 1, .. }))
+            .count();
+        let long_tokens = evs
+            .iter()
+            .filter(|e| matches!(e, GenerationEvent::Token { id: 2, .. }))
+            .count();
+        if short_tokens > 0 && long_tokens == 0 {
+            saw_interleave += 1; // long still prefilling, short still decoding
+        }
+    }
+    assert!(
+        saw_interleave >= 5,
+        "short request decoded through only {saw_interleave} of the long prompt's chunk steps"
+    );
+    while b.pending() > 0 {
+        b.step().unwrap();
+    }
+    b.allocator().unwrap().check().unwrap();
+    assert_eq!(b.allocator().unwrap().pages_in_use(), 0);
+}

@@ -3,12 +3,12 @@
 //! timeline ordering, KV cache slots, tokenizer roundtrip.
 
 use ladder_infer::comm::{CollectiveEngine, Fabric, Interconnect};
-use ladder_infer::engine::KvCache;
+use ladder_infer::engine::{BlockAllocator, KvCache};
 use ladder_infer::model::{Arch, HostTensor};
 use ladder_infer::perfmodel::costs::ModuleTimes;
 use ladder_infer::perfmodel::timeline::simulate_forward;
 use ladder_infer::tokenizer::Tokenizer;
-use ladder_infer::util::proptest::{check, Gen, PairGen, UsizeGen, VecF32Gen};
+use ladder_infer::util::proptest::{check, Gen, PairGen, UnicodeGen, UsizeGen, VecF32Gen};
 use ladder_infer::util::rng::Rng;
 
 struct ModuleTimesGen;
@@ -134,6 +134,168 @@ fn prop_kv_slot_writes_are_isolated() {
         }
         true
     });
+}
+
+// ---------------------------------------------------------------------------
+// BlockAllocator: arbitrary admit/ensure/free sequences keep every
+// structural invariant and round-trip to an empty free list
+// ---------------------------------------------------------------------------
+
+/// One allocator operation, drawn from a small owner space so sequences
+/// collide on owners often.
+#[derive(Clone, Debug)]
+enum AllocOp {
+    /// (owner, prompt tokens, extra reserve tokens)
+    Admit(u64, usize, usize),
+    /// (owner, tokens to grow by)
+    Ensure(u64, usize),
+    Free(u64),
+}
+
+struct AllocSeqGen;
+
+impl Gen for AllocSeqGen {
+    type Value = Vec<AllocOp>;
+    fn generate(&self, rng: &mut Rng) -> Vec<AllocOp> {
+        let n = rng.range(1, 60);
+        (0..n)
+            .map(|_| {
+                let owner = rng.below(6) as u64;
+                match rng.below(4) {
+                    0 | 1 => AllocOp::Admit(owner, rng.range(1, 40), rng.below(24)),
+                    2 => AllocOp::Ensure(owner, rng.range(1, 12)),
+                    _ => AllocOp::Free(owner),
+                }
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<AllocOp>) -> Vec<Vec<AllocOp>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+        }
+        out
+    }
+}
+
+/// Apply an op sequence, auditing after every op; returns false on any
+/// invariant violation. Legal-but-rejected ops (over-reservation, unknown
+/// owner, double admit) must error without corrupting state.
+fn apply_alloc_ops(ops: &[AllocOp], total_pages: usize, page_size: usize) -> bool {
+    let mut a = BlockAllocator::new(total_pages, page_size, 64);
+    for op in ops {
+        match *op {
+            AllocOp::Admit(owner, prompt, extra) => {
+                let fits = a.table(owner).is_none() && a.can_admit(prompt + extra);
+                let r = a.admit(owner, prompt, prompt + extra);
+                if r.is_ok() != fits {
+                    return false;
+                }
+            }
+            AllocOp::Ensure(owner, grow) => {
+                if let Some(t) = a.table(owner) {
+                    let new_len = t.len + grow;
+                    let within = a.pages_for(new_len) <= t.reserved_pages;
+                    if a.ensure(owner, new_len).is_ok() != within {
+                        return false;
+                    }
+                } else if a.ensure(owner, grow).is_ok() {
+                    return false; // unknown owner must be rejected
+                }
+            }
+            AllocOp::Free(owner) => {
+                let held = a.table(owner).map_or(0, |t| t.pages.len());
+                if a.free(owner) != held {
+                    return false;
+                }
+            }
+        }
+        if a.check().is_err() {
+            return false;
+        }
+        if a.bytes_in_use() > total_pages * 64 {
+            return false;
+        }
+    }
+    // round-trip: freeing every owner restores the full free list
+    for owner in 0..6 {
+        a.free(owner);
+    }
+    a.check().is_ok()
+        && a.pages_in_use() == 0
+        && a.reserved_pages() == 0
+        && a.free_pages() == total_pages
+}
+
+#[test]
+fn prop_block_allocator_sequences_roundtrip() {
+    check("allocator-roundtrip", 300, &AllocSeqGen, |ops| apply_alloc_ops(ops, 32, 4));
+    // a tighter pool exercises rejection paths far more often
+    check("allocator-roundtrip-tight", 300, &AllocSeqGen, |ops| apply_alloc_ops(ops, 7, 4));
+}
+
+// ---------------------------------------------------------------------------
+// DecodeStream: fuzzed byte-level splits must concatenate to batch decode
+// ---------------------------------------------------------------------------
+
+/// Stream-decode `ids` one token at a time and compare the concatenated
+/// deltas (plus the final flush) to the one-shot batch decode.
+fn stream_matches_batch(tok: &Tokenizer, ids: &[i32]) -> bool {
+    let mut stream = tok.decode_stream();
+    let mut acc = String::new();
+    for &id in ids {
+        acc.push_str(&stream.push(id));
+    }
+    acc.push_str(&stream.finish());
+    acc == tok.decode(ids)
+}
+
+#[test]
+fn prop_decode_stream_fuzzed_unicode() {
+    // byte-level vocab: every multi-byte character arrives split across
+    // single-byte tokens — the maximal split of a valid UTF-8 stream
+    let tok = Tokenizer::bytes_only(256);
+    check("decode-stream-unicode", 400, &UnicodeGen { max_chars: 48 }, |s| {
+        let ids: Vec<i32> = s.bytes().map(|b| b as i32).collect();
+        stream_matches_batch(&tok, &ids)
+    });
+}
+
+#[test]
+fn prop_decode_stream_fuzzed_bpe_splits() {
+    // BPE vocab: tokens carry multiple bytes, so splits land at arbitrary
+    // merge boundaries instead of single bytes
+    let corpus = "the cat sat on the mat. höwdy wörld ✓ the hat sat. ".repeat(30);
+    let tok = Tokenizer::train(&corpus, 320).unwrap();
+    check("decode-stream-bpe", 300, &UnicodeGen { max_chars: 32 }, |s| {
+        let mut ids = tok.encode(s);
+        ids.extend(tok.encode("the cat sat"));
+        stream_matches_batch(&tok, &ids)
+    });
+}
+
+#[test]
+fn prop_decode_stream_survives_arbitrary_byte_tokens() {
+    // raw random token streams: invalid and truncated UTF-8 sequences must
+    // render exactly like from_utf8_lossy's maximal-subpart substitution
+    struct RawBytesGen;
+    impl Gen for RawBytesGen {
+        type Value = Vec<i32>;
+        fn generate(&self, rng: &mut Rng) -> Vec<i32> {
+            let n = rng.range(0, 64);
+            (0..n).map(|_| rng.below(256) as i32).collect()
+        }
+        fn shrink(&self, v: &Vec<i32>) -> Vec<Vec<i32>> {
+            if v.is_empty() {
+                Vec::new()
+            } else {
+                vec![v[..v.len() / 2].to_vec(), v[1..].to_vec()]
+            }
+        }
+    }
+    let tok = Tokenizer::bytes_only(256);
+    check("decode-stream-raw-bytes", 500, &RawBytesGen, |ids| stream_matches_batch(&tok, ids));
 }
 
 #[test]

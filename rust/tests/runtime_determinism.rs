@@ -150,6 +150,75 @@ fn continuous_batching_slots_bitwise_identical() {
     );
 }
 
+/// Paged KV is part of the determinism contract too: chunked paged prefill
+/// + page-table decode must reproduce the slab engine's logits **bitwise**,
+/// on both rank runtimes (the threaded path broadcasts the page tables to
+/// every worker).
+#[test]
+fn paged_layout_bitwise_identical_to_slab_on_both_runtimes() {
+    use ladder_infer::engine::KvLayout;
+
+    let paged_stream = |runtime: RuntimeKind| -> Vec<Vec<u32>> {
+        let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+        let weights = tiny_weights(&exec);
+        let (page_size, pages) = (8usize, 64usize);
+        let mut engine = TpEngine::with_layout(
+            exec,
+            &weights,
+            2,
+            Arch::Ladder,
+            2,
+            Interconnect::new(Fabric::Local),
+            runtime,
+            KvLayout::Paged { page_size, pages },
+        )
+        .unwrap();
+        let max_pages = engine.kv_max_pages_per_seq();
+        // static page tables: slot 0 owns pages 0.., slot 1 owns max_pages..
+        let table = |slot: usize| -> Vec<u32> {
+            (0..max_pages as u32).map(|i| (slot * max_pages) as u32 + i).collect()
+        };
+        let tokens: Vec<i32> = (0..(2 * PROMPT) as i32).map(|i| i % 13 + 1).collect();
+        let mut stream = Vec::with_capacity(DECODE_STEPS + 1);
+        // slot 0 prefills in two chunks (7 + 9), slot 1 in one — the final
+        // chunk's logits must equal the one-shot slab prefill rows
+        engine.prefill_chunk_slot(0, &tokens[..7], 0, &table(0)).unwrap();
+        let row0 = engine.prefill_chunk_slot(0, &tokens[7..PROMPT], 7, &table(0)).unwrap();
+        let row1 = engine
+            .prefill_chunk_slot(1, &tokens[PROMPT..2 * PROMPT], 0, &table(1))
+            .unwrap();
+        let mut bits: Vec<u32> = row0.iter().map(|x| x.to_bits()).collect();
+        bits.extend(row1.iter().map(|x| x.to_bits()));
+        stream.push(bits);
+        let mut tables = vec![-1i32; 2 * max_pages];
+        for slot in 0..2 {
+            for (i, pg) in table(slot).iter().enumerate() {
+                tables[slot * max_pages + i] = *pg as i32;
+            }
+        }
+        for t in 0..DECODE_STEPS as i32 {
+            let logits = engine
+                .decode_paged(&[t % 7 + 1, t % 5 + 2], &[true, true], tables.clone(), max_pages)
+                .unwrap();
+            stream.push(logits.data.iter().map(|x| x.to_bits()).collect());
+        }
+        stream
+    };
+    let slab = logits_stream(Arch::Ladder, RuntimeKind::Sequential);
+    for runtime in [RuntimeKind::Sequential, RuntimeKind::Threaded] {
+        let paged = paged_stream(runtime);
+        assert_eq!(slab.len(), paged.len());
+        for (step, (a, b)) in slab.iter().zip(&paged).enumerate() {
+            assert_eq!(
+                a,
+                b,
+                "paged[{}] step {step} logits diverge bitwise from the slab oracle",
+                runtime.name()
+            );
+        }
+    }
+}
+
 /// Backend parity: native logits must match the PJRT path within tolerance
 /// on the tiny config. Needs `--features xla`, the real vendored xla-rs
 /// toolchain, and `make artifacts` (skips with a note when absent).

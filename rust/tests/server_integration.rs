@@ -13,7 +13,7 @@ use std::rc::Rc;
 use std::sync::mpsc::channel;
 
 use ladder_infer::comm::{Fabric, Interconnect};
-use ladder_infer::engine::{Sampler, TpEngine};
+use ladder_infer::engine::{KvLayout, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::Exec;
 use ladder_infer::server::{
@@ -26,6 +26,22 @@ fn build_engine(arch: Arch, batch: usize) -> TpEngine {
     let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
     let weights = WeightStore::random(exec.cfg(), 0xbeef);
     TpEngine::new(exec, &weights, 2, arch, batch, Interconnect::new(Fabric::Local)).unwrap()
+}
+
+fn build_paged_engine(arch: Arch, batch: usize, page_size: usize, pages: usize) -> TpEngine {
+    let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+    let weights = WeightStore::random(exec.cfg(), 0xbeef);
+    TpEngine::with_layout(
+        exec,
+        &weights,
+        2,
+        arch,
+        batch,
+        Interconnect::new(Fabric::Local),
+        RuntimeKind::default(),
+        KvLayout::Paged { page_size, pages },
+    )
+    .unwrap()
 }
 
 fn build_batcher(arch: Arch, batch: usize) -> Batcher {
@@ -101,6 +117,122 @@ fn batcher_isolation_between_slots() {
         results.into_iter().find(|r| r.id == 0).unwrap().tokens
     };
     assert_eq!(solo, crowded, "KV slot leakage between concurrent requests");
+}
+
+/// Regression for the clear_slot fix: after a long request vacates a slot,
+/// a shorter reused request must see none of its predecessor's K/V — its
+/// tokens must match a fresh-engine run exactly.
+#[test]
+fn reused_slot_reads_no_stale_kv() {
+    let prompt = vec![5i32, 9, 2];
+    let fresh = greedy_tokens(&prompt, 6);
+    // batch = 1: the second request provably reuses the first's slot
+    let mut b = build_batcher(Arch::Standard, 1);
+    let long: Vec<i32> = (0..40).map(|i| (i * 3 % 256) as i32).collect();
+    b.submit(Request::new(0, long, 20));
+    b.run_to_completion().unwrap();
+    b.submit(Request::new(1, prompt, 6));
+    let r = b.run_to_completion().unwrap().remove(0);
+    assert_eq!(r.tokens, fresh, "reused slot leaked stale K/V into request 1");
+}
+
+/// Same reuse discipline on the paged layout: pages returned by a finished
+/// request are handed to the next one without any clearing — masked
+/// attention must keep the stale bytes invisible.
+#[test]
+fn paged_page_reuse_reads_no_stale_kv() {
+    let prompt = vec![5i32, 9, 2];
+    let fresh = greedy_tokens(&prompt, 6);
+    // pool of exactly one max-length request: pages MUST be recycled
+    let engine = build_paged_engine(Arch::Standard, 1, 16, 8);
+    let mut b = Batcher::new(engine, BatcherConfig::default());
+    let long: Vec<i32> = (0..40).map(|i| (i * 3 % 256) as i32).collect();
+    b.submit(Request::new(0, long, 20));
+    b.run_to_completion().unwrap();
+    b.submit(Request::new(1, prompt, 6));
+    let r = b.run_to_completion().unwrap().remove(0);
+    assert_eq!(r.tokens, fresh, "recycled pages leaked stale K/V into request 1");
+    let alloc = b.allocator().unwrap();
+    alloc.check().unwrap();
+    assert_eq!(alloc.pages_in_use(), 0);
+}
+
+/// Paged admission: a pool too small for two reservations serializes the
+/// requests, bumps the admission-blocked counter, and still finishes both
+/// with full-length outputs.
+#[test]
+fn paged_admission_blocks_on_reservation_and_recovers() {
+    // 4 pages of 16 tokens; each request reserves ceil((4+40)/16) = 3
+    let engine = build_paged_engine(Arch::Ladder, 2, 16, 4);
+    let mut b = Batcher::new(engine, BatcherConfig::default());
+    b.submit(Request::new(0, vec![1, 2, 3, 4], 40));
+    b.submit(Request::new(1, vec![9, 8, 7, 6], 40));
+    let results = b.run_to_completion().unwrap();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert_eq!(r.finish_reason, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 40);
+    }
+    assert!(
+        b.metrics.admission_blocked > 0,
+        "second request should have waited for pages at least once"
+    );
+    assert!(b.metrics.kv_pages_high_water >= 3);
+    assert_eq!(b.metrics.kv_pages_in_use, 0, "gauge must drop back to zero after drain");
+    b.allocator().unwrap().check().unwrap();
+}
+
+/// A request id colliding with an in-flight page-table owner must fail
+/// that request alone (reason `Error`), never the serve loop.
+#[test]
+fn paged_duplicate_request_id_fails_alone() {
+    let engine = build_paged_engine(Arch::Standard, 2, 16, 16);
+    let mut b = Batcher::new(engine, BatcherConfig::default());
+    b.submit(Request::new(5, vec![1, 2, 3], 30));
+    b.submit(Request::new(5, vec![4, 5, 6], 30));
+    let mut results = Vec::new();
+    while b.pending() > 0 {
+        for ev in b.step().unwrap() {
+            if let GenerationEvent::Finished { result } = ev {
+                results.push(result);
+            }
+        }
+    }
+    assert_eq!(results.len(), 2);
+    let errors = results.iter().filter(|r| r.finish_reason == FinishReason::Error).count();
+    let lengths = results.iter().filter(|r| r.finish_reason == FinishReason::Length).count();
+    assert_eq!((errors, lengths), (1, 1), "duplicate id must fail alone");
+    b.allocator().unwrap().check().unwrap();
+    assert_eq!(b.allocator().unwrap().pages_in_use(), 0);
+}
+
+/// A duplicate *streaming* submission must be rejected on its own sink and
+/// must not hijack or orphan the original request's event stream.
+#[test]
+fn duplicate_streaming_id_does_not_hijack_original_stream() {
+    let engine = build_paged_engine(Arch::Standard, 2, 16, 16);
+    let mut b = Batcher::new(engine, BatcherConfig::default());
+    let (tx1, rx1) = channel();
+    b.submit_streaming(Request::new(5, vec![1, 2, 3], 4), tx1);
+    let (tx2, rx2) = channel();
+    b.submit_streaming(Request::new(5, vec![9, 9], 4), tx2);
+    // the duplicate is rejected synchronously, on its own sink
+    let Ok(GenerationEvent::Finished { result }) = rx2.try_recv() else {
+        panic!("duplicate must be rejected immediately on its own sink");
+    };
+    assert_eq!(result.finish_reason, FinishReason::Error);
+    while b.pending() > 0 {
+        b.step().unwrap();
+    }
+    // the original stream is untouched: Admitted, 4 tokens, Finished(Length)
+    let events: Vec<GenerationEvent> = rx1.try_iter().collect();
+    assert!(matches!(events[0], GenerationEvent::Admitted { id: 5, .. }));
+    let GenerationEvent::Finished { result } = events.last().unwrap() else {
+        panic!("original stream must end with Finished");
+    };
+    assert_eq!(result.finish_reason, FinishReason::Length);
+    assert_eq!(result.tokens.len(), 4);
+    assert_eq!(events.len(), 6, "Admitted + 4 Tokens + Finished");
 }
 
 #[test]
@@ -428,6 +560,46 @@ fn tcp_cancel_mid_stream_reuses_slot() {
     assert!(reply2.opt("error").is_none(), "{reply2:?}");
     assert_eq!(reply2.get("tokens").unwrap().as_arr().unwrap().len(), 3);
     assert_eq!(b.metrics.cancelled, 1);
+}
+
+#[test]
+fn tcp_stats_query_snapshots_metrics() {
+    let tok = Tokenizer::bytes_only(256);
+    let (jobs, port) = api::spawn_listener("127.0.0.1:0", tok).unwrap();
+
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        stream.write_all(b"{\"prompt\":\"hello\",\"max_new_tokens\":4}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let reply = parse(&line).unwrap();
+        line.clear();
+        stream.write_all(b"{\"stats\":true}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let stats = parse(&line).unwrap();
+        // a second request lets the serve loop hit its completion target
+        line.clear();
+        stream.write_all(b"{\"prompt\":\"bye\",\"max_new_tokens\":2}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        (reply, stats)
+    });
+
+    // paged engine end-to-end over the wire: chunked prefill + page tables
+    let engine = build_paged_engine(Arch::Ladder, 2, 8, 64);
+    let config = BatcherConfig { prefill_chunk: 2, ..BatcherConfig::default() };
+    let mut b = Batcher::with_tokenizer(engine, config, Tokenizer::bytes_only(256));
+    api::serve_forever(&mut b, jobs, 2).unwrap();
+
+    let (reply, stats) = client.join().unwrap();
+    assert!(reply.opt("error").is_none(), "{reply:?}");
+    assert_eq!(reply.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(stats.get("completed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(stats.get("tokens_out").unwrap().as_usize().unwrap(), 4);
+    assert!(stats.opt("kv_pages_in_use").is_some());
+    assert!(stats.get("kv_pages_high_water").unwrap().as_usize().unwrap() >= 1);
+    assert!(stats.opt("admission_blocked").is_some());
+    assert!(stats.get("throughput_tok_per_s").unwrap().as_f64().unwrap() > 0.0);
 }
 
 #[test]
