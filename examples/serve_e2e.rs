@@ -40,6 +40,11 @@ fn main() -> anyhow::Result<()> {
         )
         .opt("kv-budget-mb", Some("0"), "KV admission budget in MiB (0 = capacity only)")
         .opt("prefill-chunk", Some("16"), "paged: prompt tokens prefilled per iteration")
+        .flag(
+            "prefix-cache",
+            "paged: reuse KV pages across requests sharing a prompt prefix (the trace then \
+             draws prompts from 4 shared templates so hits actually occur)",
+        )
         .parse_env()?;
 
     let exec =
@@ -72,12 +77,32 @@ fn main() -> anyhow::Result<()> {
     );
 
     // shared request trace: Poisson arrivals are simulated by submitting in
-    // waves (the batcher is synchronous, so think "burst arrivals")
+    // waves (the batcher is synchronous, so think "burst arrivals"). With
+    // --prefix-cache the prompts share 4 system-prompt templates, the
+    // workload shape the cache exists for.
+    let prefix_cache = args.has_flag("prefix-cache");
+    if prefix_cache && !layout.is_paged() {
+        anyhow::bail!("--prefix-cache needs a paged KV layout (set --page-size > 0)");
+    }
     let mut rng = Rng::new(7);
+    // built only when the cache is on, so the default trace (and its
+    // recorded numbers) consume exactly the RNG draws they always did
+    let templates: Vec<Vec<i32>> = if prefix_cache {
+        (0..4).map(|_| (0..16).map(|_| rng.below(cfg.vocab) as i32).collect()).collect()
+    } else {
+        Vec::new()
+    };
     let prompts: Vec<Vec<i32>> = (0..n_requests)
-        .map(|_| {
-            let len = rng.range(8, 30);
-            (0..len).map(|_| rng.below(cfg.vocab) as i32).collect()
+        .map(|i| {
+            if prefix_cache {
+                let mut p = templates[i % templates.len()].clone();
+                let tail = rng.range(4, 14);
+                p.extend((0..tail).map(|_| rng.below(cfg.vocab) as i32));
+                p
+            } else {
+                let len = rng.range(8, 30);
+                (0..len).map(|_| rng.below(cfg.vocab) as i32).collect()
+            }
         })
         .collect();
 
@@ -91,6 +116,7 @@ fn main() -> anyhow::Result<()> {
             "itl p50 (ms)",
             "e2e p99 (ms)",
             "kv hw (pages)",
+            "pfx hit %",
             "comm hidden %",
         ],
     );
@@ -110,6 +136,7 @@ fn main() -> anyhow::Result<()> {
         let config = BatcherConfig {
             kv_budget_bytes: args.get_usize("kv-budget-mb")? << 20,
             prefill_chunk: args.get_usize("prefill-chunk")?,
+            prefix_cache,
             ..BatcherConfig::default()
         };
         let mut batcher = Batcher::new(engine, config);
@@ -138,6 +165,16 @@ fn main() -> anyhow::Result<()> {
             match batcher.allocator() {
                 Some(a) => format!("{}/{}", a.high_water(), a.total_pages()),
                 None => "-".to_string(),
+            },
+            if prefix_cache {
+                let m = &batcher.metrics;
+                let prompt_tokens = m.prefix_hit_tokens + m.prefill_tokens;
+                format!(
+                    "{:.0}",
+                    100.0 * m.prefix_hit_tokens as f64 / prompt_tokens.max(1) as f64
+                )
+            } else {
+                "-".to_string()
             },
             format!("{:.0}", comm.hidden_fraction() * 100.0),
         ]);

@@ -19,6 +19,19 @@
 //! request can always grow to its reserved length — no deadlock, no
 //! preemption, and every accepted request finishes (the paged stress
 //! harness asserts exactly this).
+//!
+//! Pages are **reference counted** so the prefix cache
+//! ([`super::prefix::PrefixTree`]) can share full, immutable prompt pages
+//! between requests: `rc_req` counts the request tables holding a page,
+//! `tree_ref` marks the prefix tree's reference. A page returns to the free
+//! list only when both drop to zero. A request admitted against a cached
+//! chain reserves only its *uncached suffix*; the admission invariant
+//! becomes `reserved_total + shared_active <= total_pages` (shared pages
+//! pinned by live requests count once, however many requests read them),
+//! which keeps the no-deadlock guarantee: every outstanding private-page
+//! commitment is backed by a page that is free or evictable (cached with no
+//! request references). The tree evicts in LRU order when the free list
+//! alone cannot feed a commitment.
 
 use std::collections::HashMap;
 
@@ -254,6 +267,28 @@ impl PagedKvCache {
         self.v[layer] = v;
     }
 
+    /// Copy every row of page `src` into page `dst` across all layers (the
+    /// copy-on-write step behind full-prompt prefix-cache hits: the shared
+    /// trailing page is duplicated into a private page before the hit's
+    /// final token is re-prefilled over it). Bitwise copy — reuse stays
+    /// exact.
+    pub fn copy_page(&mut self, src: u32, dst: u32) -> Result<()> {
+        let (src, dst) = (src as usize, dst as usize);
+        if src >= self.pages || dst >= self.pages {
+            bail!("copy_page: {src} -> {dst} out of range ({} pages)", self.pages);
+        }
+        if src == dst {
+            bail!("copy_page: source and destination are both page {src}");
+        }
+        let stride = self.kv_heads_l * self.page_size * self.head_dim;
+        for layer in 0..self.k.len() {
+            for t in [&mut self.k[layer], &mut self.v[layer]] {
+                t.data.copy_within(src * stride..(src + 1) * stride, dst * stride);
+            }
+        }
+        Ok(())
+    }
+
     /// Scatter freshly written K/V rows into the pool. `rows` is
     /// `[n, KVl, D]` flattened; `dst[i]` is the (page, in-page offset) each
     /// row lands at.
@@ -296,25 +331,44 @@ pub struct PageTable {
     pub pages: Vec<u32>,
     /// Tokens with allocated backing (`pages.len() == ceil(len/page_size)`).
     pub len: usize,
-    /// Worst-case pages this request may grow to (admission commitment).
+    /// Worst-case pages this request may grow to (admission commitment,
+    /// shared prefix included).
     pub reserved_pages: usize,
+    /// Leading pages retained from the prefix tree at admission: shared,
+    /// immutable, never allocated from (or returned to) this owner's
+    /// private reservation.
+    pub shared_pages: usize,
 }
 
-/// Free-list page allocator with per-request page tables and byte-accurate
-/// budget accounting. Admission reserves worst-case capacity; physical
-/// pages are handed out lazily as tokens are written and returned in full
-/// the instant a request finishes or is cancelled.
+/// Free-list page allocator with per-request page tables, per-page
+/// reference counts and byte-accurate budget accounting. Admission reserves
+/// worst-case capacity for the *uncached* part of a request; physical pages
+/// are handed out lazily as tokens are written and returned the instant the
+/// last reference (request table or prefix tree) drops.
 #[derive(Debug)]
 pub struct BlockAllocator {
     page_size: usize,
     /// Bytes one page occupies across all ranks (K + V, all layers).
     page_bytes: usize,
     total_pages: usize,
-    /// LIFO free list of physical page ids.
+    /// LIFO free list of physical page ids (all with zero references).
     free: Vec<u32>,
     tables: HashMap<u64, PageTable>,
+    /// Sum over live owners of their *private* commitments
+    /// (`reserved_pages - shared_pages`): the pages they may still pull
+    /// from the free list.
     reserved_total: usize,
     high_water: usize,
+    /// Per-page count of request tables referencing the page.
+    rc_req: Vec<u32>,
+    /// Per-page: does the prefix tree hold a reference? (At most one node
+    /// per page — the tree never aliases.)
+    tree_ref: Vec<bool>,
+    /// Pages referenced by the tree AND >= 1 request (pinned: counted once
+    /// against capacity no matter how many requests read them).
+    shared_active: usize,
+    /// Pages referenced only by the tree (the evictable cache).
+    cached_idle: usize,
 }
 
 impl BlockAllocator {
@@ -329,6 +383,10 @@ impl BlockAllocator {
             tables: HashMap::new(),
             reserved_total: 0,
             high_water: 0,
+            rc_req: vec![0; total_pages],
+            tree_ref: vec![false; total_pages],
+            shared_active: 0,
+            cached_idle: 0,
         }
     }
 
@@ -337,38 +395,104 @@ impl BlockAllocator {
         tokens.div_ceil(self.page_size)
     }
 
-    /// Admission rule: would a request with this worst-case token count fit
-    /// in the unreserved capacity right now?
+    /// Admission rule (no cached prefix): would a request with this
+    /// worst-case token count fit right now?
     pub fn can_admit(&self, reserve_tokens: usize) -> bool {
-        self.reserved_total + self.pages_for(reserve_tokens) <= self.total_pages
+        self.can_admit_chain(reserve_tokens, &[])
+    }
+
+    /// Admission rule against a cached prefix chain: the request commits to
+    /// `pages_for(reserve_tokens) - chain.len()` *private* pages, and any
+    /// chain page not yet pinned by another request newly joins the
+    /// shared-active set. The invariant `reserved_total + shared_active <=
+    /// total_pages` guarantees every private commitment can be fed from
+    /// free or evictable (zero-request-ref cached) pages — the no-deadlock
+    /// rule, now shared-prefix aware. Note evicting the cache can never
+    /// unblock this check (eviction frees idle pages, which already count
+    /// as available); eviction only feeds *physical* page allocation.
+    pub fn can_admit_chain(&self, reserve_tokens: usize, chain: &[u32]) -> bool {
+        let reserved = self.pages_for(reserve_tokens);
+        if chain.len() > reserved {
+            return false;
+        }
+        let newly_active = chain.iter().filter(|&&p| self.rc_req[p as usize] == 0).count();
+        self.reserved_total + (reserved - chain.len()) + self.shared_active + newly_active
+            <= self.total_pages
     }
 
     /// Admit `owner`: reserve `reserve_tokens` worth of pages and allocate
     /// backing for the `prompt_tokens` that are about to be written.
     pub fn admit(&mut self, owner: u64, prompt_tokens: usize, reserve_tokens: usize) -> Result<()> {
+        self.admit_shared(owner, prompt_tokens, reserve_tokens, &[])
+    }
+
+    /// Admit `owner` on top of a cached prefix: `chain` pages (retained
+    /// from the prefix tree, every one tree-referenced and covering the
+    /// prompt's leading `chain.len() * page_size` tokens) become the head
+    /// of the owner's table without touching its private reservation;
+    /// backing for the uncached remainder of the prompt is allocated from
+    /// the free list. The caller must evict enough cached-idle pages first
+    /// if the free list is short ([`BlockAllocator::free_shortfall`]).
+    pub fn admit_shared(
+        &mut self,
+        owner: u64,
+        prompt_tokens: usize,
+        reserve_tokens: usize,
+        chain: &[u32],
+    ) -> Result<()> {
         if self.tables.contains_key(&owner) {
             bail!("owner {owner} already has a page table");
         }
         if prompt_tokens > reserve_tokens {
             bail!("prompt {prompt_tokens} exceeds reservation {reserve_tokens}");
         }
-        if !self.can_admit(reserve_tokens) {
+        if chain.len() * self.page_size > prompt_tokens {
             bail!(
-                "cannot admit {owner}: {} pages reserved of {}, want {} more",
-                self.reserved_total,
-                self.total_pages,
-                self.pages_for(reserve_tokens)
+                "cached chain of {} pages overruns the {prompt_tokens}-token prompt",
+                chain.len()
             );
         }
+        for &p in chain {
+            if p as usize >= self.total_pages || !self.tree_ref[p as usize] {
+                bail!("chain page {p} is not a cached page");
+            }
+        }
+        if !self.can_admit_chain(reserve_tokens, chain) {
+            bail!(
+                "cannot admit {owner}: {} private pages reserved + {} shared-active of {}, \
+                 want {} more",
+                self.reserved_total,
+                self.shared_active,
+                self.total_pages,
+                self.pages_for(reserve_tokens) - chain.len()
+            );
+        }
+        for &p in chain {
+            self.rc_req[p as usize] += 1;
+            if self.rc_req[p as usize] == 1 {
+                self.cached_idle -= 1;
+                self.shared_active += 1;
+            }
+        }
         let reserved_pages = self.pages_for(reserve_tokens);
-        self.reserved_total += reserved_pages;
-        self.tables.insert(owner, PageTable { pages: Vec::new(), len: 0, reserved_pages });
+        self.reserved_total += reserved_pages - chain.len();
+        self.tables.insert(
+            owner,
+            PageTable {
+                pages: chain.to_vec(),
+                len: chain.len() * self.page_size,
+                reserved_pages,
+                shared_pages: chain.len(),
+            },
+        );
         self.ensure(owner, prompt_tokens)
     }
 
     /// Grow `owner`'s backing to cover `new_len` tokens. Guaranteed to
-    /// succeed within the reservation (the free list cannot be empty while
-    /// any owner is below its reserved page count).
+    /// succeed within the reservation, provided the caller has first
+    /// evicted any cached-idle pages the free list is short of
+    /// ([`BlockAllocator::free_shortfall`]) — the invariant guarantees
+    /// free + evictable always covers outstanding commitments.
     pub fn ensure(&mut self, owner: u64, new_len: usize) -> Result<()> {
         let need = self.pages_for(new_len);
         let table = self
@@ -383,8 +507,12 @@ impl BlockAllocator {
         }
         while table.pages.len() < need {
             let page = self.free.pop().ok_or_else(|| {
-                anyhow::anyhow!("free list empty inside a reservation — allocator corrupt")
+                anyhow::anyhow!(
+                    "free list empty inside a reservation — evict the prefix cache before \
+                     growing (allocator corrupt if nothing is evictable)"
+                )
             })?;
+            self.rc_req[page as usize] = 1;
             table.pages.push(page);
         }
         table.len = table.len.max(new_len);
@@ -393,15 +521,99 @@ impl BlockAllocator {
         Ok(())
     }
 
-    /// Release everything `owner` holds (finish / cancel): physical pages go
-    /// straight back to the free list, the reservation is dropped. Returns
-    /// the number of pages freed; unknown owners free nothing.
+    /// Free pages `owner` would need to pull from the free list to back
+    /// `new_len` tokens, beyond what the free list currently holds — the
+    /// number of cached-idle pages the caller must evict before calling
+    /// [`BlockAllocator::ensure`]. Zero when the free list already
+    /// suffices. (Admission computes its own shortfall: the chain head
+    /// never touches the free list.)
+    pub fn free_shortfall(&self, owner: u64, new_len: usize) -> usize {
+        let backed = self.tables.get(&owner).map_or(0, |t| t.pages.len());
+        let grow = self.pages_for(new_len).saturating_sub(backed);
+        grow.saturating_sub(self.free.len())
+    }
+
+    /// Release everything `owner` holds (finish / cancel): the owner's
+    /// reference on each page is dropped; pages with no remaining
+    /// references return to the free list, pages the prefix tree still
+    /// references become cached-idle (evictable) instead of being freed —
+    /// **never** zeroed or reused while referenced. Returns the number of
+    /// pages actually freed; unknown owners free nothing.
     pub fn free(&mut self, owner: u64) -> usize {
         let Some(table) = self.tables.remove(&owner) else { return 0 };
-        self.reserved_total -= table.reserved_pages;
-        let n = table.pages.len();
-        self.free.extend(table.pages);
+        self.reserved_total -= table.reserved_pages - table.shared_pages;
+        let mut n = 0;
+        for page in table.pages {
+            let p = page as usize;
+            self.rc_req[p] -= 1;
+            if self.rc_req[p] == 0 {
+                if self.tree_ref[p] {
+                    self.shared_active -= 1;
+                    self.cached_idle += 1;
+                } else {
+                    self.free.push(page);
+                    n += 1;
+                }
+            }
+        }
         n
+    }
+
+    /// Request-table references currently held on `page`.
+    pub fn req_refs(&self, page: u32) -> u32 {
+        self.rc_req[page as usize]
+    }
+
+    /// Is `page` referenced by the prefix tree?
+    pub fn is_cached(&self, page: u32) -> bool {
+        self.tree_ref[page as usize]
+    }
+
+    /// Take the prefix tree's reference on `page` (publish). The page must
+    /// currently be owned by the publishing request — a free page cannot be
+    /// published — and not already cached (the tree never aliases a page).
+    pub fn tree_retain(&mut self, page: u32) -> Result<()> {
+        let p = page as usize;
+        if p >= self.total_pages {
+            bail!("tree_retain: page {page} out of range");
+        }
+        if self.tree_ref[p] {
+            bail!("tree_retain: page {page} is already cached");
+        }
+        if self.rc_req[p] == 0 {
+            bail!("tree_retain: page {page} has no owner to publish from");
+        }
+        self.tree_ref[p] = true;
+        self.shared_active += 1;
+        Ok(())
+    }
+
+    /// Drop the prefix tree's reference on `page` (eviction). Only legal on
+    /// cached pages no request references — eviction must never touch a
+    /// page with a positive request refcount. The page returns to the free
+    /// list.
+    pub fn tree_release(&mut self, page: u32) -> Result<()> {
+        let p = page as usize;
+        if p >= self.total_pages || !self.tree_ref[p] {
+            bail!("tree_release: page {page} is not cached");
+        }
+        if self.rc_req[p] > 0 {
+            bail!("tree_release: page {page} still has {} request refs", self.rc_req[p]);
+        }
+        self.tree_ref[p] = false;
+        self.cached_idle -= 1;
+        self.free.push(page);
+        Ok(())
+    }
+
+    /// Pages currently referenced by the prefix tree (pinned + idle).
+    pub fn cached_pages(&self) -> usize {
+        self.shared_active + self.cached_idle
+    }
+
+    /// Cached pages no live request references — what eviction can reclaim.
+    pub fn evictable_pages(&self) -> usize {
+        self.cached_idle
     }
 
     pub fn table(&self, owner: u64) -> Option<&PageTable> {
@@ -461,12 +673,14 @@ impl BlockAllocator {
     }
 
     /// Full structural audit, run by the stress harness after every step:
-    /// conservation (free + owned == total), no page double-owned or both
-    /// owned and free, per-owner backing exactly matches its length, and
-    /// reservations within capacity.
+    /// reference counts exactly match the tables, conservation (every page
+    /// is free xor referenced), a page is never both free and referenced,
+    /// shared pages are tree-backed, per-owner backing exactly matches its
+    /// length, reservations within capacity, and the shared-prefix
+    /// admission invariant (`reserved_total + shared_active <= total`) that
+    /// carries the no-deadlock guarantee.
     pub fn check(&self) -> Result<()> {
-        let mut seen: Vec<u32> = self.free.clone();
-        let mut owned = 0usize;
+        let mut rc: Vec<u32> = vec![0; self.total_pages];
         let mut reserved = 0usize;
         for (owner, t) in &self.tables {
             if t.pages.len() != self.pages_for(t.len) {
@@ -484,34 +698,84 @@ impl BlockAllocator {
                     t.reserved_pages
                 );
             }
-            owned += t.pages.len();
-            reserved += t.reserved_pages;
-            seen.extend(&t.pages);
+            if t.shared_pages > t.reserved_pages {
+                bail!(
+                    "owner {owner}: {} shared pages exceed its {}-page reservation",
+                    t.shared_pages,
+                    t.reserved_pages
+                );
+            }
+            reserved += t.reserved_pages - t.shared_pages;
+            let mut in_table = std::collections::HashSet::new();
+            for (i, &p) in t.pages.iter().enumerate() {
+                if p as usize >= self.total_pages {
+                    bail!("owner {owner}: page id {p} out of range ({} pages)", self.total_pages);
+                }
+                if !in_table.insert(p) {
+                    bail!("owner {owner}: page {p} appears twice in one table");
+                }
+                if i < t.shared_pages && !self.tree_ref[p as usize] {
+                    bail!(
+                        "owner {owner}: shared page {p} lost its prefix-tree reference \
+                         while still in use"
+                    );
+                }
+                rc[p as usize] += 1;
+            }
         }
-        if self.free.len() + owned != self.total_pages {
+        if rc != self.rc_req {
+            bail!("request refcounts diverge from the tables");
+        }
+        let mut free_seen = vec![false; self.total_pages];
+        for &p in &self.free {
+            let p = p as usize;
+            if p >= self.total_pages {
+                bail!("free page id {p} out of range");
+            }
+            if free_seen[p] {
+                bail!("page {p} is on the free list twice");
+            }
+            free_seen[p] = true;
+            if rc[p] > 0 || self.tree_ref[p] {
+                bail!(
+                    "page {p} is free but still referenced (rc {}, tree {})",
+                    rc[p],
+                    self.tree_ref[p]
+                );
+            }
+        }
+        let (mut active, mut idle) = (0usize, 0usize);
+        for p in 0..self.total_pages {
+            match (rc[p] > 0, self.tree_ref[p]) {
+                (true, true) => active += 1,
+                (false, true) => idle += 1,
+                (false, false) if !free_seen[p] => {
+                    bail!("page {p} leaked: no reference and not on the free list")
+                }
+                _ => {}
+            }
+        }
+        if active != self.shared_active || idle != self.cached_idle {
             bail!(
-                "page leak: {} free + {} owned != {} total",
-                self.free.len(),
-                owned,
-                self.total_pages
+                "shared-page accounting: {active} active / {idle} idle counted vs \
+                 {} / {} tracked",
+                self.shared_active,
+                self.cached_idle
             );
-        }
-        seen.sort_unstable();
-        for w in seen.windows(2) {
-            if w[0] == w[1] {
-                bail!("page {} is double-owned (or owned and free)", w[0]);
-            }
-        }
-        if let Some(&max) = seen.last() {
-            if max as usize >= self.total_pages {
-                bail!("page id {max} out of range ({} pages)", self.total_pages);
-            }
         }
         if reserved != self.reserved_total || reserved > self.total_pages {
             bail!(
                 "reservation accounting: {} summed vs {} tracked of {} total",
                 reserved,
                 self.reserved_total,
+                self.total_pages
+            );
+        }
+        if self.reserved_total + self.shared_active > self.total_pages {
+            bail!(
+                "no-deadlock invariant broken: {} reserved + {} shared-active > {} total",
+                self.reserved_total,
+                self.shared_active,
                 self.total_pages
             );
         }
@@ -746,5 +1010,99 @@ mod tests {
         let mut tight = [9i32; 2];
         assert!(a.fill_table_row(1, &mut tight).is_err(), "row narrower than the table");
         assert!(a.fill_table_row(7, &mut row).is_err(), "unknown owner");
+    }
+
+    #[test]
+    fn copy_page_duplicates_all_rows() {
+        let (kvl, p, d) = (2, 4, 2);
+        let mut pool = PagedKvCache::new(2, 3, kvl, p, d);
+        for (i, x) in pool.k[1].data.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let src_block: Vec<f32> = pool.k[1].data[kvl * p * d..2 * kvl * p * d].to_vec();
+        pool.copy_page(1, 2).unwrap();
+        assert_eq!(pool.k[1].data[2 * kvl * p * d..3 * kvl * p * d], src_block[..]);
+        // source untouched, other layers' dst rows follow their own source
+        assert_eq!(pool.k[1].data[kvl * p * d..2 * kvl * p * d], src_block[..]);
+        assert!(pool.v[0].data.iter().all(|&x| x == 0.0));
+        assert!(pool.copy_page(0, 9).is_err());
+        assert!(pool.copy_page(2, 2).is_err(), "self-copy is a caller bug");
+    }
+
+    #[test]
+    fn refcounted_publish_share_evict_lifecycle() {
+        let mut a = BlockAllocator::new(8, 4, 1);
+        // donor: 8-token prompt (2 full pages), finishes after publishing
+        a.admit(1, 8, 8).unwrap();
+        let chain = a.table(1).unwrap().pages.clone();
+        assert_eq!(chain, vec![0, 1]);
+        a.tree_retain(0).unwrap();
+        a.tree_retain(1).unwrap();
+        assert!(a.tree_retain(1).is_err(), "double publish must be rejected");
+        a.check().unwrap();
+        assert_eq!(a.free(1), 0, "published pages survive the donor");
+        a.check().unwrap();
+        assert_eq!((a.cached_pages(), a.evictable_pages(), a.pages_in_use()), (2, 2, 2));
+        // a follower reuses the chain: only its suffix is reserved
+        a.admit_shared(2, 10, 12, &chain).unwrap();
+        a.check().unwrap();
+        assert_eq!(a.reserved_pages(), 1, "3-page worst case minus 2 cached");
+        assert_eq!(a.evictable_pages(), 0, "chain is pinned while request 2 lives");
+        assert_eq!(a.req_refs(0), 1);
+        assert_eq!(a.table(2).unwrap().pages[..2], chain[..]);
+        assert!(a.tree_release(0).is_err(), "eviction must never touch a referenced page");
+        // a second follower shares the same pages at zero extra cost
+        a.admit_shared(3, 8, 8, &chain).unwrap();
+        assert_eq!(a.req_refs(0), 2);
+        assert_eq!(a.cached_pages(), 2);
+        a.check().unwrap();
+        assert_eq!(a.free(2), 1, "only the private suffix page is freed");
+        a.free(3);
+        a.check().unwrap();
+        // both gone: the chain is evictable again, and eviction round-trips
+        // the pool to a full free list
+        assert_eq!(a.evictable_pages(), 2);
+        a.tree_release(1).unwrap();
+        a.tree_release(0).unwrap();
+        a.check().unwrap();
+        assert_eq!((a.pages_in_use(), a.free_pages()), (0, 8));
+    }
+
+    #[test]
+    fn chain_admission_counts_shared_pages_once() {
+        let mut a = BlockAllocator::new(6, 4, 1);
+        a.admit(1, 8, 8).unwrap();
+        let chain = a.table(1).unwrap().pages.clone();
+        a.tree_retain(chain[0]).unwrap();
+        a.tree_retain(chain[1]).unwrap();
+        a.free(1);
+        // three followers, each worst-case 3 pages: cold admission would
+        // need 9 pages; sharing the 2-page chain needs 2 + 3x1
+        for owner in [2u64, 3, 4] {
+            assert!(a.can_admit_chain(12, &chain), "owner {owner} should fit");
+            a.admit_shared(owner, 9, 12, &chain).unwrap();
+            a.check().unwrap();
+        }
+        assert_eq!(a.reserved_pages(), 3);
+        assert_eq!(a.pages_in_use(), 5);
+        // a cold 2-page request no longer fits (3 reserved + 2 shared + 2 > 6)
+        assert!(!a.can_admit(8));
+        // rejected chains: unknown / uncached pages, over-long chains
+        assert!(a.admit_shared(5, 4, 4, &[5]).is_err(), "page 5 is not cached");
+        assert!(a.admit_shared(5, 4, 4, &chain).is_err(), "chain overruns the prompt");
+    }
+
+    #[test]
+    fn free_shortfall_reports_eviction_need() {
+        let mut a = BlockAllocator::new(4, 4, 1);
+        a.admit(1, 4, 16).unwrap();
+        a.tree_retain(a.table(1).unwrap().pages[0]).unwrap();
+        a.free(1);
+        // 3 free pages, 1 cached-idle: a 16-token ensure for a fresh owner
+        // needs 4 pages -> shortfall 1 (the cached page must be evicted)
+        a.admit(2, 1, 16).unwrap();
+        assert_eq!(a.free_shortfall(2, 12), 0);
+        assert_eq!(a.free_shortfall(2, 16), 1);
+        assert_eq!(a.free_shortfall(9, 4), 0, "unknown owners have no table yet");
     }
 }

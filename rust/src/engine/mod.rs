@@ -16,6 +16,7 @@
 
 pub mod generate;
 pub mod kv;
+pub mod prefix;
 pub mod rank;
 pub mod threaded;
 pub mod tpengine;
@@ -23,6 +24,7 @@ pub mod trace;
 
 pub use generate::{GenerateReport, Sampler};
 pub use kv::{BlockAllocator, KvCache, KvLayout, PageTable, PagedFwd, PagedKvCache};
+pub use prefix::PrefixTree;
 pub use rank::{Embedder, RankKv, RankState};
 pub use threaded::ThreadedRuntime;
 pub use tpengine::{RuntimeKind, TpEngine};

@@ -1,0 +1,343 @@
+//! Shared-prefix KV reuse: a token-keyed radix tree over **full,
+//! immutable, ref-counted KV pages**.
+//!
+//! The tree is page-granular: every node owns exactly one physical page and
+//! is keyed by the `page_size` token ids whose K/V rows that page holds, so
+//! a root-to-node path spells out a page-aligned token prefix and the page
+//! chain that backs it. When a request finishes (or is cancelled after
+//! writing at least one full page), the full pages of its *prompt* are
+//! published into the tree instead of freed; a later request whose prompt
+//! starts with the same tokens retains the chain from the
+//! [`BlockAllocator`] and prefills only its uncached suffix — the cached
+//! prefill compute *and* its AllReduce traffic become a table lookup.
+//!
+//! Reuse is **bitwise exact**, not approximate: a page's K/V rows at
+//! positions `p` are a deterministic function of tokens `0..=p` alone
+//! (every kernel is batch-row-local and visits keys in logical order — the
+//! chunked-prefill determinism contract from the paged-KV work), and the
+//! tree's key *is* those tokens. Cached pages are read strictly through
+//! page tables inside the kernels and never written: a hit's first
+//! prefilled position is always page-aligned past the chain (or lands in a
+//! private copy-on-write duplicate when the whole prompt is cached), so no
+//! forward pass ever scatters into a shared page.
+//!
+//! Eviction is LRU over **zero-reference leaves**: a node may be removed
+//! only when no request references its page (`BlockAllocator::req_refs ==
+//! 0`) and it has no children. Because a request that matched a chain
+//! references every page on that root path, interior nodes above a live
+//! reference are themselves referenced — leaf-only eviction can never
+//! orphan a path a live request is reading, and repeated eviction drains
+//! any fully idle subtree deepest-first.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::kv::BlockAllocator;
+
+/// One cached page: its physical id, the `page_size` token ids it holds
+/// K/V for (its key under the parent), its children, and its LRU stamp.
+struct Node {
+    page: u32,
+    key: Vec<i32>,
+    parent: Option<usize>,
+    children: HashMap<Vec<i32>, usize>,
+    last_used: u64,
+}
+
+/// Token-keyed radix tree mapping page-aligned prompt prefixes to chains of
+/// cached KV pages. Owns no pages itself — reference counts live in the
+/// [`BlockAllocator`], which every structural mutation goes through.
+pub struct PrefixTree {
+    page_size: usize,
+    /// Node arena; `None` slots are free (reused by later inserts).
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    /// Children of the (page-less) root.
+    root: HashMap<Vec<i32>, usize>,
+    /// LRU clock: bumped once per lookup/insert, stamped onto touched nodes.
+    clock: u64,
+    cached_pages: usize,
+}
+
+impl PrefixTree {
+    pub fn new(page_size: usize) -> PrefixTree {
+        assert!(page_size > 0, "page_size must be positive");
+        PrefixTree {
+            page_size,
+            nodes: Vec::new(),
+            free_slots: Vec::new(),
+            root: HashMap::new(),
+            clock: 0,
+            cached_pages: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages currently referenced by the tree.
+    pub fn cached_pages(&self) -> usize {
+        self.cached_pages
+    }
+
+    /// Longest page-aligned cached prefix of `prompt`: the chain of page
+    /// ids whose keys match `prompt`'s leading full pages. Touches the
+    /// matched path's LRU stamps. The chain never extends past the
+    /// prompt's last *full* page — a node matches only if all `page_size`
+    /// of its tokens are present.
+    pub fn match_prefix(&mut self, prompt: &[i32]) -> Vec<u32> {
+        self.clock += 1;
+        let mut chain = Vec::new();
+        let mut children = &self.root;
+        let mut touched = Vec::new();
+        for key in prompt.chunks_exact(self.page_size) {
+            let Some(&idx) = children.get(key) else { break };
+            let node = self.nodes[idx].as_ref().expect("child index points at a live node");
+            chain.push(node.page);
+            touched.push(idx);
+            children = &node.children;
+        }
+        for idx in touched {
+            self.nodes[idx].as_mut().expect("touched above").last_used = self.clock;
+        }
+        chain
+    }
+
+    /// Publish a finished request's full prompt pages: walk `tokens` one
+    /// page at a time, reusing existing nodes (their pages stay canonical —
+    /// a duplicate chain is *not* inserted, the duplicate's pages simply
+    /// get freed with their owner) and creating nodes for the uncached
+    /// tail, taking a tree reference on each newly published page. The
+    /// caller must still own those pages (`admit`-ed, not yet freed).
+    /// Returns how many pages were newly published.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        pages: &[u32],
+        alloc: &mut BlockAllocator,
+    ) -> Result<usize> {
+        if tokens.len() < pages.len() * self.page_size {
+            bail!(
+                "insert: {} tokens cannot key {} full pages of {}",
+                tokens.len(),
+                pages.len(),
+                self.page_size
+            );
+        }
+        self.clock += 1;
+        let mut parent: Option<usize> = None;
+        let mut added = 0;
+        for (key, &page) in tokens.chunks_exact(self.page_size).zip(pages) {
+            let existing = match parent {
+                None => self.root.get(key).copied(),
+                Some(p) => {
+                    self.nodes[p].as_ref().expect("live parent").children.get(key).copied()
+                }
+            };
+            let idx = match existing {
+                Some(idx) => {
+                    self.nodes[idx].as_mut().expect("live child").last_used = self.clock;
+                    idx
+                }
+                None => {
+                    alloc.tree_retain(page)?;
+                    let node = Node {
+                        page,
+                        key: key.to_vec(),
+                        parent,
+                        children: HashMap::new(),
+                        last_used: self.clock,
+                    };
+                    let idx = match self.free_slots.pop() {
+                        Some(slot) => {
+                            self.nodes[slot] = Some(node);
+                            slot
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    match parent {
+                        None => self.root.insert(key.to_vec(), idx),
+                        Some(p) => self.nodes[p]
+                            .as_mut()
+                            .expect("live parent")
+                            .children
+                            .insert(key.to_vec(), idx),
+                    };
+                    self.cached_pages += 1;
+                    added += 1;
+                    idx
+                }
+            };
+            parent = Some(idx);
+        }
+        Ok(added)
+    }
+
+    /// Evict up to `want` pages in LRU order, restricted to leaves whose
+    /// page no request references (evicting a leaf may expose its parent
+    /// for the next round, so an idle chain drains deepest-first). Returns
+    /// the evicted page ids — each is back on the allocator's free list.
+    /// Fewer than `want` means nothing else is evictable right now.
+    ///
+    /// Victim selection is a linear arena scan per evicted page — O(nodes)
+    /// each, and it only runs when the free list cannot cover a
+    /// reservation. At pool sizes where that scan shows up in profiles,
+    /// the upgrade is an ordered index over zero-ref leaves maintained on
+    /// retain/release/insert; the scan is kept here because it cannot
+    /// disagree with the refcounts it reads.
+    pub fn evict(&mut self, want: usize, alloc: &mut BlockAllocator) -> Result<Vec<u32>> {
+        let mut evicted = Vec::new();
+        while evicted.len() < want {
+            // oldest zero-ref leaf; index tie-break keeps runs deterministic
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, slot)| slot.as_ref().map(|n| (i, n)))
+                .filter(|(_, n)| n.children.is_empty() && alloc.req_refs(n.page) == 0)
+                .min_by_key(|(i, n)| (n.last_used, *i))
+                .map(|(i, _)| i);
+            let Some(idx) = victim else { break };
+            let node = self.nodes[idx].take().expect("victim is live");
+            let removed = match node.parent {
+                None => self.root.remove(&node.key),
+                Some(p) => self.nodes[p]
+                    .as_mut()
+                    .expect("parent outlives child")
+                    .children
+                    .remove(&node.key),
+            };
+            debug_assert_eq!(removed, Some(idx));
+            self.free_slots.push(idx);
+            self.cached_pages -= 1;
+            alloc.tree_release(node.page)?;
+            evicted.push(node.page);
+        }
+        Ok(evicted)
+    }
+
+    /// Evict everything evictable (drained server / tests). Each `evict`
+    /// round rescans, so parents exposed by an evicted child drain in the
+    /// same call. Returns pages freed.
+    pub fn flush(&mut self, alloc: &mut BlockAllocator) -> Result<usize> {
+        Ok(self.evict(usize::MAX, alloc)?.len())
+    }
+
+    /// Every page the tree currently references (audits).
+    pub fn pages(&self) -> Vec<u32> {
+        self.nodes.iter().flatten().map(|n| n.page).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pool + donor helper: admit `owner` over `tokens`, return its pages.
+    fn prefill(alloc: &mut BlockAllocator, owner: u64, tokens: &[i32]) -> Vec<u32> {
+        alloc.admit(owner, tokens.len(), tokens.len()).unwrap();
+        alloc.table(owner).unwrap().pages.clone()
+    }
+
+    #[test]
+    fn match_returns_longest_page_aligned_prefix() {
+        let mut alloc = BlockAllocator::new(16, 4, 1);
+        let mut tree = PrefixTree::new(4);
+        let prompt: Vec<i32> = (0..12).collect();
+        let pages = prefill(&mut alloc, 1, &prompt);
+        assert_eq!(tree.insert(&prompt, &pages, &mut alloc).unwrap(), 3);
+        alloc.free(1);
+        alloc.check().unwrap();
+
+        assert_eq!(tree.match_prefix(&prompt), pages);
+        // partial page never matches: 10 tokens -> 2 full pages
+        assert_eq!(tree.match_prefix(&prompt[..10]), pages[..2]);
+        assert_eq!(tree.match_prefix(&prompt[..3]), Vec::<u32>::new());
+        // divergence mid-chain stops the walk at the last matching page
+        let mut fork = prompt.clone();
+        fork[6] = 99;
+        assert_eq!(tree.match_prefix(&fork), pages[..1]);
+        // longer prompts still match the full cached chain
+        let longer: Vec<i32> = (0..20).collect();
+        assert_eq!(tree.match_prefix(&longer), pages);
+    }
+
+    #[test]
+    fn insert_dedups_against_existing_chains() {
+        let mut alloc = BlockAllocator::new(16, 4, 1);
+        let mut tree = PrefixTree::new(4);
+        let prompt: Vec<i32> = (0..8).collect();
+        let pages = prefill(&mut alloc, 1, &prompt);
+        tree.insert(&prompt, &pages, &mut alloc).unwrap();
+        alloc.free(1);
+        // an identical chain from a second donor publishes nothing new; the
+        // duplicate pages stay owned by the donor and are freed with it
+        let mut longer: Vec<i32> = (0..12).collect();
+        let pages2 = prefill(&mut alloc, 2, &longer);
+        assert_eq!(tree.insert(&longer, &pages2, &mut alloc).unwrap(), 1);
+        assert_eq!(tree.cached_pages(), 3);
+        assert_eq!(tree.match_prefix(&longer), vec![pages[0], pages[1], pages2[2]]);
+        alloc.free(2);
+        alloc.check().unwrap();
+        // a diverging suffix forks the tree instead of replacing the chain
+        longer[4] = 77;
+        let pages3 = prefill(&mut alloc, 3, &longer);
+        assert_eq!(tree.insert(&longer, &pages3, &mut alloc).unwrap(), 2);
+        alloc.free(3);
+        alloc.check().unwrap();
+        assert_eq!(tree.match_prefix(&longer), vec![pages[0], pages3[1], pages3[2]]);
+        // too few tokens for the page count is a caller bug
+        assert!(tree.insert(&longer[..7], &pages3[..2], &mut alloc).is_err());
+    }
+
+    #[test]
+    fn lru_eviction_takes_idle_leaves_deepest_first() {
+        let mut alloc = BlockAllocator::new(16, 4, 1);
+        let mut tree = PrefixTree::new(4);
+        let a: Vec<i32> = (0..12).collect(); // chain of 3
+        let mut b: Vec<i32> = (0..8).collect(); // forks at page 2
+        b[5] = 50;
+        let pa = prefill(&mut alloc, 1, &a);
+        let pb = prefill(&mut alloc, 2, &b);
+        tree.insert(&a, &pa, &mut alloc).unwrap();
+        tree.insert(&b, &pb, &mut alloc).unwrap();
+        alloc.free(1);
+        alloc.free(2);
+        // b's fork page (inserted later, but b's leaf...) — touch a's chain
+        // so b's leaf is the LRU victim
+        tree.match_prefix(&a);
+        assert_eq!(tree.evict(1, &mut alloc).unwrap(), vec![pb[1]]);
+        alloc.check().unwrap();
+        // next round: a's deepest page is now the oldest leaf
+        assert_eq!(tree.evict(1, &mut alloc).unwrap(), vec![pa[2]]);
+        // interior pages only leave after their children
+        assert_eq!(tree.evict(9, &mut alloc).unwrap(), vec![pa[1], pa[0]]);
+        assert_eq!(tree.cached_pages(), 0);
+        alloc.check().unwrap();
+        assert_eq!(alloc.free_pages(), 16, "eviction round-trips to a full free list");
+    }
+
+    #[test]
+    fn eviction_skips_pages_referenced_by_requests() {
+        let mut alloc = BlockAllocator::new(16, 4, 1);
+        let mut tree = PrefixTree::new(4);
+        let prompt: Vec<i32> = (0..8).collect();
+        let pages = prefill(&mut alloc, 1, &prompt);
+        tree.insert(&prompt, &pages, &mut alloc).unwrap();
+        alloc.free(1);
+        // a follower pins the whole chain
+        let chain = tree.match_prefix(&prompt);
+        alloc.admit_shared(2, 8, 12, &chain).unwrap();
+        assert!(tree.evict(9, &mut alloc).unwrap().is_empty(), "chain is pinned");
+        assert_eq!(tree.flush(&mut alloc).unwrap(), 0);
+        alloc.free(2);
+        assert_eq!(tree.flush(&mut alloc).unwrap(), 2);
+        alloc.check().unwrap();
+        assert_eq!(alloc.free_pages(), 16);
+    }
+}

@@ -139,13 +139,27 @@ impl RankState {
     }
 
     /// Release a batch slot: slab layouts zero the slot's written prefix
-    /// (`written` = the engine's tracked length); paged layouts keep pool
-    /// bytes as-is — the allocator already reclaimed the pages, and a
-    /// page's next owner always writes a position before reading it.
+    /// (`written` = the engine's tracked length); paged layouts MUST keep
+    /// pool bytes as-is. That no-op is load-bearing, not an optimization:
+    /// pages of the released request may still be referenced by the prefix
+    /// tree (or by concurrent requests sharing them), and a later cache hit
+    /// *reads them without writing first* — zeroing any page here would
+    /// silently corrupt every future hit on it. Unreferenced pages are
+    /// reclaimed by the batcher's allocator and fully overwritten by their
+    /// next owner before any masked read covers them.
     pub fn release_slot(&mut self, slot: usize, written: usize) {
         match &mut self.kv {
             RankKv::Slab(kv) => kv.clear_slot(slot, written),
             RankKv::Paged(_) => {}
+        }
+    }
+
+    /// Copy-on-write duplicate of one pool page (paged layouts only) — see
+    /// [`super::tpengine::TpEngine::copy_page`].
+    pub fn copy_page(&mut self, src: u32, dst: u32) -> Result<()> {
+        match &mut self.kv {
+            RankKv::Slab(_) => bail!("copy_page on a slab-layout rank"),
+            RankKv::Paged(pool) => pool.copy_page(src, dst),
         }
     }
 

@@ -49,6 +49,10 @@ enum Cmd {
     /// Clear a slot; the second field is its written length (slab layouts
     /// zero exactly that prefix, paged layouts ignore it).
     Release(usize, usize),
+    /// Duplicate pool page `src` into `dst` on this rank (paged layouts;
+    /// the prefix cache's copy-on-write step). FIFO ordering puts the copy
+    /// before any later `Forward` that reads `dst`.
+    CopyPage(u32, u32),
     Shutdown,
 }
 
@@ -170,6 +174,19 @@ impl ThreadedRuntime {
             let _ = tx.send(Cmd::Release(slot, written));
         }
     }
+
+    /// Duplicate pool page `src` into `dst` on every rank (the prefix
+    /// cache's copy-on-write step). Fire-and-forget like `release_slot`:
+    /// the coordinator validates the page ids up front, and a worker-side
+    /// failure poisons the collective so the next forward fails loudly
+    /// instead of reading a half-copied page.
+    pub fn copy_page(&self, src: u32, dst: u32) -> Result<()> {
+        for (rank, tx) in self.cmds.iter().enumerate() {
+            tx.send(Cmd::CopyPage(src, dst))
+                .map_err(|_| anyhow!("rank {rank} worker hung up"))?;
+        }
+        Ok(())
+    }
 }
 
 impl Drop for ThreadedRuntime {
@@ -229,7 +246,7 @@ fn worker_main(
                             break;
                         }
                     }
-                    Cmd::Release(..) => {}
+                    Cmd::Release(..) | Cmd::CopyPage(..) => {}
                     Cmd::Shutdown => break,
                 }
             }
@@ -259,6 +276,13 @@ fn worker_main(
                 }
             }
             Cmd::Release(slot, written) => ctx.state.release_slot(slot, written),
+            Cmd::CopyPage(src, dst) => {
+                if let Err(e) = ctx.state.copy_page(src, dst) {
+                    // validated coordinator-side, so this is a corrupt rank:
+                    // fail the next collective rather than serve bad KV
+                    ctx.coll.poison(&format!("rank {rank} copy_page: {e:#}"));
+                }
+            }
             Cmd::Shutdown => break,
         }
     }

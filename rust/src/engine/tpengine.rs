@@ -374,9 +374,36 @@ impl TpEngine {
         Ok(logits)
     }
 
+    /// Duplicate one KV page into another on every rank (all layers, K and
+    /// V) — the copy-on-write step behind full-prompt prefix-cache hits:
+    /// the shared trailing page is copied into a page the request owns
+    /// privately before its final prompt token is re-prefilled over it.
+    /// Channel FIFO ordering on the threaded runtime guarantees the copy
+    /// lands before any later forward reads `dst`.
+    pub fn copy_page(&mut self, src: u32, dst: u32) -> Result<()> {
+        self.want_paged("copy_page")?;
+        let KvLayout::Paged { pages, .. } = self.layout else { unreachable!() };
+        if src as usize >= pages || dst as usize >= pages || src == dst {
+            bail!("copy_page: {src} -> {dst} invalid for a {pages}-page pool");
+        }
+        match self.runtime {
+            RuntimeKind::Sequential => {
+                for rank in &mut self.ranks {
+                    rank.copy_page(src, dst)?;
+                }
+                Ok(())
+            }
+            RuntimeKind::Threaded => {
+                self.threaded.as_ref().expect("threaded runtime").copy_page(src, dst)
+            }
+        }
+    }
+
     /// Release a slot (request finished/evicted). Slab layouts zero the
-    /// slot's written prefix; paged layouts only reset the length (the
-    /// batcher's allocator reclaims the pages).
+    /// slot's written prefix; paged layouts must **not** touch pool bytes —
+    /// the batcher's allocator reclaims unreferenced pages, and pages still
+    /// referenced by the prefix tree keep serving cache hits after their
+    /// writer is gone.
     pub fn release_slot(&mut self, slot: usize) {
         let written = self.lens[slot].max(0) as usize;
         self.lens[slot] = 0;

@@ -168,13 +168,22 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             Some("32"),
             "paged engines: prompt tokens prefilled per scheduler iteration (0 = whole prompt)",
         )
+        .flag(
+            "prefix-cache",
+            "paged engines: reuse KV pages across requests sharing a prompt prefix \
+             (radix-tree cache; bitwise-exact)",
+        )
         .parse(argv)?;
     let (engine, tok) = build_engine(&args)?;
     let backend = engine.backend_name();
+    if args.has_flag("prefix-cache") && !engine.kv_layout().is_paged() {
+        anyhow::bail!("--prefix-cache needs a paged KV layout (set --page-size > 0)");
+    }
     let config = BatcherConfig {
         decode_burst: args.get_usize("decode-burst")?,
         kv_budget_bytes: args.get_usize("kv-budget-mb")? * (1 << 20),
         prefill_chunk: args.get_usize("prefill-chunk")?,
+        prefix_cache: args.has_flag("prefix-cache"),
     };
     let mut batcher = Batcher::with_tokenizer(engine, config, tok.clone());
     let addr = format!("127.0.0.1:{}", args.get_usize("port")?);

@@ -52,7 +52,10 @@ pub enum ApiJob {
     Cancel { id: u64 },
     /// `{"stats": true}` — snapshot the server metrics
     /// (throughput/latency percentiles, `kv_pages_in_use` /
-    /// `kv_pages_high_water` / `admission_blocked`; see docs/API.md).
+    /// `kv_pages_high_water` / `admission_blocked`, and the prefix-cache
+    /// counters `prefill_tokens` / `prefix_lookups` / `prefix_hits` /
+    /// `prefix_hit_tokens` / `prefix_cached_pages` /
+    /// `prefix_evicted_pages`; see docs/API.md).
     Stats { respond: Sender<crate::util::json::Json> },
 }
 

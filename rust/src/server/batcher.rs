@@ -14,6 +14,17 @@
 //!   so a long prompt cannot stall in-flight decodes; cancellation and
 //!   completion return pages to the free list immediately.
 //!
+//! With `prefix_cache` on (paged engines only), a [`PrefixTree`] maps
+//! page-aligned prompt prefixes to cached chains of full, immutable,
+//! ref-counted pages: an incoming prompt is matched before admission,
+//! reserves only its *uncached suffix*, and chunk-prefills from the first
+//! uncached position — a hit converts the shared prefix's prefill compute
+//! and AllReduce traffic into a table lookup, bitwise-identically to a
+//! cold prefill. On finish/cancel, the full pages of the prompt are
+//! published back to the tree instead of freed; zero-reference chains are
+//! evicted LRU when a reservation needs physical pages the free list
+//! cannot supply.
+//!
 //! Per-request token streams are **bitwise identical** across both regimes
 //! (and any admission interleaving): every kernel is batch-row-local, keys
 //! are visited in logical order, and each slot samples from a private RNG
@@ -37,7 +48,7 @@ use anyhow::Result;
 
 use super::metrics::ServerMetrics;
 use super::request::{itl_p50, FinishReason, GenerationEvent, Request, RequestResult};
-use crate::engine::{BlockAllocator, KvLayout, TpEngine};
+use crate::engine::{BlockAllocator, KvLayout, PrefixTree, TpEngine};
 use crate::model::HostTensor;
 use crate::tokenizer::{DecodeStream, Tokenizer};
 use crate::util::rng::Rng;
@@ -52,11 +63,19 @@ pub struct BatcherConfig {
     /// (0 = the whole prompt in one chunk). In-flight decodes advance
     /// between chunks.
     pub prefill_chunk: usize,
+    /// Paged engines: enable shared-prefix KV reuse (the radix-tree prefix
+    /// cache over full prompt pages). Ignored on slab engines.
+    pub prefix_cache: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> BatcherConfig {
-        BatcherConfig { decode_burst: 1, kv_budget_bytes: 0, prefill_chunk: 0 }
+        BatcherConfig {
+            decode_burst: 1,
+            kv_budget_bytes: 0,
+            prefill_chunk: 0,
+            prefix_cache: false,
+        }
     }
 }
 
@@ -99,8 +118,10 @@ pub struct Batcher {
     queue: VecDeque<Request>,
     slots: Vec<Option<SlotState>>,
     /// Page bookkeeping (paged engines only): free list, per-request page
-    /// tables, reservation accounting.
+    /// tables, reservation accounting, per-page refcounts.
     alloc: Option<BlockAllocator>,
+    /// Shared-prefix radix tree (paged engines with `prefix_cache` on).
+    prefix: Option<PrefixTree>,
     /// Per-request event sinks (streaming submissions only).
     sinks: HashMap<u64, Sender<GenerationEvent>>,
     /// Tokenizer for `text_delta`s; without one, deltas are empty strings.
@@ -126,6 +147,10 @@ impl Batcher {
                 Some(BlockAllocator::new(total, page_size, page_bytes))
             }
         };
+        let prefix = match (&alloc, config.prefix_cache) {
+            (Some(a), true) => Some(PrefixTree::new(a.page_size())),
+            _ => None,
+        };
         Batcher {
             engine,
             config,
@@ -133,6 +158,7 @@ impl Batcher {
             queue: VecDeque::new(),
             slots,
             alloc,
+            prefix,
             sinks: HashMap::new(),
             tokenizer: None,
         }
@@ -206,6 +232,26 @@ impl Batcher {
         self.alloc.as_ref()
     }
 
+    /// The shared-prefix radix tree, when enabled (tests audit it against
+    /// the allocator's tree-reference counts).
+    pub fn prefix_tree(&self) -> Option<&PrefixTree> {
+        self.prefix.as_ref()
+    }
+
+    /// Evict every zero-reference cached chain (drained server / tests:
+    /// afterwards a drained batcher's whole pool is back on the free
+    /// list). Returns the pages freed.
+    pub fn flush_prefix_cache(&mut self) -> Result<usize> {
+        let (Some(alloc), Some(tree)) = (self.alloc.as_mut(), self.prefix.as_mut()) else {
+            return Ok(0);
+        };
+        let n = tree.flush(alloc)?;
+        self.metrics.prefix_evicted_pages += n;
+        self.metrics.prefix_cached_pages = alloc.cached_pages();
+        self.metrics.kv_pages_in_use = alloc.pages_in_use();
+        Ok(n)
+    }
+
     fn live(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
@@ -269,6 +315,7 @@ impl Batcher {
         if let Some(alloc) = &self.alloc {
             self.metrics.kv_pages_in_use = alloc.pages_in_use();
             self.metrics.kv_pages_high_water = alloc.high_water();
+            self.metrics.prefix_cached_pages = alloc.cached_pages();
         }
         Ok(events)
     }
@@ -320,6 +367,13 @@ impl Batcher {
                 // admission stops (FIFO; later requests must not starve it).
                 // A reservation larger than the whole pool can never fit:
                 // fail that request instead of blocking the queue forever.
+                // The prefix cache is consulted first: a matched chain
+                // shrinks the reservation to the uncached suffix (shared
+                // pages count once against capacity however many requests
+                // pin them), so a hit can only make admission easier.
+                let mut chain: Vec<u32> = Vec::new();
+                let mut cow_src: Option<u32> = None;
+                let mut start = 0usize;
                 if let Some(alloc) = &self.alloc {
                     let reserve = self.reserve_tokens(&request);
                     // a reservation larger than the whole pool can never be
@@ -330,7 +384,20 @@ impl Batcher {
                         events.push(ev);
                         continue;
                     }
-                    if !alloc.can_admit(reserve) {
+                    if let Some(tree) = &mut self.prefix {
+                        chain = tree.match_prefix(&request.prompt);
+                        start = chain.len() * tree.page_size();
+                        if start == request.prompt.len() && !chain.is_empty() {
+                            // whole prompt cached: the final token must be
+                            // re-prefilled for its logits, and its KV write
+                            // must not land in a shared page — drop the
+                            // trailing page from the chain and duplicate it
+                            // copy-on-write into the request's own page
+                            cow_src = chain.pop();
+                            start = request.prompt.len() - 1;
+                        }
+                    }
+                    if !alloc.can_admit_chain(reserve, &chain) {
                         self.metrics.admission_blocked += 1;
                         self.queue.push_front(request);
                         return Ok(());
@@ -344,9 +411,12 @@ impl Batcher {
                     continue;
                 }
                 events.push(ev);
-                break Some((request, queued, bucket));
+                break Some((request, queued, bucket, chain, cow_src, start));
             };
-            let Some((request, queued, bucket)) = admitted else { break };
+            let Some((request, queued, bucket, chain, mut cow_src, mut start)) = admitted
+            else {
+                break;
+            };
             let reserve = self.reserve_tokens(&request);
             let now = Instant::now();
             let rng = Rng::new(request.rng_seed());
@@ -365,8 +435,55 @@ impl Batcher {
             if let Some(alloc) = &mut self.alloc {
                 // reservation guarantees the request can always grow to
                 // prompt + max_new tokens — no deadlock, no preemption;
-                // the prompt itself runs chunk-wise in advance_prefills
-                alloc.admit(st.request.id, st.request.prompt.len(), reserve)?;
+                // the uncached prompt suffix runs chunk-wise in
+                // advance_prefills, starting at the first uncached position
+                let plen = st.request.prompt.len();
+                // physical room for the suffix backing: the admission rule
+                // counted evictable cached pages as available, so evict LRU
+                // idle chains to make the free list whole. Chain pages were
+                // just LRU-touched by the match, so eviction (oldest-first)
+                // reaches them last — and the no-deadlock invariant says it
+                // never needs to.
+                let grow = alloc.pages_for(plen).saturating_sub(chain.len());
+                let short = grow.saturating_sub(alloc.free_pages());
+                if short > 0 {
+                    if let Some(tree) = &mut self.prefix {
+                        let evicted = tree.evict(short, alloc)?;
+                        self.metrics.prefix_evicted_pages += evicted.len();
+                    }
+                }
+                // Chain pages cannot have been evicted just now: they are
+                // counted by the admission invariant (so the shortfall is
+                // covered by other idle pages) and carry the newest LRU
+                // stamp (so eviction, oldest-first, reaches them last).
+                // The popped COW source enjoys neither protection — when
+                // it was the last evictable leaf the eviction above
+                // legitimately consumed it, so fall back to re-prefilling
+                // that whole trailing page cold instead of copying a page
+                // that is gone (or about to be reallocated as the copy's
+                // own destination).
+                if cow_src.is_some_and(|src| !alloc.is_cached(src)) {
+                    cow_src = None;
+                    start = chain.len() * alloc.page_size();
+                }
+                alloc.admit_shared(st.request.id, plen, reserve, &chain)?;
+                if let Some(src) = cow_src {
+                    // trailing-page copy-on-write: the final prompt token's
+                    // KV row is re-prefilled into a private bitwise copy of
+                    // the shared page
+                    let table = alloc.table(st.request.id).expect("just admitted");
+                    self.engine.copy_page(src, table.pages[chain.len()])?;
+                }
+                if self.prefix.is_some() {
+                    // counted at admission — not per blocked retry — so
+                    // prefix_hits / prefix_lookups is a true hit rate
+                    self.metrics.prefix_lookups += 1;
+                    if start > 0 {
+                        self.metrics.prefix_hits += 1;
+                        self.metrics.prefix_hit_tokens += start;
+                    }
+                }
+                st.phase = SlotPhase::Prefill { consumed: start };
                 self.slots[slot] = Some(st);
                 continue;
             }
@@ -374,6 +491,7 @@ impl Batcher {
             let plen = st.request.prompt.len();
             let mut padded = vec![0i32; bucket];
             padded[..plen].copy_from_slice(&st.request.prompt);
+            self.metrics.prefill_tokens += plen;
             let logits = self.engine.prefill_slot(slot, &padded, bucket, plen)?;
             self.slots[slot] = Some(st);
             self.complete_prefill(slot, logits, events);
@@ -435,6 +553,7 @@ impl Batcher {
                 .expect("admitted request has a table")
                 .pages
                 .clone();
+            self.metrics.prefill_tokens += chunk;
             let logits = self.engine.prefill_chunk_slot(slot, &tokens, consumed, &table)?;
             if consumed + chunk < total {
                 let st = self.slots[slot].as_mut().expect("slot checked above");
@@ -476,7 +595,9 @@ impl Batcher {
                 None => self.engine.decode(&tokens)?,
                 Some(alloc) => {
                     // grow each active request's backing for the incoming
-                    // token, then hand the engine the page-table matrix
+                    // token (evicting idle cached chains when the free list
+                    // alone cannot feed the reservation), then hand the
+                    // engine the page-table matrix
                     let max_pages = self.engine.kv_max_pages_per_seq();
                     let mut tables = vec![-1i32; self.slots.len() * max_pages];
                     for (slot, st) in self.slots.iter().enumerate() {
@@ -484,7 +605,15 @@ impl Batcher {
                         if st.phase != SlotPhase::Decode {
                             continue;
                         }
-                        alloc.ensure(st.request.id, self.engine.lens[slot] as usize + 1)?;
+                        let new_len = self.engine.lens[slot] as usize + 1;
+                        let short = alloc.free_shortfall(st.request.id, new_len);
+                        if short > 0 {
+                            if let Some(tree) = &mut self.prefix {
+                                let evicted = tree.evict(short, alloc)?;
+                                self.metrics.prefix_evicted_pages += evicted.len();
+                            }
+                        }
+                        alloc.ensure(st.request.id, new_len)?;
                         let row = &mut tables[slot * max_pages..(slot + 1) * max_pages];
                         alloc.fill_table_row(st.request.id, row)?;
                     }
@@ -560,11 +689,27 @@ impl Batcher {
         }
     }
 
-    /// Terminate a live slot: release its KV (pages return to the free
-    /// list immediately on paged engines), record metrics, route and
-    /// return the `Finished` event.
+    /// Terminate a live slot: publish the prompt's full pages to the
+    /// prefix tree (when enabled), release its KV (unreferenced pages
+    /// return to the free list immediately on paged engines), record
+    /// metrics, route and return the `Finished` event.
     fn finish_slot(&mut self, slot: usize, reason: FinishReason) -> GenerationEvent {
         let st = self.slots[slot].take().expect("finish_slot on empty slot");
+        // publish before the allocator drops this request's references so
+        // the tree can retain the pages instead of letting them free.
+        // Cancelled requests publish what they actually wrote — a chunked
+        // prefill may have covered only part of the prompt.
+        if let (Some(alloc), Some(tree)) = (self.alloc.as_mut(), self.prefix.as_mut()) {
+            let written = self.engine.lens[slot].max(0) as usize;
+            let covered = written.min(st.request.prompt.len());
+            let full = covered / tree.page_size();
+            if full > 0 {
+                let table = alloc.table(st.request.id).expect("live paged slot has a table");
+                let pages = table.pages[..full].to_vec();
+                tree.insert(&st.request.prompt[..full * tree.page_size()], &pages, alloc)
+                    .expect("publish: pages are owned by the finishing request");
+            }
+        }
         let now = Instant::now();
         let result = RequestResult {
             id: st.request.id,
@@ -579,6 +724,7 @@ impl Batcher {
         if let Some(alloc) = &mut self.alloc {
             alloc.free(result.id);
             self.metrics.kv_pages_in_use = alloc.pages_in_use();
+            self.metrics.prefix_cached_pages = alloc.cached_pages();
         }
         self.engine.release_slot(slot);
         let ev = GenerationEvent::Finished { result };

@@ -21,6 +21,20 @@ pub struct ServerMetrics {
     /// Times the head of the queue could not be admitted because its
     /// worst-case page reservation did not fit the free pool.
     pub admission_blocked: usize,
+    /// Prompt tokens actually prefilled (chunk sums; prefix-cache hits skip
+    /// their cached prefix, so this is the compute the cache saves).
+    pub prefill_tokens: usize,
+    /// Prefix-cache lookups (one per paged admission with the cache on).
+    pub prefix_lookups: usize,
+    /// Admissions that reused at least one cached page.
+    pub prefix_hits: usize,
+    /// Prompt tokens served from the prefix cache instead of prefilled.
+    pub prefix_hit_tokens: usize,
+    /// KV pages currently referenced by the prefix tree (gauge).
+    pub prefix_cached_pages: usize,
+    /// Cached pages evicted (LRU, zero-reference chains only) to feed page
+    /// reservations.
+    pub prefix_evicted_pages: usize,
     pub queued_secs: Summary,
     pub ttft_secs: Summary,
     /// Inter-token latency samples (one per decode-phase token) — the
@@ -54,6 +68,12 @@ impl ServerMetrics {
             .set("kv_pages_in_use", self.kv_pages_in_use)
             .set("kv_pages_high_water", self.kv_pages_high_water)
             .set("admission_blocked", self.admission_blocked)
+            .set("prefill_tokens", self.prefill_tokens)
+            .set("prefix_lookups", self.prefix_lookups)
+            .set("prefix_hits", self.prefix_hits)
+            .set("prefix_hit_tokens", self.prefix_hit_tokens)
+            .set("prefix_cached_pages", self.prefix_cached_pages)
+            .set("prefix_evicted_pages", self.prefix_evicted_pages)
             .set("throughput_tok_per_s", self.tokens_out as f64 / wall_secs.max(1e-9))
             .set("ttft_p50_ms", self.ttft_secs.p50() * 1e3)
             .set("ttft_p99_ms", self.ttft_secs.p99() * 1e3)
@@ -117,5 +137,27 @@ mod tests {
         assert_eq!(rep.get("kv_pages_in_use").unwrap().as_usize().unwrap(), 5);
         assert_eq!(rep.get("kv_pages_high_water").unwrap().as_usize().unwrap(), 9);
         assert_eq!(rep.get("admission_blocked").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn prefix_cache_counters_reach_the_report() {
+        let mut m = ServerMetrics::default();
+        m.prefill_tokens = 120;
+        m.prefix_lookups = 10;
+        m.prefix_hits = 7;
+        m.prefix_hit_tokens = 300;
+        m.prefix_cached_pages = 12;
+        m.prefix_evicted_pages = 3;
+        let rep = m.report(1.0);
+        for (key, want) in [
+            ("prefill_tokens", 120usize),
+            ("prefix_lookups", 10),
+            ("prefix_hits", 7),
+            ("prefix_hit_tokens", 300),
+            ("prefix_cached_pages", 12),
+            ("prefix_evicted_pages", 3),
+        ] {
+            assert_eq!(rep.get(key).unwrap().as_usize().unwrap(), want, "{key}");
+        }
     }
 }

@@ -20,6 +20,15 @@
 //! The harness writes a JSON invariant report (one entry per seed) to
 //! `$PAGED_KV_REPORT`, or `target/tmp/PAGED_KV_STRESS.json` by default; CI
 //! uploads it next to the BENCH_*.json artifacts.
+//!
+//! The **shared-prefix** workloads at the bottom stress the prefix cache on
+//! top of the same audits: per-step refcount/reservation checks (no shared
+//! page freed or zeroed while referenced, conservation includes cached
+//! chains), bitwise replay against the cache-off batcher, and the
+//! acceptance numbers (>= 2x fewer prefill tokens and strictly higher
+//! admitted concurrency at an equal byte budget on the 8-template
+//! workload). Their JSON report goes to `$PREFIX_CACHE_REPORT`, default
+//! `target/tmp/PREFIX_CACHE_STRESS.json`, uploaded next to the paged one.
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
@@ -102,6 +111,12 @@ struct RunStats {
     high_water_pages: usize,
     admission_blocked: usize,
     steps: usize,
+    /// Prompt tokens actually prefilled (cache hits skip their prefix).
+    prefill_tokens: usize,
+    /// Prompt tokens served from the prefix cache.
+    prefix_hit_tokens: usize,
+    /// Cached pages evicted over the run.
+    prefix_evicted: usize,
 }
 
 /// Drive `jobs` through a batcher step by step, auditing the allocator
@@ -166,25 +181,60 @@ fn drive(mut batcher: Batcher, jobs: &[Job], budget_bytes: usize) -> RunStats {
             if budget_bytes > 0 {
                 assert!(
                     alloc.bytes_in_use() <= budget_bytes,
-                    "step {step}: {} KV bytes in use exceed the {budget_bytes} budget",
+                    "step {step}: {} KV bytes in use exceed the {budget_bytes} budget \
+                     (cached chains included)",
                     alloc.bytes_in_use()
                 );
+            }
+            // prefix-cache cross-audit: every tree page is tree-referenced
+            // in the allocator, and the counts agree — a shared page can
+            // therefore never have been freed or zeroed while referenced
+            // (check() above already proved free/referenced exclusion)
+            if let Some(tree) = batcher.prefix_tree() {
+                let pages = tree.pages();
+                assert_eq!(pages.len(), tree.cached_pages(), "step {step}: tree page count");
+                assert_eq!(
+                    pages.len(),
+                    alloc.cached_pages(),
+                    "step {step}: tree vs allocator cached-page count"
+                );
+                for p in pages {
+                    assert!(alloc.is_cached(p), "step {step}: tree page {p} lost its ref");
+                }
             }
         }
         step += 1;
     }
     let (high_water_pages, admission_blocked) = match batcher.allocator() {
         Some(alloc) => {
-            // drained: every page must be back on the free list
+            // drained: everything still allocated must be a cached chain
             alloc.check().unwrap();
-            assert_eq!(alloc.pages_in_use(), 0, "pages leaked after drain");
+            let cached = alloc.cached_pages();
+            assert_eq!(alloc.pages_in_use(), cached, "non-cached pages leaked after drain");
             assert_eq!(alloc.reserved_pages(), 0, "reservations leaked after drain");
-            assert_eq!(alloc.free_pages(), alloc.total_pages());
             (alloc.high_water(), batcher.metrics.admission_blocked)
         }
         None => (0, 0),
     };
-    RunStats { finished, max_live, high_water_pages, admission_blocked, steps: step }
+    // flushing the (now fully idle) cache must round-trip the whole pool
+    // back to the free list — the no-leak proof including cached chains
+    let cached = batcher.allocator().map_or(0, |a| a.cached_pages());
+    assert_eq!(batcher.flush_prefix_cache().unwrap(), cached);
+    if let Some(alloc) = batcher.allocator() {
+        alloc.check().unwrap();
+        assert_eq!(alloc.pages_in_use(), 0, "pages leaked after cache flush");
+        assert_eq!(alloc.free_pages(), alloc.total_pages());
+    }
+    RunStats {
+        finished,
+        max_live,
+        high_water_pages,
+        admission_blocked,
+        steps: step,
+        prefill_tokens: batcher.metrics.prefill_tokens,
+        prefix_hit_tokens: batcher.metrics.prefix_hit_tokens,
+        prefix_evicted: batcher.metrics.prefix_evicted_pages,
+    }
 }
 
 fn assert_outcomes(jobs: &[Job], stats: &RunStats) {
@@ -234,6 +284,7 @@ fn stress_randomized_three_seeds() {
             decode_burst: 1,
             kv_budget_bytes: budget_bytes,
             prefill_chunk: chunk,
+            ..BatcherConfig::default()
         };
         let stats = drive(Batcher::new(engine, config), &jobs, budget_bytes);
         assert_outcomes(&jobs, &stats);
@@ -382,4 +433,349 @@ fn chunked_prefill_interleaves_with_decodes() {
     }
     b.allocator().unwrap().check().unwrap();
     assert_eq!(b.allocator().unwrap().pages_in_use(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// shared-prefix workloads (the prefix-cache proof obligations)
+// ---------------------------------------------------------------------------
+
+/// Seeded 8-system-prompt workload: every prompt is one of 8 templates
+/// (64 tokens = 8 full pages at page size 8) plus a short random user
+/// tail; draws are skewed 70% onto the two "hot" templates, the shape the
+/// cache exists for. ~10% of prompts are exactly a template (page-aligned
+/// full match, exercising the copy-on-write trailing page), ~6% cancel
+/// mid-flight and ~4% drop their sink.
+fn template_workload(seed: u64, n: usize, tlen: usize) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    let templates: Vec<Vec<i32>> =
+        (0..8).map(|_| (0..tlen).map(|_| rng.below(256) as i32).collect()).collect();
+    let mut arrive = 0usize;
+    (0..n)
+        .map(|i| {
+            arrive += rng.below(2);
+            let t = if rng.below(100) < 70 { rng.below(2) } else { rng.below(8) };
+            let mut prompt = templates[t].clone();
+            if rng.below(10) > 0 {
+                let tail = rng.range(1, 11);
+                prompt.extend((0..tail).map(|_| rng.below(256) as i32));
+            }
+            let cancel = rng.below(100) < 6;
+            let timeout = !cancel && rng.below(100) < 4;
+            Job {
+                id: i as u64,
+                prompt,
+                max_new: rng.range(1, 8),
+                cancel_at: cancel.then(|| arrive + rng.below(25)),
+                drop_sink_at: timeout.then(|| arrive + rng.below(25)),
+                arrive_at: arrive,
+            }
+        })
+        .collect()
+}
+
+/// Drive one shared-prefix workload twice — cache on and cache off — at
+/// the same byte budget, with the full per-step audits, and return both.
+fn drive_on_off(jobs: &[Job], page_size: usize, budget_pages: usize) -> (RunStats, RunStats) {
+    let run = |prefix_cache: bool| {
+        // pool strictly larger than the byte budget so the budget clamp
+        // (not pool sizing) is what admission and eviction push against
+        let pages = budget_pages + 8;
+        let engine = build_engine(KvLayout::Paged { page_size, pages });
+        let budget_bytes = budget_pages * engine.kv_page_bytes();
+        let config = BatcherConfig {
+            decode_burst: 1,
+            kv_budget_bytes: budget_bytes,
+            prefill_chunk: 16,
+            prefix_cache,
+        };
+        drive(Batcher::new(engine, config), jobs, budget_bytes)
+    };
+    (run(true), run(false))
+}
+
+/// Bitwise replay: every request untouched by a cancel/timeout plan must
+/// produce identical tokens with the cache on and off — interleaving,
+/// sharing and eviction change *when* work happens, never its bits.
+fn assert_bitwise_replay(jobs: &[Job], on: &RunStats, off: &RunStats) {
+    for job in jobs {
+        if job.cancel_at.is_some() || job.drop_sink_at.is_some() {
+            continue;
+        }
+        assert_eq!(
+            on.finished[&job.id].0, off.finished[&job.id].0,
+            "request {} diverged bitwise between cache-on and cache-off",
+            job.id
+        );
+    }
+}
+
+/// One location rule for the prefix-cache reports: `$PREFIX_CACHE_REPORT`
+/// (CI) or the cargo tmpdir, with `suffix` mapping concurrent tests onto
+/// sibling files instead of racing on one object (CI uploads the
+/// `PREFIX_CACHE_STRESS*.json` glob).
+fn prefix_report_path(suffix: Option<&str>) -> PathBuf {
+    let path = std::env::var("PREFIX_CACHE_REPORT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("PREFIX_CACHE_STRESS.json")
+    });
+    match suffix {
+        Some(s) => path.with_extension(format!("{s}.json")),
+        None => path,
+    }
+}
+
+fn write_prefix_report(suffix: Option<&str>, report: Json) {
+    let path = prefix_report_path(suffix);
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(&path, report.to_string()).expect("write prefix-cache report");
+}
+
+/// The 8-template acceptance workload: 200 requests, audits after every
+/// step (via `drive`), bitwise replay against the cache-off batcher, >= 2x
+/// fewer prefill tokens, and strictly higher admitted concurrency at the
+/// same byte budget (34 pages: the cache-off batcher can never hold four
+/// 9-page reservations, the cache-on one can once chains are shared).
+#[test]
+fn shared_prefix_templates_halve_prefill_and_raise_concurrency() {
+    let jobs = template_workload(0x5eeded, 200, 64);
+    let (on, off) = drive_on_off(&jobs, 8, 34);
+    assert_outcomes(&jobs, &on);
+    assert_outcomes(&jobs, &off);
+    assert_bitwise_replay(&jobs, &on, &off);
+    assert!(
+        on.prefill_tokens * 2 <= off.prefill_tokens,
+        "prefix cache saved too little prefill: {} tokens with cache vs {} without",
+        on.prefill_tokens,
+        off.prefill_tokens
+    );
+    assert!(
+        on.max_live > off.max_live,
+        "cache-on admitted {} concurrent vs {} cache-off at the same budget",
+        on.max_live,
+        off.max_live
+    );
+    assert!(on.prefix_hit_tokens > 0, "no request ever hit the cache");
+    assert!(on.prefix_evicted > 0, "the 8-template working set must overflow 34 pages");
+    let entry = Json::obj()
+        .set("workload", "8_templates_x_200")
+        .set("requests", jobs.len())
+        .set("page_size", 8)
+        .set("budget_pages", 34)
+        .set("steps_on", on.steps)
+        .set("steps_off", off.steps)
+        .set("prefill_tokens_on", on.prefill_tokens)
+        .set("prefill_tokens_off", off.prefill_tokens)
+        .set("prefill_reduction", off.prefill_tokens as f64 / on.prefill_tokens.max(1) as f64)
+        .set("prefix_hit_tokens", on.prefix_hit_tokens)
+        .set("prefix_evicted_pages", on.prefix_evicted)
+        .set("max_concurrent_on", on.max_live)
+        .set("max_concurrent_off", off.max_live)
+        .set("kv_pages_high_water_on", on.high_water_pages)
+        .set("admission_blocked_on", on.admission_blocked)
+        .set(
+            "invariants",
+            "refcounts-audited-per-step, bitwise-replay, no-leak-incl-cache, budget-respected",
+        );
+    let report = Json::obj()
+        .set("harness", "prefix_cache_stress")
+        .set("workloads", Json::Arr(vec![entry]));
+    write_prefix_report(None, report);
+}
+
+/// Multi-turn resubmission: conversations grow their history and resubmit
+/// it as the next turn's prompt. Turn k+1's prompt extends turn k's, so
+/// its full prompt pages — including the pages that now hold turn k's
+/// *generated* tokens, re-prefilled as prompt — come from the tree, and
+/// reuse compounds turn over turn. Bitwise replay holds per turn (turn
+/// k+1's prompts are built from turn k's outputs, which match bitwise).
+#[test]
+fn multi_turn_resubmission_reuses_grown_histories() {
+    let page_size = 8usize;
+    let conversations = 12usize;
+    let turns = 3usize;
+    let build = |prefix_cache: bool| -> (Vec<usize>, Vec<Vec<Vec<i32>>>, usize, usize) {
+        // pool sized so the 12 conversations' grown histories stay cached
+        // across all turns — eviction pressure is the template test's job
+        let engine = build_engine(KvLayout::Paged { page_size, pages: 160 });
+        let config = BatcherConfig {
+            decode_burst: 1,
+            kv_budget_bytes: 0,
+            prefill_chunk: 16,
+            prefix_cache,
+        };
+        let mut batcher = Batcher::new(engine, config);
+        let mut rng = Rng::new(0x7a1e);
+        let mut histories: Vec<Vec<i32>> = (0..conversations)
+            .map(|_| (0..rng.range(18, 30)).map(|_| rng.below(256) as i32).collect())
+            .collect();
+        let mut prefill_per_turn = Vec::new();
+        let mut tokens_per_turn: Vec<Vec<Vec<i32>>> = Vec::new();
+        for turn in 0..turns {
+            let before = batcher.metrics.prefill_tokens;
+            for (c, h) in histories.iter().enumerate() {
+                batcher.submit(Request::new((turn * conversations + c) as u64, h.clone(), 6));
+            }
+            let mut outs: Vec<Vec<i32>> = vec![Vec::new(); conversations];
+            while batcher.pending() > 0 {
+                for ev in batcher.step().unwrap() {
+                    if let GenerationEvent::Finished { result } = ev {
+                        outs[result.id as usize % conversations] = result.tokens;
+                    }
+                }
+                batcher.allocator().unwrap().check().unwrap();
+            }
+            prefill_per_turn.push(batcher.metrics.prefill_tokens - before);
+            // grow each history: generated tokens + a fresh user message
+            for (h, out) in histories.iter_mut().zip(&outs) {
+                assert_eq!(out.len(), 6);
+                h.extend(out);
+                h.extend((0..rng.range(6, 12)).map(|_| rng.below(256) as i32));
+            }
+            tokens_per_turn.push(outs);
+        }
+        let hits = batcher.metrics.prefix_hit_tokens;
+        let prefills = batcher.metrics.prefill_tokens;
+        // drain + flush round-trip, as in `drive`
+        let cached = batcher.allocator().unwrap().cached_pages();
+        assert_eq!(batcher.flush_prefix_cache().unwrap(), cached);
+        let alloc = batcher.allocator().unwrap();
+        alloc.check().unwrap();
+        assert_eq!(alloc.pages_in_use(), 0);
+        (prefill_per_turn, tokens_per_turn, hits, prefills)
+    };
+    let (on_turn, on_tokens, on_hits, on_prefill) = build(true);
+    let (off_turn, off_tokens, off_hits, off_prefill) = build(false);
+    assert_eq!(on_tokens, off_tokens, "multi-turn streams diverged bitwise");
+    assert_eq!(off_hits, 0);
+    assert!(
+        on_prefill < off_prefill,
+        "history reuse must shrink prefill: {on_prefill} vs {off_prefill}"
+    );
+    // reuse compounds: by the last turn the cache covers the whole shared
+    // history, so the cache-on run prefills well under half of cold
+    assert!(
+        on_turn[turns - 1] * 2 < off_turn[turns - 1],
+        "turn {turns}: {} prefilled with cache vs {} without",
+        on_turn[turns - 1],
+        off_turn[turns - 1]
+    );
+    assert!(on_hits > 0);
+    write_prefix_report_multi_turn(on_turn, off_turn, on_hits, on_prefill, off_prefill);
+}
+
+fn write_prefix_report_multi_turn(
+    on_turn: Vec<usize>,
+    off_turn: Vec<usize>,
+    hits: usize,
+    on_prefill: usize,
+    off_prefill: usize,
+) {
+    let arr = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+    let entry = Json::obj()
+        .set("workload", "multi_turn_3x12")
+        .set("prefill_tokens_per_turn_on", arr(&on_turn))
+        .set("prefill_tokens_per_turn_off", arr(&off_turn))
+        .set("prefix_hit_tokens", hits)
+        .set("prefill_tokens_on", on_prefill)
+        .set("prefill_tokens_off", off_prefill);
+    // the template test owns the bare report path; this workload writes a
+    // sibling file so concurrently running tests never race on one object
+    write_prefix_report(Some("multi_turn"), entry);
+}
+
+/// The `clear_slot` / release interaction (regression): after a donor
+/// request finishes and its slot is released on every rank, a cache hit on
+/// its published pages must decode bitwise-identically to a cold run — the
+/// paged release path must never zero pool bytes the tree still
+/// references.
+#[test]
+fn cache_hit_after_donor_finished_decodes_bitwise_identically() {
+    let page_size = 8usize;
+    let donor: Vec<i32> = (0..20).map(|i| (i * 7 + 3) % 256).collect();
+    let mut follower = donor.clone();
+    follower.extend([9, 8, 7]);
+    let run = |prefix_cache: bool, submit_donor: bool| -> Vec<i32> {
+        let engine = build_engine(KvLayout::Paged { page_size, pages: 32 });
+        let config = BatcherConfig { prefix_cache, ..BatcherConfig::default() };
+        let mut b = Batcher::new(engine, config);
+        if submit_donor {
+            b.submit(Request::new(1, donor.clone(), 5));
+            while b.pending() > 0 {
+                b.step().unwrap();
+            }
+            // donor finished: its slot was released on every rank, its full
+            // prompt pages belong to the tree now
+            if prefix_cache {
+                assert_eq!(b.prefix_tree().unwrap().cached_pages(), 2);
+            }
+        }
+        b.submit(Request::new(2, follower.clone(), 5));
+        let mut tokens = Vec::new();
+        while b.pending() > 0 {
+            for ev in b.step().unwrap() {
+                if let GenerationEvent::Finished { result } = ev {
+                    if result.id == 2 {
+                        tokens = result.tokens;
+                    }
+                }
+            }
+        }
+        if prefix_cache && submit_donor {
+            assert_eq!(
+                b.metrics.prefix_hit_tokens, 16,
+                "follower must reuse the donor's two full pages"
+            );
+        }
+        tokens
+    };
+    let hit = run(true, true);
+    let cold = run(false, false);
+    assert_eq!(hit, cold, "a hit on a finished donor's pages corrupted decoding");
+}
+
+/// Corner of the copy-on-write path: when the popped trailing page is the
+/// only evictable leaf, the admission's own shortfall eviction consumes it
+/// (it sits outside the admission invariant once popped). The batcher must
+/// fall back to re-prefilling that page cold — not die trying to copy a
+/// page that was just reallocated, possibly as the copy's own destination.
+#[test]
+fn full_prompt_hit_survives_cow_source_eviction_on_a_full_pool() {
+    let page_size = 8usize;
+    // pool of exactly 2 pages; prompt fills both; max_new 0 keeps the
+    // reservation at 2 pages so the never-fits check passes
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 11 + 5) % 256).collect();
+    let run = |prefix_cache: bool, donor: bool| -> (Vec<i32>, usize) {
+        let engine = build_engine(KvLayout::Paged { page_size, pages: 2 });
+        let config = BatcherConfig { prefix_cache, ..BatcherConfig::default() };
+        let mut b = Batcher::new(engine, config);
+        if donor {
+            b.submit(Request::new(1, prompt.clone(), 0));
+            while b.pending() > 0 {
+                b.step().unwrap();
+                b.allocator().unwrap().check().unwrap();
+            }
+            // both pages published and idle; the free list is empty
+            assert_eq!(b.allocator().unwrap().free_pages(), 0);
+        }
+        b.submit(Request::new(2, prompt.clone(), 0));
+        let mut tokens = Vec::new();
+        while b.pending() > 0 {
+            for ev in b.step().expect("COW fallback must not error the step") {
+                if let GenerationEvent::Finished { result } = ev {
+                    if result.id == 2 {
+                        tokens = result.tokens;
+                    }
+                }
+            }
+            b.allocator().unwrap().check().unwrap();
+        }
+        (tokens, b.metrics.prefix_hit_tokens)
+    };
+    let (hit, hit_tokens) = run(true, true);
+    let (cold, _) = run(false, false);
+    assert_eq!(hit, cold, "fallback path diverged bitwise from cold");
+    // the first full page survives as a hit; the popped trailing page was
+    // evicted to back the suffix, so exactly one page is re-prefilled
+    assert_eq!(hit_tokens, 8, "fallback should keep the untouched prefix cached");
 }

@@ -2,8 +2,10 @@
 //! invariants DESIGN.md §4 calls out: collectives, interconnect monotonicity,
 //! timeline ordering, KV cache slots, tokenizer roundtrip.
 
+use std::collections::HashMap;
+
 use ladder_infer::comm::{CollectiveEngine, Fabric, Interconnect};
-use ladder_infer::engine::{BlockAllocator, KvCache};
+use ladder_infer::engine::{BlockAllocator, KvCache, PrefixTree};
 use ladder_infer::model::{Arch, HostTensor};
 use ladder_infer::perfmodel::costs::ModuleTimes;
 use ladder_infer::perfmodel::timeline::simulate_forward;
@@ -233,6 +235,229 @@ fn prop_block_allocator_sequences_roundtrip() {
     check("allocator-roundtrip", 300, &AllocSeqGen, |ops| apply_alloc_ops(ops, 32, 4));
     // a tighter pool exercises rejection paths far more often
     check("allocator-roundtrip-tight", 300, &AllocSeqGen, |ops| apply_alloc_ops(ops, 7, 4));
+}
+
+// ---------------------------------------------------------------------------
+// PrefixTree + refcounted allocator: arbitrary interleavings of
+// admit(match)/grow/finish(publish)/cancel/evict keep every invariant,
+// matches return the longest page-aligned cached prefix (checked against a
+// reference map), eviction never touches a referenced page, and the whole
+// pool round-trips to a full free list
+// ---------------------------------------------------------------------------
+
+const PS: usize = 4;
+
+/// One prefix-cache operation over a small owner / template space so
+/// sequences collide on prefixes constantly.
+#[derive(Clone, Debug)]
+enum CacheOp {
+    /// (owner, template, prompt len, extra reserve tokens): match the
+    /// prompt against the tree, then admit on the chain (copy-on-write
+    /// drop of the trailing page when the whole prompt is cached).
+    Admit(u64, usize, usize, usize),
+    /// (owner, extra tokens): grow within the reservation (decode).
+    Grow(u64, usize),
+    /// Publish full prompt pages, then free (request finished).
+    Finish(u64),
+    /// Free without publishing (client vanished before any page filled).
+    Cancel(u64),
+    /// Evict up to n pages, LRU.
+    Evict(usize),
+    /// Match only (lookup must agree with the reference map).
+    Match(usize, usize),
+}
+
+/// Deterministic template pool: 3 bases sharing a common 2-page prefix so
+/// chains fork mid-tree.
+fn template(t: usize, len: usize) -> Vec<i32> {
+    (0..len)
+        .map(|i| {
+            if i < 2 * PS {
+                i as i32 // shared head
+            } else {
+                (100 * t + i) as i32
+            }
+        })
+        .collect()
+}
+
+struct CacheSeqGen;
+
+impl Gen for CacheSeqGen {
+    type Value = Vec<CacheOp>;
+    fn generate(&self, rng: &mut Rng) -> Vec<CacheOp> {
+        let n = rng.range(1, 50);
+        (0..n)
+            .map(|_| {
+                let owner = rng.below(5) as u64;
+                let t = rng.below(3);
+                match rng.below(10) {
+                    0..=3 => CacheOp::Admit(owner, t, rng.range(1, 30), rng.below(12)),
+                    4 => CacheOp::Grow(owner, rng.range(1, 8)),
+                    5 | 6 => CacheOp::Finish(owner),
+                    7 => CacheOp::Cancel(owner),
+                    8 => CacheOp::Evict(rng.range(1, 6)),
+                    _ => CacheOp::Match(t, rng.range(1, 30)),
+                }
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<CacheOp>) -> Vec<Vec<CacheOp>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+        }
+        out
+    }
+}
+
+/// The reference model for matching: every published full-page path,
+/// keyed by its token prefix, mapping to the page that backs it.
+type RefMap = HashMap<Vec<i32>, u32>;
+
+fn reference_match(map: &RefMap, prompt: &[i32]) -> Vec<u32> {
+    let mut chain = Vec::new();
+    for i in 1..=prompt.len() / PS {
+        match map.get(&prompt[..i * PS]) {
+            Some(&p) => chain.push(p),
+            None => break,
+        }
+    }
+    chain
+}
+
+/// Apply one op sequence, auditing allocator + tree + reference map after
+/// every op; false on any violation.
+fn apply_cache_ops(ops: &[CacheOp], total_pages: usize) -> bool {
+    let mut alloc = BlockAllocator::new(total_pages, PS, 64);
+    let mut tree = PrefixTree::new(PS);
+    let mut reference: RefMap = HashMap::new();
+    // owner -> (prompt, reserve tokens)
+    let mut live: HashMap<u64, (Vec<i32>, usize)> = HashMap::new();
+    for op in ops {
+        match *op {
+            CacheOp::Admit(owner, t, plen, extra) => {
+                if live.contains_key(&owner) {
+                    continue;
+                }
+                let prompt = template(t, plen);
+                let reserve = plen + extra;
+                let mut chain = tree.match_prefix(&prompt);
+                if reference_match(&reference, &prompt) != chain {
+                    return false; // longest page-aligned prefix contract
+                }
+                if chain.len() * PS == plen && !chain.is_empty() {
+                    chain.pop(); // copy-on-write trailing page
+                }
+                if !alloc.can_admit_chain(reserve, &chain) {
+                    if alloc.admit_shared(owner, plen, reserve, &chain).is_ok() {
+                        return false; // admission must agree with the check
+                    }
+                    continue;
+                }
+                // physical room: evict idle chains; the invariant says the
+                // shortfall is always coverable
+                let grow = alloc.pages_for(plen).saturating_sub(chain.len());
+                let short = grow.saturating_sub(alloc.free_pages());
+                if short > 0 {
+                    let evicted = tree.evict(short, &mut alloc).unwrap();
+                    for p in evicted {
+                        reference.retain(|_, &mut v| v != p);
+                    }
+                }
+                if alloc.admit_shared(owner, plen, reserve, &chain).is_err() {
+                    return false; // checked admission may never fail
+                }
+                live.insert(owner, (prompt, reserve));
+            }
+            CacheOp::Grow(owner, extra) => {
+                let Some((_, reserve)) = live.get(&owner) else { continue };
+                let t = alloc.table(owner).expect("live owner has a table");
+                let new_len = (t.len + extra).min(*reserve);
+                let short = alloc.free_shortfall(owner, new_len);
+                if short > 0 {
+                    let evicted = tree.evict(short, &mut alloc).unwrap();
+                    for p in evicted {
+                        reference.retain(|_, &mut v| v != p);
+                    }
+                }
+                if alloc.ensure(owner, new_len).is_err() {
+                    return false; // growth within a reservation may not fail
+                }
+            }
+            CacheOp::Finish(owner) => {
+                let Some((prompt, _)) = live.remove(&owner) else { continue };
+                let table = alloc.table(owner).expect("live owner").clone();
+                let full = table.len.min(prompt.len()) / PS;
+                if full > 0 {
+                    let published =
+                        tree.insert(&prompt[..full * PS], &table.pages[..full], &mut alloc);
+                    if published.is_err() {
+                        return false;
+                    }
+                    // dedup: an existing path keeps its canonical page
+                    for i in 1..=full {
+                        reference.entry(prompt[..i * PS].to_vec()).or_insert(table.pages[i - 1]);
+                    }
+                }
+                alloc.free(owner);
+            }
+            CacheOp::Cancel(owner) => {
+                live.remove(&owner);
+                alloc.free(owner);
+            }
+            CacheOp::Evict(n) => {
+                let before = tree.pages();
+                let evicted = match tree.evict(n, &mut alloc) {
+                    Ok(e) => e,
+                    Err(_) => return false, // touched a referenced page
+                };
+                for p in &evicted {
+                    let in_tree = before.iter().filter(|&&q| q == *p).count();
+                    if alloc.req_refs(*p) > 0 || in_tree != 1 {
+                        return false;
+                    }
+                    reference.retain(|_, &mut v| v != *p);
+                }
+            }
+            CacheOp::Match(t, plen) => {
+                let prompt = template(t, plen);
+                let chain = tree.match_prefix(&prompt);
+                if reference_match(&reference, &prompt) != chain {
+                    return false;
+                }
+            }
+        }
+        // the full audit, after every op
+        if alloc.check().is_err() {
+            return false;
+        }
+        let pages = tree.pages();
+        if pages.len() != alloc.cached_pages() || pages.iter().any(|&p| !alloc.is_cached(p)) {
+            return false;
+        }
+        if reference.len() != pages.len() {
+            return false;
+        }
+    }
+    // round-trip: free every owner, flush the tree -> full free list
+    for owner in 0..5 {
+        alloc.free(owner);
+    }
+    tree.flush(&mut alloc).is_ok()
+        && alloc.check().is_ok()
+        && alloc.pages_in_use() == 0
+        && alloc.reserved_pages() == 0
+        && alloc.free_pages() == total_pages
+        && tree.cached_pages() == 0
+}
+
+#[test]
+fn prop_prefix_tree_allocator_interleavings_roundtrip() {
+    check("prefix-tree-roundtrip", 250, &CacheSeqGen, |ops| apply_cache_ops(ops, 24));
+    // a tight pool forces eviction into nearly every admission
+    check("prefix-tree-roundtrip-tight", 250, &CacheSeqGen, |ops| apply_cache_ops(ops, 9));
 }
 
 // ---------------------------------------------------------------------------

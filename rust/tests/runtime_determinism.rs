@@ -219,6 +219,116 @@ fn paged_layout_bitwise_identical_to_slab_on_both_runtimes() {
     }
 }
 
+/// The prefix-cache reuse contract: logits computed with a **cache hit**
+/// (cached prefix pages are read through the page table, only the uncached
+/// suffix is prefilled) must be bitwise identical to a cold chunked
+/// prefill of the whole prompt — for every architecture, on both rank
+/// runtimes. Three hit shapes are covered:
+///
+/// * a partial hit whose suffix starts mid-page-chain at position 16 while
+///   the cold run chunked at 6 (`--prefill-chunk`-style grid): the hit
+///   lands mid-chunk;
+/// * decode steps after the hit (shared pages stay read-only);
+/// * a full-prompt hit via the copy-on-write trailing page: the shared
+///   last page is duplicated with `copy_page` and only the final token is
+///   re-prefilled over the copy.
+fn assert_prefix_hit_bitwise(arch: Arch, runtime: RuntimeKind) {
+    use ladder_infer::engine::KvLayout;
+
+    let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+    let weights = tiny_weights(&exec);
+    let mut engine = TpEngine::with_layout(
+        exec,
+        &weights,
+        2,
+        arch,
+        3,
+        Interconnect::new(Fabric::Local),
+        runtime,
+        KvLayout::Paged { page_size: 8, pages: 64 },
+    )
+    .unwrap();
+    let prompt: Vec<i32> = (0..21).map(|i| i % 13 + 1).collect();
+
+    // cold oracle on slot 0, chunks of 6 (6+6+6+3), pages [0,1,2,7]
+    let t_cold: Vec<u32> = vec![0, 1, 2, 7];
+    for (i, chunk) in prompt.chunks(6).enumerate() {
+        let logits = engine.prefill_chunk_slot(0, chunk, i * 6, &t_cold).unwrap();
+        if (i + 1) * 6 >= prompt.len() {
+            // hit on slot 1: reuse the cold slot's first two pages (16
+            // cached tokens) and prefill positions 16..21 — a start that
+            // sits mid-page-chain and mid-chunk on the cold run's grid
+            let t_hit: Vec<u32> = vec![0, 1, 3, 8];
+            let hit = engine.prefill_chunk_slot(1, &prompt[16..], 16, &t_hit).unwrap();
+            let cold: Vec<u32> = logits.iter().map(|x| x.to_bits()).collect();
+            let hit: Vec<u32> = hit.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(cold, hit, "{}/{}: hit logits != cold", arch.name(), runtime.name());
+        }
+    }
+
+    // decode: the hit slot must track the cold slot bitwise, step by step
+    let max_pages = engine.kv_max_pages_per_seq();
+    let mut tables = vec![-1i32; 3 * max_pages];
+    for (slot, t) in [(0usize, &[0u32, 1, 2, 7]), (1, &[0, 1, 3, 8])] {
+        for (i, &p) in t.iter().enumerate() {
+            tables[slot * max_pages + i] = p as i32;
+        }
+    }
+    for t in 0..4i32 {
+        let tok = t % 7 + 1;
+        let logits = engine
+            .decode_paged(&[tok, tok, 0], &[true, true, false], tables.clone(), max_pages)
+            .unwrap();
+        let v = logits.shape[1];
+        let row = |b: usize| -> Vec<u32> {
+            logits.data[b * v..(b + 1) * v].iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(
+            row(0),
+            row(1),
+            "{}/{}: decode step {t} diverged after the hit",
+            arch.name(),
+            runtime.name()
+        );
+    }
+
+    // full-prompt hit (copy-on-write): prompt2 = prompt[..16] is exactly
+    // the cold slot's two full pages. Cold reference on slot 2; the hit
+    // reuses page 0 shared, duplicates page 1 into private page 9, and
+    // re-prefills only position 15 over the copy.
+    let cold2 = engine.prefill_chunk_slot(2, &prompt[..16], 0, &[4, 5]).unwrap();
+    engine.release_slot(1);
+    engine.copy_page(1, 9).unwrap();
+    let cow = engine.prefill_chunk_slot(1, &prompt[15..16], 15, &[0, 9]).unwrap();
+    let cold2: Vec<u32> = cold2.iter().map(|x| x.to_bits()).collect();
+    let cow: Vec<u32> = cow.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(cold2, cow, "{}/{}: COW hit logits != cold", arch.name(), runtime.name());
+}
+
+const ALL_ARCHES: [Arch; 7] = [
+    Arch::Standard,
+    Arch::Ladder,
+    Arch::Hybrid,
+    Arch::Parallel,
+    Arch::Desync(2),
+    Arch::Desync(4),
+    Arch::Upperbound,
+];
+
+#[test]
+fn prefix_cache_hits_bitwise_equal_cold_prefill_sequential() {
+    for arch in ALL_ARCHES {
+        assert_prefix_hit_bitwise(arch, RuntimeKind::Sequential);
+    }
+}
+
+#[test]
+fn prefix_cache_hits_bitwise_equal_cold_prefill_threaded() {
+    for arch in ALL_ARCHES {
+        assert_prefix_hit_bitwise(arch, RuntimeKind::Threaded);
+    }
+}
+
 /// Backend parity: native logits must match the PJRT path within tolerance
 /// on the tiny config. Needs `--features xla`, the real vendored xla-rs
 /// toolchain, and `make artifacts` (skips with a note when absent).
