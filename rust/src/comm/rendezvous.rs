@@ -17,6 +17,14 @@
 //! same meaning it has under the sequential runtime, where each collective
 //! is waited exactly once.
 //!
+//! Failure semantics: no code path here panics on a poisoned lock. A rank
+//! that panicked mid-collective leaves the `std::sync::Mutex` poisoned;
+//! every other rank surfaces that as a propagated `Err` (which the
+//! threaded runtime turns into a per-request error event) rather than a
+//! cascading panic, and [`SharedCollective::poison`] recovers the guard
+//! with `into_inner` so the wake-everyone path works even then. No peer
+//! rank is ever left blocked on a rendezvous that cannot complete.
+//!
 //! [`CollectiveEngine`]: super::collective::CollectiveEngine
 //! [`wait`]: SharedCollective::wait
 
@@ -30,6 +38,16 @@ use super::collective::CommStats;
 use super::handle::spin_sleep;
 use super::interconnect::Interconnect;
 use crate::model::HostTensor;
+
+/// Lock a mutex, mapping a poisoned lock (some rank panicked while
+/// holding it) to a propagated error instead of a panic of our own.
+fn lock_or_err<'a, T>(
+    m: &'a Mutex<T>,
+    what: &str,
+) -> Result<std::sync::MutexGuard<'a, T>> {
+    m.lock()
+        .map_err(|_| anyhow::anyhow!("{what} mutex poisoned: a rank panicked mid-collective"))
+}
 
 /// What the rendezvous computes once all ranks have deposited.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -117,7 +135,7 @@ impl SharedCollective {
         if rank >= self.tp {
             bail!("rank {rank} out of range for tp={}", self.tp);
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_or_err(&self.inner, "collective")?;
         if let Some(msg) = &g.poisoned {
             bail!("collective poisoned: {msg}");
         }
@@ -137,17 +155,21 @@ impl SharedCollective {
         round.parts[rank] = Some(part);
         round.deposited += 1;
         let taken: Option<Vec<HostTensor>> = if round.deposited == tp {
-            Some(round.parts.iter_mut().map(|p| p.take().unwrap()).collect())
+            // every slot filled (deposited == tp), so take() cannot miss
+            Some(round.parts.iter_mut().map(|p| p.take().expect("deposited slot empty")).collect())
         } else {
             None
         };
         drop(g); // reduce outside the lock: sibling rounds keep rendezvousing
 
         if let Some(parts) = taken {
+            // From here until publish, sibling ranks are blocked in wait() on
+            // this round. Any early error return MUST poison the collective
+            // first, or those peers hang forever on a result that never comes.
             let mut parts = parts.into_iter();
             let result = match op {
                 ReduceOp::Sum => {
-                    let mut acc = parts.next().unwrap();
+                    let mut acc = parts.next().expect("tp >= 1");
                     for p in parts {
                         for (a, b) in acc.data.iter_mut().zip(&p.data) {
                             *a += b;
@@ -155,16 +177,24 @@ impl SharedCollective {
                     }
                     acc
                 }
-                ReduceOp::TakeRank0 => parts.next().unwrap(),
+                ReduceOp::TakeRank0 => parts.next().expect("tp >= 1"),
             };
             let modeled = match op {
                 ReduceOp::Sum => {
                     let bytes = result.numel() * 4;
                     let d = Duration::from_secs_f64(self.interconnect.allreduce_time(bytes, tp));
-                    let mut s = self.stats.lock().unwrap();
-                    s.allreduce_count += 1;
-                    s.bytes_moved += bytes;
-                    s.modeled_total += d;
+                    match self.stats.lock() {
+                        Ok(mut s) => {
+                            s.allreduce_count += 1;
+                            s.bytes_moved += bytes;
+                            s.modeled_total += d;
+                        }
+                        Err(_) => {
+                            let msg = "stats mutex poisoned: a rank panicked mid-collective";
+                            self.poison(msg);
+                            bail!("{msg}");
+                        }
+                    }
                     d
                 }
                 ReduceOp::TakeRank0 => Duration::ZERO,
@@ -172,8 +202,20 @@ impl SharedCollective {
             // Publish: the deadline is anchored after the reduction, exactly
             // like the sequential engine's CommHandle (the sum is "device
             // work", the deadline models only the link).
-            let mut g = self.inner.lock().unwrap();
-            let round = g.rounds.get_mut(&seq).expect("completed round vanished before publish");
+            let mut g = match self.inner.lock() {
+                Ok(g) => g,
+                Err(_) => {
+                    let msg = "collective mutex poisoned: a rank panicked mid-collective";
+                    self.poison(msg); // recovers the guard via into_inner
+                    bail!("{msg}");
+                }
+            };
+            let Some(round) = g.rounds.get_mut(&seq) else {
+                let msg = format!("round {seq} vanished before publish");
+                g.poisoned.get_or_insert_with(|| msg.clone());
+                self.cv.notify_all();
+                bail!("{msg}");
+            };
             round.ready_at = Instant::now() + modeled;
             round.result = Some(Arc::new(result));
             self.cv.notify_all();
@@ -188,7 +230,7 @@ impl SharedCollective {
         if rank >= self.tp {
             bail!("rank {rank} out of range for tp={}", self.tp);
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_or_err(&self.inner, "collective")?;
         let (result, ready_at) = loop {
             if let Some(msg) = &g.poisoned {
                 bail!("collective poisoned: {msg}");
@@ -198,7 +240,12 @@ impl SharedCollective {
                     break (r.clone(), round.ready_at);
                 }
             }
-            g = self.cv.wait(g).unwrap();
+            g = match self.cv.wait(g) {
+                Ok(g) => g,
+                Err(_) => {
+                    bail!("collective mutex poisoned: a rank panicked mid-collective")
+                }
+            };
         };
         drop(g); // sleep outside the lock: sibling rounds keep rendezvousing
 
@@ -211,14 +258,18 @@ impl SharedCollective {
             Duration::ZERO
         };
 
-        let mut g = self.inner.lock().unwrap();
-        let round = g.rounds.get_mut(&seq).expect("round retired before all ranks waited");
+        let mut g = lock_or_err(&self.inner, "collective")?;
+        let Some(round) = g.rounds.get_mut(&seq) else {
+            // A peer retired the round early only if bookkeeping broke;
+            // nobody is blocked on us, so a plain error is safe here.
+            bail!("round {seq} retired before all ranks waited");
+        };
         if exposed > round.exposed_max {
             // incrementally raise the recorded per-round exposed time to the
             // max across ranks — the collective's critical-path exposure
             if round.op == ReduceOp::Sum {
                 let delta = exposed - round.exposed_max;
-                self.stats.lock().unwrap().exposed_total += delta;
+                lock_or_err(&self.stats, "stats")?.exposed_total += delta;
             }
             round.exposed_max = exposed;
         }
@@ -235,7 +286,12 @@ impl SharedCollective {
     ///
     /// [`wait`]: SharedCollective::wait
     pub fn poison(&self, msg: &str) {
-        let mut g = self.inner.lock().unwrap();
+        // Must succeed even when a panicking rank poisoned the std mutex —
+        // this is the path that un-wedges everyone else.
+        let mut g = match self.inner.lock() {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        };
         if g.poisoned.is_none() {
             g.poisoned = Some(msg.to_string());
         }

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   generate  one-shot batched generation on an artifact config
 //!   serve     boot the line-JSON TCP serving API (continuous batching)
+//!   router    fault-tolerant multi-replica serving tier (N engines behind
+//!             a prefix-affinity router with drain/crash-restart)
 //!   tables    regenerate the paper's tables/figures from the perf model
 //!   train     run the quality-parity training experiments
 //!
@@ -11,6 +13,8 @@
 //!   echo '{"prompt":"hello","max_new_tokens":8}' | nc -q1 localhost 8771
 
 use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 use ladder_infer::comm::Interconnect;
@@ -18,7 +22,9 @@ use ladder_infer::engine::{generate, KvLayout, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::perfmodel::tables;
 use ladder_infer::runtime::{BackendKind, Exec};
-use ladder_infer::server::{api, Batcher, BatcherConfig};
+use ladder_infer::server::{
+    api, router, Batcher, BatcherConfig, ReplicaFactory, Router, RouterConfig, RoutingPolicy,
+};
 use ladder_infer::tokenizer::Tokenizer;
 use ladder_infer::trainer::parity;
 use ladder_infer::util::args::Args;
@@ -29,12 +35,13 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "generate" => cmd_generate(argv),
         "serve" => cmd_serve(argv),
+        "router" => cmd_router(argv),
         "tables" => cmd_tables(argv),
         "train" => cmd_train(argv),
         _ => {
             println!(
                 "ladder-infer — Ladder-Residual TP inference framework\n\n\
-                 usage: ladder-infer <generate|serve|tables|train> [options]\n\
+                 usage: ladder-infer <generate|serve|router|tables|train> [options]\n\
                  run any subcommand with --help for its options.\n\n\
                  see also: cargo run --release --example <quickstart|serve_e2e|\
                  train_parity|adapt_hybrid|paper_tables>"
@@ -173,6 +180,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "paged engines: reuse KV pages across requests sharing a prompt prefix \
              (radix-tree cache; bitwise-exact)",
         )
+        .opt(
+            "client-io-timeout-ms",
+            Some("300000"),
+            "terminate a request whose client produces/consumes no event for this long",
+        )
         .parse(argv)?;
     let (engine, tok) = build_engine(&args)?;
     let backend = engine.backend_name();
@@ -187,7 +199,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     };
     let mut batcher = Batcher::with_tokenizer(engine, config, tok.clone());
     let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
-    let (jobs, port) = api::spawn_listener(&addr, tok)?;
+    let io_timeout = Duration::from_millis(args.get_usize("client-io-timeout-ms")? as u64);
+    let (jobs, port) = api::spawn_listener_with(&addr, tok, io_timeout)?;
     println!(
         "serving {} [{}] tp={} runtime={} backend={backend} on 127.0.0.1:{port} — \
          line-JSON protocol v2 (docs/API.md): set \"stream\":true for per-token \
@@ -198,6 +211,130 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         args.get("runtime")?
     );
     api::serve_forever(&mut batcher, jobs, args.get_usize("max-requests")?)
+}
+
+fn cmd_router(argv: Vec<String>) -> Result<()> {
+    let args = engine_args(
+        "ladder-infer router",
+        "fault-tolerant multi-replica serving tier (prefix-affinity routing)",
+    )
+    .opt("port", Some("8771"), "listen port (0 = ephemeral)")
+    .opt("max-requests", Some("0"), "stop after N terminal events (0 = forever)")
+    .opt("decode-burst", Some("1"), "decode steps per scheduler iteration, per replica")
+    .opt(
+        "prefill-chunk",
+        Some("32"),
+        "paged engines: prompt tokens prefilled per scheduler iteration (0 = whole prompt)",
+    )
+    .flag(
+        "prefix-cache",
+        "paged engines: per-replica radix-tree prefix cache (what affinity routing feeds)",
+    )
+    .opt("replicas", Some("2"), "independent engine replicas behind the router")
+    .opt("policy", Some("affinity"), "routing policy: affinity|round-robin")
+    .opt(
+        "spill-threshold",
+        Some("8"),
+        "outstanding requests at the affinity target before spilling to the least loaded",
+    )
+    .opt("max-retries", Some("3"), "resubmissions after a replica loss (pre-first-token only)")
+    .opt("retry-backoff-ms", Some("10"), "base redispatch backoff (attempt k waits k times this)")
+    .opt(
+        "dispatch-timeout-ms",
+        Some("30000"),
+        "fail a request (retryable error event) undispatchable for this long",
+    )
+    .opt(
+        "client-io-timeout-ms",
+        Some("300000"),
+        "terminate a request whose client produces/consumes no event for this long",
+    )
+    .flag("no-auto-restart", "leave crashed replicas down instead of respawning them")
+    .parse(argv)?;
+    // probe the model once for the wire tokenizer; each replica thread
+    // opens its own exec (engine handles are not Send)
+    let model = args.get("model")?;
+    let backend = BackendKind::parse(&args.get("backend")?)?;
+    let cfg = Exec::open(&model, backend)?.cfg().clone();
+    let tok = Tokenizer::bytes_only(cfg.vocab);
+    let page_size = args.get_usize("page-size")?;
+    if args.has_flag("prefix-cache") && page_size == 0 {
+        anyhow::bail!("--prefix-cache needs a paged KV layout (set --page-size > 0)");
+    }
+    let batcher_config = BatcherConfig {
+        decode_burst: args.get_usize("decode-burst")?,
+        kv_budget_bytes: args.get_usize("kv-budget-mb")? * (1 << 20),
+        prefill_chunk: args.get_usize("prefill-chunk")?,
+        prefix_cache: args.has_flag("prefix-cache"),
+    };
+    let seed = args.get_usize("seed")? as u64;
+    let tp = args.get_usize("tp")?;
+    let arch = Arch::parse(&args.get("arch")?)?;
+    let batch = args.get_usize("batch")?;
+    let fabric = args.get("fabric")?;
+    let runtime = RuntimeKind::parse(&args.get("runtime")?)?;
+    let kv_budget = args.get_usize("kv-budget-mb")? << 20;
+    let factory_tok = tok.clone();
+    let factory_model = model.clone();
+    let factory: ReplicaFactory = Arc::new(move || {
+        let exec = Rc::new(Exec::open(&factory_model, backend)?);
+        let cfg = exec.cfg().clone();
+        // same weight-selection rule as `build_engine`: every replica
+        // (and every respawn) is bitwise the same model
+        let weights = match (factory_model.as_str(), exec.artifacts_opt()) {
+            ("tiny", Some(art)) => {
+                let flat = art.read_f32("testvec_weights.f32")?;
+                WeightStore::from_flat(&flat, art.packing()?, cfg.layers)?
+            }
+            _ => WeightStore::random(&cfg, seed),
+        };
+        let layout = if page_size == 0 {
+            KvLayout::Slab
+        } else {
+            KvLayout::paged_from_budget(&cfg, tp, page_size, kv_budget, batch)
+        };
+        let engine = TpEngine::with_layout(
+            exec,
+            &weights,
+            tp,
+            arch,
+            batch,
+            Interconnect::parse(&fabric)?,
+            runtime,
+            layout,
+        )?;
+        Ok(Batcher::with_tokenizer(engine, batcher_config.clone(), factory_tok.clone()))
+    });
+    let policy = match args.get("policy")?.as_str() {
+        "affinity" => RoutingPolicy::Affinity,
+        "round-robin" | "rr" => RoutingPolicy::RoundRobin,
+        p => anyhow::bail!("unknown policy {p:?} (affinity|round-robin)"),
+    };
+    let router_config = RouterConfig {
+        replicas: args.get_usize("replicas")?,
+        policy,
+        // affinity key = the first KV page, the unit the prefix cache
+        // shares; slab engines fall back to the default head length
+        affinity_tokens: if page_size > 0 { page_size } else { 16 },
+        spill_threshold: args.get_usize("spill-threshold")?,
+        max_retries: args.get_usize("max-retries")?,
+        retry_backoff: Duration::from_millis(args.get_usize("retry-backoff-ms")? as u64),
+        dispatch_timeout: Duration::from_millis(args.get_usize("dispatch-timeout-ms")? as u64),
+        auto_restart: !args.has_flag("no-auto-restart"),
+    };
+    let replicas = router_config.replicas;
+    let r = Router::new(factory, router_config)?;
+    let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
+    let io_timeout = Duration::from_millis(args.get_usize("client-io-timeout-ms")? as u64);
+    let (jobs, port) = api::spawn_listener_with(&addr, tok, io_timeout)?;
+    println!(
+        "routing {replicas} replicas of {} [{}] tp={tp} policy={} on 127.0.0.1:{port} — \
+         line-JSON protocol v2 (docs/API.md); {{\"stats\":true}} returns the fleet snapshot",
+        model,
+        args.get("arch")?,
+        args.get("policy")?
+    );
+    router::route_forever(&r, jobs, args.get_usize("max-requests")?)
 }
 
 fn cmd_tables(argv: Vec<String>) -> Result<()> {

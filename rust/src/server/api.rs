@@ -15,6 +15,13 @@
 //!       "tokens":[...],"queued_ms":..,"ttft_ms":..,"itl_ms_p50":..,
 //!       "e2e_ms":..}
 //!
+//! A request that fails before producing a result ends with a structured
+//! error frame instead of `done` — `retryable` says whether resubmitting
+//! the same request can succeed (fleet conditions: yes; malformed or
+//! unservable requests: no):
+//!   <- {"event":"error","id":1,"retryable":true,"reason":"..."}
+//! (non-streaming requests get {"id":1,"error":"...","retryable":..}).
+//!
 //! Sampling is per-request (`temperature`, `top_k`, `seed`), decoding stops
 //! on `stop` strings or the `eos` id, and `{"cancel": <id>}` aborts an
 //! in-flight request (its stream ends with `finish_reason:"cancelled"`).
@@ -40,9 +47,10 @@ use crate::engine::Sampler;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{parse, Json};
 
-/// How long a request may go without producing an event before the wire
-/// layer gives up on it (the dropped channel then cancels it engine-side).
-const EVENT_TIMEOUT: Duration = Duration::from_secs(300);
+/// Default for how long a request may go without producing an event before
+/// the wire layer gives up on it (the dropped channel then cancels it
+/// engine-side). Override per listener with `--client-io-timeout-ms`.
+pub const DEFAULT_CLIENT_IO_TIMEOUT: Duration = Duration::from_secs(300);
 
 /// What the socket side hands the engine loop.
 pub enum ApiJob {
@@ -59,8 +67,21 @@ pub enum ApiJob {
     Stats { respond: Sender<crate::util::json::Json> },
 }
 
-/// Spawn the TCP acceptor; returns the job channel the engine loop drains.
+/// Spawn the TCP acceptor with the default dead-client timeout; returns
+/// the job channel the engine loop drains.
 pub fn spawn_listener(addr: &str, tokenizer: Tokenizer) -> Result<(Receiver<ApiJob>, u16)> {
+    spawn_listener_with(addr, tokenizer, DEFAULT_CLIENT_IO_TIMEOUT)
+}
+
+/// Spawn the TCP acceptor with an explicit per-connection io timeout: a
+/// request stream (or stats round-trip) that produces no event for this
+/// long is terminated with a retryable error frame and its channel dropped
+/// so the engine reclaims the slot.
+pub fn spawn_listener_with(
+    addr: &str,
+    tokenizer: Tokenizer,
+    io_timeout: Duration,
+) -> Result<(Receiver<ApiJob>, u16)> {
     let listener = TcpListener::bind(addr)?;
     let port = listener.local_addr()?.port();
     let (tx, rx) = channel::<ApiJob>();
@@ -74,7 +95,7 @@ pub fn spawn_listener(addr: &str, tokenizer: Tokenizer) -> Result<(Receiver<ApiJ
             let base_id = next_id;
             next_id += 1_000_000;
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx, tok, base_id);
+                let _ = handle_conn(stream, tx, tok, base_id, io_timeout);
             });
         }
     });
@@ -96,6 +117,7 @@ fn handle_conn(
     tx: Sender<ApiJob>,
     tok: Arc<Tokenizer>,
     base_id: u64,
+    io_timeout: Duration,
 ) -> Result<()> {
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
@@ -119,7 +141,7 @@ fn handle_conn(
                 return Ok(());
             }
             let w = writer.clone();
-            std::thread::spawn(move || match srx.recv_timeout(EVENT_TIMEOUT) {
+            std::thread::spawn(move || match srx.recv_timeout(io_timeout) {
                 Ok(stats) => {
                     write_line(&w, &stats);
                 }
@@ -156,7 +178,9 @@ fn handle_conn(
                 }
                 let w = writer.clone();
                 let t = tok.clone();
-                std::thread::spawn(move || forward_events(erx, w, t, id, stream_mode));
+                std::thread::spawn(move || {
+                    forward_events(erx, w, t, id, stream_mode, io_timeout)
+                });
             }
             Err(e) => {
                 write_line(&writer, &Json::obj().set("error", e.to_string()));
@@ -175,9 +199,10 @@ fn forward_events(
     tok: Arc<Tokenizer>,
     id: u64,
     stream_mode: bool,
+    io_timeout: Duration,
 ) {
     loop {
-        match erx.recv_timeout(EVENT_TIMEOUT) {
+        match erx.recv_timeout(io_timeout) {
             Ok(GenerationEvent::Admitted { id, queued_secs }) => {
                 if stream_mode {
                     let frame = Json::obj()
@@ -211,21 +236,16 @@ fn forward_events(
                 write_line(&writer, &frame);
                 return;
             }
+            Ok(GenerationEvent::Error { id, retryable, reason }) => {
+                write_line(&writer, &render_error(id, retryable, &reason, stream_mode));
+                return;
+            }
             Err(RecvTimeoutError::Timeout) => {
                 // tell the client, then drop erx so the batcher reclaims
-                // the slot instead of decoding tokens nobody reads
-                let frame = if stream_mode {
-                    // typed terminal frame so event-dispatching clients
-                    // always see a `done`
-                    Json::obj()
-                        .set("event", "done")
-                        .set("id", id)
-                        .set("finish_reason", "error")
-                        .set("error", "timeout")
-                } else {
-                    Json::obj().set("id", id).set("error", "timeout")
-                };
-                write_line(&writer, &frame);
+                // the slot instead of decoding tokens nobody reads.
+                // Retryable: the request itself was fine, the fleet (or
+                // this connection) was too slow.
+                write_line(&writer, &render_error(id, true, "timeout", stream_mode));
                 return;
             }
             Err(RecvTimeoutError::Disconnected) => return, // engine loop gone
@@ -282,6 +302,21 @@ fn render_result(r: &RequestResult, tok: &Tokenizer) -> Json {
         .set("queued_ms", r.queued_secs * 1e3)
         .set("ttft_ms", r.ttft_secs * 1e3)
         .set("e2e_ms", r.e2e_secs * 1e3)
+}
+
+/// Structured request-failure reply: a typed terminal `error` frame for
+/// streaming requests, the flat v1-style error object otherwise. Both
+/// carry `retryable` so clients know whether resubmitting can succeed.
+fn render_error(id: u64, retryable: bool, reason: &str, stream_mode: bool) -> Json {
+    if stream_mode {
+        Json::obj()
+            .set("event", "error")
+            .set("id", id)
+            .set("retryable", retryable)
+            .set("reason", reason)
+    } else {
+        Json::obj().set("id", id).set("error", reason).set("retryable", retryable)
+    }
 }
 
 /// Terminal frame of a streamed request.
@@ -348,7 +383,7 @@ pub fn serve_forever(
             }
         }
         for ev in batcher.step()? {
-            if matches!(ev, GenerationEvent::Finished { .. }) {
+            if ev.is_terminal() {
                 served += 1;
             }
         }

@@ -32,12 +32,16 @@
 //! the fixed-slot oracle.
 //!
 //! The batcher's output is a typed **event stream**: [`Batcher::step`]
-//! emits [`GenerationEvent`]s (`Admitted` → `Token`* → `Finished`) and
-//! routes each request's events to its per-request sink when one was
-//! registered via [`Batcher::submit_streaming`]. A sink whose receiver has
-//! been dropped (client timeout / disconnect) cancels the request instead
-//! of decoding tokens nobody will read. [`Batcher::cancel`] aborts a
-//! request mid-flight, freeing its slot and KV immediately.
+//! emits [`GenerationEvent`]s (`Admitted` → `Token`* → `Finished`, or a
+//! terminal `Error` for rejected requests) and routes each request's
+//! events to its per-request sink when one was registered via
+//! [`Batcher::submit_streaming`]. A sink whose receiver has been dropped
+//! (client timeout / disconnect) cancels the request instead of decoding
+//! tokens nobody will read. [`Batcher::cancel`] aborts a request
+//! mid-flight, freeing its slot and KV immediately. [`Batcher::drain`]
+//! closes admission for good — queued requests bounce with a retryable
+//! `Error`, in-flight ones finish — so a replica can retire without
+//! losing work; the router resubmits the bounced requests elsewhere.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
@@ -126,7 +130,14 @@ pub struct Batcher {
     sinks: HashMap<u64, Sender<GenerationEvent>>,
     /// Tokenizer for `text_delta`s; without one, deltas are empty strings.
     tokenizer: Option<Arc<Tokenizer>>,
+    /// Draining: admission is closed and queued requests bounce with a
+    /// retryable `Error` event; in-flight slots run to completion.
+    draining: bool,
 }
+
+/// Reason string on the `Error` event a draining batcher bounces queued
+/// requests with (retryable — another replica can serve them).
+pub const DRAIN_REASON: &str = "replica draining";
 
 impl Batcher {
     pub fn new(engine: TpEngine, config: BatcherConfig) -> Batcher {
@@ -161,6 +172,7 @@ impl Batcher {
             prefix,
             sinks: HashMap::new(),
             tokenizer: None,
+            draining: false,
         }
     }
 
@@ -185,13 +197,17 @@ impl Batcher {
     ///
     /// Request ids must be unique among live requests: a submission whose
     /// id is already queued or in flight is rejected immediately on its
-    /// *own* sink (reason `Error`) — inserting it into the sinks map would
-    /// hijack the original request's stream.
+    /// *own* sink (terminal `Error` event, not retryable) — inserting it
+    /// into the sinks map would hijack the original request's stream.
     pub fn submit_streaming(&mut self, request: Request, sink: Sender<GenerationEvent>) {
         if self.id_in_flight(request.id) {
             self.metrics.submitted += 1;
-            let result = self.rejected_result(&request, 0.0);
-            let _ = sink.send(GenerationEvent::Finished { result });
+            self.record_rejection(&request, 0.0);
+            let _ = sink.send(GenerationEvent::Error {
+                id: request.id,
+                retryable: false,
+                reason: "duplicate request id".to_string(),
+            });
             return;
         }
         self.sinks.insert(request.id, sink);
@@ -205,10 +221,11 @@ impl Batcher {
             || self.sinks.contains_key(&id)
     }
 
-    /// Terminal `Error` record for a request rejected before it ever
-    /// reached a slot, recorded in the metrics. Shared by every rejection
-    /// path so the two regimes cannot drift.
-    fn rejected_result(&mut self, request: &Request, queued: f64) -> RequestResult {
+    /// Record the metrics side of a rejection (a completion with reason
+    /// `Error`) for a request that never reached a slot. Shared by every
+    /// rejection path so the two regimes cannot drift; the caller emits
+    /// the matching terminal `Error` event.
+    fn record_rejection(&mut self, request: &Request, queued: f64) {
         let result = RequestResult {
             id: request.id,
             tokens: Vec::new(),
@@ -219,11 +236,62 @@ impl Batcher {
             e2e_secs: request.arrived.elapsed().as_secs_f64(),
         };
         self.metrics.record_completion(&result);
-        result
+    }
+
+    /// Terminate a request that never reached a slot with a terminal
+    /// `Error` event (routed to its sink, which is then released).
+    fn fail_unstarted(
+        &mut self,
+        request: Request,
+        queued: f64,
+        retryable: bool,
+        reason: &str,
+    ) -> GenerationEvent {
+        self.record_rejection(&request, queued);
+        let ev = GenerationEvent::Error {
+            id: request.id,
+            retryable,
+            reason: reason.to_string(),
+        };
+        self.route(&ev);
+        self.sinks.remove(&request.id);
+        ev
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.live()
+    }
+
+    /// Begin a graceful drain: admission closes permanently and every
+    /// queued (not yet admitted) request is bounced immediately with a
+    /// retryable `Error` event — another replica can serve it. Requests
+    /// already in a slot (including mid-chunked-prefill and COW re-prefill
+    /// slots) run to completion via further `step()` calls. Returns the
+    /// bounce events; anything submitted after this bounces on the next
+    /// `step()`.
+    pub fn drain(&mut self) -> Vec<GenerationEvent> {
+        self.draining = true;
+        let mut events = Vec::new();
+        self.bounce_queue(&mut events);
+        events
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// A drain is complete once nothing is queued or in flight; the owner
+    /// can then retire the replica.
+    pub fn drained(&self) -> bool {
+        self.draining && self.pending() == 0
+    }
+
+    /// Bounce every queued request with a retryable `Error` event.
+    fn bounce_queue(&mut self, events: &mut Vec<GenerationEvent>) {
+        while let Some(request) = self.queue.pop_front() {
+            let queued = request.arrived.elapsed().as_secs_f64();
+            events.push(self.fail_unstarted(request, queued, true, DRAIN_REASON));
+        }
     }
 
     /// The paged page-table bookkeeping, when this batcher runs a paged
@@ -324,6 +392,12 @@ impl Batcher {
     /// whole prompt inline, exactly as before; paged engines only claim the
     /// slot + reservation here and leave the prompt to `advance_prefills`.
     fn admit(&mut self, events: &mut Vec<GenerationEvent>) -> Result<()> {
+        if self.draining {
+            // drained admission never reopens: late submissions bounce
+            // with the same retryable error the drain itself issued
+            self.bounce_queue(events);
+            return Ok(());
+        }
         let limit = self.kv_slot_limit();
         for slot in 0..self.slots.len() {
             if self.slots[slot].is_some() {
@@ -345,19 +419,28 @@ impl Batcher {
                     .iter()
                     .any(|s| s.as_ref().is_some_and(|st| st.request.id == request.id));
                 if occupied {
-                    let result = self.rejected_result(&request, queued);
-                    events.push(GenerationEvent::Finished { result });
+                    self.record_rejection(&request, queued);
+                    events.push(GenerationEvent::Error {
+                        id: request.id,
+                        retryable: false,
+                        reason: "duplicate request id".to_string(),
+                    });
                     continue;
                 }
                 if request.prompt.is_empty() {
-                    events.push(self.finish_unstarted(request, queued, FinishReason::Error));
+                    events.push(self.fail_unstarted(request, queued, false, "empty prompt"));
                     continue;
                 }
                 let bucket = match self.engine.pick_bucket(request.prompt.len()) {
                     Ok(b) => b,
                     Err(_) => {
                         // unservable prompt: fail this request, not the loop
-                        let ev = self.finish_unstarted(request, queued, FinishReason::Error);
+                        let ev = self.fail_unstarted(
+                            request,
+                            queued,
+                            false,
+                            "prompt exceeds every engine bucket",
+                        );
                         events.push(ev);
                         continue;
                     }
@@ -380,7 +463,12 @@ impl Batcher {
                     // admitted: fail it alone, never the loop (its id is
                     // unique — checked above — so sink routing is safe)
                     if alloc.pages_for(reserve) > alloc.total_pages() {
-                        let ev = self.finish_unstarted(request, queued, FinishReason::Error);
+                        let ev = self.fail_unstarted(
+                            request,
+                            queued,
+                            false,
+                            "page reservation exceeds pool capacity",
+                        );
                         events.push(ev);
                         continue;
                     }
@@ -733,8 +821,8 @@ impl Batcher {
         ev
     }
 
-    /// Terminate a request that never reached a slot (cancelled or
-    /// unservable while queued).
+    /// Terminate a request that never reached a slot with a `Finished`
+    /// event (cancelled while queued; rejections use `fail_unstarted`).
     fn finish_unstarted(
         &mut self,
         request: Request,

@@ -10,6 +10,9 @@ pub struct ServerMetrics {
     pub submitted: usize,
     pub completed: usize,
     pub cancelled: usize,
+    /// Requests that terminated with an `Error` event (rejected at
+    /// admission or bounced by a drain) — they count as completed too.
+    pub errors: usize,
     pub prefills: usize,
     pub decode_steps: usize,
     pub tokens_out: usize,
@@ -49,6 +52,9 @@ impl ServerMetrics {
         if r.finish_reason == FinishReason::Cancelled {
             self.cancelled += 1;
         }
+        if r.finish_reason == FinishReason::Error {
+            self.errors += 1;
+        }
         // requests torn down before their first token have no latency
         // breakdown worth folding into the percentiles
         if !r.tokens.is_empty() {
@@ -62,6 +68,7 @@ impl ServerMetrics {
             .set("submitted", self.submitted)
             .set("completed", self.completed)
             .set("cancelled", self.cancelled)
+            .set("errors", self.errors)
             .set("prefills", self.prefills)
             .set("decode_steps", self.decode_steps)
             .set("tokens_out", self.tokens_out)

@@ -3,11 +3,19 @@
 //!
 //! The engine↔server boundary is a typed per-request **event stream**
 //! ([`GenerationEvent`]): the batcher emits `Admitted` / `Token` /
-//! `Finished` events into per-request sinks, the wire layer renders them as
-//! line-JSON frames (protocol v2, see `docs/API.md`), and cancellation
-//! propagates back through [`Batcher::cancel`].
+//! `Finished` / terminal `Error` events into per-request sinks, the wire
+//! layer renders them as line-JSON frames (protocol v2, see
+//! `docs/API.md`), and cancellation propagates back through
+//! [`Batcher::cancel`].
 //!
-//! Threading: PJRT handles are not `Send`, so the engine loop owns its
+//! Above a single batcher sits the fault-tolerant multi-replica tier
+//! ([`Router`]): N independent engine replicas (each its own batcher,
+//! page pool and prefix tree) behind prefix-affinity routing with
+//! load-based spillover, transparent pre-first-token retry, graceful
+//! drain and crash-restart supervision (see `docs/ARCHITECTURE.md`,
+//! "Router & fault tolerance").
+//!
+//! Threading: PJRT handles are not `Send`, so each engine loop owns its
 //! thread; the TCP acceptor and per-connection readers are separate threads
 //! that communicate through `std::sync::mpsc` channels of plain data.
 
@@ -15,7 +23,9 @@ pub mod api;
 pub mod batcher;
 pub mod metrics;
 pub mod request;
+pub mod router;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::ServerMetrics;
 pub use request::{FinishReason, GenerationEvent, Request, RequestResult};
+pub use router::{ReplicaFactory, Router, RouterConfig, RoutingPolicy};

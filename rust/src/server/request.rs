@@ -1,10 +1,12 @@
 //! Request / response / event types for the serving stack.
 //!
 //! The engine↔server boundary is a typed **event stream**: every request
-//! produces `Admitted` → `Token`* → `Finished`, routed to its submitter
-//! through a per-request sink (see [`crate::server::Batcher`]). A terminal
-//! [`RequestResult`] still exists for batch-style callers, carried inside
-//! the `Finished` event.
+//! produces `Admitted` → `Token`* → (`Finished` | `Error`), routed to its
+//! submitter through a per-request sink (see [`crate::server::Batcher`]).
+//! A terminal [`RequestResult`] still exists for batch-style callers,
+//! carried inside the `Finished` event; requests that fail before
+//! producing a usable stream terminate with [`GenerationEvent::Error`]
+//! instead, which tells the client whether resubmission can succeed.
 
 use std::time::Instant;
 
@@ -12,7 +14,12 @@ use crate::engine::Sampler;
 use crate::util::stats::Summary;
 
 /// An inference request as admitted to the queue.
-#[derive(Debug)]
+///
+/// `Clone` exists for the router tier: resubmitting a clone replays the
+/// identical prompt / sampler / seed, so a retry that starts before the
+/// first token was ever emitted reproduces the original stream bitwise
+/// (see [`Request::rng_seed`]).
+#[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
@@ -103,8 +110,17 @@ pub enum GenerationEvent {
     /// per request; `text_delta` is the incremental detokenization (empty
     /// when the batcher has no tokenizer or the token ends mid-character).
     Token { id: u64, index: usize, token: i32, text_delta: String },
-    /// Terminal: carries the full result (every request gets exactly one).
+    /// Terminal: carries the full result (every request gets exactly one
+    /// terminal event — `Finished` or `Error`, never both).
     Finished { result: RequestResult },
+    /// Terminal: the request failed before producing a usable result
+    /// (rejected at admission, bounced by a draining replica, or lost to a
+    /// replica crash after its stream had started). `retryable` tells the
+    /// client whether resubmitting the same request can succeed: admission
+    /// rejections (duplicate id, empty prompt, unservable prompt) are
+    /// permanent, fleet conditions (drain, crash, dispatch timeout) are
+    /// not.
+    Error { id: u64, retryable: bool, reason: String },
 }
 
 impl GenerationEvent {
@@ -113,7 +129,16 @@ impl GenerationEvent {
             GenerationEvent::Admitted { id, .. } => *id,
             GenerationEvent::Token { id, .. } => *id,
             GenerationEvent::Finished { result } => result.id,
+            GenerationEvent::Error { id, .. } => *id,
         }
+    }
+
+    /// Is this a stream-ending event? Exactly one per request.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            GenerationEvent::Finished { .. } | GenerationEvent::Error { .. }
+        )
     }
 }
 

@@ -1,0 +1,957 @@
+//! Fault-tolerant multi-replica serving tier.
+//!
+//! A [`Router`] fronts N independent engine replicas — each its own
+//! [`Batcher`], page pool and prefix tree, built by a caller-supplied
+//! factory on the replica's own thread (engine handles are not `Send`).
+//! Streaming requests are routed by **prefix affinity**: the page-aligned
+//! head of the prompt is FNV-hashed to a stable replica index, so requests
+//! sharing a prompt template land on the replica that already holds the
+//! template's pages in its prefix cache. When the affinity target is
+//! backed up past `spill_threshold` outstanding dispatches, the request
+//! spills to the least-loaded live replica instead — affinity is a
+//! preference, never a queueing obligation.
+//!
+//! Fault tolerance is end to end:
+//!
+//! * Every request has a **routing record** (replica, attempt count,
+//!   whether any token reached the client). A per-dispatch forwarder
+//!   thread relays replica events to the client and reports how the
+//!   stream ended.
+//! * A replica that dies (engine error, injected crash) drops its event
+//!   sinks without a terminal event; each forwarder observes the closed
+//!   channel and reports the loss. Requests that had **not yet streamed a
+//!   token** are transparently resubmitted — the clone carries the same
+//!   prompt, sampler and RNG seed, so the replayed stream is bitwise
+//!   identical (duplicate `Admitted` frames are suppressed). Requests
+//!   that had already streamed fail with a terminal `Error` event,
+//!   `retryable: true`, because a replay would duplicate tokens the
+//!   client already holds.
+//! * **Graceful drain** closes a replica's admission, bounces its queued
+//!   requests (resubmitted elsewhere), finishes its in-flight slots, then
+//!   retires the thread. **Crash-restart** respawns a dead replica from
+//!   the factory (prefix cache cold) — automatic under
+//!   `auto_restart`, or explicit via [`Router::restart`].
+//! * Dispatch is bounded: per-request attempts are capped at
+//!   `max_retries`, redispatches back off linearly on `retry_backoff`,
+//!   and a request that cannot be placed within `dispatch_timeout` fails
+//!   with a retryable `Error` event instead of queueing forever.
+//!
+//! The control loop owns all routing state on one thread; replicas,
+//! forwarders and clients talk to it through one mpsc channel, so there
+//! are no locks to poison and no ordering hazards between a crash
+//! notification and the retries it triggers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::api::ApiJob;
+use super::batcher::Batcher;
+use super::request::{FinishReason, GenerationEvent, Request, RequestResult};
+use crate::util::json::Json;
+
+/// Builds one replica's batcher on the replica's own thread. The factory
+/// is the respawn recipe too: a crash-restarted replica is bitwise a
+/// fresh one (same weights, cold prefix cache).
+pub type ReplicaFactory = Arc<dyn Fn() -> Result<Batcher> + Send + Sync>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Hash the page-aligned prompt head to a stable replica (cache
+    /// affinity), spilling on load imbalance.
+    Affinity,
+    /// Cycle over live replicas, ignoring prompt content (the baseline
+    /// the fleet harness compares affinity against).
+    RoundRobin,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub replicas: usize,
+    pub policy: RoutingPolicy,
+    /// Leading prompt tokens hashed for affinity. Set this to the replica
+    /// KV page size so the key is exactly the first page — the unit the
+    /// prefix cache shares. 0 hashes the whole prompt.
+    pub affinity_tokens: usize,
+    /// Outstanding dispatches at the affinity target beyond which a
+    /// request spills to the least-loaded live replica.
+    pub spill_threshold: usize,
+    /// Resubmission attempts after the first dispatch (0 = never retry).
+    pub max_retries: usize,
+    /// Base redispatch backoff; attempt k waits k × this.
+    pub retry_backoff: Duration,
+    /// A request that cannot be placed on any replica within this window
+    /// fails with a retryable `Error` event.
+    pub dispatch_timeout: Duration,
+    /// Respawn crashed replicas automatically (drained replicas always
+    /// stay down until `restart`).
+    pub auto_restart: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            replicas: 2,
+            policy: RoutingPolicy::Affinity,
+            affinity_tokens: 16,
+            spill_threshold: 8,
+            max_retries: 3,
+            retry_backoff: Duration::from_millis(10),
+            dispatch_timeout: Duration::from_secs(30),
+            auto_restart: true,
+        }
+    }
+}
+
+/// What the router sends a replica thread.
+enum ReplicaJob {
+    Submit { request: Request, sink: Sender<GenerationEvent> },
+    Cancel { id: u64 },
+    /// Graceful drain: close admission, bounce the queue, finish
+    /// in-flight slots, retire.
+    Drain,
+    /// Fault injection: drop the batcher mid-flight. Sinks close without
+    /// a terminal event, exactly like a process death.
+    Crash,
+    Stats { respond: Sender<Json> },
+}
+
+/// Everything the control loop reacts to, from clients, forwarders and
+/// replica threads alike.
+enum RouterMsg {
+    Submit { request: Request, sink: Sender<GenerationEvent> },
+    Cancel { id: u64 },
+    /// Forwarder: the replica connection closed without a terminal event.
+    Lost { id: u64, streamed: bool, admitted: bool },
+    /// Forwarder: the replica bounced the request pre-token with a
+    /// retryable error (drain, late rejection) — resubmit elsewhere.
+    Bounced { id: u64, reason: String },
+    /// Forwarder: a terminal event reached the client (or the client went
+    /// away) — the record is settled.
+    Settled { id: u64 },
+    /// A replica thread exited. `built` is false when the factory itself
+    /// failed (respawning would crash-loop).
+    Retired { replica: usize, epoch: u64, crashed: bool, built: bool, reason: String },
+    Drain { replica: usize },
+    Kill { replica: usize },
+    Restart { replica: usize },
+    Stats { respond: Sender<Json> },
+    Shutdown,
+}
+
+/// Handle to the router control loop. Cloneable operations all funnel
+/// through the control channel; dropping the router drains the fleet.
+pub struct Router {
+    ctl: Sender<RouterMsg>,
+    thread: Option<JoinHandle<()>>,
+    completed: Arc<AtomicUsize>,
+}
+
+impl Router {
+    pub fn new(factory: ReplicaFactory, config: RouterConfig) -> Result<Router> {
+        anyhow::ensure!(config.replicas > 0, "router needs at least one replica");
+        let (ctl_tx, ctl_rx) = channel();
+        let completed = Arc::new(AtomicUsize::new(0));
+        let mut control = Control::new(factory, config, ctl_tx.clone(), completed.clone());
+        let thread = std::thread::spawn(move || control.run(ctl_rx));
+        Ok(Router { ctl: ctl_tx, thread: Some(thread), completed })
+    }
+
+    /// Route a streaming request. Its events arrive on `sink`; exactly
+    /// one terminal event (`Finished` or `Error`) ends the stream.
+    pub fn submit(&self, request: Request, sink: Sender<GenerationEvent>) {
+        let _ = self.ctl.send(RouterMsg::Submit { request, sink });
+    }
+
+    pub fn cancel(&self, id: u64) {
+        let _ = self.ctl.send(RouterMsg::Cancel { id });
+    }
+
+    /// Gracefully drain one replica: stop admitting, bounce its queue
+    /// (bounced requests are resubmitted to other replicas), finish its
+    /// in-flight requests, retire the thread. The replica stays down
+    /// until [`Router::restart`].
+    pub fn drain(&self, replica: usize) {
+        let _ = self.ctl.send(RouterMsg::Drain { replica });
+    }
+
+    /// Fault injection: kill one replica mid-flight (its in-flight
+    /// requests are retried or failed per the routing records).
+    pub fn kill(&self, replica: usize) {
+        let _ = self.ctl.send(RouterMsg::Kill { replica });
+    }
+
+    /// Respawn a down (crashed or drained) replica from the factory.
+    /// Its prefix cache starts cold.
+    pub fn restart(&self, replica: usize) {
+        let _ = self.ctl.send(RouterMsg::Restart { replica });
+    }
+
+    /// Terminal events delivered to clients so far (completions, errors,
+    /// duplicate rejections alike).
+    pub fn completed(&self) -> usize {
+        self.completed.load(Ordering::SeqCst)
+    }
+
+    /// Fleet snapshot: per-replica liveness/load/engine metrics plus the
+    /// router's own counters (see docs/API.md).
+    pub fn stats(&self) -> Result<Json> {
+        let (tx, rx) = channel();
+        self.ctl
+            .send(RouterMsg::Stats { respond: tx })
+            .map_err(|_| anyhow::anyhow!("router control loop gone"))?;
+        rx.recv_timeout(Duration::from_secs(30))
+            .map_err(|_| anyhow::anyhow!("router stats timeout"))
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.ctl.send(RouterMsg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Bridge the TCP listener's job channel onto a router (the fleet-mode
+/// `serve_forever`). Runs until `max_requests` terminal events (0 =
+/// forever) or the listener goes away.
+pub fn route_forever(router: &Router, jobs: Receiver<ApiJob>, max_requests: usize) -> Result<()> {
+    loop {
+        match jobs.recv_timeout(Duration::from_millis(50)) {
+            Ok(ApiJob::Submit { request, respond }) => router.submit(request, respond),
+            Ok(ApiJob::Cancel { id }) => router.cancel(id),
+            Ok(ApiJob::Stats { respond }) => {
+                let _ = respond.send(router.stats()?);
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return Ok(()),
+        }
+        if max_requests > 0 && router.completed() >= max_requests {
+            return Ok(());
+        }
+    }
+}
+
+/// Per-request routing record: everything needed to resubmit the request
+/// or decide that resubmission is no longer safe.
+struct RouteRecord {
+    /// Clone kept for resubmission: same prompt, sampler and RNG seed, so
+    /// a pre-first-token replay is bitwise identical.
+    request: Request,
+    client: Sender<GenerationEvent>,
+    /// Replica of the current (or last) dispatch.
+    replica: usize,
+    /// Dispatch attempts completed so far.
+    attempts: usize,
+    /// A `Token` event reached the client — transparent retry is no
+    /// longer safe.
+    streamed: bool,
+    /// An `Admitted` event reached the client — a retried dispatch must
+    /// suppress its replayed admission.
+    admitted: bool,
+    first_dispatch: Instant,
+    /// Pending redispatch (backoff timer), when no dispatch is in flight.
+    retry_at: Option<Instant>,
+    /// Why the last attempt ended (for the retries-exhausted error).
+    last_loss: String,
+}
+
+/// One replica slot as the control loop sees it.
+struct Slot {
+    jobs: Option<Sender<ReplicaJob>>,
+    thread: Option<JoinHandle<()>>,
+    /// Incarnation counter: a `Retired` from a previous epoch is stale.
+    epoch: u64,
+    up: bool,
+    draining: bool,
+    /// Dispatches routed here that have not settled (router-side load
+    /// signal for spillover).
+    outstanding: usize,
+}
+
+struct Control {
+    cfg: RouterConfig,
+    factory: ReplicaFactory,
+    ctl: Sender<RouterMsg>,
+    slots: Vec<Slot>,
+    records: HashMap<u64, RouteRecord>,
+    completed: Arc<AtomicUsize>,
+    rr_next: usize,
+    routed: usize,
+    spilled: usize,
+    retries: usize,
+    drains: usize,
+    restarts: usize,
+    lost_streams: usize,
+    failed: usize,
+}
+
+impl Control {
+    fn new(
+        factory: ReplicaFactory,
+        cfg: RouterConfig,
+        ctl: Sender<RouterMsg>,
+        completed: Arc<AtomicUsize>,
+    ) -> Control {
+        let slots = (0..cfg.replicas)
+            .map(|i| spawn_replica(&factory, i, 0, ctl.clone()))
+            .collect();
+        Control {
+            cfg,
+            factory,
+            ctl,
+            slots,
+            records: HashMap::new(),
+            completed,
+            rr_next: 0,
+            routed: 0,
+            spilled: 0,
+            retries: 0,
+            drains: 0,
+            restarts: 0,
+            lost_streams: 0,
+            failed: 0,
+        }
+    }
+
+    fn run(&mut self, rx: Receiver<RouterMsg>) {
+        loop {
+            match rx.recv_timeout(self.next_wake()) {
+                Ok(RouterMsg::Shutdown) => return self.teardown(),
+                Ok(msg) => self.handle(msg),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return self.teardown(),
+            }
+            // drain whatever else queued up before sleeping again
+            loop {
+                match rx.try_recv() {
+                    Ok(RouterMsg::Shutdown) => return self.teardown(),
+                    Ok(msg) => self.handle(msg),
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+            self.fire_due_retries();
+        }
+    }
+
+    /// Sleep until the earliest pending redispatch, capped so liveness
+    /// checks still run.
+    fn next_wake(&self) -> Duration {
+        let now = Instant::now();
+        self.records
+            .values()
+            .filter_map(|r| r.retry_at)
+            .map(|t| t.saturating_duration_since(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50))
+            .clamp(Duration::from_millis(1), Duration::from_millis(50))
+    }
+
+    fn fire_due_retries(&mut self) {
+        let now = Instant::now();
+        let due: Vec<u64> = self
+            .records
+            .iter()
+            .filter(|(_, r)| r.retry_at.is_some_and(|t| t <= now))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in due {
+            self.dispatch(id);
+        }
+    }
+
+    /// Close all job channels (replicas finish in-flight work and exit)
+    /// and join every replica thread.
+    fn teardown(&mut self) {
+        for s in &mut self.slots {
+            s.jobs = None;
+        }
+        for s in &mut self.slots {
+            if let Some(t) = s.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+
+    fn handle(&mut self, msg: RouterMsg) {
+        match msg {
+            RouterMsg::Submit { request, sink } => {
+                if self.records.contains_key(&request.id) {
+                    // same live-uniqueness contract as the batcher: the
+                    // duplicate fails on its own sink, the original's
+                    // stream is untouched
+                    let _ = sink.send(GenerationEvent::Error {
+                        id: request.id,
+                        retryable: false,
+                        reason: "duplicate request id".to_string(),
+                    });
+                    self.completed.fetch_add(1, Ordering::SeqCst);
+                    return;
+                }
+                let id = request.id;
+                self.routed += 1;
+                self.records.insert(
+                    id,
+                    RouteRecord {
+                        request,
+                        client: sink,
+                        replica: 0,
+                        attempts: 0,
+                        streamed: false,
+                        admitted: false,
+                        first_dispatch: Instant::now(),
+                        retry_at: None,
+                        last_loss: String::new(),
+                    },
+                );
+                self.dispatch(id);
+            }
+            RouterMsg::Cancel { id } => self.cancel(id),
+            RouterMsg::Lost { id, streamed, admitted } => {
+                self.lost_streams += 1;
+                self.reroute(id, streamed, admitted, "replica died mid-request");
+            }
+            RouterMsg::Bounced { id, reason } => {
+                self.reroute(id, false, false, &reason);
+            }
+            RouterMsg::Settled { id } => {
+                if let Some(rec) = self.records.remove(&id) {
+                    self.settle_load(rec.replica);
+                    self.completed.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            RouterMsg::Retired { replica, epoch, crashed, built, reason: _ } => {
+                if self.slots[replica].epoch != epoch {
+                    return; // a newer incarnation already lives here
+                }
+                self.slots[replica].up = false;
+                self.slots[replica].jobs = None;
+                if let Some(t) = self.slots[replica].thread.take() {
+                    let _ = t.join();
+                }
+                if crashed && built && self.cfg.auto_restart && !self.slots[replica].draining {
+                    self.respawn(replica);
+                }
+            }
+            RouterMsg::Drain { replica } => {
+                if replica >= self.slots.len()
+                    || !self.slots[replica].up
+                    || self.slots[replica].draining
+                {
+                    return;
+                }
+                self.slots[replica].draining = true;
+                self.drains += 1;
+                if let Some(jobs) = &self.slots[replica].jobs {
+                    let _ = jobs.send(ReplicaJob::Drain);
+                }
+            }
+            RouterMsg::Kill { replica } => {
+                if replica >= self.slots.len() {
+                    return;
+                }
+                if let Some(jobs) = &self.slots[replica].jobs {
+                    let _ = jobs.send(ReplicaJob::Crash);
+                }
+                // stop routing to it now; `Retired` confirms the death
+                self.slots[replica].up = false;
+            }
+            RouterMsg::Restart { replica } => {
+                if replica < self.slots.len() && !self.slots[replica].up {
+                    self.slots[replica].draining = false;
+                    self.respawn(replica);
+                }
+            }
+            RouterMsg::Stats { respond } => {
+                let stats = self.stats_json();
+                let _ = respond.send(stats);
+            }
+            RouterMsg::Shutdown => unreachable!("handled by run()"),
+        }
+    }
+
+    /// An attempt ended without a terminal event reaching the client:
+    /// resubmit if that is still safe, otherwise fail the stream.
+    fn reroute(&mut self, id: u64, streamed: bool, admitted: bool, why: &str) {
+        let Some(mut rec) = self.records.remove(&id) else { return };
+        self.settle_load(rec.replica);
+        rec.streamed |= streamed;
+        rec.admitted |= admitted;
+        rec.last_loss = why.to_string();
+        if rec.streamed {
+            // tokens already reached the client: a replay would duplicate
+            // them — surface the loss instead (retryable: the request
+            // itself is fine)
+            self.fail(rec, &format!("stream lost: {why}"));
+            return;
+        }
+        self.retries += 1;
+        let backoff = self.cfg.retry_backoff * rec.attempts.max(1) as u32;
+        rec.retry_at = Some(Instant::now() + backoff);
+        self.records.insert(id, rec);
+    }
+
+    fn settle_load(&mut self, replica: usize) {
+        let s = &mut self.slots[replica];
+        s.outstanding = s.outstanding.saturating_sub(1);
+    }
+
+    /// Place a record on a live replica (or schedule another try, or give
+    /// up). The record is out of the map while we work on it — no aliasing
+    /// with slot state.
+    fn dispatch(&mut self, id: u64) {
+        let Some(mut rec) = self.records.remove(&id) else { return };
+        rec.retry_at = None;
+        if rec.attempts > self.cfg.max_retries {
+            let msg = format!(
+                "retries exhausted after {} attempts: {}",
+                rec.attempts, rec.last_loss
+            );
+            self.fail(rec, &msg);
+            return;
+        }
+        if rec.first_dispatch.elapsed() >= self.cfg.dispatch_timeout {
+            self.fail(rec, "dispatch timeout: no replica accepted the request");
+            return;
+        }
+        let key_len = match self.cfg.affinity_tokens {
+            0 => rec.request.prompt.len(),
+            n => rec.request.prompt.len().min(n),
+        };
+        let eligible: Vec<bool> = self
+            .slots
+            .iter()
+            .map(|s| s.up && !s.draining && s.jobs.is_some())
+            .collect();
+        let outstanding: Vec<usize> = self.slots.iter().map(|s| s.outstanding).collect();
+        let (target, spilled) = choose_replica(
+            &rec.request.prompt[..key_len],
+            &eligible,
+            &outstanding,
+            self.cfg.policy,
+            &mut self.rr_next,
+            self.cfg.spill_threshold,
+        );
+        let Some(target) = target else {
+            // nothing live right now (mid-restart?): back off and retry
+            // until the dispatch deadline says otherwise
+            rec.retry_at = Some(Instant::now() + self.cfg.retry_backoff);
+            self.records.insert(id, rec);
+            return;
+        };
+        let (rtx, rrx) = channel();
+        let sent = self.slots[target].jobs.as_ref().is_some_and(|jobs| {
+            jobs.send(ReplicaJob::Submit { request: rec.request.clone(), sink: rtx })
+                .is_ok()
+        });
+        if !sent {
+            // raced the replica's death: mark it down and back off (the
+            // forwarder was never spawned, so no Lost will race this)
+            self.slots[target].up = false;
+            self.slots[target].jobs = None;
+            rec.retry_at = Some(Instant::now() + self.cfg.retry_backoff);
+            self.records.insert(id, rec);
+            return;
+        }
+        if spilled {
+            self.spilled += 1;
+        }
+        rec.attempts += 1;
+        rec.replica = target;
+        self.slots[target].outstanding += 1;
+        let suppress_admitted = rec.admitted;
+        let client = rec.client.clone();
+        let ctl = self.ctl.clone();
+        std::thread::spawn(move || forward(id, suppress_admitted, rrx, client, ctl));
+        self.records.insert(id, rec);
+    }
+
+    /// Terminal failure: structured retryable error to the client.
+    fn fail(&mut self, rec: RouteRecord, reason: &str) {
+        self.failed += 1;
+        let _ = rec.client.send(GenerationEvent::Error {
+            id: rec.request.id,
+            retryable: true,
+            reason: reason.to_string(),
+        });
+        self.completed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn cancel(&mut self, id: u64) {
+        let Some(rec) = self.records.get(&id) else { return };
+        if rec.retry_at.is_none() {
+            // an attempt is in flight: the replica's cancel produces the
+            // terminal Finished{Cancelled} through the normal event path
+            let replica = rec.replica;
+            if let Some(jobs) = &self.slots[replica].jobs {
+                let _ = jobs.send(ReplicaJob::Cancel { id });
+            }
+            return;
+        }
+        // between attempts: no replica holds it — settle it ourselves
+        let rec = self.records.remove(&id).expect("checked above");
+        let waited = rec.request.arrived.elapsed().as_secs_f64();
+        let result = RequestResult {
+            id,
+            tokens: Vec::new(),
+            finish_reason: FinishReason::Cancelled,
+            queued_secs: waited,
+            ttft_secs: 0.0,
+            itl_p50_secs: 0.0,
+            e2e_secs: waited,
+        };
+        let _ = rec.client.send(GenerationEvent::Finished { result });
+        self.completed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn respawn(&mut self, replica: usize) {
+        let epoch = self.slots[replica].epoch + 1;
+        self.slots[replica] = spawn_replica(&self.factory, replica, epoch, self.ctl.clone());
+        self.restarts += 1;
+    }
+
+    fn stats_json(&mut self) -> Json {
+        let mut replicas = Vec::new();
+        let mut prefill_tokens = 0usize;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let engine = slot.jobs.as_ref().and_then(|jobs| {
+                let (stx, srx) = channel();
+                jobs.send(ReplicaJob::Stats { respond: stx }).ok()?;
+                srx.recv_timeout(Duration::from_secs(5)).ok()
+            });
+            if let Some(rep) = &engine {
+                if let Some(n) = rep.opt("prefill_tokens").and_then(|v| v.as_usize().ok()) {
+                    prefill_tokens += n;
+                }
+            }
+            replicas.push(
+                Json::obj()
+                    .set("replica", i)
+                    .set("up", slot.up)
+                    .set("draining", slot.draining)
+                    .set("outstanding", slot.outstanding)
+                    .set("engine", engine.unwrap_or(Json::Null)),
+            );
+        }
+        Json::obj()
+            .set("replicas", Json::Arr(replicas))
+            .set("routed", self.routed)
+            .set("spilled", self.spilled)
+            .set("retries", self.retries)
+            .set("drains", self.drains)
+            .set("restarts", self.restarts)
+            .set("lost_streams", self.lost_streams)
+            .set("failed", self.failed)
+            .set("completed", self.completed.load(Ordering::SeqCst))
+            .set("in_flight", self.records.len())
+            .set("prefill_tokens", prefill_tokens)
+    }
+}
+
+/// Start one replica incarnation: its thread builds the batcher from the
+/// factory and serves until drained, crashed or detached.
+fn spawn_replica(
+    factory: &ReplicaFactory,
+    idx: usize,
+    epoch: u64,
+    ctl: Sender<RouterMsg>,
+) -> Slot {
+    let (jtx, jrx) = channel();
+    let f = factory.clone();
+    let thread = std::thread::spawn(move || replica_main(idx, epoch, f, jrx, ctl));
+    Slot {
+        jobs: Some(jtx),
+        thread: Some(thread),
+        epoch,
+        up: true,
+        draining: false,
+        outstanding: 0,
+    }
+}
+
+/// What applying one replica job asks the serve loop to do next.
+enum Applied {
+    Carry,
+    Crash,
+}
+
+fn apply_replica_job(batcher: &mut Batcher, job: ReplicaJob, started: Instant) -> Applied {
+    match job {
+        ReplicaJob::Submit { request, sink } => {
+            batcher.submit_streaming(request, sink);
+            Applied::Carry
+        }
+        ReplicaJob::Cancel { id } => {
+            batcher.cancel(id);
+            Applied::Carry
+        }
+        ReplicaJob::Drain => {
+            // bounce events route to the queued requests' sinks; the
+            // forwarders turn them into resubmissions
+            batcher.drain();
+            Applied::Carry
+        }
+        ReplicaJob::Crash => Applied::Crash,
+        ReplicaJob::Stats { respond } => {
+            let report = batcher
+                .metrics
+                .report(started.elapsed().as_secs_f64())
+                .set("pending", batcher.pending())
+                .set("draining", batcher.is_draining());
+            let _ = respond.send(report);
+            Applied::Carry
+        }
+    }
+}
+
+/// One replica incarnation's serve loop. Exits by: drain completing
+/// (clean retire), engine error or injected crash (sinks drop with no
+/// terminal event — the router's forwarders see the loss), or the router
+/// going away (detach: finish in-flight work, then stop).
+fn replica_main(
+    idx: usize,
+    epoch: u64,
+    factory: ReplicaFactory,
+    jobs: Receiver<ReplicaJob>,
+    ctl: Sender<RouterMsg>,
+) {
+    let started = Instant::now();
+    let retire = |crashed: bool, built: bool, reason: String| {
+        let _ = ctl.send(RouterMsg::Retired { replica: idx, epoch, crashed, built, reason });
+    };
+    let mut batcher = match factory() {
+        Ok(b) => b,
+        Err(e) => return retire(true, false, format!("replica build failed: {e}")),
+    };
+    let mut detached = false;
+    loop {
+        while !detached {
+            match jobs.try_recv() {
+                Ok(job) => match apply_replica_job(&mut batcher, job, started) {
+                    Applied::Carry => {}
+                    Applied::Crash => return retire(true, true, "killed".to_string()),
+                },
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => detached = true,
+            }
+        }
+        if batcher.drained() || (detached && batcher.pending() == 0) {
+            return retire(false, true, String::new());
+        }
+        if batcher.pending() == 0 {
+            match jobs.recv_timeout(Duration::from_millis(2)) {
+                Ok(job) => match apply_replica_job(&mut batcher, job, started) {
+                    Applied::Carry => {}
+                    Applied::Crash => return retire(true, true, "killed".to_string()),
+                },
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => detached = true,
+            }
+            continue;
+        }
+        if let Err(e) = batcher.step() {
+            // engine failure = replica death: dropping the batcher drops
+            // every in-flight sink without a terminal event
+            return retire(true, true, e.to_string());
+        }
+    }
+}
+
+/// Relay one dispatch attempt's events from the replica to the client and
+/// report how the stream ended. Owns the per-attempt stream state
+/// (`streamed`/`admitted`) so the control loop never races it.
+fn forward(
+    id: u64,
+    suppress_admitted: bool,
+    rrx: Receiver<GenerationEvent>,
+    client: Sender<GenerationEvent>,
+    ctl: Sender<RouterMsg>,
+) {
+    let mut streamed = false;
+    let mut admitted = suppress_admitted;
+    loop {
+        match rrx.recv() {
+            Ok(GenerationEvent::Admitted { .. }) if admitted => {
+                // replayed admission of a retried request: the client
+                // already saw exactly one Admitted
+            }
+            Ok(ev @ GenerationEvent::Admitted { .. }) => {
+                admitted = true;
+                if client.send(ev).is_err() {
+                    let _ = ctl.send(RouterMsg::Settled { id });
+                    return; // dropping rrx cancels replica-side
+                }
+            }
+            Ok(ev @ GenerationEvent::Token { .. }) => {
+                streamed = true;
+                if client.send(ev).is_err() {
+                    let _ = ctl.send(RouterMsg::Settled { id });
+                    return;
+                }
+            }
+            Ok(GenerationEvent::Error { retryable: true, reason, .. }) if !streamed => {
+                // bounced before any token: the router decides whether to
+                // resubmit — the client never sees this attempt fail
+                let _ = ctl.send(RouterMsg::Bounced { id, reason });
+                return;
+            }
+            Ok(ev) => {
+                // Finished, or an error that must surface (not retryable,
+                // or the stream already carried tokens)
+                let _ = client.send(ev);
+                let _ = ctl.send(RouterMsg::Settled { id });
+                return;
+            }
+            Err(_) => {
+                // replica died mid-request: no terminal event arrived
+                let _ = ctl.send(RouterMsg::Lost { id, streamed, admitted });
+                return;
+            }
+        }
+    }
+}
+
+/// FNV-1a over the token ids' little-endian bytes: cheap, stable across
+/// runs, and page-content-exact — the same first page always maps to the
+/// same replica.
+fn fnv1a(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Pure routing decision (unit-tested without threads). Returns the
+/// chosen replica (None when nothing is eligible) and whether the choice
+/// spilled away from its affinity target.
+fn choose_replica(
+    key: &[i32],
+    eligible: &[bool],
+    outstanding: &[usize],
+    policy: RoutingPolicy,
+    rr_next: &mut usize,
+    spill_threshold: usize,
+) -> (Option<usize>, bool) {
+    let live: Vec<usize> = eligible
+        .iter()
+        .enumerate()
+        .filter(|(_, &e)| e)
+        .map(|(i, _)| i)
+        .collect();
+    if live.is_empty() {
+        return (None, false);
+    }
+    match policy {
+        RoutingPolicy::RoundRobin => {
+            let t = live[*rr_next % live.len()];
+            *rr_next += 1;
+            (Some(t), false)
+        }
+        RoutingPolicy::Affinity => {
+            // hash against the full slot count, then walk to the next
+            // live slot: affinity assignments are stable under unrelated
+            // replica churn, and a down target degrades to its neighbor
+            // instead of reshuffling the whole fleet
+            let n = eligible.len();
+            let mut t = (fnv1a(key) % n as u64) as usize;
+            while !eligible[t] {
+                t = (t + 1) % n;
+            }
+            let least = *live
+                .iter()
+                .min_by_key(|&&i| (outstanding[i], i))
+                .expect("live is non-empty");
+            if outstanding[t] > spill_threshold && outstanding[least] < outstanding[t] {
+                return (Some(least), true);
+            }
+            (Some(t), false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_discriminates() {
+        let a = fnv1a(&[1, 2, 3]);
+        assert_eq!(a, fnv1a(&[1, 2, 3]));
+        assert_ne!(a, fnv1a(&[1, 2, 4]));
+        assert_ne!(a, fnv1a(&[3, 2, 1]));
+    }
+
+    #[test]
+    fn affinity_is_stable_and_walks_past_dead_replicas() {
+        let key = [5, 6, 7, 8];
+        let mut rr = 0;
+        let (t1, s1) =
+            choose_replica(&key, &[true; 4], &[0; 4], RoutingPolicy::Affinity, &mut rr, 8);
+        let (t2, _) =
+            choose_replica(&key, &[true; 4], &[3, 3, 3, 3], RoutingPolicy::Affinity, &mut rr, 8);
+        assert_eq!(t1, t2, "load below the spill threshold must not move affinity");
+        assert!(!s1);
+        // kill the affinity target: the choice walks to the next live slot
+        let target = t1.unwrap();
+        let mut eligible = [true; 4];
+        eligible[target] = false;
+        let (t3, _) =
+            choose_replica(&key, &eligible, &[0; 4], RoutingPolicy::Affinity, &mut rr, 8);
+        assert_eq!(t3, Some((target + 1) % 4));
+    }
+
+    #[test]
+    fn affinity_spills_to_least_loaded_when_backed_up() {
+        let key = [5, 6, 7, 8];
+        let mut rr = 0;
+        let (target, _) =
+            choose_replica(&key, &[true; 3], &[0; 3], RoutingPolicy::Affinity, &mut rr, 2);
+        let target = target.unwrap();
+        let mut load = [0usize; 3];
+        load[target] = 5; // past the threshold of 2
+        let (t, spilled) =
+            choose_replica(&key, &[true; 3], &load, RoutingPolicy::Affinity, &mut rr, 2);
+        assert!(spilled);
+        let t = t.unwrap();
+        assert_ne!(t, target);
+        assert_eq!(load[t], 0);
+        // evenly backed up: nobody is strictly less loaded — stay home
+        let (t, spilled) =
+            choose_replica(&key, &[true; 3], &[5; 3], RoutingPolicy::Affinity, &mut rr, 2);
+        assert_eq!(t, Some(target));
+        assert!(!spilled);
+    }
+
+    #[test]
+    fn round_robin_cycles_over_live_replicas_only() {
+        let mut rr = 0;
+        let eligible = [true, false, true, true];
+        let picks: Vec<usize> = (0..6)
+            .map(|_| {
+                choose_replica(&[1], &eligible, &[0; 4], RoutingPolicy::RoundRobin, &mut rr, 8)
+                    .0
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 2, 3, 0, 2, 3]);
+    }
+
+    #[test]
+    fn nothing_eligible_is_none() {
+        let mut rr = 0;
+        let (t, _) =
+            choose_replica(&[1], &[false; 3], &[0; 3], RoutingPolicy::Affinity, &mut rr, 8);
+        assert_eq!(t, None);
+    }
+}

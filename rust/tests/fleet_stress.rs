@@ -1,0 +1,434 @@
+//! Fault-injection fleet harness for the multi-replica router tier.
+//!
+//! Drives a 3-replica [`Router`] (each replica its own paged batcher with
+//! the prefix cache on, built from the same factory the `router` CLI
+//! subcommand uses) through seeded workloads of shared-template prompts
+//! while injecting the three fleet faults mid-workload:
+//!
+//! * **kill** — the busiest replica is crashed with requests in flight;
+//!   its sinks drop without a terminal event and the router must retry
+//!   (pre-first-token) or fail with a retryable `Error` (post-token),
+//! * **drain** — a busy replica closes admission, bounces its queue
+//!   (resubmitted elsewhere, invisibly to the client) and finishes its
+//!   in-flight slots before retiring,
+//! * **restart** — the drained replica is respawned cold.
+//!
+//! Across >= 3 seeds the harness asserts zero lost and zero duplicated
+//! requests: every submitted request sees exactly one terminal event, at
+//! most one `Admitted`, and gapless monotone token indices. Every stream
+//! that finishes — including transparently retried ones — must be
+//! **bitwise identical** to a solo run of the same request on a single
+//! fresh batcher (same per-request RNG seed, so a replay reproduces the
+//! original stream exactly).
+//!
+//! A separate acceptance test replays a fault-free shared-template
+//! workload under both routing policies and asserts prefix-affinity
+//! routing prefills **strictly fewer** aggregate tokens than round-robin
+//! (affinity pays one cold prefix per template; round-robin pays one per
+//! template per replica).
+//!
+//! JSON reports go to `$FLEET_STRESS_REPORT` (CI) or
+//! `target/tmp/FLEET_STRESS.json`; the affinity comparison writes the
+//! sibling `FLEET_STRESS.affinity.json` so concurrent tests never race on
+//! one file. CI uploads the `FLEET_STRESS*.json` glob next to the other
+//! stress reports.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ladder_infer::comm::{Fabric, Interconnect};
+use ladder_infer::engine::{KvLayout, RuntimeKind, Sampler, TpEngine};
+use ladder_infer::model::{Arch, WeightStore};
+use ladder_infer::runtime::Exec;
+use ladder_infer::server::{
+    Batcher, BatcherConfig, GenerationEvent, ReplicaFactory, Request, Router, RouterConfig,
+    RoutingPolicy,
+};
+use ladder_infer::util::json::Json;
+use ladder_infer::util::rng::Rng;
+
+/// KV page size shared by every replica; also the affinity key length, so
+/// the routing key is exactly the first page — the unit the prefix cache
+/// shares.
+const PAGE: usize = 8;
+const TEMPLATE_TOKENS: usize = 2 * PAGE;
+const REPLICAS: usize = 3;
+
+/// The respawn recipe: every incarnation of every replica is bitwise the
+/// same engine (tiny config, fixed weight seed), differing only in cache
+/// state — exactly what the `router` CLI subcommand builds.
+fn replica_factory() -> ReplicaFactory {
+    Arc::new(|| {
+        let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+        let weights = WeightStore::random(exec.cfg(), 0xbeef);
+        let engine = TpEngine::with_layout(
+            exec,
+            &weights,
+            2,
+            Arch::Ladder,
+            2,
+            Interconnect::new(Fabric::Local),
+            RuntimeKind::default(),
+            KvLayout::Paged { page_size: PAGE, pages: 64 },
+        )
+        .expect("tiny paged engine");
+        let config = BatcherConfig {
+            prefill_chunk: 4,
+            prefix_cache: true,
+            ..BatcherConfig::default()
+        };
+        Ok(Batcher::new(engine, config))
+    })
+}
+
+/// Seeded shared-template workload: `templates` random 2-page prompt
+/// heads, `per_template` requests each with a unique random suffix. Every
+/// third request samples (seeded top-k) instead of greedy decoding, so
+/// retry-replay bitwise identity is exercised on sampled streams too.
+fn workload(
+    seed: u64,
+    templates: usize,
+    per_template: usize,
+    suffix_tokens: usize,
+    max_new: usize,
+    id_base: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let heads: Vec<Vec<i32>> = (0..templates)
+        .map(|_| (0..TEMPLATE_TOKENS).map(|_| rng.below(200) as i32).collect())
+        .collect();
+    let mut requests = Vec::new();
+    // template-major order: one template's requests are consecutive, so a
+    // round-robin router provably spreads each template across replicas
+    // (the fair baseline for the affinity comparison)
+    for head in &heads {
+        for _ in 0..per_template {
+            let id = id_base + requests.len() as u64;
+            let mut prompt = head.clone();
+            prompt.extend((0..suffix_tokens).map(|_| rng.below(200) as i32));
+            let mut req = Request::new(id, prompt, max_new);
+            if requests.len() % 3 == 2 {
+                let sampler = Sampler::TopK { k: 8, temperature: 1.0, seed: 0x5eed + id };
+                req = req.with_sampler(sampler);
+            }
+            requests.push(req);
+        }
+    }
+    requests
+}
+
+/// Solo oracle: each request run to completion alone on one fresh-built
+/// batcher (same factory as the replicas). Per-request seeding makes this
+/// the bitwise ground truth for any fleet schedule, retried or not.
+fn reference_outputs(requests: &[Request]) -> HashMap<u64, Vec<i32>> {
+    let factory = replica_factory();
+    let mut b = factory().expect("reference replica");
+    let mut out = HashMap::new();
+    for req in requests {
+        b.submit(req.clone());
+        let r = b.run_to_completion().expect("reference run").remove(0);
+        out.insert(req.id, r.tokens);
+    }
+    out
+}
+
+/// Drain one client stream to its terminal event, asserting the stream
+/// invariants on the way: at most one `Admitted`, gapless monotone token
+/// indices, tokens matching the terminal result, exactly one terminal.
+/// Returns `Ok(tokens)` for a finished stream, `Err((retryable, reason))`
+/// for an errored one.
+fn audit_stream(
+    id: u64,
+    rx: &Receiver<GenerationEvent>,
+) -> Result<Vec<i32>, (bool, String)> {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut admitted = 0usize;
+    let mut streamed: Vec<i32> = Vec::new();
+    loop {
+        let remain = deadline.saturating_duration_since(Instant::now());
+        let ev = rx
+            .recv_timeout(remain)
+            .unwrap_or_else(|_| panic!("request {id} lost: no terminal event arrived"));
+        assert_eq!(ev.id(), id, "stream {id} received a foreign event");
+        match ev {
+            GenerationEvent::Admitted { .. } => {
+                admitted += 1;
+                assert_eq!(admitted, 1, "request {id}: duplicate Admitted frame");
+                assert!(streamed.is_empty(), "request {id}: Admitted after tokens");
+            }
+            GenerationEvent::Token { index, token, .. } => {
+                assert_eq!(
+                    index,
+                    streamed.len(),
+                    "request {id}: token index gap or duplicate"
+                );
+                streamed.push(token);
+            }
+            GenerationEvent::Finished { result } => {
+                assert_eq!(admitted, 1, "request {id}: finished without admission");
+                assert_eq!(
+                    result.tokens, streamed,
+                    "request {id}: terminal result diverges from its own stream"
+                );
+                assert!(
+                    rx.try_recv().is_err(),
+                    "request {id}: events after the terminal"
+                );
+                return Ok(result.tokens);
+            }
+            GenerationEvent::Error { retryable, reason, .. } => {
+                assert!(
+                    rx.try_recv().is_err(),
+                    "request {id}: events after the terminal"
+                );
+                return Err((retryable, reason));
+            }
+        }
+    }
+}
+
+/// Per-replica `(up, outstanding)` pairs from a router stats snapshot.
+fn replica_loads(stats: &Json) -> Vec<(bool, usize)> {
+    stats
+        .get("replicas")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| {
+            (
+                r.get("up").unwrap().as_bool().unwrap(),
+                r.get("outstanding").unwrap().as_usize().unwrap(),
+            )
+        })
+        .collect()
+}
+
+/// Poll until some live replica has work in flight and return its index
+/// (best target for a fault that must land mid-request); falls back to
+/// the first live replica if the fleet drains faster than we can look.
+fn busiest_live_replica(router: &Router) -> usize {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let loads = replica_loads(&router.stats().expect("stats"));
+        let busiest = loads
+            .iter()
+            .enumerate()
+            .filter(|(_, (up, _))| *up)
+            .max_by_key(|(_, (_, n))| *n);
+        match busiest {
+            Some((idx, (_, n))) if *n > 0 || Instant::now() >= deadline => return idx,
+            Some(_) => {}
+            None => assert!(
+                Instant::now() < deadline,
+                "no live replica to target for fault injection"
+            ),
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn stat(stats: &Json, key: &str) -> usize {
+    stats.get(key).unwrap().as_usize().unwrap()
+}
+
+fn report_path(suffix: Option<&str>) -> PathBuf {
+    let path = std::env::var("FLEET_STRESS_REPORT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("FLEET_STRESS.json")
+    });
+    match suffix {
+        Some(s) => path.with_extension(format!("{s}.json")),
+        None => path,
+    }
+}
+
+fn write_report(suffix: Option<&str>, report: Json) {
+    let path = report_path(suffix);
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(&path, report.to_string()).expect("write fleet report");
+}
+
+/// The tentpole acceptance test: kill, drain and restart replicas
+/// mid-workload across three seeds; no request may be lost or duplicated,
+/// and every finished stream must match the solo oracle bitwise.
+#[test]
+fn fleet_survives_kill_drain_restart_across_seeds() {
+    let mut entries = Vec::new();
+    let mut total_retries = 0usize;
+    let mut total_lost = 0usize;
+    for &seed in &[0xA1u64, 0xB2, 0xC3] {
+        let requests = workload(seed, 6, 4, PAGE, 6, seed * 1000);
+        let reference = reference_outputs(&requests);
+        let cfg = RouterConfig {
+            replicas: REPLICAS,
+            policy: RoutingPolicy::Affinity,
+            affinity_tokens: PAGE,
+            spill_threshold: 64,
+            max_retries: 8,
+            retry_backoff: Duration::from_millis(2),
+            dispatch_timeout: Duration::from_secs(60),
+            auto_restart: true,
+        };
+        let router = Router::new(replica_factory(), cfg).expect("router");
+        let mut rxs: Vec<(u64, Receiver<GenerationEvent>)> = Vec::new();
+        let mut submit_wave = |router: &Router, wave: &[Request]| {
+            for req in wave {
+                let (tx, rx) = channel();
+                rxs.push((req.id, rx));
+                router.submit(req.clone(), tx);
+            }
+        };
+        let waves: Vec<&[Request]> = requests.chunks(8).collect();
+        assert_eq!(waves.len(), 3);
+        // wave 1, then crash the replica with the most dispatches in
+        // flight: pre-token requests must be retried transparently
+        submit_wave(&router, waves[0]);
+        let kill_target = busiest_live_replica(&router);
+        router.kill(kill_target);
+        // wave 2, then gracefully drain the (now) busiest replica: its
+        // queue bounces and is resubmitted, in-flight slots finish
+        submit_wave(&router, waves[1]);
+        let drain_target = busiest_live_replica(&router);
+        router.drain(drain_target);
+        // wave 3 runs on the remaining live replicas
+        submit_wave(&router, waves[2]);
+
+        let mut finished = 0usize;
+        let mut errored = 0usize;
+        for (id, rx) in &rxs {
+            match audit_stream(*id, rx) {
+                Ok(tokens) => {
+                    finished += 1;
+                    assert_eq!(
+                        &tokens, &reference[id],
+                        "request {id}: fleet output (possibly retried) diverged from \
+                         the solo oracle — retry replay is not bitwise-identical"
+                    );
+                }
+                Err((retryable, reason)) => {
+                    errored += 1;
+                    assert!(
+                        retryable,
+                        "request {id}: fleet-condition failure must be retryable ({reason})"
+                    );
+                    assert!(!reason.is_empty());
+                }
+            }
+        }
+        assert_eq!(finished + errored, requests.len(), "zero lost, zero duplicated");
+        // settle the router's own bookkeeping before reading stats
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while router.completed() < requests.len() {
+            assert!(Instant::now() < deadline, "router completed() never converged");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // the drained replica retires once its in-flight work is done;
+        // restart it and watch it come back up
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while replica_loads(&router.stats().unwrap())[drain_target].0 {
+            assert!(Instant::now() < deadline, "drained replica never retired");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        router.restart(drain_target);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !replica_loads(&router.stats().unwrap())[drain_target].0 {
+            assert!(Instant::now() < deadline, "restarted replica never came up");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let stats = router.stats().expect("final stats");
+        assert_eq!(stat(&stats, "completed"), requests.len());
+        assert_eq!(stat(&stats, "in_flight"), 0);
+        assert_eq!(stat(&stats, "drains"), 1);
+        assert_eq!(stat(&stats, "failed"), errored);
+        assert!(
+            stat(&stats, "restarts") >= 2,
+            "kill auto-restart + explicit restart of the drained replica"
+        );
+        total_retries += stat(&stats, "retries");
+        total_lost += stat(&stats, "lost_streams");
+        entries.push(
+            Json::obj()
+                .set("seed", seed as usize)
+                .set("requests", requests.len())
+                .set("finished", finished)
+                .set("errored", errored)
+                .set("kill_target", kill_target)
+                .set("drain_target", drain_target)
+                .set("retries", stat(&stats, "retries"))
+                .set("restarts", stat(&stats, "restarts"))
+                .set("lost_streams", stat(&stats, "lost_streams"))
+                .set("spilled", stat(&stats, "spilled"))
+                .set(
+                    "invariants",
+                    "one-terminal-per-stream, no-dup-admit, monotone-tokens, \
+                     bitwise-vs-solo-oracle, retryable-errors-only",
+                ),
+        );
+        drop(router);
+    }
+    assert!(
+        total_retries > 0 && total_lost > 0,
+        "faults never landed mid-request across any seed \
+         (retries {total_retries}, lost {total_lost}) — the harness is not \
+         exercising the retry path"
+    );
+    let report =
+        Json::obj().set("harness", "fleet_stress").set("seeds", Json::Arr(entries));
+    write_report(None, report);
+}
+
+/// Acceptance: on the shared-template workload, prefix-affinity routing
+/// must prefill strictly fewer aggregate tokens than round-robin —
+/// affinity pays one cold template prefix per template, round-robin one
+/// per template per replica it lands on.
+#[test]
+fn affinity_routing_prefills_fewer_tokens_than_round_robin() {
+    let requests = workload(0x7a11, 6, 6, PAGE, 4, 50_000);
+    let mut totals = Vec::new();
+    for policy in [RoutingPolicy::Affinity, RoutingPolicy::RoundRobin] {
+        let cfg = RouterConfig {
+            replicas: REPLICAS,
+            policy,
+            affinity_tokens: PAGE,
+            spill_threshold: 1_000, // sequential load never spills: isolate the policy
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(2),
+            dispatch_timeout: Duration::from_secs(60),
+            auto_restart: true,
+        };
+        let router = Router::new(replica_factory(), cfg).expect("router");
+        for req in &requests {
+            let (tx, rx) = channel();
+            router.submit(req.clone(), tx);
+            // sequential: each request settles before the next routes, so
+            // per-replica cache state is deterministic for both policies
+            let tokens = audit_stream(req.id, &rx)
+                .unwrap_or_else(|(_, e)| panic!("fault-free run errored: {e}"));
+            assert_eq!(tokens.len(), req.max_new_tokens);
+        }
+        let stats = router.stats().expect("stats");
+        assert_eq!(stat(&stats, "spilled"), 0);
+        totals.push(stat(&stats, "prefill_tokens"));
+        drop(router);
+    }
+    let (affinity, round_robin) = (totals[0], totals[1]);
+    assert!(
+        affinity < round_robin,
+        "affinity routing must prefill strictly fewer tokens than round-robin \
+         on shared templates (affinity {affinity}, round-robin {round_robin})"
+    );
+    write_report(
+        Some("affinity"),
+        Json::obj()
+            .set("harness", "fleet_stress")
+            .set("workload", "6 templates x 6 requests, 3 replicas, sequential")
+            .set("affinity_prefill_tokens", affinity)
+            .set("round_robin_prefill_tokens", round_robin),
+    );
+}

@@ -142,6 +142,9 @@ fn drive(mut batcher: Batcher, jobs: &[Job], budget_bytes: usize) -> RunStats {
                     let dup = finished.insert(result.id, (result.tokens, result.finish_reason));
                     assert!(dup.is_none(), "request {} finished twice", result.id);
                 }
+                GenerationEvent::Error { id, reason, .. } => {
+                    panic!("request {id} errored unexpectedly: {reason}");
+                }
             }
         }
     };

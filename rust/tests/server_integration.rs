@@ -17,7 +17,8 @@ use ladder_infer::engine::{KvLayout, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::Exec;
 use ladder_infer::server::{
-    api, api::ApiJob, Batcher, BatcherConfig, FinishReason, GenerationEvent, Request,
+    api, api::ApiJob, batcher::DRAIN_REASON, Batcher, BatcherConfig, FinishReason,
+    GenerationEvent, Request,
 };
 use ladder_infer::tokenizer::Tokenizer;
 use ladder_infer::util::json::{parse, Json};
@@ -183,25 +184,33 @@ fn paged_admission_blocks_on_reservation_and_recovers() {
 }
 
 /// A request id colliding with an in-flight page-table owner must fail
-/// that request alone (reason `Error`), never the serve loop.
+/// that request alone (terminal `Error` event, not retryable), never the
+/// serve loop.
 #[test]
 fn paged_duplicate_request_id_fails_alone() {
     let engine = build_paged_engine(Arch::Standard, 2, 16, 16);
     let mut b = Batcher::new(engine, BatcherConfig::default());
     b.submit(Request::new(5, vec![1, 2, 3], 30));
     b.submit(Request::new(5, vec![4, 5, 6], 30));
-    let mut results = Vec::new();
+    let mut finished = Vec::new();
+    let mut errors = Vec::new();
     while b.pending() > 0 {
         for ev in b.step().unwrap() {
-            if let GenerationEvent::Finished { result } = ev {
-                results.push(result);
+            match ev {
+                GenerationEvent::Finished { result } => finished.push(result),
+                GenerationEvent::Error { id, retryable, reason } => {
+                    assert!(!retryable, "duplicate id is a client bug, not retryable");
+                    assert!(reason.contains("duplicate"), "{reason}");
+                    errors.push(id);
+                }
+                _ => {}
             }
         }
     }
-    assert_eq!(results.len(), 2);
-    let errors = results.iter().filter(|r| r.finish_reason == FinishReason::Error).count();
-    let lengths = results.iter().filter(|r| r.finish_reason == FinishReason::Length).count();
-    assert_eq!((errors, lengths), (1, 1), "duplicate id must fail alone");
+    assert_eq!(errors, vec![5], "duplicate id must fail alone");
+    assert_eq!(finished.len(), 1);
+    assert_eq!(finished[0].finish_reason, FinishReason::Length);
+    assert_eq!(b.metrics.errors, 1, "rejection must surface in the errors counter");
     b.allocator().unwrap().check().unwrap();
     assert_eq!(b.allocator().unwrap().pages_in_use(), 0);
 }
@@ -217,10 +226,12 @@ fn duplicate_streaming_id_does_not_hijack_original_stream() {
     let (tx2, rx2) = channel();
     b.submit_streaming(Request::new(5, vec![9, 9], 4), tx2);
     // the duplicate is rejected synchronously, on its own sink
-    let Ok(GenerationEvent::Finished { result }) = rx2.try_recv() else {
+    let Ok(GenerationEvent::Error { id, retryable, reason }) = rx2.try_recv() else {
         panic!("duplicate must be rejected immediately on its own sink");
     };
-    assert_eq!(result.finish_reason, FinishReason::Error);
+    assert_eq!(id, 5);
+    assert!(!retryable, "duplicate id is a client bug, not retryable");
+    assert!(reason.contains("duplicate"), "{reason}");
     while b.pending() > 0 {
         b.step().unwrap();
     }
@@ -233,6 +244,117 @@ fn duplicate_streaming_id_does_not_hijack_original_stream() {
     assert_eq!(result.finish_reason, FinishReason::Length);
     assert_eq!(result.tokens.len(), 4);
     assert_eq!(events.len(), 6, "Admitted + 4 Tokens + Finished");
+}
+
+// ---------------------------------------------------------------------------
+// graceful drain
+// ---------------------------------------------------------------------------
+
+/// Drain on the slab regime: queued requests bounce immediately with a
+/// retryable `Error` event, in-flight slots run to completion, and
+/// admission never reopens — a post-drain submit bounces on the next step.
+#[test]
+fn drain_bounces_queued_and_finishes_inflight() {
+    let mut b = build_batcher(Arch::Ladder, 2);
+    for i in 0..3u64 {
+        b.submit(Request::new(i, vec![1, 2, 3, i as i32], 4));
+    }
+    b.step().unwrap(); // requests 0 and 1 take the two slots; 2 stays queued
+    let bounced = b.drain();
+    assert!(b.is_draining());
+    assert!(!b.drained(), "two slots are still in flight");
+    assert_eq!(bounced.len(), 1);
+    let GenerationEvent::Error { id, retryable, reason } = &bounced[0] else {
+        panic!("queued request must bounce with an Error event");
+    };
+    assert_eq!((*id, *retryable), (2, true), "drain bounces are retryable");
+    assert_eq!(reason, DRAIN_REASON);
+    // a late submission bounces on the next step, not silently queues
+    b.submit(Request::new(9, vec![5, 6], 4));
+    let mut finished = Vec::new();
+    let mut late_bounce = None;
+    while b.pending() > 0 {
+        for ev in b.step().unwrap() {
+            match ev {
+                GenerationEvent::Finished { result } => finished.push(result),
+                GenerationEvent::Error { id, retryable, reason } => {
+                    assert!(retryable);
+                    assert_eq!(reason, DRAIN_REASON);
+                    late_bounce = Some(id);
+                }
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(late_bounce, Some(9), "post-drain submit must bounce");
+    let mut ids: Vec<u64> = finished.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, vec![0, 1], "in-flight requests run to completion");
+    for r in &finished {
+        assert_eq!(r.finish_reason, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 4);
+    }
+    assert!(b.drained());
+    assert_eq!(b.metrics.errors, 2, "both bounces surface as errors");
+}
+
+/// Drain with chunked prefill and a COW re-prefill slot mid-flight on the
+/// paged + prefix-cache regime: both finish bitwise-correctly, and the
+/// allocator retires holding only the cached prefix pages
+/// (`pages_in_use == cached_pages`).
+#[test]
+fn drain_finishes_chunked_and_cow_slots_and_retires_clean() {
+    let shared: Vec<i32> = (0..16).map(|i| (i * 7 % 256) as i32).collect();
+    let engine = build_paged_engine(Arch::Standard, 2, 8, 64);
+    let config = BatcherConfig {
+        prefill_chunk: 4,
+        prefix_cache: true,
+        ..BatcherConfig::default()
+    };
+    let mut b = Batcher::new(engine, config);
+    // warm the prefix cache: the 16-token prompt fills two 8-token pages
+    b.submit(Request::new(0, shared.clone(), 4));
+    let warm = b.run_to_completion().unwrap().remove(0);
+    let alloc = b.allocator().unwrap();
+    assert!(alloc.cached_pages() > 0, "warmup must seed the prefix cache");
+    // request 1 re-uses the whole cached prompt -> trailing-page COW
+    // re-prefill; request 2 is a fresh 24-token prompt -> chunked prefill
+    b.submit(Request::new(1, shared.clone(), 4));
+    let fresh: Vec<i32> = (0..24).map(|i| (100 + i * 3 % 100) as i32).collect();
+    b.submit(Request::new(2, fresh, 4));
+    b.submit(Request::new(3, vec![7, 7, 7], 4)); // stays queued (batch = 2)
+    b.step().unwrap(); // admit 1 + 2; request 2 is mid-chunked-prefill
+    let bounced = b.drain();
+    assert_eq!(bounced.len(), 1, "only the queued request bounces");
+    assert!(matches!(
+        &bounced[0],
+        GenerationEvent::Error { id: 3, retryable: true, .. }
+    ));
+    let mut finished = Vec::new();
+    while b.pending() > 0 {
+        for ev in b.step().unwrap() {
+            if let GenerationEvent::Finished { result } = ev {
+                finished.push(result);
+            }
+        }
+    }
+    assert!(b.drained());
+    finished.sort_by_key(|r| r.id);
+    assert_eq!(finished.len(), 2);
+    for r in &finished {
+        assert_eq!(r.finish_reason, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 4, "request {}", r.id);
+    }
+    // the COW slot drained mid-flight must still be bitwise-correct: same
+    // prompt, greedy decoding -> same tokens as the cache-cold warmup run
+    assert_eq!(finished[0].tokens, warm.tokens, "COW re-prefill diverged");
+    let alloc = b.allocator().unwrap();
+    alloc.check().unwrap();
+    assert_eq!(
+        alloc.pages_in_use(),
+        alloc.cached_pages(),
+        "a drained allocator holds only prefix-cache pages"
+    );
 }
 
 #[test]
