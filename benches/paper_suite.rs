@@ -52,4 +52,10 @@ fn main() {
             let _ = tables::table6();
         });
     }
+    if want("codec") {
+        tables::codec_compound().print();
+        time_it("regen: codec (quantized-collective compounding)", 1, 3, || {
+            let _ = tables::codec_compound();
+        });
+    }
 }

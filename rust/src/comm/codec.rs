@@ -1,0 +1,238 @@
+//! Pluggable wire codecs for the rendezvous collectives (Flash
+//! Communication-style low-bit allreduce, PAPERS.md).
+//!
+//! A [`Codec`] describes how each rank's partial tensor crosses the modeled
+//! link during an AllReduce. [`Codec::Fp32`] is the default passthrough: the
+//! reduction is bitwise-identical to the historical fp32 path and the link is
+//! charged `numel * 4` bytes. [`Codec::Int8`] / [`Codec::Int4`] model
+//! per-block scale-and-quantize compression: every [`QUANT_BLOCK`]-element
+//! block of a rank's contribution is scaled by its absmax, rounded to a
+//! symmetric `b`-bit grid (127 levels for int8, 7 for int4), and dequantized
+//! on arrival — the *values* that enter the reduction are the
+//! quantize-dequantize roundtrip, and the *bytes* charged to the interconnect
+//! are the compressed payload plus one f32 scale per block (see
+//! [`Codec::wire_bytes`]).
+//!
+//! Determinism contract (docs/ARCHITECTURE.md, "Communication layer"): the
+//! encode step is a pure elementwise f32 transform applied independently to
+//! each rank's partial, and the reduction still sums in fixed rank order
+//! `0..tp`. Both runtimes — the sequential oracle
+//! ([`CollectiveEngine::allreduce`]) and the threaded rendezvous
+//! last-depositor ([`SharedCollective::deposit`]) — run the identical
+//! transform-then-sum sequence, so for every codec the threaded logits are
+//! bitwise-identical to the sequential logits (`runtime_determinism.rs`
+//! extends per-codec rather than dying). Quantization *drift vs the fp32
+//! oracle* is measured, not hidden: `tests/codec_divergence.rs` reports
+//! max/mean logit drift per architecture per codec.
+//!
+//! What is in scope: `ReduceOp::Sum` rendezvous rounds and the sequential
+//! AllReduce, i.e. the per-layer attention/MLP output reductions that
+//! dominate TP communication. Out of scope, deliberately: `TakeRank0`
+//! (Upperbound's deleted collective — free and unmetered, nothing crosses a
+//! link), the tp=1 degenerate case (no wire), and the final lm-head
+//! AllGather (one op per forward, blocking, its payload is vocab logits
+//! where quantization would directly perturb sampling).
+//!
+//! [`CollectiveEngine::allreduce`]: super::collective::CollectiveEngine::allreduce
+//! [`SharedCollective::deposit`]: super::rendezvous::SharedCollective::deposit
+
+use anyhow::{bail, Result};
+
+use crate::model::HostTensor;
+
+/// Elements per quantization block: one f32 absmax scale is stored (and
+/// charged to the wire) per block of this many elements.
+pub const QUANT_BLOCK: usize = 64;
+
+/// Wire format for a rank's AllReduce contribution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Codec {
+    /// Uncompressed passthrough — bitwise-identical to the pre-codec path.
+    #[default]
+    Fp32,
+    /// Per-block absmax scale + symmetric 8-bit grid (127 levels).
+    Int8,
+    /// Per-block absmax scale + symmetric 4-bit grid (7 levels), two
+    /// elements per byte on the wire.
+    Int4,
+}
+
+impl Codec {
+    pub fn parse(s: &str) -> Result<Codec> {
+        Ok(match s {
+            "fp32" => Codec::Fp32,
+            "int8" => Codec::Int8,
+            "int4" => Codec::Int4,
+            _ => bail!("unknown codec {s:?} (fp32|int8|int4)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::Fp32 => "fp32",
+            Codec::Int8 => "int8",
+            Codec::Int4 => "int4",
+        }
+    }
+
+    /// Encoded size of `numel` elements whose uncompressed element width is
+    /// `elem_bytes` (4 for the engine's f32 tensors, 2 for the perfmodel's
+    /// bf16 activations). Quantized payloads are element-width independent:
+    /// int8 is one byte per element, int4 packs two elements per byte, and
+    /// both carry one f32 scale per [`QUANT_BLOCK`]-element block.
+    pub fn wire_bytes_for(&self, numel: usize, elem_bytes: usize) -> usize {
+        let scales = numel.div_ceil(QUANT_BLOCK) * 4;
+        match self {
+            Codec::Fp32 => numel * elem_bytes,
+            Codec::Int8 => numel + scales,
+            Codec::Int4 => numel.div_ceil(2) + scales,
+        }
+    }
+
+    /// Encoded size of `numel` f32 elements — what the engine's collectives
+    /// charge to [`CommStats::bytes_moved`] and the modeled link.
+    ///
+    /// [`CommStats::bytes_moved`]: super::collective::CommStats::bytes_moved
+    pub fn wire_bytes(&self, numel: usize) -> usize {
+        self.wire_bytes_for(numel, 4)
+    }
+
+    /// Apply the quantize→dequantize wire roundtrip to one rank's partial,
+    /// in place. `Fp32` is a literal no-op. The transform is elementwise and
+    /// branch-free per element (`round` + `clamp` on finite inputs), so it is
+    /// bitwise-deterministic regardless of which thread runs it. An all-zero
+    /// block is left untouched (its absmax scale would be 0; a real encoder
+    /// writes scale=0 and decodes zeros — same values, no division).
+    pub fn transport(&self, t: &mut HostTensor) {
+        let levels: f32 = match self {
+            Codec::Fp32 => return,
+            Codec::Int8 => 127.0,
+            Codec::Int4 => 7.0,
+        };
+        for block in t.data.chunks_mut(QUANT_BLOCK) {
+            let mut absmax = 0.0f32;
+            for &x in block.iter() {
+                let a = x.abs();
+                if a > absmax {
+                    absmax = a;
+                }
+            }
+            if absmax == 0.0 {
+                continue;
+            }
+            let scale = absmax / levels;
+            for x in block.iter_mut() {
+                *x = (*x / scale).round().clamp(-levels, levels) * scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> HostTensor {
+        HostTensor::new(vec![v.len()], v)
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for s in ["fp32", "int8", "int4"] {
+            assert_eq!(Codec::parse(s).unwrap().name(), s);
+        }
+        assert!(Codec::parse("bf16").is_err());
+        assert_eq!(Codec::default(), Codec::Fp32);
+    }
+
+    #[test]
+    fn fp32_transport_is_bitwise_identity() {
+        let data: Vec<f32> = (0..200).map(|i| (i as f32 - 100.5) * 0.37).collect();
+        let mut x = t(data.clone());
+        Codec::Fp32.transport(&mut x);
+        let before: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+        let after: Vec<u32> = x.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_one_step() {
+        for codec in [Codec::Int8, Codec::Int4] {
+            let levels = if codec == Codec::Int8 { 127.0f32 } else { 7.0 };
+            let data: Vec<f32> = (0..QUANT_BLOCK).map(|i| (i as f32 * 0.713).sin() * 3.0).collect();
+            let mut x = t(data.clone());
+            codec.transport(&mut x);
+            let absmax = data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let step = absmax / levels;
+            for (orig, deq) in data.iter().zip(&x.data) {
+                assert!(
+                    (orig - deq).abs() <= step * 0.5 + 1e-6,
+                    "{codec:?}: {orig} -> {deq} (step {step})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int4_is_coarser_than_int8() {
+        let data: Vec<f32> = (0..QUANT_BLOCK).map(|i| (i as f32 * 0.917).cos() * 5.0).collect();
+        let err = |codec: Codec| {
+            let mut x = t(data.clone());
+            codec.transport(&mut x);
+            data.iter().zip(&x.data).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+        };
+        assert!(err(Codec::Int4) > err(Codec::Int8));
+        assert!(err(Codec::Int8) > 0.0);
+    }
+
+    #[test]
+    fn blocks_are_scaled_independently() {
+        // Block 0 holds huge values, block 1 tiny ones: per-block scaling
+        // must keep the tiny block's relative error small instead of
+        // flushing it to zero under the huge block's absmax.
+        let mut data = vec![1000.0f32; QUANT_BLOCK];
+        data.extend(vec![0.001f32; QUANT_BLOCK]);
+        let mut x = t(data);
+        Codec::Int8.transport(&mut x);
+        assert!((x.data[0] - 1000.0).abs() < 1.0);
+        assert!((x.data[QUANT_BLOCK] - 0.001).abs() < 1e-5);
+    }
+
+    #[test]
+    fn zero_block_stays_zero_without_nan() {
+        let mut x = t(vec![0.0; QUANT_BLOCK + 3]);
+        Codec::Int4.transport(&mut x);
+        assert!(x.data.iter().all(|v| *v == 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn transport_is_deterministic() {
+        let data: Vec<f32> = (0..300).map(|i| ((i * 7919) % 997) as f32 - 498.0).collect();
+        let mut a = t(data.clone());
+        let mut b = t(data);
+        Codec::Int4.transport(&mut a);
+        Codec::Int4.transport(&mut b);
+        let bits = |h: &HostTensor| h.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        // 128 elems = 2 blocks -> 2 f32 scales.
+        assert_eq!(Codec::Fp32.wire_bytes(128), 512);
+        assert_eq!(Codec::Int8.wire_bytes(128), 128 + 8);
+        assert_eq!(Codec::Int4.wire_bytes(128), 64 + 8);
+        // ragged tail: 65 elems = 2 blocks, int4 packs to ceil(65/2).
+        assert_eq!(Codec::Int8.wire_bytes(65), 65 + 8);
+        assert_eq!(Codec::Int4.wire_bytes(65), 33 + 8);
+        // bf16 base (perfmodel): fp32 passthrough charges the raw message.
+        assert_eq!(Codec::Fp32.wire_bytes_for(128, 2), 256);
+        assert_eq!(Codec::Int8.wire_bytes_for(128, 2), 128 + 8);
+        // compression is real for every message >= one block
+        for numel in [64usize, 8192, 8192 * 4] {
+            assert!(Codec::Int8.wire_bytes(numel) < Codec::Fp32.wire_bytes(numel));
+            assert!(Codec::Int4.wire_bytes(numel) < Codec::Int8.wire_bytes(numel));
+            assert!(Codec::Int8.wire_bytes_for(numel, 2) < Codec::Fp32.wire_bytes_for(numel, 2));
+        }
+    }
+}

@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use super::codec::Codec;
 use super::handle::CommHandle;
 use super::interconnect::Interconnect;
 use super::rendezvous::SharedCollective;
@@ -21,7 +22,13 @@ use crate::model::HostTensor;
 pub struct CommStats {
     pub allreduce_count: usize,
     pub allgather_count: usize,
+    /// Bytes charged to the modeled link — the *encoded* payload when a
+    /// quantizing [`Codec`] is active.
     pub bytes_moved: usize,
+    /// Uncompressed payload bytes (`numel * 4` per collective). Equal to
+    /// `bytes_moved` under the default fp32 codec; the `bytes_raw /
+    /// bytes_moved` ratio is the realized compression factor.
+    pub bytes_raw: usize,
     pub modeled_total: Duration,
     pub exposed_total: Duration,
 }
@@ -47,43 +54,61 @@ impl CommStats {
 pub struct CollectiveEngine {
     pub tp: usize,
     pub interconnect: Interconnect,
+    codec: Codec,
     stats: Arc<Mutex<CommStats>>,
 }
 
 impl CollectiveEngine {
     pub fn new(tp: usize, interconnect: Interconnect) -> CollectiveEngine {
-        CollectiveEngine { tp, interconnect, stats: Arc::new(Mutex::new(CommStats::default())) }
+        CollectiveEngine::with_codec(tp, interconnect, Codec::default())
+    }
+
+    pub fn with_codec(tp: usize, interconnect: Interconnect, codec: Codec) -> CollectiveEngine {
+        CollectiveEngine { tp, interconnect, codec, stats: Arc::new(Mutex::new(CommStats::default())) }
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
     }
 
     /// Build the worker-facing rendezvous collective sharing this engine's
-    /// interconnect model and stats ledger.
+    /// interconnect model, wire codec, and stats ledger.
     pub fn rendezvous(&self) -> Arc<SharedCollective> {
-        Arc::new(SharedCollective::new(self.tp, self.interconnect, self.stats.clone()))
+        Arc::new(SharedCollective::new(self.tp, self.interconnect, self.codec, self.stats.clone()))
     }
 
-    /// Launch an AllReduce over per-rank partial tensors. The sum is
+    /// Launch an AllReduce over per-rank partial tensors. Each partial takes
+    /// the codec's quantize→dequantize wire roundtrip, then the sum is
     /// performed now (deterministic rank order: 0,1,2,...); the handle
-    /// completes at the modeled link deadline.
+    /// completes at the modeled link deadline, which is charged the
+    /// *encoded* byte count.
     pub fn allreduce(&self, partials: Vec<HostTensor>) -> Result<CommHandle> {
         if partials.len() != self.tp {
             bail!("allreduce got {} partials for tp={}", partials.len(), self.tp);
         }
         let mut iter = partials.into_iter();
         let mut acc = iter.next().unwrap();
-        for p in iter {
+        if self.tp > 1 {
+            // tp=1 never touches a wire — the codec must not perturb it.
+            self.codec.transport(&mut acc);
+        }
+        for mut p in iter {
             if p.shape != acc.shape {
                 bail!("allreduce shape mismatch: {:?} vs {:?}", p.shape, acc.shape);
             }
+            self.codec.transport(&mut p);
             for (a, b) in acc.data.iter_mut().zip(&p.data) {
                 *a += b;
             }
         }
-        let bytes = acc.numel() * 4;
+        let raw = acc.numel() * 4;
+        let bytes = if self.tp > 1 { self.codec.wire_bytes(acc.numel()) } else { raw };
         let modeled = Duration::from_secs_f64(self.interconnect.allreduce_time(bytes, self.tp));
         {
             let mut s = self.stats.lock().unwrap();
             s.allreduce_count += 1;
             s.bytes_moved += bytes;
+            s.bytes_raw += raw;
             s.modeled_total += modeled;
         }
         Ok(if self.tp == 1 {
@@ -94,7 +119,9 @@ impl CollectiveEngine {
     }
 
     /// AllGather along the last axis (lm-head vocab shards). Blocking (it is
-    /// the last op before sampling; nothing to overlap with).
+    /// the last op before sampling; nothing to overlap with). Always fp32 on
+    /// the wire: the payload is vocab logits, where quantization would
+    /// perturb sampling directly — the codec applies only to AllReduce.
     pub fn allgather_concat(&self, shards: Vec<HostTensor>) -> Result<HostTensor> {
         if shards.len() != self.tp {
             bail!("allgather got {} shards for tp={}", shards.len(), self.tp);
@@ -125,6 +152,7 @@ impl CollectiveEngine {
         let mut s = self.stats.lock().unwrap();
         s.allgather_count += 1;
         s.bytes_moved += bytes * self.tp;
+        s.bytes_raw += bytes * self.tp;
         s.modeled_total += modeled;
         s.exposed_total += exposed;
         Ok(t)
@@ -197,6 +225,63 @@ mod tests {
         let e = engine(2);
         e.allreduce(vec![t(&[0.; 8]), t(&[0.; 8])]).unwrap().wait();
         assert_eq!(e.stats().bytes_moved, 32);
+        assert_eq!(e.stats().bytes_raw, 32);
+    }
+
+    #[test]
+    fn fp32_codec_is_bitwise_identical_to_default() {
+        let parts: Vec<HostTensor> =
+            (0..3).map(|r| t(&[(r as f32 + 0.3) * 1.7, -0.913 * r as f32, 1e-4])).collect();
+        let (a, _) = engine(3).allreduce(parts.clone()).unwrap().wait();
+        let e = CollectiveEngine::with_codec(3, Interconnect::new(Fabric::Local), Codec::Fp32);
+        let (b, _) = e.allreduce(parts).unwrap().wait();
+        let bits = |h: &HostTensor| h.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        assert_eq!(e.stats().bytes_moved, e.stats().bytes_raw);
+    }
+
+    #[test]
+    fn quantized_allreduce_sums_transported_partials() {
+        // The reduction must equal: transport each partial, then sum in rank
+        // order — not "sum then transport".
+        let parts: Vec<HostTensor> =
+            (0..2).map(|r| t(&(0..70).map(|i| (i as f32 - 35.0) * (r as f32 + 0.5)).collect::<Vec<_>>())).collect();
+        let e = CollectiveEngine::with_codec(2, Interconnect::new(Fabric::Local), Codec::Int8);
+        let (out, _) = e.allreduce(parts.clone()).unwrap().wait();
+        let mut expect = parts;
+        for p in &mut expect {
+            Codec::Int8.transport(p);
+        }
+        let mut acc = expect.remove(0);
+        for (a, b) in acc.data.iter_mut().zip(&expect[0].data) {
+            *a += b;
+        }
+        assert_eq!(
+            out.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            acc.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn quantized_codec_charges_compressed_bytes() {
+        let parts = vec![t(&[1.0; 128]), t(&[2.0; 128])];
+        let e = CollectiveEngine::with_codec(2, Interconnect::new(Fabric::Local), Codec::Int4);
+        e.allreduce(parts).unwrap().wait();
+        let s = e.stats();
+        assert_eq!(s.bytes_raw, 128 * 4);
+        assert_eq!(s.bytes_moved, Codec::Int4.wire_bytes(128));
+        assert!(s.bytes_moved < s.bytes_raw);
+    }
+
+    #[test]
+    fn single_rank_skips_the_codec() {
+        let vals = [0.1234f32, -9.87, 3.3];
+        let e = CollectiveEngine::with_codec(1, Interconnect::new(Fabric::Local), Codec::Int4);
+        let (out, _) = e.allreduce(vec![t(&vals)]).unwrap().wait();
+        assert_eq!(
+            out.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -120,6 +120,9 @@ impl Interconnect {
     }
 
     pub fn parse(s: &str) -> anyhow::Result<Interconnect> {
+        if let Some(spec) = s.strip_prefix("custom:") {
+            return Self::parse_custom(spec);
+        }
         Ok(Interconnect::new(match s {
             "nvlink" => Fabric::NvLink,
             "pcie" | "no-nvlink" => Fabric::Pcie,
@@ -130,8 +133,33 @@ impl Interconnect {
             // comparisons on the real engine show the paper's shape the
             // way GPU-scale modules vs NCCL latencies do.
             "slow" => Fabric::Custom(3000, 1),
-            _ => anyhow::bail!("unknown fabric {s:?} (nvlink|pcie|infiniband|local|slow)"),
+            _ => anyhow::bail!(
+                "unknown fabric {s:?} (nvlink|pcie|infiniband|local|slow|custom:<lat_us>:<gbps>)"
+            ),
         }))
+    }
+
+    /// Parse the `<lat_us>:<gbps>` tail of a `custom:` fabric spec
+    /// (`Fabric::Custom` for sweeps/ablations, e.g. `custom:250:32` = 250us
+    /// per-hop latency at 32 GB/s).
+    fn parse_custom(spec: &str) -> anyhow::Result<Interconnect> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let (lat, bw) = match parts.as_slice() {
+            [lat, bw] => (*lat, *bw),
+            _ => anyhow::bail!(
+                "custom fabric needs exactly two fields, custom:<lat_us>:<gbps> — got \"custom:{spec}\""
+            ),
+        };
+        let lat_us: u32 = lat.parse().map_err(|_| {
+            anyhow::anyhow!("custom fabric latency {lat:?} is not a whole number of microseconds")
+        })?;
+        let bw_gbps: u32 = bw.parse().map_err(|_| {
+            anyhow::anyhow!("custom fabric bandwidth {bw:?} is not a whole number of GB/s")
+        })?;
+        if bw_gbps == 0 {
+            anyhow::bail!("custom fabric bandwidth must be at least 1 GB/s");
+        }
+        Ok(Interconnect::new(Fabric::Custom(lat_us, bw_gbps)))
     }
 }
 
@@ -170,5 +198,27 @@ mod tests {
     fn parse_roundtrip() {
         assert!(Interconnect::parse("nvlink").is_ok());
         assert!(Interconnect::parse("warp-drive").is_err());
+    }
+
+    #[test]
+    fn parse_custom_spec() {
+        let ic = Interconnect::parse("custom:250:32").unwrap();
+        assert_eq!(ic.fabric, Fabric::Custom(250, 32));
+        assert_eq!(ic.alpha, 250e-6);
+        assert_eq!(ic.bandwidth, 32e9);
+        assert!(!ic.sharp);
+        // zero latency is a valid ablation; zero bandwidth is not
+        assert!(Interconnect::parse("custom:0:1").is_ok());
+        assert!(Interconnect::parse("custom:5:0").is_err());
+    }
+
+    #[test]
+    fn parse_custom_errors_are_targeted() {
+        let err = |s: &str| Interconnect::parse(s).unwrap_err().to_string();
+        assert!(err("custom:5").contains("exactly two fields"), "{}", err("custom:5"));
+        assert!(err("custom:5:1:9").contains("exactly two fields"));
+        assert!(err("custom:fast:1").contains("latency"));
+        assert!(err("custom:5:wide").contains("bandwidth"));
+        assert!(err("custom:-1:1").contains("latency"));
     }
 }

@@ -1,13 +1,17 @@
 //! Communication layer: interconnect cost models, the collective engine
 //! (real sum-reduction across rank partials + simulated link latency),
-//! async completion handles that make the Ladder overlap measurable, and
-//! the rendezvous collective the threaded rank runtime synchronizes on.
+//! pluggable wire codecs (fp32 passthrough / int8 / int4 per-block
+//! quantization), async completion handles that make the Ladder overlap
+//! measurable, and the rendezvous collective the threaded rank runtime
+//! synchronizes on. See docs/ARCHITECTURE.md, "Communication layer".
 
+pub mod codec;
 pub mod collective;
 pub mod handle;
 pub mod interconnect;
 pub mod rendezvous;
 
+pub use codec::Codec;
 pub use collective::{CollectiveEngine, CommStats};
 pub use handle::CommHandle;
 pub use interconnect::{Fabric, Interconnect};

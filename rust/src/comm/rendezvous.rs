@@ -11,6 +11,12 @@
 //! NCCL. Ranks then [`wait`] the result; compute they issue between deposit
 //! and wait genuinely overlaps the modeled link time on a sibling core.
 //!
+//! Wire codec: before a `Sum` reduction each partial takes the configured
+//! [`Codec`]'s quantize→dequantize roundtrip, and the modeled link is charged
+//! the *encoded* byte count — identical transform, order, and accounting as
+//! the sequential engine, so every codec preserves the threaded==sequential
+//! bitwise contract (see `comm/codec.rs`).
+//!
 //! Exposed-time accounting: the per-round exposed wait is the *maximum*
 //! across ranks (the critical path), folded incrementally into the shared
 //! [`CommStats`] as ranks finish waiting — so `hidden_fraction` keeps the
@@ -34,6 +40,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use super::codec::Codec;
 use super::collective::CommStats;
 use super::handle::spin_sleep;
 use super::interconnect::Interconnect;
@@ -104,6 +111,7 @@ struct Inner {
 pub struct SharedCollective {
     tp: usize,
     interconnect: Interconnect,
+    codec: Codec,
     stats: Arc<Mutex<CommStats>>,
     inner: Mutex<Inner>,
     cv: Condvar,
@@ -113,11 +121,13 @@ impl SharedCollective {
     pub fn new(
         tp: usize,
         interconnect: Interconnect,
+        codec: Codec,
         stats: Arc<Mutex<CommStats>>,
     ) -> SharedCollective {
         SharedCollective {
             tp,
             interconnect,
+            codec,
             stats,
             inner: Mutex::new(Inner { rounds: HashMap::new(), poisoned: None }),
             cv: Condvar::new(),
@@ -170,7 +180,13 @@ impl SharedCollective {
             let result = match op {
                 ReduceOp::Sum => {
                     let mut acc = parts.next().expect("tp >= 1");
-                    for p in parts {
+                    if tp > 1 {
+                        // tp=1 never touches a wire — the codec must not
+                        // perturb it (matches the sequential engine).
+                        self.codec.transport(&mut acc);
+                    }
+                    for mut p in parts {
+                        self.codec.transport(&mut p);
                         for (a, b) in acc.data.iter_mut().zip(&p.data) {
                             *a += b;
                         }
@@ -181,12 +197,15 @@ impl SharedCollective {
             };
             let modeled = match op {
                 ReduceOp::Sum => {
-                    let bytes = result.numel() * 4;
+                    let raw = result.numel() * 4;
+                    let bytes =
+                        if tp > 1 { self.codec.wire_bytes(result.numel()) } else { raw };
                     let d = Duration::from_secs_f64(self.interconnect.allreduce_time(bytes, tp));
                     match self.stats.lock() {
                         Ok(mut s) => {
                             s.allreduce_count += 1;
                             s.bytes_moved += bytes;
+                            s.bytes_raw += raw;
                             s.modeled_total += d;
                         }
                         Err(_) => {
@@ -309,6 +328,7 @@ mod tests {
         Arc::new(SharedCollective::new(
             tp,
             Interconnect::new(fabric),
+            Codec::Fp32,
             Arc::new(Mutex::new(CommStats::default())),
         ))
     }
@@ -341,6 +361,7 @@ mod tests {
         let c = Arc::new(SharedCollective::new(
             2,
             Interconnect::new(Fabric::Custom(2000, 1)),
+            Codec::Fp32,
             stats.clone(),
         ));
         let c2 = c.clone();
@@ -361,7 +382,12 @@ mod tests {
     #[test]
     fn stats_count_once_per_round() {
         let stats = Arc::new(Mutex::new(CommStats::default()));
-        let c = Arc::new(SharedCollective::new(2, Interconnect::new(Fabric::Local), stats.clone()));
+        let c = Arc::new(SharedCollective::new(
+            2,
+            Interconnect::new(Fabric::Local),
+            Codec::Fp32,
+            stats.clone(),
+        ));
         let c2 = c.clone();
         let h = thread::spawn(move || {
             c2.deposit(1, 0, t(&[1.0; 8]), ReduceOp::Sum).unwrap();
@@ -427,7 +453,48 @@ mod tests {
         Arc::new(SharedCollective::new(
             2,
             Interconnect::new(Fabric::Custom(2000, 1)),
+            Codec::Fp32,
             Arc::new(Mutex::new(CommStats::default())),
         ))
+    }
+
+    #[test]
+    fn quantized_rendezvous_matches_sequential_engine_bitwise() {
+        use crate::comm::collective::CollectiveEngine;
+        for codec in [Codec::Fp32, Codec::Int8, Codec::Int4] {
+            let parts: Vec<HostTensor> = (0..3)
+                .map(|r| {
+                    t(&(0..70)
+                        .map(|i| ((i * 13 + r * 7) % 29) as f32 - 14.0)
+                        .collect::<Vec<_>>())
+                })
+                .collect();
+            let seq = CollectiveEngine::with_codec(3, Interconnect::new(Fabric::Local), codec);
+            let (oracle, _) = seq.allreduce(parts.clone()).unwrap().wait();
+
+            let stats = Arc::new(Mutex::new(CommStats::default()));
+            let c = Arc::new(SharedCollective::new(
+                3,
+                Interconnect::new(Fabric::Local),
+                codec,
+                stats.clone(),
+            ));
+            let mut handles = Vec::new();
+            for (rank, part) in parts.into_iter().enumerate() {
+                let c = c.clone();
+                handles.push(thread::spawn(move || {
+                    c.deposit(rank, 0, part, ReduceOp::Sum).unwrap();
+                    let (out, _) = c.wait(rank, 0).unwrap();
+                    out.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                }));
+            }
+            let oracle_bits: Vec<u32> = oracle.data.iter().map(|v| v.to_bits()).collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), oracle_bits, "{codec:?}");
+            }
+            let s = stats.lock().unwrap();
+            assert_eq!(s.bytes_moved, codec.wire_bytes(70), "{codec:?}");
+            assert_eq!(s.bytes_raw, 70 * 4);
+        }
     }
 }

@@ -25,7 +25,7 @@ use super::kv::{KvLayout, PagedFwd, PagedKvCache};
 use super::rank::{Embedder, Phase, RankState};
 use super::threaded::ThreadedRuntime;
 use super::{add_assign, BlockSel};
-use crate::comm::{CollectiveEngine, CommHandle, Interconnect};
+use crate::comm::{Codec, CollectiveEngine, CommHandle, Interconnect};
 use crate::model::{Arch, HostTensor, LlamaConfig, WeightStore};
 use crate::runtime::Exec;
 
@@ -129,6 +129,26 @@ impl TpEngine {
         runtime: RuntimeKind,
         layout: KvLayout,
     ) -> Result<TpEngine> {
+        Self::with_codec(exec, weights, tp, arch, batch, interconnect, runtime, layout, Codec::default())
+    }
+
+    /// Full constructor: an explicit collective wire [`Codec`] on top of
+    /// [`TpEngine::with_layout`] (`--codec` toggle). The codec applies to
+    /// every AllReduce on both runtimes — the sequential oracle encodes in
+    /// [`CollectiveEngine::allreduce`], the threaded workers inherit it
+    /// through the shared rendezvous collective.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_codec(
+        exec: Rc<Exec>,
+        weights: &WeightStore,
+        tp: usize,
+        arch: Arch,
+        batch: usize,
+        interconnect: Interconnect,
+        runtime: RuntimeKind,
+        layout: KvLayout,
+        codec: Codec,
+    ) -> Result<TpEngine> {
         let cfg = exec.cfg().clone();
         let sp = exec.serving();
         // compiled-shape backends only have executables for the exported
@@ -169,7 +189,7 @@ impl TpEngine {
         } else {
             interconnect
         };
-        let comm = CollectiveEngine::new(tp, interconnect);
+        let comm = CollectiveEngine::with_codec(tp, interconnect, codec);
         let (ranks, threaded, embedder) = match runtime {
             RuntimeKind::Sequential => {
                 let ranks = (0..tp)
@@ -206,6 +226,11 @@ impl TpEngine {
             buckets,
             tracer: None,
         })
+    }
+
+    /// The collective wire codec this engine's AllReduces run through.
+    pub fn codec(&self) -> Codec {
+        self.comm.codec()
     }
 
     /// Start (or restart) wall-clock tracing of module + AllReduce spans.

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
-use ladder_infer::comm::Interconnect;
+use ladder_infer::comm::{Codec, Interconnect};
 use ladder_infer::engine::{generate, KvLayout, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::perfmodel::tables;
@@ -57,7 +57,8 @@ fn engine_args(program: &str, about: &str) -> Args {
         .opt("arch", Some("ladder"), "standard|ladder|parallel|desync2|desync4|upperbound|hybrid")
         .opt("tp", Some("2"), "tensor-parallel degree")
         .opt("batch", Some("2"), "batch slots")
-        .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local")
+        .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local|slow|custom:<lat_us>:<gbps>")
+        .opt("codec", Some("fp32"), "collective wire codec: fp32|int8|int4 (quantized allreduce)")
         .opt("runtime", Some("threaded"), "rank runtime: threaded|sequential (oracle)")
         .opt(
             "backend",
@@ -114,7 +115,7 @@ fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
         }
         _ => WeightStore::random(&cfg, args.get_usize("seed")? as u64),
     };
-    let engine = TpEngine::with_layout(
+    let engine = TpEngine::with_codec(
         exec,
         &weights,
         args.get_usize("tp")?,
@@ -123,6 +124,7 @@ fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
         Interconnect::parse(&args.get("fabric")?)?,
         RuntimeKind::parse(&args.get("runtime")?)?,
         kv_layout(args, &cfg)?,
+        Codec::parse(&args.get("codec")?)?,
     )?;
     let tok = Tokenizer::bytes_only(cfg.vocab);
     Ok((engine, tok))
@@ -202,13 +204,14 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let io_timeout = Duration::from_millis(args.get_usize("client-io-timeout-ms")? as u64);
     let (jobs, port) = api::spawn_listener_with(&addr, tok, io_timeout)?;
     println!(
-        "serving {} [{}] tp={} runtime={} backend={backend} on 127.0.0.1:{port} — \
+        "serving {} [{}] tp={} runtime={} codec={} backend={backend} on 127.0.0.1:{port} — \
          line-JSON protocol v2 (docs/API.md): set \"stream\":true for per-token \
          frames, {{\"cancel\":id}} to abort",
         args.get("model")?,
         args.get("arch")?,
         args.get_usize("tp")?,
-        args.get("runtime")?
+        args.get("runtime")?,
+        args.get("codec")?
     );
     api::serve_forever(&mut batcher, jobs, args.get_usize("max-requests")?)
 }
@@ -272,6 +275,7 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
     let arch = Arch::parse(&args.get("arch")?)?;
     let batch = args.get_usize("batch")?;
     let fabric = args.get("fabric")?;
+    let codec = Codec::parse(&args.get("codec")?)?;
     let runtime = RuntimeKind::parse(&args.get("runtime")?)?;
     let kv_budget = args.get_usize("kv-budget-mb")? << 20;
     let factory_tok = tok.clone();
@@ -293,7 +297,7 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
         } else {
             KvLayout::paged_from_budget(&cfg, tp, page_size, kv_budget, batch)
         };
-        let engine = TpEngine::with_layout(
+        let engine = TpEngine::with_codec(
             exec,
             &weights,
             tp,
@@ -302,6 +306,7 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
             Interconnect::parse(&fabric)?,
             runtime,
             layout,
+            codec,
         )?;
         Ok(Batcher::with_tokenizer(engine, batcher_config.clone(), factory_tok.clone()))
     });
@@ -328,10 +333,11 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
     let io_timeout = Duration::from_millis(args.get_usize("client-io-timeout-ms")? as u64);
     let (jobs, port) = api::spawn_listener_with(&addr, tok, io_timeout)?;
     println!(
-        "routing {replicas} replicas of {} [{}] tp={tp} policy={} on 127.0.0.1:{port} — \
+        "routing {replicas} replicas of {} [{}] tp={tp} codec={} policy={} on 127.0.0.1:{port} — \
          line-JSON protocol v2 (docs/API.md); {{\"stats\":true}} returns the fleet snapshot",
         model,
         args.get("arch")?,
+        codec.name(),
         args.get("policy")?
     );
     router::route_forever(&r, jobs, args.get_usize("max-requests")?)
@@ -339,7 +345,7 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
 
 fn cmd_tables(argv: Vec<String>) -> Result<()> {
     let args = Args::new("ladder-infer tables", "regenerate paper tables/figures")
-        .opt("only", Some(""), "comma list: table1,table2,fig2,fig3,fig4,table6")
+        .opt("only", Some(""), "comma list: table1,table2,fig2,fig3,fig4,table6,codec")
         .parse(argv)?;
     let only = args.get("only")?;
     let want = |n: &str| only.is_empty() || only.split(',').any(|s| s == n);
@@ -362,6 +368,9 @@ fn cmd_tables(argv: Vec<String>) -> Result<()> {
     }
     if want("table6") {
         tables::table6().print();
+    }
+    if want("codec") {
+        tables::codec_compound().print();
     }
     Ok(())
 }

@@ -8,7 +8,7 @@
 //! paper's Table 2 prefill/decode split reflects.
 
 use super::hardware::{GpuSpec, ELEM_BYTES};
-use crate::comm::Interconnect;
+use crate::comm::{Codec, Interconnect};
 use crate::model::PaperModel;
 
 /// Execution times (seconds) for one layer's modules on one rank.
@@ -34,6 +34,9 @@ pub struct CostModel {
     /// Cross-node hop (e.g. TP16 across 2 nodes via InfiniBand): the
     /// AllReduce additionally traverses this fabric with the full message.
     pub cross_node: Option<(Interconnect, usize)>,
+    /// Collective wire codec: AllReduce messages are charged their encoded
+    /// size (`comm/codec.rs`) instead of the raw `ELEM_BYTES` payload.
+    pub codec: Codec,
 }
 
 impl CostModel {
@@ -43,7 +46,7 @@ impl CostModel {
         tp: usize,
         interconnect: Interconnect,
     ) -> CostModel {
-        CostModel { model, gpu, tp, interconnect, cross_node: None }
+        CostModel { model, gpu, tp, interconnect, cross_node: None, codec: Codec::default() }
     }
 
     pub fn with_cross_node(mut self, fabric: Interconnect, nodes: usize) -> CostModel {
@@ -51,20 +54,30 @@ impl CostModel {
         self
     }
 
+    pub fn with_codec(mut self, codec: Codec) -> CostModel {
+        self.codec = codec;
+        self
+    }
+
     fn roofline(&self, flops: f64, bytes: f64) -> f64 {
         (flops / self.gpu.flops).max(bytes / self.gpu.mem_bw) + self.gpu.launch_overhead
     }
 
-    /// AllReduce time for a [B, S, H] activation message.
+    /// AllReduce time for a [B, S, H] activation message. The wire size is
+    /// the codec's encoding of a `numel`-element, `ELEM_BYTES`-wide message
+    /// (fp32 passthrough charges the raw bf16 payload, exactly the
+    /// pre-codec model; int8/int4 charge the quantized payload + per-block
+    /// scales).
     pub fn allreduce(&self, batch: usize, seq: usize) -> f64 {
-        let bytes = (batch * seq * self.model.hidden) as f64 * ELEM_BYTES;
+        let numel = batch * seq * self.model.hidden;
+        let bytes = self.codec.wire_bytes_for(numel, ELEM_BYTES as usize);
         let intra_ranks = match self.cross_node {
             Some((_, nodes)) => self.tp / nodes,
             None => self.tp,
         };
-        let mut t = self.interconnect.allreduce_time(bytes as usize, intra_ranks);
+        let mut t = self.interconnect.allreduce_time(bytes, intra_ranks);
         if let Some((fabric, nodes)) = self.cross_node {
-            t += fabric.allreduce_time(bytes as usize, nodes);
+            t += fabric.allreduce_time(bytes, nodes);
         }
         t
     }
@@ -205,6 +218,20 @@ mod tests {
         let cm2 = CostModel::new(m70b(), H100, 2, Interconnect::new(Fabric::NvLink));
         let cm8 = CostModel::new(m70b(), H100, 8, Interconnect::new(Fabric::NvLink));
         assert!(cm8.decode(4, 1024).mlp < cm2.decode(4, 1024).mlp);
+    }
+
+    #[test]
+    fn codec_shrinks_allreduce_time() {
+        let base = CostModel::new(m70b(), H100, 8, Interconnect::new(Fabric::NvLink));
+        for (b, s) in [(4usize, 1usize), (4, 1024)] {
+            let fp32 = base.allreduce(b, s);
+            let int8 = base.with_codec(Codec::Int8).allreduce(b, s);
+            let int4 = base.with_codec(Codec::Int4).allreduce(b, s);
+            assert!(int8 < fp32, "int8 {int8} !< fp32 {fp32}");
+            assert!(int4 < int8, "int4 {int4} !< int8 {int8}");
+        }
+        // fp32 codec is exactly the pre-codec cost
+        assert_eq!(base.with_codec(Codec::Fp32).allreduce(4, 1), base.allreduce(4, 1));
     }
 
     #[test]

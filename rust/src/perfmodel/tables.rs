@@ -4,7 +4,7 @@
 //! the bench binaries and `examples/paper_tables.rs` print them and compare
 //! against the published numbers in EXPERIMENTS.md.
 
-use crate::comm::{Fabric, Interconnect};
+use crate::comm::{Codec, Fabric, Interconnect};
 use crate::model::{Arch, PaperModel, PAPER_MODELS};
 use crate::perfmodel::costs::CostModel;
 use crate::perfmodel::hardware::H100;
@@ -43,6 +43,40 @@ pub fn table1() -> Table {
             format!("{:.2}x", lad.tok_per_sec() / std.tok_per_sec())
         };
         t.row(&[m.name.to_string(), row(Fabric::NvLink), row(Fabric::Pcie)]);
+    }
+    t
+}
+
+/// Codec compounding study (ROADMAP "compressed collectives"): end-to-end
+/// 70B TP8 bs4 generation time per (fabric, arch, collective codec).
+/// Ladder *hides* AllReduce latency architecturally while int8/int4
+/// quantization *shrinks* it — the two effects compound, so the
+/// ladder+int8 cell must undercut both ladder+fp32 and standard+int8
+/// (gated by `tests/codec_divergence.rs`).
+pub fn codec_compound() -> Table {
+    let mut t = Table::new(
+        "Codec compounding: 70B TP8 bs4 e2e seconds (prompt 1024, gen 512)",
+        &["Fabric", "Arch", "fp32", "int8", "int4", "int8 speedup"],
+    );
+    let m = PaperModel::by_name("70B").unwrap();
+    let arches =
+        [Arch::Standard, Arch::Parallel, Arch::Desync(2), Arch::Ladder, Arch::Upperbound];
+    for fabric in [Fabric::NvLink, Fabric::Pcie] {
+        for arch in arches {
+            let e2e = |codec: Codec| {
+                let cm = cost_model(m, 8, fabric).with_codec(codec);
+                simulate_generation(arch, &cm, 4, PROMPT, GEN).total()
+            };
+            let (fp32, int8, int4) = (e2e(Codec::Fp32), e2e(Codec::Int8), e2e(Codec::Int4));
+            t.row(&[
+                Interconnect::new(fabric).name(),
+                arch.name(),
+                format!("{fp32:.3}s"),
+                format!("{int8:.3}s"),
+                format!("{int4:.3}s"),
+                format!("{:.2}x", fp32 / int8),
+            ]);
+        }
     }
     t
 }

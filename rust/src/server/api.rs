@@ -348,7 +348,7 @@ fn apply_job(batcher: &mut Batcher, job: ApiJob, started: std::time::Instant) ->
         ApiJob::Cancel { id } => usize::from(batcher.cancel(id).is_some()),
         ApiJob::Stats { respond } => {
             // a dropped receiver (client gone) is fine — nothing to clean up
-            let _ = respond.send(batcher.metrics.report(started.elapsed().as_secs_f64()));
+            let _ = respond.send(batcher.stats_report(started.elapsed().as_secs_f64()));
             0
         }
     }

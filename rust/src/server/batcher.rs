@@ -294,6 +294,20 @@ impl Batcher {
         }
     }
 
+    /// The `{"stats":true}` snapshot: the [`ServerMetrics`] report plus the
+    /// comm-layer fields only the engine knows — the collective wire codec
+    /// and its raw-vs-encoded byte ledger (docs/API.md).
+    pub fn stats_report(&self, wall_secs: f64) -> crate::util::json::Json {
+        let comm = self.engine.comm.stats();
+        self.metrics
+            .report(wall_secs)
+            .set("codec", self.engine.codec().name())
+            .set("comm_allreduces", comm.allreduce_count)
+            .set("comm_bytes_moved", comm.bytes_moved)
+            .set("comm_bytes_raw", comm.bytes_raw)
+            .set("comm_hidden_fraction", comm.hidden_fraction())
+    }
+
     /// The paged page-table bookkeeping, when this batcher runs a paged
     /// engine (tests and the stress harness audit its invariants).
     pub fn allocator(&self) -> Option<&BlockAllocator> {

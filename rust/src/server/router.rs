@@ -701,8 +701,7 @@ fn apply_replica_job(batcher: &mut Batcher, job: ReplicaJob, started: Instant) -
         ReplicaJob::Crash => Applied::Crash,
         ReplicaJob::Stats { respond } => {
             let report = batcher
-                .metrics
-                .report(started.elapsed().as_secs_f64())
+                .stats_report(started.elapsed().as_secs_f64())
                 .set("pending", batcher.pending())
                 .set("draining", batcher.is_draining());
             let _ = respond.send(report);

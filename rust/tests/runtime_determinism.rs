@@ -17,8 +17,8 @@
 
 use std::rc::Rc;
 
-use ladder_infer::comm::{Fabric, Interconnect};
-use ladder_infer::engine::{RuntimeKind, TpEngine};
+use ladder_infer::comm::{Codec, Fabric, Interconnect};
+use ladder_infer::engine::{KvLayout, RuntimeKind, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::Exec;
 
@@ -54,7 +54,30 @@ fn logits_stream(arch: Arch, runtime: RuntimeKind) -> Vec<Vec<u32>> {
         runtime,
     )
     .unwrap();
+    drive_stream(&mut engine)
+}
 
+/// Same schedule through the full constructor with an explicit collective
+/// wire codec.
+fn logits_stream_codec(arch: Arch, runtime: RuntimeKind, codec: Codec) -> Vec<Vec<u32>> {
+    let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+    let weights = tiny_weights(&exec);
+    let mut engine = TpEngine::with_codec(
+        exec,
+        &weights,
+        2,
+        arch,
+        2,
+        Interconnect::new(Fabric::Local),
+        runtime,
+        KvLayout::Slab,
+        codec,
+    )
+    .unwrap();
+    drive_stream(&mut engine)
+}
+
+fn drive_stream(engine: &mut TpEngine) -> Vec<Vec<u32>> {
     let tokens: Vec<i32> = (0..(2 * PROMPT) as i32).map(|i| i % 13 + 1).collect();
     let mut stream = Vec::with_capacity(DECODE_STEPS + 1);
     let logits = engine.prefill(&tokens, PROMPT, &[PROMPT, PROMPT]).unwrap();
@@ -156,8 +179,6 @@ fn continuous_batching_slots_bitwise_identical() {
 /// every worker).
 #[test]
 fn paged_layout_bitwise_identical_to_slab_on_both_runtimes() {
-    use ladder_infer::engine::KvLayout;
-
     let paged_stream = |runtime: RuntimeKind| -> Vec<Vec<u32>> {
         let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
         let weights = tiny_weights(&exec);
@@ -233,8 +254,6 @@ fn paged_layout_bitwise_identical_to_slab_on_both_runtimes() {
 ///   last page is duplicated with `copy_page` and only the final token is
 ///   re-prefilled over the copy.
 fn assert_prefix_hit_bitwise(arch: Arch, runtime: RuntimeKind) {
-    use ladder_infer::engine::KvLayout;
-
     let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
     let weights = tiny_weights(&exec);
     let mut engine = TpEngine::with_layout(
@@ -326,6 +345,59 @@ fn prefix_cache_hits_bitwise_equal_cold_prefill_sequential() {
 fn prefix_cache_hits_bitwise_equal_cold_prefill_threaded() {
     for arch in ALL_ARCHES {
         assert_prefix_hit_bitwise(arch, RuntimeKind::Threaded);
+    }
+}
+
+/// The codec half of the determinism contract (`comm/codec.rs`): a
+/// quantizing wire codec applies the same elementwise transform to each
+/// partial before the same rank-order reduction on both runtimes, so the
+/// threaded logits must stay bitwise-identical to the sequential oracle
+/// under int8/int4 too — quantization drifts from fp32, never between
+/// runtimes.
+fn check_bitwise_codec(arch: Arch, codec: Codec) {
+    let seq = logits_stream_codec(arch, RuntimeKind::Sequential, codec);
+    let thr = logits_stream_codec(arch, RuntimeKind::Threaded, codec);
+    assert_eq!(seq.len(), thr.len());
+    for (step, (a, b)) in seq.iter().zip(&thr).enumerate() {
+        assert_eq!(
+            a,
+            b,
+            "{} [{}]: step {step} logits diverge bitwise between runtimes",
+            arch.name(),
+            codec.name()
+        );
+    }
+}
+
+#[test]
+fn int8_codec_bitwise_identical_across_runtimes_all_arches() {
+    for arch in ALL_ARCHES {
+        check_bitwise_codec(arch, Codec::Int8);
+    }
+}
+
+#[test]
+fn int4_codec_bitwise_identical_across_runtimes_all_arches() {
+    for arch in ALL_ARCHES {
+        check_bitwise_codec(arch, Codec::Int4);
+    }
+}
+
+/// The fp32 codec is a literal no-op on the wire: logits must be
+/// bitwise-identical to the default (pre-codec) constructor path on both
+/// runtimes, for every architecture.
+#[test]
+fn fp32_codec_bitwise_identical_to_default_path() {
+    for arch in ALL_ARCHES {
+        for runtime in [RuntimeKind::Sequential, RuntimeKind::Threaded] {
+            assert_eq!(
+                logits_stream(arch, runtime),
+                logits_stream_codec(arch, runtime, Codec::Fp32),
+                "{} [{}]: fp32 codec diverges from the default path",
+                arch.name(),
+                runtime.name()
+            );
+        }
     }
 }
 
