@@ -9,8 +9,8 @@
 use std::rc::Rc;
 use std::time::Instant;
 
-use ladder_infer::comm::Interconnect;
-use ladder_infer::engine::{KvLayout, RuntimeKind, TpEngine};
+use ladder_infer::comm::{Codec, Interconnect};
+use ladder_infer::engine::{KvLayout, OverlapMode, RuntimeKind, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::server::{Batcher, BatcherConfig, Request};
@@ -29,7 +29,13 @@ fn main() -> anyhow::Result<()> {
             "fabric",
             Some("slow"),
             "nvlink|pcie|infiniband|local|slow (slow: ms-scale latency, proportionate to \
-             CPU-testbed module times)",
+             CPU-testbed module times), or two_tier:<intra>:<cross>:<gpus_per_node> for a \
+             hierarchical topology",
+        )
+        .opt(
+            "overlap",
+            Some("none"),
+            "split-batch overlap: none|split2|split4 (chunked forwards, bitwise-exact)",
         )
         .opt("arches", Some("standard,parallel,ladder,desync2,desync4,upperbound"), "comma list")
         .opt("backend", Some("native"), "execution backend: native|xla")
@@ -56,6 +62,7 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.get_usize("requests")?;
     let gen = args.get_usize("gen")?;
     let fabric = Interconnect::parse(&args.get("fabric")?)?;
+    let overlap = OverlapMode::parse(&args.get("overlap")?)?;
     let page_size = args.get_usize("page-size")?;
     let layout = if page_size == 0 {
         KvLayout::Slab
@@ -65,11 +72,12 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!(
-        "serve_e2e: model={} ({} params) tp={tp} batch={batch} fabric={} requests={n_requests} \
-         gen={gen} kv={}",
+        "serve_e2e: model={} ({} params) tp={tp} batch={batch} fabric={} overlap={} \
+         requests={n_requests} gen={gen} kv={}",
         cfg.name,
         cfg.params,
         fabric.name(),
+        overlap.name(),
         match layout {
             KvLayout::Slab => "slabs".to_string(),
             KvLayout::Paged { page_size, pages } => format!("paged({page_size}tok x {pages})"),
@@ -118,12 +126,14 @@ fn main() -> anyhow::Result<()> {
             "kv hw (pages)",
             "pfx hit %",
             "comm hidden %",
+            "hidden pf/dec %",
+            "intra/cross KB",
         ],
     );
     let mut baseline_tps = None;
     for arch_name in args.get("arches")?.split(',') {
         let arch = Arch::parse(arch_name)?;
-        let engine = TpEngine::with_layout(
+        let engine = TpEngine::with_overlap(
             exec.clone(),
             &weights,
             tp,
@@ -132,6 +142,8 @@ fn main() -> anyhow::Result<()> {
             fabric,
             RuntimeKind::default(),
             layout,
+            Codec::default(),
+            overlap,
         )?;
         let config = BatcherConfig {
             kv_budget_bytes: args.get_usize("kv-budget-mb")? << 20,
@@ -177,6 +189,12 @@ fn main() -> anyhow::Result<()> {
                 "-".to_string()
             },
             format!("{:.0}", comm.hidden_fraction() * 100.0),
+            format!(
+                "{:.0}/{:.0}",
+                comm.hidden_fraction_prefill() * 100.0,
+                comm.hidden_fraction_decode() * 100.0
+            ),
+            format!("{}/{}", comm.bytes_intra >> 10, comm.bytes_cross >> 10),
         ]);
         if arch == Arch::Standard {
             baseline_tps = Some(tps);

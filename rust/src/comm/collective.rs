@@ -17,6 +17,16 @@ use super::interconnect::Interconnect;
 use super::rendezvous::SharedCollective;
 use crate::model::HostTensor;
 
+/// Which forward phase collectives are currently attributed to. The engine
+/// flips the marker at the top of each forward (forwards are synchronous, so
+/// the marker never races the collectives it labels).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum CommPhase {
+    #[default]
+    Prefill,
+    Decode,
+}
+
 /// Aggregate comm statistics (shared across a generation run).
 #[derive(Debug, Default, Clone)]
 pub struct CommStats {
@@ -29,8 +39,22 @@ pub struct CommStats {
     /// `bytes_moved` under the default fp32 codec; the `bytes_raw /
     /// bytes_moved` ratio is the realized compression factor.
     pub bytes_raw: usize,
+    /// Encoded bytes carried by intra-node links (= all of `bytes_moved` on
+    /// a flat fabric; the reduce-scatter/allgather ring traffic on a
+    /// two-tier fabric — see `Interconnect::allreduce_tier_bytes`).
+    pub bytes_intra: usize,
+    /// Encoded bytes carried by cross-node links (0 on a flat fabric).
+    pub bytes_cross: usize,
     pub modeled_total: Duration,
     pub exposed_total: Duration,
+    /// Per-phase slices of the modeled/exposed ledgers, keyed by the phase
+    /// marker active when each collective ran.
+    pub prefill_modeled: Duration,
+    pub prefill_exposed: Duration,
+    pub decode_modeled: Duration,
+    pub decode_exposed: Duration,
+    /// Current attribution marker (set via `CollectiveEngine::set_phase`).
+    pub phase: CommPhase,
 }
 
 impl CommStats {
@@ -39,10 +63,45 @@ impl CommStats {
     /// can push it slightly past the modeled total — that must read as
     /// "nothing hidden", never as a negative fraction.
     pub fn hidden_fraction(&self) -> f64 {
-        if self.modeled_total.is_zero() {
+        Self::hidden(self.modeled_total, self.exposed_total)
+    }
+
+    /// Hidden fraction of collectives issued during prefill forwards.
+    pub fn hidden_fraction_prefill(&self) -> f64 {
+        Self::hidden(self.prefill_modeled, self.prefill_exposed)
+    }
+
+    /// Hidden fraction of collectives issued during decode forwards — the
+    /// phase the ladder/overlap schedules target.
+    pub fn hidden_fraction_decode(&self) -> f64 {
+        Self::hidden(self.decode_modeled, self.decode_exposed)
+    }
+
+    fn hidden(modeled: Duration, exposed: Duration) -> f64 {
+        if modeled.is_zero() {
             return 0.0;
         }
-        (1.0 - self.exposed_total.as_secs_f64() / self.modeled_total.as_secs_f64()).clamp(0.0, 1.0)
+        (1.0 - exposed.as_secs_f64() / modeled.as_secs_f64()).clamp(0.0, 1.0)
+    }
+
+    /// Charge one collective's modeled time to the total and current-phase
+    /// ledgers.
+    pub(crate) fn charge_modeled(&mut self, modeled: Duration) {
+        self.modeled_total += modeled;
+        match self.phase {
+            CommPhase::Prefill => self.prefill_modeled += modeled,
+            CommPhase::Decode => self.decode_modeled += modeled,
+        }
+    }
+
+    /// Charge measured exposed wait time to the total and current-phase
+    /// ledgers.
+    pub(crate) fn charge_exposed(&mut self, exposed: Duration) {
+        self.exposed_total += exposed;
+        match self.phase {
+            CommPhase::Prefill => self.prefill_exposed += exposed,
+            CommPhase::Decode => self.decode_exposed += exposed,
+        }
     }
 }
 
@@ -104,12 +163,15 @@ impl CollectiveEngine {
         let raw = acc.numel() * 4;
         let bytes = if self.tp > 1 { self.codec.wire_bytes(acc.numel()) } else { raw };
         let modeled = Duration::from_secs_f64(self.interconnect.allreduce_time(bytes, self.tp));
+        let (intra, cross) = self.interconnect.allreduce_tier_bytes(bytes, self.tp);
         {
             let mut s = self.stats.lock().unwrap();
             s.allreduce_count += 1;
             s.bytes_moved += bytes;
             s.bytes_raw += raw;
-            s.modeled_total += modeled;
+            s.bytes_intra += intra;
+            s.bytes_cross += cross;
+            s.charge_modeled(modeled);
         }
         Ok(if self.tp == 1 {
             CommHandle::ready(acc)
@@ -149,18 +211,27 @@ impl CollectiveEngine {
             CommHandle::new(HostTensor::new(new_shape, out), modeled)
         };
         let (t, exposed) = handle.wait();
+        let (intra, cross) = self.interconnect.allgather_tier_bytes(bytes * self.tp, self.tp);
         let mut s = self.stats.lock().unwrap();
         s.allgather_count += 1;
         s.bytes_moved += bytes * self.tp;
         s.bytes_raw += bytes * self.tp;
-        s.modeled_total += modeled;
-        s.exposed_total += exposed;
+        s.bytes_intra += intra;
+        s.bytes_cross += cross;
+        s.charge_modeled(modeled);
+        s.charge_exposed(exposed);
         Ok(t)
     }
 
     /// Record the exposed wait time returned by a `CommHandle::wait`.
     pub fn record_exposed(&self, exposed: Duration) {
-        self.stats.lock().unwrap().exposed_total += exposed;
+        self.stats.lock().unwrap().charge_exposed(exposed);
+    }
+
+    /// Flip the phase marker collectives are attributed to (prefill/decode
+    /// ledger slices). Called by the engine at the top of each forward.
+    pub fn set_phase(&self, phase: CommPhase) {
+        self.stats.lock().unwrap().phase = phase;
     }
 
     pub fn stats(&self) -> CommStats {
@@ -300,6 +371,38 @@ mod tests {
             ..CommStats::default()
         };
         assert_eq!(s.hidden_fraction(), 1.0);
+    }
+
+    #[test]
+    fn tier_ledger_splits_on_two_tier_fabric() {
+        let flat = engine(2);
+        flat.allreduce(vec![t(&[0.; 8]), t(&[0.; 8])]).unwrap().wait();
+        let s = flat.stats();
+        assert_eq!(s.bytes_intra, s.bytes_moved);
+        assert_eq!(s.bytes_cross, 0);
+
+        let ic = Interconnect::parse("two_tier:local:slow:1").unwrap();
+        let e = CollectiveEngine::new(2, ic);
+        e.allreduce(vec![t(&[0.; 8]), t(&[0.; 8])]).unwrap().wait();
+        let s = e.stats();
+        assert_eq!(s.bytes_intra, 0);
+        assert_eq!(s.bytes_cross, 32);
+    }
+
+    #[test]
+    fn phase_marker_slices_the_ledgers() {
+        let e = CollectiveEngine::new(2, Interconnect::new(Fabric::Custom(500, 1)));
+        e.set_phase(CommPhase::Prefill);
+        let h = e.allreduce(vec![t(&[1.0; 16]), t(&[1.0; 16])]).unwrap();
+        e.record_exposed(h.wait().1);
+        e.set_phase(CommPhase::Decode);
+        let h = e.allreduce(vec![t(&[1.0; 16]), t(&[1.0; 16])]).unwrap();
+        e.record_exposed(h.wait().1);
+        let s = e.stats();
+        assert!(s.prefill_modeled > Duration::ZERO);
+        assert!(s.decode_modeled > Duration::ZERO);
+        assert_eq!(s.prefill_modeled + s.decode_modeled, s.modeled_total);
+        assert_eq!(s.prefill_exposed + s.decode_exposed, s.exposed_total);
     }
 
     #[test]

@@ -30,6 +30,17 @@ pub enum Fabric {
     Custom(u32, u32),
 }
 
+/// Cross-node tier of a hierarchical (two-tier) topology: ranks are grouped
+/// into nodes of `gpus_per_node`, joined intra-node by the host
+/// [`Interconnect`]'s own link and across nodes by `cross`.
+#[derive(Debug, Clone, Copy)]
+pub struct TwoTier {
+    /// Fabric class of the cross-node links.
+    pub cross: Fabric,
+    /// Ranks per node (the intra-tier group size).
+    pub gpus_per_node: usize,
+}
+
 /// Cost model for one fabric.
 #[derive(Debug, Clone, Copy)]
 pub struct Interconnect {
@@ -40,6 +51,10 @@ pub struct Interconnect {
     pub bandwidth: f64,
     /// One-shot in-switch reduction (SHARP) instead of ring.
     pub sharp: bool,
+    /// Hierarchical topology: when set, collectives over more ranks than
+    /// one node decompose into reduce-scatter (intra) -> allreduce (cross)
+    /// -> allgather (intra). `None` = flat single-tier fabric.
+    pub two_tier: Option<TwoTier>,
 }
 
 impl Interconnect {
@@ -55,36 +70,83 @@ impl Interconnect {
                 alpha: 18e-6,
                 bandwidth: 450e9,
                 sharp: true,
+                two_tier: None,
             },
             Fabric::Pcie => Interconnect {
                 fabric,
                 alpha: 5e-6,
                 bandwidth: 40e9,
                 sharp: false,
+                two_tier: None,
             },
             Fabric::InfiniBand => Interconnect {
                 fabric,
                 alpha: 25e-6,
                 bandwidth: 45e9,
                 sharp: false,
+                two_tier: None,
             },
             Fabric::Local => Interconnect {
                 fabric,
                 alpha: 0.0,
                 bandwidth: f64::INFINITY,
                 sharp: true,
+                two_tier: None,
             },
             Fabric::Custom(lat_us, bw_gbps) => Interconnect {
                 fabric,
                 alpha: lat_us as f64 * 1e-6,
                 bandwidth: bw_gbps as f64 * 1e9,
                 sharp: false,
+                two_tier: None,
             },
         }
     }
 
+    /// Attach a cross-node tier: `self`'s own link becomes the intra-node
+    /// fabric of a [`TwoTier`] hierarchy.
+    pub fn with_two_tier(mut self, cross: Fabric, gpus_per_node: usize) -> Interconnect {
+        self.two_tier = Some(TwoTier { cross, gpus_per_node });
+        self
+    }
+
+    /// Does the hierarchical decomposition apply for an `n`-rank collective?
+    /// (A two-tier fabric with every rank on one node — or a group size
+    /// that doesn't tile `n` — degrades to the flat intra link.)
+    fn tiers(&self, n: usize) -> Option<(TwoTier, usize)> {
+        let tt = self.two_tier?;
+        if tt.gpus_per_node >= 1 && n % tt.gpus_per_node == 0 && n / tt.gpus_per_node > 1 {
+            Some((tt, n / tt.gpus_per_node))
+        } else {
+            None
+        }
+    }
+
     /// Modeled AllReduce duration for `bytes` over `n` devices.
+    ///
+    /// On a flat fabric this is the alpha-beta model described above. On a
+    /// two-tier fabric spanning more than one node it is the hierarchical
+    /// decomposition:
+    ///
+    ///   reduce-scatter intra (g ranks, B)  ->  allreduce cross
+    ///   (nodes, B/g shards)  ->  allgather intra (g ranks, B/g per rank)
     pub fn allreduce_time(&self, bytes: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        if let Some((tt, nodes)) = self.tiers(n) {
+            let g = tt.gpus_per_node;
+            let shard = bytes / g;
+            // ring reduce-scatter and allgather of B over g ranks move the
+            // same (g-1) hops of B/g per rank — identical cost
+            let intra_phase = self.flat_allgather_time(shard, g);
+            let cross = Interconnect::new(tt.cross).flat_allreduce_time(shard, nodes);
+            return 2.0 * intra_phase + cross;
+        }
+        self.flat_allreduce_time(bytes, n)
+    }
+
+    fn flat_allreduce_time(&self, bytes: usize, n: usize) -> f64 {
         if n <= 1 || matches!(self.fabric, Fabric::Local) {
             return 0.0;
         }
@@ -100,8 +162,23 @@ impl Interconnect {
         }
     }
 
-    /// Modeled AllGather duration (lm-head vocab shards).
+    /// Modeled AllGather duration (lm-head vocab shards). Two-tier fabrics
+    /// gather intra-node first, then exchange node aggregates cross-node.
     pub fn allgather_time(&self, bytes_per_rank: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        if let Some((tt, nodes)) = self.tiers(n) {
+            let g = tt.gpus_per_node;
+            let intra = self.flat_allgather_time(bytes_per_rank, g);
+            let cross =
+                Interconnect::new(tt.cross).flat_allgather_time(bytes_per_rank * g, nodes);
+            return intra + cross;
+        }
+        self.flat_allgather_time(bytes_per_rank, n)
+    }
+
+    fn flat_allgather_time(&self, bytes_per_rank: usize, n: usize) -> f64 {
         if n <= 1 || matches!(self.fabric, Fabric::Local) {
             return 0.0;
         }
@@ -109,12 +186,54 @@ impl Interconnect {
         hops * self.alpha + hops * bytes_per_rank as f64 / self.bandwidth
     }
 
+    /// Per-tier link traffic of one `n`-rank AllReduce carrying `bytes` of
+    /// payload: `(bytes_intra, bytes_cross)`. Flat fabrics charge the whole
+    /// payload to the intra tier. Two-tier fabrics charge the intra tier
+    /// the reduce-scatter + allgather ring traffic (`2 (g-1)/g B`) and the
+    /// cross tier the shard the node aggregates exchange (`B/g`).
+    pub fn allreduce_tier_bytes(&self, bytes: usize, n: usize) -> (usize, usize) {
+        if let Some((tt, _nodes)) = self.tiers(n) {
+            let g = tt.gpus_per_node;
+            let intra = 2 * (g - 1) * bytes / g;
+            let cross = bytes / g;
+            return (intra, cross);
+        }
+        (bytes, 0)
+    }
+
+    /// Per-tier link traffic of one `n`-rank AllGather of `total_bytes`
+    /// gathered payload: all intra on a flat fabric; on a two-tier fabric
+    /// the intra ring carries `(g-1)/g` of it and the cross exchange
+    /// `(nodes-1)/nodes`.
+    pub fn allgather_tier_bytes(&self, total_bytes: usize, n: usize) -> (usize, usize) {
+        if let Some((tt, nodes)) = self.tiers(n) {
+            let g = tt.gpus_per_node;
+            let intra = (g - 1) * total_bytes / g;
+            let cross = (nodes - 1) * total_bytes / nodes;
+            return (intra, cross);
+        }
+        (total_bytes, 0)
+    }
+
     pub fn name(&self) -> String {
-        match self.fabric {
+        let base = Self::fabric_name(self.fabric);
+        match self.two_tier {
+            Some(tt) => format!(
+                "two_tier({base},{},gpn={})",
+                Self::fabric_name(tt.cross),
+                tt.gpus_per_node
+            ),
+            None => base,
+        }
+    }
+
+    fn fabric_name(fabric: Fabric) -> String {
+        match fabric {
             Fabric::NvLink => "nvlink".into(),
             Fabric::Pcie => "pcie".into(),
             Fabric::InfiniBand => "infiniband".into(),
             Fabric::Local => "local".into(),
+            Fabric::Custom(3000, 1) => "slow".into(),
             Fabric::Custom(l, b) => format!("custom({l}us,{b}GB/s)"),
         }
     }
@@ -123,7 +242,19 @@ impl Interconnect {
         if let Some(spec) = s.strip_prefix("custom:") {
             return Self::parse_custom(spec);
         }
-        Ok(Interconnect::new(match s {
+        if let Some(spec) = s.strip_prefix("two_tier:") {
+            return Self::parse_two_tier(spec);
+        }
+        Ok(Interconnect::new(Self::parse_named(s).map_err(|_| {
+            anyhow::anyhow!(
+                "unknown fabric {s:?} (nvlink|pcie|infiniband|local|slow|\
+                 custom:<lat_us>:<gbps>|two_tier:<intra>:<cross>:<gpus_per_node>)"
+            )
+        })?))
+    }
+
+    fn parse_named(s: &str) -> anyhow::Result<Fabric> {
+        Ok(match s {
             "nvlink" => Fabric::NvLink,
             "pcie" | "no-nvlink" => Fabric::Pcie,
             "infiniband" | "ib" => Fabric::InfiniBand,
@@ -133,10 +264,8 @@ impl Interconnect {
             // comparisons on the real engine show the paper's shape the
             // way GPU-scale modules vs NCCL latencies do.
             "slow" => Fabric::Custom(3000, 1),
-            _ => anyhow::bail!(
-                "unknown fabric {s:?} (nvlink|pcie|infiniband|local|slow|custom:<lat_us>:<gbps>)"
-            ),
-        }))
+            _ => anyhow::bail!("not a named fabric"),
+        })
     }
 
     /// Parse the `<lat_us>:<gbps>` tail of a `custom:` fabric spec
@@ -160,6 +289,40 @@ impl Interconnect {
             anyhow::bail!("custom fabric bandwidth must be at least 1 GB/s");
         }
         Ok(Interconnect::new(Fabric::Custom(lat_us, bw_gbps)))
+    }
+
+    /// Parse the `<intra>:<cross>:<gpus_per_node>` tail of a `two_tier:`
+    /// fabric spec, e.g. `two_tier:nvlink:infiniband:8` = NVLink inside
+    /// each 8-GPU node, InfiniBand between nodes. The tier fabrics must be
+    /// named presets — a `custom:` spec contains colons and would be
+    /// ambiguous inside the colon-separated fields.
+    fn parse_two_tier(spec: &str) -> anyhow::Result<Interconnect> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let (intra, cross, gpn) = match parts.as_slice() {
+            [intra, cross, gpn] => (*intra, *cross, *gpn),
+            _ => anyhow::bail!(
+                "two_tier fabric needs exactly three fields, \
+                 two_tier:<intra>:<cross>:<gpus_per_node> — got \"two_tier:{spec}\" \
+                 (tier fabrics are named presets: nvlink|pcie|infiniband|local|slow)"
+            ),
+        };
+        let tier = |s: &str, which: &str| {
+            Self::parse_named(s).map_err(|_| {
+                anyhow::anyhow!(
+                    "unknown two_tier {which} fabric {s:?} — named presets only \
+                     (nvlink|pcie|infiniband|local|slow)"
+                )
+            })
+        };
+        let intra_fabric = tier(intra, "intra")?;
+        let cross_fabric = tier(cross, "cross")?;
+        let gpus_per_node: usize = gpn.parse().map_err(|_| {
+            anyhow::anyhow!("two_tier gpus_per_node {gpn:?} is not a whole number")
+        })?;
+        if gpus_per_node == 0 {
+            anyhow::bail!("two_tier gpus_per_node must be at least 1");
+        }
+        Ok(Interconnect::new(intra_fabric).with_two_tier(cross_fabric, gpus_per_node))
     }
 }
 
@@ -220,5 +383,80 @@ mod tests {
         assert!(err("custom:fast:1").contains("latency"));
         assert!(err("custom:5:wide").contains("bandwidth"));
         assert!(err("custom:-1:1").contains("latency"));
+    }
+
+    #[test]
+    fn parse_two_tier_spec() {
+        let ic = Interconnect::parse("two_tier:nvlink:infiniband:8").unwrap();
+        assert_eq!(ic.fabric, Fabric::NvLink);
+        let tt = ic.two_tier.unwrap();
+        assert_eq!(tt.cross, Fabric::InfiniBand);
+        assert_eq!(tt.gpus_per_node, 8);
+        assert_eq!(ic.name(), "two_tier(nvlink,infiniband,gpn=8)");
+        // gpn=1 is valid: every rank its own node, all traffic cross-tier
+        let solo = Interconnect::parse("two_tier:local:slow:1").unwrap();
+        assert_eq!(solo.two_tier.unwrap().gpus_per_node, 1);
+    }
+
+    #[test]
+    fn parse_two_tier_errors_are_targeted() {
+        let err = |s: &str| Interconnect::parse(s).unwrap_err().to_string();
+        assert!(err("two_tier:nvlink:ib").contains("exactly three fields"));
+        assert!(err("two_tier:nvlink:ib:8:9").contains("exactly three fields"));
+        assert!(err("two_tier:warp:ib:8").contains("intra"));
+        assert!(err("two_tier:nvlink:warp:8").contains("cross"));
+        assert!(err("two_tier:nvlink:ib:eight").contains("whole number"));
+        assert!(err("two_tier:nvlink:ib:0").contains("at least 1"));
+        // a nested custom spec breaks the field count, not silently parses
+        assert!(err("two_tier:custom:5:1:8").contains("exactly three fields"));
+    }
+
+    #[test]
+    fn hierarchical_allreduce_between_flat_fabrics() {
+        let bytes = 1 << 20;
+        let flat_nv = Interconnect::new(Fabric::NvLink);
+        let flat_ib = Interconnect::new(Fabric::InfiniBand);
+        let two = Interconnect::parse("two_tier:nvlink:infiniband:8").unwrap();
+        let h = two.allreduce_time(bytes, 16);
+        // hierarchical: cheaper than pushing everything over IB, dearer
+        // than a single-node NVLink collective
+        assert!(h < flat_ib.allreduce_time(bytes, 16), "h={h}");
+        assert!(h > flat_nv.allreduce_time(bytes, 16), "h={h}");
+        // within one node the cross tier never engages
+        assert_eq!(two.allreduce_time(bytes, 8), flat_nv.allreduce_time(bytes, 8));
+    }
+
+    #[test]
+    fn two_tier_gpn1_is_pure_cross() {
+        // the measured-sweep testbed: tp=2, each rank its own node,
+        // local intra + slow cross == flat slow end to end
+        let two = Interconnect::parse("two_tier:local:slow:1").unwrap();
+        let slow = Interconnect::parse("slow").unwrap();
+        let bytes = 64 * 4;
+        assert_eq!(two.allreduce_time(bytes, 2), slow.allreduce_time(bytes, 2));
+        assert!(two.allreduce_time(bytes, 2) > 0.0);
+        assert_eq!(two.allreduce_tier_bytes(bytes, 2), (0, bytes));
+    }
+
+    #[test]
+    fn tier_bytes_split() {
+        let flat = Interconnect::new(Fabric::Pcie);
+        assert_eq!(flat.allreduce_tier_bytes(1024, 8), (1024, 0));
+        assert_eq!(flat.allreduce_tier_bytes(1024, 1), (1024, 0));
+        let two = Interconnect::parse("two_tier:nvlink:infiniband:4").unwrap();
+        let (intra, cross) = two.allreduce_tier_bytes(1024, 8);
+        // RS+AG ring traffic intra, one shard cross
+        assert_eq!(intra, 2 * 3 * 1024 / 4);
+        assert_eq!(cross, 1024 / 4);
+        // collective confined to one node: all intra
+        assert_eq!(two.allreduce_tier_bytes(1024, 4), (1024, 0));
+    }
+
+    #[test]
+    fn two_tier_allgather_is_hierarchical() {
+        let two = Interconnect::parse("two_tier:nvlink:infiniband:8").unwrap();
+        let flat_nv = Interconnect::new(Fabric::NvLink);
+        assert!(two.allgather_time(4096, 16) > flat_nv.allgather_time(4096, 16));
+        assert_eq!(two.allgather_time(4096, 8), flat_nv.allgather_time(4096, 8));
     }
 }

@@ -12,7 +12,7 @@ pub mod interconnect;
 pub mod rendezvous;
 
 pub use codec::Codec;
-pub use collective::{CollectiveEngine, CommStats};
+pub use collective::{CollectiveEngine, CommPhase, CommStats};
 pub use handle::CommHandle;
-pub use interconnect::{Fabric, Interconnect};
+pub use interconnect::{Fabric, Interconnect, TwoTier};
 pub use rendezvous::{ReduceOp, SharedCollective};

@@ -201,12 +201,15 @@ impl SharedCollective {
                     let bytes =
                         if tp > 1 { self.codec.wire_bytes(result.numel()) } else { raw };
                     let d = Duration::from_secs_f64(self.interconnect.allreduce_time(bytes, tp));
+                    let (intra, cross) = self.interconnect.allreduce_tier_bytes(bytes, tp);
                     match self.stats.lock() {
                         Ok(mut s) => {
                             s.allreduce_count += 1;
                             s.bytes_moved += bytes;
                             s.bytes_raw += raw;
-                            s.modeled_total += d;
+                            s.bytes_intra += intra;
+                            s.bytes_cross += cross;
+                            s.charge_modeled(d);
                         }
                         Err(_) => {
                             let msg = "stats mutex poisoned: a rank panicked mid-collective";
@@ -288,7 +291,7 @@ impl SharedCollective {
             // max across ranks — the collective's critical-path exposure
             if round.op == ReduceOp::Sum {
                 let delta = exposed - round.exposed_max;
-                lock_or_err(&self.stats, "stats")?.exposed_total += delta;
+                lock_or_err(&self.stats, "stats")?.charge_exposed(delta);
             }
             round.exposed_max = exposed;
         }

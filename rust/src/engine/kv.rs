@@ -177,11 +177,47 @@ impl KvCache {
 
     /// Extract slot `b` of layer `layer` as a [1, KVl, M, D] pair.
     pub fn read_slot(&self, layer: usize, b: usize) -> (HostTensor, HostTensor) {
+        self.read_span(layer, b, 1)
+    }
+
+    /// Extract the contiguous slot range `[start, start+count)` of layer
+    /// `layer` as a [count, KVl, M, D] pair — the batch axis leads the slab
+    /// layout, so a row chunk is one contiguous slice (split-batch overlap).
+    pub fn read_span(&self, layer: usize, start: usize, count: usize) -> (HostTensor, HostTensor) {
         let stride = self.slot_stride();
-        let shape = vec![1, self.kv_heads_l, self.max_seq, self.head_dim];
-        let k = self.k[layer].data[b * stride..(b + 1) * stride].to_vec();
-        let v = self.v[layer].data[b * stride..(b + 1) * stride].to_vec();
+        let shape = vec![count, self.kv_heads_l, self.max_seq, self.head_dim];
+        let k = self.k[layer].data[start * stride..(start + count) * stride].to_vec();
+        let v = self.v[layer].data[start * stride..(start + count) * stride].to_vec();
         (HostTensor::new(shape.clone(), k), HostTensor::new(shape, v))
+    }
+
+    /// Overwrite the slot range `[start, start+count)` of layer `layer`
+    /// from a [count, KVl, M, D] pair — the write half of [`read_span`].
+    ///
+    /// [`read_span`]: KvCache::read_span
+    pub fn write_span(
+        &mut self,
+        layer: usize,
+        start: usize,
+        count: usize,
+        kc: &HostTensor,
+        vc: &HostTensor,
+    ) -> Result<()> {
+        let stride = self.slot_stride();
+        if kc.data.len() != count * stride || vc.data.len() != count * stride {
+            bail!(
+                "span tensor has {} elems, want {} (shape {:?})",
+                kc.data.len(),
+                count * stride,
+                kc.shape
+            );
+        }
+        if start + count > self.batch {
+            bail!("span {start}+{count} out of range (batch {})", self.batch);
+        }
+        self.k[layer].data[start * stride..(start + count) * stride].copy_from_slice(&kc.data);
+        self.v[layer].data[start * stride..(start + count) * stride].copy_from_slice(&vc.data);
+        Ok(())
     }
 
     /// Zero a slot's *written prefix* (request eviction). `written` is the

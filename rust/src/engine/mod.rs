@@ -16,6 +16,7 @@
 
 pub mod generate;
 pub mod kv;
+pub mod overlap;
 pub mod prefix;
 pub mod rank;
 pub mod threaded;
@@ -24,8 +25,9 @@ pub mod trace;
 
 pub use generate::{GenerateReport, Sampler};
 pub use kv::{BlockAllocator, KvCache, KvLayout, PageTable, PagedFwd, PagedKvCache};
+pub use overlap::OverlapMode;
 pub use prefix::PrefixTree;
-pub use rank::{Embedder, RankKv, RankState};
+pub use rank::{Embedder, RankKv, RankState, Rows};
 pub use threaded::ThreadedRuntime;
 pub use tpengine::{RuntimeKind, TpEngine};
 pub use trace::EngineTracer;

@@ -1,0 +1,220 @@
+//! Split-batch overlap scheduling (TokenWeave/ISO-style systems overlap).
+//!
+//! Instead of changing the *architecture* to decouple compute from the TP
+//! AllReduce (Ladder Residual), a forward's batch rows can be split into
+//! sub-chunks that are pipelined round-robin through the per-layer blocks:
+//! while chunk A's AllReduce sits on the modeled link, chunk B's attention
+//! or MLP runs — so even the standard transformer hides collective latency.
+//!
+//! The chunking is bitwise-exact with respect to the unsplit forward:
+//! every kernel in the block (norm, projections, attention over the row's
+//! own KV slots, MLP) is row-local, and each chunk's AllReduce sums the
+//! same per-rank partials in the same fixed rank order (0..tp) the unsplit
+//! path uses. Chunk results are concatenated back in row order before the
+//! LM head, which then sees exactly the unsplit activations. See
+//! docs/ARCHITECTURE.md, "Sequence-level overlap & hierarchical fabric".
+//!
+//! Both runtimes implement the same chunk schedule (`engine/tpengine.rs`
+//! sequentially with [`CommHandle`] deadlines, `engine/threaded.rs` on the
+//! rank workers with rendezvous sequence numbers), so the threaded ==
+//! sequential bitwise contract extends to every overlap mode.
+//!
+//! [`CommHandle`]: crate::comm::CommHandle
+
+use anyhow::Result;
+
+use super::kv::PagedFwd;
+use super::rank::Rows;
+use crate::model::HostTensor;
+
+/// How a forward's batch rows are split for pipelined execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// Unsplit: one chunk, the original schedule (the bitwise oracle).
+    #[default]
+    None,
+    /// Split the batch rows into (up to) 2 chunks.
+    Split2,
+    /// Split the batch rows into (up to) 4 chunks.
+    Split4,
+}
+
+impl OverlapMode {
+    /// Requested chunk count (an upper bound: a forward never splits finer
+    /// than one row per chunk).
+    pub fn chunks(&self) -> usize {
+        match self {
+            OverlapMode::None => 1,
+            OverlapMode::Split2 => 2,
+            OverlapMode::Split4 => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::None => "none",
+            OverlapMode::Split2 => "split2",
+            OverlapMode::Split4 => "split4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<OverlapMode> {
+        Ok(match s {
+            "none" => OverlapMode::None,
+            "split2" => OverlapMode::Split2,
+            "split4" => OverlapMode::Split4,
+            _ => anyhow::bail!("unknown overlap mode {s:?} (none|split2|split4)"),
+        })
+    }
+
+    /// Partition `batch` rows into contiguous `(start, count)` chunks, in
+    /// row order. Never yields an empty chunk: a batch smaller than the
+    /// requested split yields one single-row chunk per row. Larger batches
+    /// put the remainder on the leading chunks, so chunk sizes differ by at
+    /// most one row.
+    ///
+    /// Every rank derives the identical partition from the shared batch
+    /// size — this is what keeps per-worker rendezvous sequence numbers
+    /// aligned without central coordination.
+    pub fn partition(&self, batch: usize) -> Vec<(usize, usize)> {
+        let chunks = self.chunks().min(batch).max(1);
+        let base = batch / chunks;
+        let extra = batch % chunks;
+        let mut out = Vec::with_capacity(chunks);
+        let mut start = 0;
+        for c in 0..chunks {
+            let count = base + usize::from(c < extra);
+            out.push((start, count));
+            start += count;
+        }
+        out
+    }
+}
+
+/// One sub-chunk of a split forward: the chunk's rows of the residual
+/// activation plus the row-sliced per-request state that rides with them.
+pub(crate) struct ChunkFwd {
+    pub x: HostTensor,
+    pub rows: Rows,
+    pub lens: Option<Vec<i32>>,
+    pub paged: Option<PagedFwd>,
+}
+
+/// Slice a full-batch forward into per-chunk views. The residual `x0` is
+/// [B, S, H] row-major with the batch dimension leading, so every chunk is
+/// one contiguous copy; lens and page tables (also batch-leading,
+/// row-major) are row-sliced the same way. Both runtimes call this with
+/// identical inputs, so they derive identical chunk schedules.
+pub(crate) fn split_forward(
+    mode: OverlapMode,
+    x0: &HostTensor,
+    lens: Option<&[i32]>,
+    paged: Option<&PagedFwd>,
+) -> Vec<ChunkFwd> {
+    let batch = x0.shape[0];
+    let row = x0.data.len() / batch;
+    mode.partition(batch)
+        .into_iter()
+        .map(|(start, count)| {
+            let mut shape = x0.shape.clone();
+            shape[0] = count;
+            let x = HostTensor::new(shape, x0.data[start * row..(start + count) * row].to_vec());
+            ChunkFwd {
+                x,
+                rows: Rows::Span(start, count),
+                lens: lens.map(|l| l[start..start + count].to_vec()),
+                paged: paged.map(|p| PagedFwd {
+                    tables: p.tables[start * p.max_pages..(start + count) * p.max_pages].to_vec(),
+                    max_pages: p.max_pages,
+                    start: p.start,
+                }),
+            }
+        })
+        .collect()
+}
+
+/// Concatenate per-chunk final residuals back into the unsplit [B, S, H]
+/// tensor (chunks are contiguous row ranges in order, so this is a plain
+/// append).
+pub(crate) fn concat_chunks(mut parts: Vec<HostTensor>) -> HostTensor {
+    if parts.len() == 1 {
+        return parts.pop().unwrap();
+    }
+    let mut shape = parts[0].shape.clone();
+    shape[0] = parts.iter().map(|p| p.shape[0]).sum();
+    let mut data = Vec::with_capacity(parts.iter().map(|p| p.data.len()).sum());
+    for p in parts {
+        data.extend(p.data);
+    }
+    HostTensor::new(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [OverlapMode::None, OverlapMode::Split2, OverlapMode::Split4] {
+            assert_eq!(OverlapMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(OverlapMode::parse("split3").is_err());
+    }
+
+    #[test]
+    fn partition_covers_rows_in_order() {
+        for mode in [OverlapMode::None, OverlapMode::Split2, OverlapMode::Split4] {
+            for batch in 1..9usize {
+                let parts = mode.partition(batch);
+                assert!(parts.len() <= mode.chunks());
+                assert!(parts.iter().all(|&(_, c)| c > 0));
+                let mut next = 0;
+                for &(start, count) in &parts {
+                    assert_eq!(start, next);
+                    next += count;
+                }
+                assert_eq!(next, batch, "{mode:?} batch {batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn none_is_one_chunk() {
+        assert_eq!(OverlapMode::None.partition(4), vec![(0, 4)]);
+    }
+
+    #[test]
+    fn small_batch_degrades_to_row_chunks() {
+        assert_eq!(OverlapMode::Split4.partition(2), vec![(0, 1), (1, 1)]);
+        assert_eq!(OverlapMode::Split2.partition(1), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn remainder_rides_the_leading_chunks() {
+        assert_eq!(OverlapMode::Split4.partition(6), vec![(0, 2), (2, 2), (4, 1), (5, 1)]);
+    }
+
+    #[test]
+    fn split_forward_slices_rows_lens_and_tables() {
+        // [4, 2, 3]: row b holds 6 values b*10.0 + i
+        let data: Vec<f32> = (0..4).flat_map(|b| (0..6).map(move |i| (b * 10 + i) as f32)).collect();
+        let x0 = HostTensor::new(vec![4, 2, 3], data);
+        let lens = vec![5i32, 6, 7, 8];
+        let paged = PagedFwd { tables: (0..8).collect(), max_pages: 2, start: 3 };
+        let chunks = split_forward(OverlapMode::Split2, &x0, Some(&lens), Some(&paged));
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].rows, Rows::Span(0, 2));
+        assert_eq!(chunks[1].rows, Rows::Span(2, 2));
+        assert_eq!(chunks[1].x.shape, vec![2, 2, 3]);
+        assert_eq!(chunks[1].x.data[0], 20.0);
+        assert_eq!(chunks[1].lens.as_deref(), Some(&[7i32, 8][..]));
+        let p1 = chunks[1].paged.as_ref().unwrap();
+        assert_eq!(p1.tables, vec![4, 5, 6, 7]);
+        assert_eq!((p1.max_pages, p1.start), (2, 3));
+
+        // round-trip: concat restores the original tensor bit-for-bit
+        let back = concat_chunks(chunks.into_iter().map(|c| c.x).collect());
+        assert_eq!(back.shape, x0.shape);
+        assert_eq!(back.data, x0.data);
+    }
+}

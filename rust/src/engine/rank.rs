@@ -21,6 +21,20 @@ pub enum Phase {
     Decode,
 }
 
+/// Which KV slab slots a slab-layout forward reads and writes. Paged
+/// forwards ignore this and route through their [`PagedFwd`] page tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rows {
+    /// The whole batch (full-slab take/replace fast path).
+    All,
+    /// One slot (b=1 continuous-batching prefill against that slot's
+    /// cache region).
+    Slot(usize),
+    /// A contiguous slot range `[start, start+count)` — one sub-chunk of a
+    /// split-batch overlap forward ([`super::OverlapMode`]).
+    Span(usize, usize),
+}
+
 /// This rank's KV storage, matching the engine's [`KvLayout`].
 pub enum RankKv {
     /// Fixed per-slot slabs (legacy layout; the paged path's oracle).
@@ -105,10 +119,11 @@ impl RankState {
     }
 
     /// Attention module (prefill or decode) for one layer. Updates this
-    /// rank's KV storage in place; single-slot prefill (`slot=Some(b)`) runs
-    /// the b=1 module against that slot's cache region (continuous
-    /// batching), and `paged=Some(..)` routes reads/writes through the page
-    /// tables instead of the slot slabs.
+    /// rank's KV storage in place; `rows` selects which slab slots the call
+    /// touches ([`Rows::Slot`] = b=1 continuous-batching prefill,
+    /// [`Rows::Span`] = one split-batch overlap chunk), and `paged=Some(..)`
+    /// routes reads/writes through the page tables instead of the slot
+    /// slabs.
     #[allow(clippy::too_many_arguments)]
     pub fn attn(
         &mut self,
@@ -117,10 +132,10 @@ impl RankState {
         x: &HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
-        self.block(exec, layer, x, phase, lens, slot, paged, BlockKind::Attn)
+        self.block(exec, layer, x, phase, lens, rows, paged, BlockKind::Attn)
     }
 
     /// Fused attention+MLP module (Parallel architecture).
@@ -132,10 +147,10 @@ impl RankState {
         x: &HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
-        self.block(exec, layer, x, phase, lens, slot, paged, BlockKind::Fused)
+        self.block(exec, layer, x, phase, lens, rows, paged, BlockKind::Fused)
     }
 
     /// Release a batch slot: slab layouts zero the slot's written prefix
@@ -171,13 +186,13 @@ impl RankState {
         x: &HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
         kind: BlockKind,
     ) -> Result<HostTensor> {
         let paged_kv = matches!(self.kv, RankKv::Paged(_));
         match (paged_kv, paged) {
-            (false, None) => self.block_slab(exec, layer, x, phase, lens, slot, kind),
+            (false, None) => self.block_slab(exec, layer, x, phase, lens, rows, kind),
             (true, Some(p)) => self.block_paged(exec, layer, x, phase, lens, p, kind),
             (false, Some(_)) => bail!("paged forward issued to a slab-layout rank"),
             (true, None) => bail!("slab forward issued to a paged-layout rank (no page tables)"),
@@ -192,22 +207,30 @@ impl RankState {
         x: &HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         kind: BlockKind,
     ) -> Result<HostTensor> {
         let RankKv::Slab(kv) = &mut self.kv else { unreachable!("checked by block()") };
         let (b, s) = (x.shape[0], x.shape[1]);
+        match rows {
+            Rows::Slot(_) if b != 1 => bail!("slot forward wants b=1, got b={b}"),
+            Rows::Span(_, count) if b != count => {
+                bail!("span forward: {count}-slot span for b={b}")
+            }
+            _ => {}
+        }
         // §Perf: full-batch calls *take* the cache tensors (they are
         // replaced by the module outputs below) instead of cloning ~2x the
-        // KV slab per attention call on the host side. Slot calls still
+        // KV slab per attention call on the host side. Slot/span calls still
         // copy (subrange). NB the backend may still copy internally: xla
         // converts to literals, and the native executor clones the slabs to
         // produce its functional kc'/vc' outputs — an in-place native cache
         // path would need a consuming `run` variant (future work).
         let empty = || HostTensor::new(vec![0], Vec::new());
-        let (kc, vc) = match slot {
-            Some(slot_b) => kv.read_slot(layer, slot_b),
-            None => (
+        let (kc, vc) = match rows {
+            Rows::Slot(slot_b) => kv.read_slot(layer, slot_b),
+            Rows::Span(start, count) => kv.read_span(layer, start, count),
+            Rows::All => (
                 std::mem::replace(&mut kv.k[layer], empty()),
                 std::mem::replace(&mut kv.v[layer], empty()),
             ),
@@ -250,9 +273,10 @@ impl RankState {
         let v_new = outs.pop().unwrap().into_f32()?;
         let k_new = outs.pop().unwrap().into_f32()?;
         let partial = outs.pop().unwrap().into_f32()?;
-        match slot {
-            Some(slot_b) => kv.write_slot(layer, slot_b, &k_new, &v_new)?,
-            None => {
+        match rows {
+            Rows::Slot(slot_b) => kv.write_slot(layer, slot_b, &k_new, &v_new)?,
+            Rows::Span(start, count) => kv.write_span(layer, start, count, &k_new, &v_new)?,
+            Rows::All => {
                 kv.k[layer] = k_new;
                 kv.v[layer] = v_new;
             }

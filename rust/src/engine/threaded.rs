@@ -27,7 +27,8 @@ use std::thread;
 use anyhow::{anyhow, Result};
 
 use super::kv::{KvLayout, PagedFwd};
-use super::rank::{Phase, RankState};
+use super::overlap::{self, ChunkFwd, OverlapMode};
+use super::rank::{Phase, RankState, Rows};
 use super::{add_assign, BlockSel};
 use crate::comm::rendezvous::{ReduceOp, SharedCollective};
 use crate::model::{Arch, HostTensor, WeightStore};
@@ -40,7 +41,7 @@ enum Cmd {
         x0: Arc<HostTensor>,
         phase: Phase,
         lens: Option<Vec<i32>>,
-        slot: Option<usize>,
+        rows: Rows,
         /// Page-table view for paged-layout engines (shared, read-only).
         paged: Option<Arc<PagedFwd>>,
         /// Per-row last positions to slice before the LM head.
@@ -82,6 +83,7 @@ impl ThreadedRuntime {
     /// spec and shard the (`Arc`-shared) weights themselves, so backend
     /// setup and weight upload happen concurrently across ranks at startup
     /// too.
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         spec: BackendSpec,
         weights: &WeightStore,
@@ -89,6 +91,7 @@ impl ThreadedRuntime {
         arch: Arch,
         batch: usize,
         layout: KvLayout,
+        overlap: OverlapMode,
         coll: Arc<SharedCollective>,
     ) -> Result<ThreadedRuntime> {
         // one shared host copy for all workers, dropped when the last
@@ -107,7 +110,8 @@ impl ThreadedRuntime {
                 .name(format!("tp-rank-{rank}"))
                 .spawn(move || {
                     worker_main(
-                        rank, tp, batch, arch, layout, spec, weights, coll_w, cmd_rx, rep_tx,
+                        rank, tp, batch, arch, layout, overlap, spec, weights, coll_w, cmd_rx,
+                        rep_tx,
                     )
                 })
                 .map_err(|e| anyhow!("spawn rank {rank} worker: {e}"))?;
@@ -125,7 +129,7 @@ impl ThreadedRuntime {
         x0: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
         last: &[usize],
     ) -> Result<Vec<HostTensor>> {
@@ -136,7 +140,7 @@ impl ThreadedRuntime {
                 x0: x0.clone(),
                 phase,
                 lens: lens.map(<[i32]>::to_vec),
-                slot,
+                rows,
                 paged: paged.clone(),
                 last: last.to_vec(),
             })
@@ -226,6 +230,7 @@ fn worker_main(
     batch: usize,
     arch: Arch,
     layout: KvLayout,
+    overlap: OverlapMode,
     spec: BackendSpec,
     weights: Arc<WeightStore>,
     coll: Arc<SharedCollective>,
@@ -233,8 +238,17 @@ fn worker_main(
     replies: mpsc::Sender<Reply>,
 ) {
     let _panic_guard = PanicGuard { rank, coll: coll.clone() };
-    let mut ctx = match WorkerCtx::new(rank, tp, batch, arch, layout, &spec, &weights, coll.clone())
-    {
+    let mut ctx = match WorkerCtx::new(
+        rank,
+        tp,
+        batch,
+        arch,
+        layout,
+        overlap,
+        &spec,
+        &weights,
+        coll.clone(),
+    ) {
         Ok(ctx) => ctx,
         Err(e) => {
             let msg = format!("rank {rank} init failed: {e:#}");
@@ -257,12 +271,12 @@ fn worker_main(
 
     while let Ok(cmd) = cmds.recv() {
         match cmd {
-            Cmd::Forward { x0, phase, lens, slot, paged, last } => {
+            Cmd::Forward { x0, phase, lens, rows, paged, last } => {
                 let shard = ctx.forward(
                     (*x0).clone(),
                     phase,
                     lens.as_deref(),
-                    slot,
+                    rows,
                     paged.as_deref(),
                     &last,
                 );
@@ -296,6 +310,7 @@ struct WorkerCtx {
     tp: usize,
     layers: usize,
     arch: Arch,
+    overlap: OverlapMode,
     exec: Exec,
     state: RankState,
     coll: Arc<SharedCollective>,
@@ -310,6 +325,7 @@ impl WorkerCtx {
         batch: usize,
         arch: Arch,
         layout: KvLayout,
+        overlap: OverlapMode,
         spec: &BackendSpec,
         weights: &WeightStore,
         coll: Arc<SharedCollective>,
@@ -319,28 +335,80 @@ impl WorkerCtx {
         // need_embed = false: the coordinator's Embedder runs the embed
         // module; workers receive the embedded activation over the channel
         let state = RankState::new(&exec, &cfg, weights, rank, tp, batch, false, layout)?;
-        Ok(WorkerCtx { rank, tp, layers: cfg.layers, arch, exec, state, coll, seq: 0 })
+        Ok(WorkerCtx { rank, tp, layers: cfg.layers, arch, overlap, exec, state, coll, seq: 0 })
     }
 
     /// The per-rank counterpart of `TpEngine::forward` + the head shard.
+    /// Every worker derives the same split-vs-unsplit decision (and the
+    /// same chunk partition) from the broadcast inputs, so the rendezvous
+    /// sequence counters stay aligned across ranks with no coordination.
     fn forward(
         &mut self,
         x0: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
         last: &[usize],
     ) -> Result<HostTensor> {
-        let final_x = match self.arch {
-            Arch::Standard => self.fwd_synced(x0, phase, lens, slot, paged, self.layers)?,
-            Arch::Ladder => self.fwd_synced(x0, phase, lens, slot, paged, 0)?,
-            Arch::Hybrid => self.fwd_synced(x0, phase, lens, slot, paged, self.layers / 2)?,
-            Arch::Parallel => self.fwd_parallel(x0, phase, lens, slot, paged)?,
-            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, slot, paged, n)?,
-            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, slot, paged)?,
+        let final_x = if self.overlap != OverlapMode::None && rows == Rows::All && x0.shape[0] > 1
+        {
+            let chunks = overlap::split_forward(self.overlap, &x0, lens, paged);
+            if chunks.len() > 1 {
+                self.forward_chunked(chunks, phase)?
+            } else {
+                self.forward_one(x0, phase, lens, rows, paged)?
+            }
+        } else {
+            self.forward_one(x0, phase, lens, rows, paged)?
         };
         self.state.lm_head_rows(&self.exec, &final_x, last)
+    }
+
+    fn forward_one(
+        &mut self,
+        x0: HostTensor,
+        phase: Phase,
+        lens: Option<&[i32]>,
+        rows: Rows,
+        paged: Option<&PagedFwd>,
+    ) -> Result<HostTensor> {
+        match self.arch {
+            Arch::Standard => self.fwd_synced(x0, phase, lens, rows, paged, self.layers),
+            Arch::Ladder => self.fwd_synced(x0, phase, lens, rows, paged, 0),
+            Arch::Hybrid => self.fwd_synced(x0, phase, lens, rows, paged, self.layers / 2),
+            Arch::Parallel => self.fwd_parallel(x0, phase, lens, rows, paged),
+            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, rows, paged, n),
+            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, rows, paged),
+        }
+    }
+
+    /// Rank-local split-batch schedule — the worker-side mirror of
+    /// `TpEngine::forward_chunked` (same chunk order, same absorb points,
+    /// so the two runtimes stay bitwise identical under every overlap
+    /// mode).
+    fn forward_chunked(&mut self, chunks: Vec<ChunkFwd>, phase: Phase) -> Result<HostTensor> {
+        match self.arch {
+            Arch::Standard => self.fwd_synced_chunked(chunks, phase, self.layers),
+            Arch::Ladder => self.fwd_synced_chunked(chunks, phase, 0),
+            Arch::Hybrid => self.fwd_synced_chunked(chunks, phase, self.layers / 2),
+            Arch::Parallel => self.fwd_parallel_chunked(chunks, phase),
+            Arch::Desync(n) => self.fwd_desync_chunked(chunks, phase, n),
+            Arch::Upperbound => {
+                // no communication to hide — chunks run back-to-back
+                let mut parts = Vec::with_capacity(chunks.len());
+                for c in chunks {
+                    parts.push(self.fwd_upperbound(
+                        c.x,
+                        phase,
+                        c.lens.as_deref(),
+                        c.rows,
+                        c.paged.as_ref(),
+                    )?);
+                }
+                Ok(overlap::concat_chunks(parts))
+            }
+        }
     }
 
     /// Deposit this rank's partial for the next collective in the schedule.
@@ -367,7 +435,7 @@ impl WorkerCtx {
         mut x: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
         ladder_from: usize,
     ) -> Result<HostTensor> {
@@ -378,7 +446,7 @@ impl WorkerCtx {
                 if let Some(seq) = pend_attn.take() {
                     self.absorb(&mut x, seq)?;
                 }
-                let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot, paged)?;
+                let attn = self.state.attn(&self.exec, i, &x, phase, lens, rows, paged)?;
                 let attn_seq = self.launch(attn, ReduceOp::Sum)?;
                 if let Some(seq) = pend_mlp.take() {
                     self.absorb(&mut x, seq)?;
@@ -388,7 +456,7 @@ impl WorkerCtx {
                 pend_attn = Some(attn_seq);
                 pend_mlp = Some(mlp_seq);
             } else {
-                let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot, paged)?;
+                let attn = self.state.attn(&self.exec, i, &x, phase, lens, rows, paged)?;
                 let seq = self.launch(attn, ReduceOp::Sum)?;
                 self.absorb(&mut x, seq)?;
                 let mlp = self.state.mlp(&self.exec, i, &x)?;
@@ -405,21 +473,122 @@ impl WorkerCtx {
         Ok(x)
     }
 
+    /// Chunked Standard/Ladder/Hybrid — the worker-side mirror of
+    /// `TpEngine::fwd_synced_chunked`: chunks round-robin through each
+    /// (layer, block) step, each absorbing exactly what the unsplit
+    /// schedule would absorb before that block, so a chunk's reduce hides
+    /// behind the other chunks' module time on this core.
+    fn fwd_synced_chunked(
+        &mut self,
+        chunks: Vec<ChunkFwd>,
+        phase: Phase,
+        ladder_from: usize,
+    ) -> Result<HostTensor> {
+        struct Run {
+            fw: ChunkFwd,
+            pend_attn: Option<u64>,
+            pend_mlp: Option<u64>,
+        }
+        let mut runs: Vec<Run> = chunks
+            .into_iter()
+            .map(|fw| Run { fw, pend_attn: None, pend_mlp: None })
+            .collect();
+        for i in 0..self.layers {
+            for r in 0..runs.len() {
+                let pend = if i > ladder_from {
+                    runs[r].pend_attn.take()
+                } else {
+                    runs[r].pend_mlp.take()
+                };
+                if let Some(seq) = pend {
+                    self.absorb(&mut runs[r].fw.x, seq)?;
+                }
+                let fw = &runs[r].fw;
+                let attn = self.state.attn(
+                    &self.exec,
+                    i,
+                    &fw.x,
+                    phase,
+                    fw.lens.as_deref(),
+                    fw.rows,
+                    fw.paged.as_ref(),
+                )?;
+                runs[r].pend_attn = Some(self.launch(attn, ReduceOp::Sum)?);
+            }
+            for r in 0..runs.len() {
+                let pend = if i >= ladder_from {
+                    runs[r].pend_mlp.take()
+                } else {
+                    runs[r].pend_attn.take()
+                };
+                if let Some(seq) = pend {
+                    self.absorb(&mut runs[r].fw.x, seq)?;
+                }
+                let mlp = self.state.mlp(&self.exec, i, &runs[r].fw.x)?;
+                runs[r].pend_mlp = Some(self.launch(mlp, ReduceOp::Sum)?);
+            }
+        }
+        let mut parts = Vec::with_capacity(runs.len());
+        for mut r in runs {
+            if let Some(seq) = r.pend_attn.take() {
+                self.absorb(&mut r.fw.x, seq)?;
+            }
+            if let Some(seq) = r.pend_mlp.take() {
+                self.absorb(&mut r.fw.x, seq)?;
+            }
+            parts.push(r.fw.x);
+        }
+        Ok(overlap::concat_chunks(parts))
+    }
+
     /// PaLM parallel attention+MLP: one blocking reduce per layer.
     fn fwd_parallel(
         &mut self,
         mut x: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
         for i in 0..self.layers {
-            let partial = self.state.fused(&self.exec, i, &x, phase, lens, slot, paged)?;
+            let partial = self.state.fused(&self.exec, i, &x, phase, lens, rows, paged)?;
             let seq = self.launch(partial, ReduceOp::Sum)?;
             self.absorb(&mut x, seq)?;
         }
         Ok(x)
+    }
+
+    /// Chunked Parallel: each chunk's fused reduce is deferred to its next
+    /// layer so the other chunks' fused blocks overlap it.
+    fn fwd_parallel_chunked(&mut self, chunks: Vec<ChunkFwd>, phase: Phase) -> Result<HostTensor> {
+        let mut runs: Vec<(ChunkFwd, Option<u64>)> =
+            chunks.into_iter().map(|fw| (fw, None)).collect();
+        for i in 0..self.layers {
+            for r in 0..runs.len() {
+                if let Some(seq) = runs[r].1.take() {
+                    self.absorb(&mut runs[r].0.x, seq)?;
+                }
+                let fw = &runs[r].0;
+                let partial = self.state.fused(
+                    &self.exec,
+                    i,
+                    &fw.x,
+                    phase,
+                    fw.lens.as_deref(),
+                    fw.rows,
+                    fw.paged.as_ref(),
+                )?;
+                runs[r].1 = Some(self.launch(partial, ReduceOp::Sum)?);
+            }
+        }
+        let mut parts = Vec::with_capacity(runs.len());
+        for (mut fw, pend) in runs {
+            if let Some(seq) = pend {
+                self.absorb(&mut fw.x, seq)?;
+            }
+            parts.push(fw.x);
+        }
+        Ok(overlap::concat_chunks(parts))
     }
 
     /// Desync-nx: this rank's residual stream diverges between retained
@@ -431,7 +600,7 @@ impl WorkerCtx {
         x0: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
         n: usize,
     ) -> Result<HostTensor> {
@@ -443,7 +612,7 @@ impl WorkerCtx {
             for kind in [BlockSel::Attn, BlockSel::Mlp] {
                 let mut p = match kind {
                     BlockSel::Attn => {
-                        self.state.attn(&self.exec, i, &r, phase, lens, slot, paged)?
+                        self.state.attn(&self.exec, i, &r, phase, lens, rows, paged)?
                     }
                     BlockSel::Mlp => self.state.mlp(&self.exec, i, &r)?,
                 };
@@ -474,6 +643,82 @@ impl WorkerCtx {
         Ok(r)
     }
 
+    /// Chunked Desync-nx: a retained reduce *replaces* the chunk's stream,
+    /// so its wait is deferred to the chunk's next block step (covered by
+    /// the other chunks' compute) instead of being absorbed additively.
+    fn fwd_desync_chunked(
+        &mut self,
+        chunks: Vec<ChunkFwd>,
+        phase: Phase,
+        n: usize,
+    ) -> Result<HostTensor> {
+        let tp = self.tp as f32;
+        struct Run {
+            fw: ChunkFwd, // fw.x doubles as this rank's residual stream
+            c: usize,
+            synced: bool,
+            pend: Option<u64>,
+        }
+        let mut runs: Vec<Run> = chunks
+            .into_iter()
+            .map(|fw| Run { fw, c: 0, synced: true, pend: None })
+            .collect();
+        for i in 0..self.layers {
+            for kind in [BlockSel::Attn, BlockSel::Mlp] {
+                for r in 0..runs.len() {
+                    if let Some(seq) = runs[r].pend.take() {
+                        let (x, _) = self.coll.wait(self.rank, seq)?;
+                        runs[r].fw.x = (*x).clone();
+                    }
+                    let fw = &runs[r].fw;
+                    let mut p = match kind {
+                        BlockSel::Attn => self.state.attn(
+                            &self.exec,
+                            i,
+                            &fw.x,
+                            phase,
+                            fw.lens.as_deref(),
+                            fw.rows,
+                            fw.paged.as_ref(),
+                        )?,
+                        BlockSel::Mlp => self.state.mlp(&self.exec, i, &fw.x)?,
+                    };
+                    runs[r].c += 1;
+                    if runs[r].c % n == 0 {
+                        // retained reduce: message = partial + residual/tp
+                        for (a, b) in p.data.iter_mut().zip(&runs[r].fw.x.data) {
+                            *a += b / tp;
+                        }
+                        runs[r].pend = Some(self.launch(p, ReduceOp::Sum)?);
+                        runs[r].synced = true;
+                    } else {
+                        add_assign(&mut runs[r].fw.x, &p);
+                        runs[r].synced = false;
+                    }
+                }
+            }
+        }
+        let mut parts = Vec::with_capacity(runs.len());
+        for mut r in runs {
+            if let Some(seq) = r.pend.take() {
+                let (x, _) = self.coll.wait(self.rank, seq)?;
+                r.fw.x = (*x).clone();
+            }
+            if !r.synced {
+                // final resync (mean) so the head sees one residual
+                let msg = HostTensor::new(
+                    r.fw.x.shape.clone(),
+                    r.fw.x.data.iter().map(|v| v / tp).collect(),
+                );
+                let seq = self.launch(msg, ReduceOp::Sum)?;
+                let (x, _) = self.coll.wait(self.rank, seq)?;
+                r.fw.x = (*x).clone();
+            }
+            parts.push(r.fw.x);
+        }
+        Ok(overlap::concat_chunks(parts))
+    }
+
     /// Upperbound: communication deleted. The ranks still rendezvous on rank
     /// 0's partial (free, unmetered) so every rank's residual stays bitwise
     /// identical to the sequential oracle's single shared stream.
@@ -482,11 +727,11 @@ impl WorkerCtx {
         mut x: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
         for i in 0..self.layers {
-            let attn = self.state.attn(&self.exec, i, &x, phase, lens, slot, paged)?;
+            let attn = self.state.attn(&self.exec, i, &x, phase, lens, rows, paged)?;
             let seq = self.launch(attn, ReduceOp::TakeRank0)?;
             self.absorb(&mut x, seq)?;
             let mlp = self.state.mlp(&self.exec, i, &x)?;

@@ -22,10 +22,11 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use super::kv::{KvLayout, PagedFwd, PagedKvCache};
-use super::rank::{Embedder, Phase, RankState};
+use super::overlap::{self, ChunkFwd, OverlapMode};
+use super::rank::{Embedder, Phase, RankState, Rows};
 use super::threaded::ThreadedRuntime;
 use super::{add_assign, BlockSel};
-use crate::comm::{Codec, CollectiveEngine, CommHandle, Interconnect};
+use crate::comm::{Codec, CollectiveEngine, CommHandle, CommPhase, Interconnect};
 use crate::model::{Arch, HostTensor, LlamaConfig, WeightStore};
 use crate::runtime::Exec;
 
@@ -66,6 +67,10 @@ pub struct TpEngine {
     pub arch: Arch,
     pub batch: usize,
     pub runtime: RuntimeKind,
+    /// Split-batch overlap mode (`--overlap`): full-batch forwards are cut
+    /// into row chunks pipelined through the blocks so one chunk's
+    /// AllReduce hides behind another chunk's compute.
+    pub overlap: OverlapMode,
     pub comm: CollectiveEngine,
     /// KV storage layout (fixed-slot slabs or the paged pool).
     layout: KvLayout,
@@ -149,6 +154,38 @@ impl TpEngine {
         layout: KvLayout,
         codec: Codec,
     ) -> Result<TpEngine> {
+        Self::with_overlap(
+            exec,
+            weights,
+            tp,
+            arch,
+            batch,
+            interconnect,
+            runtime,
+            layout,
+            codec,
+            OverlapMode::default(),
+        )
+    }
+
+    /// Full constructor: an explicit split-batch [`OverlapMode`] on top of
+    /// [`TpEngine::with_codec`] (`--overlap` toggle). Split modes cut every
+    /// full-batch forward into row chunks pipelined through the per-layer
+    /// blocks — bitwise identical to the unsplit schedule on both runtimes
+    /// (see `engine/overlap.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_overlap(
+        exec: Rc<Exec>,
+        weights: &WeightStore,
+        tp: usize,
+        arch: Arch,
+        batch: usize,
+        interconnect: Interconnect,
+        runtime: RuntimeKind,
+        layout: KvLayout,
+        codec: Codec,
+        overlap: OverlapMode,
+    ) -> Result<TpEngine> {
         let cfg = exec.cfg().clone();
         let sp = exec.serving();
         // compiled-shape backends only have executables for the exported
@@ -181,6 +218,39 @@ impl TpEngine {
                 );
             }
         }
+        if overlap != OverlapMode::None {
+            if sp.compiled_shapes {
+                bail!(
+                    "--overlap {} splits forwards into sub-batch chunks whose module \
+                     shapes are not in the compiled-shape export grid — use the \
+                     native backend for overlap engines",
+                    overlap.name()
+                );
+            }
+            // split boundaries fall on row edges; the quantized codecs'
+            // scale blocks must tile each row exactly or chunked wire
+            // payloads would quantize across different block boundaries
+            // than the unsplit forward (breaking the bitwise contract)
+            let qb = crate::comm::codec::QUANT_BLOCK;
+            if codec != Codec::Fp32 && cfg.hidden % qb != 0 {
+                bail!(
+                    "--overlap with the {} codec needs hidden ({}) divisible by the \
+                     {qb}-element quantization block, or chunked reduces would not \
+                     be bitwise-identical to unsplit ones",
+                    codec.name(),
+                    cfg.hidden
+                );
+            }
+        }
+        if let Some(tt) = interconnect.two_tier {
+            if tt.gpus_per_node == 0 || tp % tt.gpus_per_node != 0 {
+                bail!(
+                    "two_tier gpus_per_node={} does not divide tp={tp} — every \
+                     simulated node must hold the same number of ranks",
+                    tt.gpus_per_node
+                );
+            }
+        }
         // Upperbound deletes ALL communication (paper: "removes all
         // communication operations"), including the lm-head AllGather — so
         // its collective engine runs on the free local fabric.
@@ -205,6 +275,7 @@ impl TpEngine {
                     arch,
                     batch,
                     layout,
+                    overlap,
                     comm.rendezvous(),
                 )?;
                 (Vec::new(), Some(rt), Some(Embedder::new(&exec, weights)?))
@@ -216,6 +287,7 @@ impl TpEngine {
             arch,
             batch,
             runtime,
+            overlap,
             comm,
             layout,
             exec,
@@ -525,9 +597,19 @@ impl TpEngine {
         last: &[usize],
         paged: Option<&PagedFwd>,
     ) -> Result<HostTensor> {
+        // slice the per-tier/per-phase comm ledgers; forwards are fully
+        // synchronous so the marker cannot race a collective
+        self.comm.set_phase(match phase {
+            Phase::Prefill => CommPhase::Prefill,
+            Phase::Decode => CommPhase::Decode,
+        });
+        let rows = match slot {
+            Some(s) => Rows::Slot(s),
+            None => Rows::All,
+        };
         match self.runtime {
             RuntimeKind::Sequential => {
-                let finals = self.forward(x0, phase, lens, slot, paged)?;
+                let finals = self.forward(x0, phase, lens, rows, paged)?;
                 self.head(&finals, last)
             }
             RuntimeKind::Threaded => {
@@ -535,7 +617,7 @@ impl TpEngine {
                     .threaded
                     .as_ref()
                     .expect("threaded runtime")
-                    .forward(x0, phase, lens, slot, paged, last)?;
+                    .forward(x0, phase, lens, rows, paged, last)?;
                 self.comm.allgather_concat(shards)
             }
         }
@@ -551,17 +633,60 @@ impl TpEngine {
         x0: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
     ) -> Result<Vec<HostTensor>> {
-        match self.arch {
-            Arch::Standard => self.fwd_synced(x0, phase, lens, slot, paged, self.cfg.layers),
-            Arch::Ladder => self.fwd_synced(x0, phase, lens, slot, paged, 0),
-            Arch::Hybrid => self.fwd_synced(x0, phase, lens, slot, paged, self.cfg.layers / 2),
-            Arch::Parallel => self.fwd_parallel(x0, phase, lens, slot, paged),
-            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, slot, paged, n),
-            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, slot, paged),
+        if self.overlap != OverlapMode::None && rows == Rows::All && x0.shape[0] > 1 {
+            let chunks = overlap::split_forward(self.overlap, &x0, lens, paged);
+            if chunks.len() > 1 {
+                return self.forward_chunked(chunks, phase);
+            }
         }
+        match self.arch {
+            Arch::Standard => self.fwd_synced(x0, phase, lens, rows, paged, self.cfg.layers),
+            Arch::Ladder => self.fwd_synced(x0, phase, lens, rows, paged, 0),
+            Arch::Hybrid => self.fwd_synced(x0, phase, lens, rows, paged, self.cfg.layers / 2),
+            Arch::Parallel => self.fwd_parallel(x0, phase, lens, rows, paged),
+            Arch::Desync(n) => self.fwd_desync(x0, phase, lens, rows, paged, n),
+            Arch::Upperbound => self.fwd_upperbound(x0, phase, lens, rows, paged),
+        }
+    }
+
+    /// Split-batch forward: chunks advance round-robin through each
+    /// (layer, block) step, so between a chunk launching an AllReduce and
+    /// absorbing it every *other* chunk runs one block of compute — the
+    /// TokenWeave-style overlap, without touching the architecture. The
+    /// per-chunk absorb points replay the unsplit schedule's dataflow
+    /// exactly (deferred, never reordered), which keeps every chunk's
+    /// residual bitwise identical to its rows in the unsplit forward.
+    fn forward_chunked(
+        &mut self,
+        chunks: Vec<ChunkFwd>,
+        phase: Phase,
+    ) -> Result<Vec<HostTensor>> {
+        let parts = match self.arch {
+            Arch::Standard => self.fwd_synced_chunked(chunks, phase, self.cfg.layers)?,
+            Arch::Ladder => self.fwd_synced_chunked(chunks, phase, 0)?,
+            Arch::Hybrid => self.fwd_synced_chunked(chunks, phase, self.cfg.layers / 2)?,
+            Arch::Parallel => self.fwd_parallel_chunked(chunks, phase)?,
+            Arch::Desync(n) => self.fwd_desync_chunked(chunks, phase, n)?,
+            Arch::Upperbound => {
+                // no communication to hide — chunks run back-to-back
+                let mut parts = Vec::with_capacity(chunks.len());
+                for c in chunks {
+                    let mut f = self.fwd_upperbound(
+                        c.x,
+                        phase,
+                        c.lens.as_deref(),
+                        c.rows,
+                        c.paged.as_ref(),
+                    )?;
+                    parts.push(f.swap_remove(0));
+                }
+                parts
+            }
+        };
+        Ok(vec![overlap::concat_chunks(parts); self.tp])
     }
 
     /// Standard (`ladder_from == layers`), Ladder (`== 0`) and Hybrid
@@ -574,7 +699,7 @@ impl TpEngine {
         mut x: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
         ladder_from: usize,
     ) -> Result<Vec<HostTensor>> {
@@ -587,7 +712,7 @@ impl TpEngine {
                 if let Some(h) = pend_attn.take() {
                     self.absorb(&mut x, h); // wait prev layer's attn reduce
                 }
-                let attn = self.run_attn_all(i, &x, phase, lens, slot, paged)?;
+                let attn = self.run_attn_all(i, &x, phase, lens, rows, paged)?;
                 let attn_h = self.comm.allreduce(attn)?; // async
                 if let Some(h) = pend_mlp.take() {
                     self.absorb(&mut x, h); // wait prev layer's MLP reduce
@@ -598,7 +723,7 @@ impl TpEngine {
                 pend_mlp = Some(mlp_h);
             } else {
                 // -- standard block: blocking reduces --
-                let attn = self.run_attn_all(i, &x, phase, lens, slot, paged)?;
+                let attn = self.run_attn_all(i, &x, phase, lens, rows, paged)?;
                 let h = self.comm.allreduce(attn)?;
                 self.absorb(&mut x, h);
                 let mlp = self.run_mlp_all(i, &x)?;
@@ -621,13 +746,13 @@ impl TpEngine {
         mut x: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
     ) -> Result<Vec<HostTensor>> {
         for i in 0..self.cfg.layers {
             let mut partials = Vec::with_capacity(self.tp);
             for t in 0..self.tp {
-                partials.push(self.ranks[t].fused(&self.exec, i, &x, phase, lens, slot, paged)?);
+                partials.push(self.ranks[t].fused(&self.exec, i, &x, phase, lens, rows, paged)?);
             }
             let h = self.comm.allreduce(partials)?;
             self.absorb(&mut x, h);
@@ -642,7 +767,7 @@ impl TpEngine {
         x0: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
         n: usize,
     ) -> Result<Vec<HostTensor>> {
@@ -656,7 +781,7 @@ impl TpEngine {
                 for t in 0..tp {
                     let p = match kind {
                         BlockSel::Attn => {
-                            self.ranks[t].attn(&self.exec, i, &rs[t], phase, lens, slot, paged)?
+                            self.ranks[t].attn(&self.exec, i, &rs[t], phase, lens, rows, paged)?
                         }
                         BlockSel::Mlp => self.ranks[t].mlp(&self.exec, i, &rs[t])?,
                     };
@@ -710,16 +835,234 @@ impl TpEngine {
         mut x: HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
     ) -> Result<Vec<HostTensor>> {
         for i in 0..self.cfg.layers {
-            let attn = self.run_attn_all(i, &x, phase, lens, slot, paged)?;
+            let attn = self.run_attn_all(i, &x, phase, lens, rows, paged)?;
             add_assign(&mut x, &attn[0]);
             let mlp = self.run_mlp_all(i, &x)?;
             add_assign(&mut x, &mlp[0]);
         }
         Ok(vec![x; self.tp])
+    }
+
+    // ---------------------------------------------------------------------
+    // split-batch (overlap) chunk schedules — see `engine/overlap.rs`
+    // ---------------------------------------------------------------------
+
+    /// Chunked Standard/Ladder/Hybrid. Per chunk, each block absorbs
+    /// exactly what the unsplit schedule would have absorbed before it:
+    /// attention waits the chunk's previous attn reduce on ladder layers
+    /// (the previous mlp reduce on standard layers — and at the
+    /// standard→ladder boundary, where it finishes the standard tail), MLP
+    /// waits the previous mlp reduce on ladder layers and this layer's
+    /// attn reduce on standard layers. Because chunks interleave between a
+    /// launch and its absorb, even the Standard architecture's blocking
+    /// reduces now hide behind other chunks' compute.
+    fn fwd_synced_chunked(
+        &mut self,
+        chunks: Vec<ChunkFwd>,
+        phase: Phase,
+        ladder_from: usize,
+    ) -> Result<Vec<HostTensor>> {
+        struct Run {
+            fw: ChunkFwd,
+            pend_attn: Option<CommHandle>,
+            pend_mlp: Option<CommHandle>,
+        }
+        let mut runs: Vec<Run> = chunks
+            .into_iter()
+            .map(|fw| Run { fw, pend_attn: None, pend_mlp: None })
+            .collect();
+        for i in 0..self.cfg.layers {
+            for r in 0..runs.len() {
+                let h = if i > ladder_from {
+                    runs[r].pend_attn.take()
+                } else {
+                    runs[r].pend_mlp.take()
+                };
+                if let Some(h) = h {
+                    let run = &mut runs[r];
+                    self.absorb(&mut run.fw.x, h);
+                }
+                let run = &runs[r];
+                let attn = self.run_attn_all(
+                    i,
+                    &run.fw.x,
+                    phase,
+                    run.fw.lens.as_deref(),
+                    run.fw.rows,
+                    run.fw.paged.as_ref(),
+                )?;
+                runs[r].pend_attn = Some(self.comm.allreduce(attn)?);
+            }
+            for r in 0..runs.len() {
+                let h = if i >= ladder_from {
+                    runs[r].pend_mlp.take()
+                } else {
+                    runs[r].pend_attn.take()
+                };
+                if let Some(h) = h {
+                    let run = &mut runs[r];
+                    self.absorb(&mut run.fw.x, h);
+                }
+                let mlp = self.run_mlp_all(i, &runs[r].fw.x)?;
+                runs[r].pend_mlp = Some(self.comm.allreduce(mlp)?);
+            }
+        }
+        let mut parts = Vec::with_capacity(runs.len());
+        for mut r in runs {
+            if let Some(h) = r.pend_attn.take() {
+                self.absorb(&mut r.fw.x, h);
+            }
+            if let Some(h) = r.pend_mlp.take() {
+                self.absorb(&mut r.fw.x, h);
+            }
+            parts.push(r.fw.x);
+        }
+        Ok(parts)
+    }
+
+    /// Chunked Parallel: the per-layer fused reduce is deferred to the
+    /// chunk's next layer, so the other chunks' fused blocks overlap it.
+    fn fwd_parallel_chunked(
+        &mut self,
+        chunks: Vec<ChunkFwd>,
+        phase: Phase,
+    ) -> Result<Vec<HostTensor>> {
+        let mut runs: Vec<(ChunkFwd, Option<CommHandle>)> =
+            chunks.into_iter().map(|fw| (fw, None)).collect();
+        for i in 0..self.cfg.layers {
+            for r in 0..runs.len() {
+                if let Some(h) = runs[r].1.take() {
+                    let run = &mut runs[r];
+                    self.absorb(&mut run.0.x, h);
+                }
+                let mut partials = Vec::with_capacity(self.tp);
+                for t in 0..self.tp {
+                    let fw = &runs[r].0;
+                    partials.push(self.ranks[t].fused(
+                        &self.exec,
+                        i,
+                        &fw.x,
+                        phase,
+                        fw.lens.as_deref(),
+                        fw.rows,
+                        fw.paged.as_ref(),
+                    )?);
+                }
+                runs[r].1 = Some(self.comm.allreduce(partials)?);
+            }
+        }
+        let mut parts = Vec::with_capacity(runs.len());
+        for (mut fw, pend) in runs {
+            if let Some(h) = pend {
+                self.absorb(&mut fw.x, h);
+            }
+            parts.push(fw.x);
+        }
+        Ok(parts)
+    }
+
+    /// Chunked Desync-nx: the rare retained reduce *replaces* a chunk's
+    /// per-rank streams, so it cannot be absorbed additively — instead its
+    /// wait is deferred to the chunk's next block step (other chunks'
+    /// compute covers it), and resolved before anything reads the streams.
+    fn fwd_desync_chunked(
+        &mut self,
+        chunks: Vec<ChunkFwd>,
+        phase: Phase,
+        n: usize,
+    ) -> Result<Vec<HostTensor>> {
+        let tp = self.tp;
+        struct Run {
+            lens: Option<Vec<i32>>,
+            paged: Option<PagedFwd>,
+            rows: Rows,
+            rs: Vec<HostTensor>,
+            c: usize,
+            synced: bool,
+            pend: Option<CommHandle>,
+        }
+        let mut runs: Vec<Run> = chunks
+            .into_iter()
+            .map(|fw| Run {
+                rs: vec![fw.x; tp],
+                lens: fw.lens,
+                paged: fw.paged,
+                rows: fw.rows,
+                c: 0,
+                synced: true,
+                pend: None,
+            })
+            .collect();
+        for i in 0..self.cfg.layers {
+            for kind in [BlockSel::Attn, BlockSel::Mlp] {
+                for r in 0..runs.len() {
+                    if let Some(h) = runs[r].pend.take() {
+                        let x = self.resolve_resync(h);
+                        runs[r].rs = vec![x; tp];
+                    }
+                    let mut partials = Vec::with_capacity(tp);
+                    for t in 0..tp {
+                        let run = &runs[r];
+                        let p = match kind {
+                            BlockSel::Attn => self.ranks[t].attn(
+                                &self.exec,
+                                i,
+                                &run.rs[t],
+                                phase,
+                                run.lens.as_deref(),
+                                run.rows,
+                                run.paged.as_ref(),
+                            )?,
+                            BlockSel::Mlp => self.ranks[t].mlp(&self.exec, i, &run.rs[t])?,
+                        };
+                        partials.push(p);
+                    }
+                    runs[r].c += 1;
+                    if runs[r].c % n == 0 {
+                        // retained reduce: message = partial + residual/tp
+                        for (t, p) in partials.iter_mut().enumerate() {
+                            for (a, b) in p.data.iter_mut().zip(&runs[r].rs[t].data) {
+                                *a += b / tp as f32;
+                            }
+                        }
+                        runs[r].pend = Some(self.comm.allreduce(partials)?);
+                        runs[r].synced = true;
+                    } else {
+                        for (t, p) in partials.into_iter().enumerate() {
+                            add_assign(&mut runs[r].rs[t], &p);
+                        }
+                        runs[r].synced = false;
+                    }
+                }
+            }
+        }
+        let mut parts = Vec::with_capacity(runs.len());
+        for mut r in runs {
+            if let Some(h) = r.pend.take() {
+                let x = self.resolve_resync(h);
+                r.rs = vec![x; tp];
+            }
+            if !r.synced {
+                // final resync (mean) so the head sees one residual
+                let msgs: Vec<HostTensor> = r
+                    .rs
+                    .iter()
+                    .map(|s| {
+                        let scaled = s.data.iter().map(|v| v / tp as f32).collect();
+                        HostTensor::new(s.shape.clone(), scaled)
+                    })
+                    .collect();
+                let h = self.comm.allreduce(msgs)?;
+                let x = self.resolve_resync(h);
+                r.rs = vec![x; tp];
+            }
+            parts.push(r.rs.swap_remove(0));
+        }
+        Ok(parts)
     }
 
     // ---------------------------------------------------------------------
@@ -733,12 +1076,12 @@ impl TpEngine {
         x: &HostTensor,
         phase: Phase,
         lens: Option<&[i32]>,
-        slot: Option<usize>,
+        rows: Rows,
         paged: Option<&PagedFwd>,
     ) -> Result<Vec<HostTensor>> {
         let t0 = std::time::Instant::now();
         let out: Result<Vec<HostTensor>> = (0..self.tp)
-            .map(|t| self.ranks[t].attn(&self.exec, layer, x, phase, lens, slot, paged))
+            .map(|t| self.ranks[t].attn(&self.exec, layer, x, phase, lens, rows, paged))
             .collect();
         if let Some(tr) = &mut self.tracer {
             tr.record(&format!("attn{layer}"), 0, t0, std::time::Instant::now());
@@ -755,6 +1098,18 @@ impl TpEngine {
             tr.record(&format!("mlp{layer}"), 0, t0, std::time::Instant::now());
         }
         out
+    }
+
+    /// Wait a desync retained reduce: unlike [`TpEngine::absorb`] the
+    /// result *replaces* the per-rank streams rather than adding into one.
+    fn resolve_resync(&mut self, h: CommHandle) -> HostTensor {
+        if let Some(tr) = &mut self.tracer {
+            let (launch, ready) = h.span();
+            tr.record("allreduce_resync", 1, launch, ready);
+        }
+        let (x, exposed) = h.wait();
+        self.comm.record_exposed(exposed);
+        x
     }
 
     /// Wait a handle, record exposed time, add the delta into the residual.

@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 use ladder_infer::comm::{Codec, Interconnect};
-use ladder_infer::engine::{generate, KvLayout, RuntimeKind, Sampler, TpEngine};
+use ladder_infer::engine::{generate, KvLayout, OverlapMode, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::perfmodel::tables;
 use ladder_infer::runtime::{BackendKind, Exec};
@@ -57,9 +57,19 @@ fn engine_args(program: &str, about: &str) -> Args {
         .opt("arch", Some("ladder"), "standard|ladder|parallel|desync2|desync4|upperbound|hybrid")
         .opt("tp", Some("2"), "tensor-parallel degree")
         .opt("batch", Some("2"), "batch slots")
-        .opt("fabric", Some("pcie"), "nvlink|pcie|infiniband|local|slow|custom:<lat_us>:<gbps>")
+        .opt(
+            "fabric",
+            Some("pcie"),
+            "nvlink|pcie|infiniband|local|slow|custom:<lat_us>:<gbps>|\
+             two_tier:<intra>:<cross>:<gpus_per_node>",
+        )
         .opt("codec", Some("fp32"), "collective wire codec: fp32|int8|int4 (quantized allreduce)")
         .opt("runtime", Some("threaded"), "rank runtime: threaded|sequential (oracle)")
+        .opt(
+            "overlap",
+            Some("none"),
+            "split-batch overlap: none|split2|split4 (chunked forwards, bitwise-exact)",
+        )
         .opt(
             "backend",
             Some("native"),
@@ -115,7 +125,7 @@ fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
         }
         _ => WeightStore::random(&cfg, args.get_usize("seed")? as u64),
     };
-    let engine = TpEngine::with_codec(
+    let engine = TpEngine::with_overlap(
         exec,
         &weights,
         args.get_usize("tp")?,
@@ -125,6 +135,7 @@ fn build_engine(args: &Args) -> Result<(TpEngine, Tokenizer)> {
         RuntimeKind::parse(&args.get("runtime")?)?,
         kv_layout(args, &cfg)?,
         Codec::parse(&args.get("codec")?)?,
+        OverlapMode::parse(&args.get("overlap")?)?,
     )?;
     let tok = Tokenizer::bytes_only(cfg.vocab);
     Ok((engine, tok))
@@ -277,6 +288,7 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
     let fabric = args.get("fabric")?;
     let codec = Codec::parse(&args.get("codec")?)?;
     let runtime = RuntimeKind::parse(&args.get("runtime")?)?;
+    let overlap = OverlapMode::parse(&args.get("overlap")?)?;
     let kv_budget = args.get_usize("kv-budget-mb")? << 20;
     let factory_tok = tok.clone();
     let factory_model = model.clone();
@@ -297,7 +309,7 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
         } else {
             KvLayout::paged_from_budget(&cfg, tp, page_size, kv_budget, batch)
         };
-        let engine = TpEngine::with_codec(
+        let engine = TpEngine::with_overlap(
             exec,
             &weights,
             tp,
@@ -307,6 +319,7 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
             runtime,
             layout,
             codec,
+            overlap,
         )?;
         Ok(Batcher::with_tokenizer(engine, batcher_config.clone(), factory_tok.clone()))
     });
@@ -345,7 +358,7 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
 
 fn cmd_tables(argv: Vec<String>) -> Result<()> {
     let args = Args::new("ladder-infer tables", "regenerate paper tables/figures")
-        .opt("only", Some(""), "comma list: table1,table2,fig2,fig3,fig4,table6,codec")
+        .opt("only", Some(""), "comma list: table1,table2,fig2,fig3,fig4,table6,codec,overlap")
         .parse(argv)?;
     let only = args.get("only")?;
     let want = |n: &str| only.is_empty() || only.split(',').any(|s| s == n);
@@ -371,6 +384,9 @@ fn cmd_tables(argv: Vec<String>) -> Result<()> {
     }
     if want("codec") {
         tables::codec_compound().print();
+    }
+    if want("overlap") {
+        tables::overlap_compound().print();
     }
     Ok(())
 }

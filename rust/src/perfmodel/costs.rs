@@ -71,6 +71,13 @@ impl CostModel {
     pub fn allreduce(&self, batch: usize, seq: usize) -> f64 {
         let numel = batch * seq * self.model.hidden;
         let bytes = self.codec.wire_bytes_for(numel, ELEM_BYTES as usize);
+        // a two-tier interconnect already decomposes hierarchically
+        // (reduce-scatter intra -> allreduce cross -> allgather intra), so
+        // it is charged whole; the legacy `cross_node` split stays for the
+        // paper tables that predate `two_tier:` fabrics
+        if self.interconnect.two_tier.is_some() {
+            return self.interconnect.allreduce_time(bytes, self.tp);
+        }
         let intra_ranks = match self.cross_node {
             Some((_, nodes)) => self.tp / nodes,
             None => self.tp,
@@ -241,5 +248,23 @@ mod tests {
         let cross = CostModel::new(m, H100, 16, Interconnect::new(Fabric::NvLink))
             .with_cross_node(Interconnect::new(Fabric::InfiniBand), 2);
         assert!(cross.allreduce(4, 1) > local.allreduce(4, 1));
+    }
+
+    #[test]
+    fn two_tier_cost_sits_between_flat_fabrics() {
+        let m = *PaperModel::by_name("405B").unwrap();
+        let nv = CostModel::new(m, H100, 16, Interconnect::new(Fabric::NvLink));
+        let ib = CostModel::new(m, H100, 16, Interconnect::new(Fabric::InfiniBand));
+        let two = CostModel::new(
+            m,
+            H100,
+            16,
+            Interconnect::new(Fabric::NvLink).with_two_tier(Fabric::InfiniBand, 8),
+        );
+        for (b, s) in [(4usize, 1usize), (4, 1024)] {
+            let t = two.allreduce(b, s);
+            assert!(t > nv.allreduce(b, s), "hierarchical should cost more than flat NVLink");
+            assert!(t < ib.allreduce(b, s), "hierarchical should beat a flat cross fabric");
+        }
     }
 }

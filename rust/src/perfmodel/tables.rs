@@ -8,7 +8,7 @@ use crate::comm::{Codec, Fabric, Interconnect};
 use crate::model::{Arch, PaperModel, PAPER_MODELS};
 use crate::perfmodel::costs::CostModel;
 use crate::perfmodel::hardware::H100;
-use crate::perfmodel::timeline::{simulate_generation, GenTimes};
+use crate::perfmodel::timeline::{simulate_generation, simulate_generation_overlap, GenTimes};
 use crate::util::bench::Table;
 
 const PROMPT: usize = 1024;
@@ -75,6 +75,51 @@ pub fn codec_compound() -> Table {
                 format!("{int8:.3}s"),
                 format!("{int4:.3}s"),
                 format!("{:.2}x", fp32 / int8),
+            ]);
+        }
+    }
+    t
+}
+
+/// Overlap compounding (ladder vs TokenWeave-style split-batch overlap,
+/// head to head): 405B TP16 bs16 on hierarchical two-tier fabrics, prefill
+/// latency and mean decode-step latency per (topology, arch, overlap mode).
+///
+/// Splitting each forward's batch into pipelined chunks lets even the
+/// Standard architecture hide AllReduce time behind sibling chunks'
+/// compute — which narrows the prefill gap to Ladder substantially. Decode
+/// is different: a decode step's compute is weight-streaming-bound, so
+/// every chunk re-streams the full weight shard and splitting buys nothing,
+/// while Ladder still hides the reduce architecturally. The real-engine
+/// analogue of this table is gated by `tests/overlap_wallclock.rs`.
+pub fn overlap_compound() -> Table {
+    let mut t = Table::new(
+        "Overlap compounding: 405B TP16 bs16 (prompt 1024, gen 512) — prefill s / decode ms per step",
+        &["Topology", "Arch", "pf none", "pf split2", "pf split4", "pf gain", "dec none", "dec split4"],
+    );
+    let m = PaperModel::by_name("405B").unwrap();
+    let arches =
+        [Arch::Standard, Arch::Parallel, Arch::Desync(2), Arch::Ladder, Arch::Upperbound];
+    let fabrics = [
+        Interconnect::new(Fabric::NvLink).with_two_tier(Fabric::InfiniBand, 8),
+        Interconnect::new(Fabric::Pcie).with_two_tier(Fabric::InfiniBand, 8),
+    ];
+    for ic in fabrics {
+        for arch in arches {
+            let run = |chunks: usize| {
+                let cm = CostModel::new(*m, H100, 16, ic);
+                simulate_generation_overlap(arch, &cm, 16, PROMPT, GEN, chunks)
+            };
+            let (none, s2, s4) = (run(1), run(2), run(4));
+            t.row(&[
+                ic.name(),
+                arch.name(),
+                format!("{:.3}s", none.prefill),
+                format!("{:.3}s", s2.prefill),
+                format!("{:.3}s", s4.prefill),
+                format!("{:.2}x", none.prefill / s4.prefill),
+                format!("{:.2}ms", none.decode_latency() * 1e3),
+                format!("{:.2}ms", s4.decode_latency() * 1e3),
             ]);
         }
     }
@@ -390,6 +435,54 @@ mod tests {
         let d4 = gen(Arch::Desync(4), m, 8, Fabric::Pcie, 64);
         assert!(d4.tok_per_sec() > lad.tok_per_sec());
         assert!(lad.tok_per_sec() > std.tok_per_sec());
+    }
+
+    #[test]
+    fn overlap_none_matches_serial_generation() {
+        // chunks=1 is the unsplit schedule: for Standard (never more than
+        // one reduce in flight) the chunked simulator must agree exactly
+        let m = PaperModel::by_name("405B").unwrap();
+        let ic = Interconnect::new(Fabric::NvLink).with_two_tier(Fabric::InfiniBand, 8);
+        let cm = CostModel::new(*m, H100, 16, ic);
+        let serial = simulate_generation(Arch::Standard, &cm, 16, PROMPT, 16);
+        let chunked = simulate_generation_overlap(Arch::Standard, &cm, 16, PROMPT, 16, 1);
+        assert!((serial.prefill - chunked.prefill).abs() < 1e-9);
+        assert!((serial.decode_total - chunked.decode_total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_split4_narrows_standard_prefill_gap_but_ladder_leads() {
+        // the table's headline: on the two-tier fabric, standard+split4
+        // recovers a strictly positive fraction of the standard-vs-ladder
+        // prefill gap, and ladder without any splitting still leads
+        let m = PaperModel::by_name("405B").unwrap();
+        let ic = Interconnect::new(Fabric::NvLink).with_two_tier(Fabric::InfiniBand, 8);
+        let cm = CostModel::new(*m, H100, 16, ic);
+        let pre = |arch: Arch, chunks: usize| {
+            simulate_generation_overlap(arch, &cm, 16, PROMPT, 1, chunks).prefill
+        };
+        let (std_none, std_s4) = (pre(Arch::Standard, 1), pre(Arch::Standard, 4));
+        let lad_none = pre(Arch::Ladder, 1);
+        assert!(std_s4 < std_none, "split4 should shorten standard prefill");
+        assert!(lad_none <= std_s4, "ladder+none should still lead");
+        let gap_none = std_none - lad_none;
+        let gap_s4 = std_s4 - lad_none;
+        assert!(gap_s4 < gap_none, "gap {gap_s4} !< {gap_none}");
+    }
+
+    #[test]
+    fn overlap_split_cannot_fix_decode_but_ladder_does() {
+        // decode compute is weight-streaming-bound: every chunk re-streams
+        // the shard, so splitting does not beat ladder's architectural
+        // overlap on a single decode step
+        let m = PaperModel::by_name("405B").unwrap();
+        let ic = Interconnect::new(Fabric::NvLink).with_two_tier(Fabric::InfiniBand, 8);
+        let cm = CostModel::new(*m, H100, 16, ic);
+        let dec = |arch: Arch, chunks: usize| {
+            simulate_generation_overlap(arch, &cm, 16, PROMPT, 8, chunks).decode_latency()
+        };
+        assert!(dec(Arch::Ladder, 1) < dec(Arch::Standard, 4));
+        assert!(dec(Arch::Ladder, 1) < dec(Arch::Standard, 1));
     }
 
     #[test]

@@ -136,6 +136,167 @@ pub fn simulate_forward(
     sim.finish()
 }
 
+/// Simulate one forward pass with split-batch overlap (`engine/overlap.rs`):
+/// the batch rows are split into `chunks` sub-chunks pipelined round-robin
+/// through the per-layer blocks, so one chunk's AllReduce overlaps the other
+/// chunks' compute even under the Standard architecture (TokenWeave-style
+/// systems overlap). `mt` holds *per-chunk* module times, except `edges`,
+/// which runs once over the re-concatenated full batch.
+///
+/// Chunk collectives get independent completion deadlines (no link-queue
+/// serialization): this matches the rendezvous runtime, where every round's
+/// deadline is anchored at its own rendezvous instant
+/// (`comm/rendezvous.rs`), the way multi-stream NCCL calls over disjoint
+/// chunks pipeline on a real fabric. Waits follow the engine's chunked
+/// schedule: a chunk's reduce is absorbed at that chunk's *next* block step,
+/// with the other chunks' compute in between.
+pub fn simulate_forward_chunked(
+    arch: Arch,
+    layers: usize,
+    mt: &ModuleTimes,
+    chunks: usize,
+) -> TimelineResult {
+    let mut sim = Sim::new(false);
+    let c = chunks.max(1);
+    match arch {
+        Arch::Standard | Arch::Ladder | Arch::Hybrid => {
+            // mirror engine/tpengine.rs fwd_synced_chunked: ladder_from is
+            // the first layer of the deferred-wait (ladder) region
+            let ladder_from = match arch {
+                Arch::Standard => layers,
+                Arch::Ladder => 0,
+                _ => layers / 2,
+            };
+            let mut pend_attn: Vec<Option<f64>> = vec![None; c];
+            let mut pend_mlp: Vec<Option<f64>> = vec![None; c];
+            for i in 0..layers {
+                for r in 0..c {
+                    let h =
+                        if i > ladder_from { pend_attn[r].take() } else { pend_mlp[r].take() };
+                    if let Some(done) = h {
+                        sim.wait(done);
+                    }
+                    sim.compute(&format!("attn{i}.{r}"), mt.attn);
+                    pend_attn[r] = Some(sim.allreduce_concurrent(mt.allreduce));
+                }
+                for r in 0..c {
+                    let h =
+                        if i >= ladder_from { pend_mlp[r].take() } else { pend_attn[r].take() };
+                    if let Some(done) = h {
+                        sim.wait(done);
+                    }
+                    sim.compute(&format!("mlp{i}.{r}"), mt.mlp);
+                    pend_mlp[r] = Some(sim.allreduce_concurrent(mt.allreduce));
+                }
+            }
+            for r in 0..c {
+                if let Some(done) = pend_attn[r].take() {
+                    sim.wait(done);
+                }
+                if let Some(done) = pend_mlp[r].take() {
+                    sim.wait(done);
+                }
+            }
+        }
+        Arch::Parallel => {
+            let mut pend: Vec<Option<f64>> = vec![None; c];
+            for i in 0..layers {
+                for (r, p) in pend.iter_mut().enumerate() {
+                    if let Some(done) = p.take() {
+                        sim.wait(done);
+                    }
+                    sim.compute(&format!("fused{i}.{r}"), mt.fused);
+                    *p = Some(sim.allreduce_concurrent(mt.allreduce));
+                }
+            }
+            for done in pend.into_iter().flatten() {
+                sim.wait(done);
+            }
+        }
+        Arch::Desync(n) => {
+            // chunked desync defers the retained reduce to the chunk's next
+            // step (engine fwd_desync_chunked), unlike the unsplit path's
+            // blocking reduce
+            let mut pend: Vec<Option<f64>> = vec![None; c];
+            let mut count = vec![0usize; c];
+            let mut synced = vec![true; c];
+            for i in 0..layers {
+                for (kind, dur) in [("attn", mt.attn), ("mlp", mt.mlp)] {
+                    for r in 0..c {
+                        if let Some(done) = pend[r].take() {
+                            sim.wait(done);
+                        }
+                        sim.compute(&format!("{kind}{i}.{r}"), dur);
+                        count[r] += 1;
+                        if count[r] % n == 0 {
+                            pend[r] = Some(sim.allreduce_concurrent(mt.allreduce));
+                            synced[r] = true;
+                        } else {
+                            synced[r] = false;
+                        }
+                    }
+                }
+            }
+            for r in 0..c {
+                if let Some(done) = pend[r].take() {
+                    sim.wait(done);
+                }
+                if !synced[r] {
+                    let done = sim.allreduce_concurrent(mt.allreduce);
+                    sim.wait(done);
+                }
+            }
+        }
+        Arch::Upperbound => {
+            for i in 0..layers {
+                for r in 0..c {
+                    sim.compute(&format!("attn{i}.{r}"), mt.attn);
+                    sim.compute(&format!("mlp{i}.{r}"), mt.mlp);
+                }
+            }
+        }
+    }
+    sim.compute("edges", mt.edges);
+    sim.finish()
+}
+
+/// Full generation with split-batch overlap: per-forward module times are
+/// taken at the chunk's row count (`batch / chunks` — use a divisible pair;
+/// the engine itself handles remainders) while the LM-head edges run once on
+/// the full batch, exactly as the engine concatenates chunks before the head.
+pub fn simulate_generation_overlap(
+    arch: Arch,
+    cm: &CostModel,
+    batch: usize,
+    prompt: usize,
+    gen: usize,
+    chunks: usize,
+) -> GenTimes {
+    let c = chunks.clamp(1, batch);
+    let mut mt = cm.prefill(batch / c, prompt);
+    mt.edges = cm.prefill(batch, prompt).edges;
+    let pre = simulate_forward_chunked(arch, cm.model.layers, &mt, c);
+    let mut decode_total = 0.0;
+    let mut exposed = pre.comm_exposed;
+    let mut comm_total = pre.comm_total;
+    for step in 0..gen {
+        let mut mt = cm.decode(batch / c, prompt + step);
+        mt.edges = cm.decode(batch, prompt + step).edges;
+        let r = simulate_forward_chunked(arch, cm.model.layers, &mt, c);
+        decode_total += r.total;
+        exposed += r.comm_exposed;
+        comm_total += r.comm_total;
+    }
+    GenTimes {
+        prefill: pre.total,
+        decode_total,
+        gen_tokens: gen,
+        batch,
+        comm_exposed: exposed,
+        comm_total,
+    }
+}
+
 /// Prefill latency for one forward over the prompt.
 pub fn simulate_prefill(arch: Arch, cm: &CostModel, batch: usize, prompt: usize) -> TimelineResult {
     let mt = cm.prefill(batch, prompt);
@@ -256,6 +417,14 @@ impl Sim {
         done
     }
 
+    /// Issue an AllReduce whose deadline is independent of other in-flight
+    /// collectives (rendezvous-style per-round deadlines, no link queue);
+    /// returns its completion time.
+    fn allreduce_concurrent(&mut self, dur: f64) -> f64 {
+        self.comm_total += dur;
+        self.tc + dur
+    }
+
     /// Stall the compute stream until `done`.
     fn wait(&mut self, done: f64) {
         if done > self.tc {
@@ -361,6 +530,41 @@ mod tests {
             let lad = simulate_forward(Arch::Ladder, 6, &m, false).total;
             let std = simulate_forward(Arch::Standard, 6, &m, false).total;
             assert!(ub <= lad + 1e-12 && lad <= std + 1e-12, "ar={ar}");
+        }
+    }
+
+    #[test]
+    fn chunked_single_chunk_matches_standard_serial() {
+        // C=1 standard defers each wait exactly one block step with nothing
+        // in between — identical arithmetic to the blocking schedule
+        let m = mt(1.0, 1.3, 0.7);
+        let serial = simulate_forward(Arch::Standard, 5, &m, false);
+        let chunked = simulate_forward_chunked(Arch::Standard, 5, &m, 1);
+        assert!((serial.total - chunked.total).abs() < 1e-12);
+        assert!((serial.comm_exposed - chunked.comm_exposed).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_standard_hides_comm_behind_sibling_chunks() {
+        // per-chunk compute 1.0, AR 2.0: with 4 chunks in flight the other
+        // chunks' compute fills most of each chunk's AR window
+        let m = mt(1.0, 1.0, 2.0);
+        let none = simulate_forward_chunked(Arch::Standard, 4, &m, 1);
+        let split = simulate_forward_chunked(Arch::Standard, 4, &m, 4);
+        // unsplit runs 4 rows' worth of compute per module: rescale
+        let unsplit = simulate_forward(Arch::Standard, 4, &mt(4.0, 4.0, 2.0), false);
+        assert!(none.total > 0.0);
+        assert!(split.total < unsplit.total, "{} !< {}", split.total, unsplit.total);
+        assert!(split.comm_exposed < unsplit.comm_exposed);
+    }
+
+    #[test]
+    fn chunked_ladder_still_beats_chunked_standard() {
+        let m = mt(1.0, 1.0, 2.0);
+        for c in [1usize, 2, 4] {
+            let lad = simulate_forward_chunked(Arch::Ladder, 6, &m, c);
+            let std = simulate_forward_chunked(Arch::Standard, 6, &m, c);
+            assert!(lad.total <= std.total + 1e-12, "chunks={c}");
         }
     }
 

@@ -295,8 +295,10 @@ impl Batcher {
     }
 
     /// The `{"stats":true}` snapshot: the [`ServerMetrics`] report plus the
-    /// comm-layer fields only the engine knows — the collective wire codec
-    /// and its raw-vs-encoded byte ledger (docs/API.md).
+    /// comm-layer fields only the engine knows — the collective wire codec,
+    /// its raw-vs-encoded byte ledger, the per-tier traffic split of a
+    /// hierarchical `two_tier:` fabric, and the per-phase (prefill/decode)
+    /// overlap fractions (docs/API.md).
     pub fn stats_report(&self, wall_secs: f64) -> crate::util::json::Json {
         let comm = self.engine.comm.stats();
         self.metrics
@@ -305,7 +307,11 @@ impl Batcher {
             .set("comm_allreduces", comm.allreduce_count)
             .set("comm_bytes_moved", comm.bytes_moved)
             .set("comm_bytes_raw", comm.bytes_raw)
+            .set("comm_bytes_intra", comm.bytes_intra)
+            .set("comm_bytes_cross", comm.bytes_cross)
             .set("comm_hidden_fraction", comm.hidden_fraction())
+            .set("comm_hidden_fraction_prefill", comm.hidden_fraction_prefill())
+            .set("comm_hidden_fraction_decode", comm.hidden_fraction_decode())
     }
 
     /// The paged page-table bookkeeping, when this batcher runs a paged

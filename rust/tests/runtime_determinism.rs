@@ -18,7 +18,7 @@
 use std::rc::Rc;
 
 use ladder_infer::comm::{Codec, Fabric, Interconnect};
-use ladder_infer::engine::{KvLayout, RuntimeKind, TpEngine};
+use ladder_infer::engine::{KvLayout, OverlapMode, RuntimeKind, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::Exec;
 
@@ -253,10 +253,10 @@ fn paged_layout_bitwise_identical_to_slab_on_both_runtimes() {
 /// * a full-prompt hit via the copy-on-write trailing page: the shared
 ///   last page is duplicated with `copy_page` and only the final token is
 ///   re-prefilled over the copy.
-fn assert_prefix_hit_bitwise(arch: Arch, runtime: RuntimeKind) {
+fn assert_prefix_hit_bitwise(arch: Arch, runtime: RuntimeKind, overlap: OverlapMode) {
     let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
     let weights = tiny_weights(&exec);
-    let mut engine = TpEngine::with_layout(
+    let mut engine = TpEngine::with_overlap(
         exec,
         &weights,
         2,
@@ -265,6 +265,8 @@ fn assert_prefix_hit_bitwise(arch: Arch, runtime: RuntimeKind) {
         Interconnect::new(Fabric::Local),
         runtime,
         KvLayout::Paged { page_size: 8, pages: 64 },
+        Codec::Fp32,
+        overlap,
     )
     .unwrap();
     let prompt: Vec<i32> = (0..21).map(|i| i % 13 + 1).collect();
@@ -337,14 +339,27 @@ const ALL_ARCHES: [Arch; 7] = [
 #[test]
 fn prefix_cache_hits_bitwise_equal_cold_prefill_sequential() {
     for arch in ALL_ARCHES {
-        assert_prefix_hit_bitwise(arch, RuntimeKind::Sequential);
+        assert_prefix_hit_bitwise(arch, RuntimeKind::Sequential, OverlapMode::None);
     }
 }
 
 #[test]
 fn prefix_cache_hits_bitwise_equal_cold_prefill_threaded() {
     for arch in ALL_ARCHES {
-        assert_prefix_hit_bitwise(arch, RuntimeKind::Threaded);
+        assert_prefix_hit_bitwise(arch, RuntimeKind::Threaded, OverlapMode::None);
+    }
+}
+
+/// Prefix-cache hits under split-batch overlap: the per-slot chunked
+/// prefills stay unsplit (single-row forwards), but the batch-3 paged
+/// decode after the hit is chunked 2+1 — the cold row and the hit row land
+/// in *different* chunks and must still agree bitwise.
+#[test]
+fn prefix_cache_hits_bitwise_equal_cold_prefill_with_split_overlap() {
+    for arch in ALL_ARCHES {
+        for runtime in [RuntimeKind::Sequential, RuntimeKind::Threaded] {
+            assert_prefix_hit_bitwise(arch, runtime, OverlapMode::Split2);
+        }
     }
 }
 
@@ -395,6 +410,178 @@ fn fp32_codec_bitwise_identical_to_default_path() {
                 logits_stream_codec(arch, runtime, Codec::Fp32),
                 "{} [{}]: fp32 codec diverges from the default path",
                 arch.name(),
+                runtime.name()
+            );
+        }
+    }
+}
+
+/// Drive prefill + teacher-forced decode through a split-batch overlap
+/// engine at an arbitrary batch size; the oracle is the same driver with
+/// `OverlapMode::None`.
+fn logits_stream_overlap(
+    arch: Arch,
+    runtime: RuntimeKind,
+    codec: Codec,
+    overlap: OverlapMode,
+    batch: usize,
+) -> Vec<Vec<u32>> {
+    let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+    let weights = tiny_weights(&exec);
+    let mut engine = TpEngine::with_overlap(
+        exec,
+        &weights,
+        2,
+        arch,
+        batch,
+        Interconnect::new(Fabric::Local),
+        runtime,
+        KvLayout::Slab,
+        codec,
+        overlap,
+    )
+    .unwrap();
+    let tokens: Vec<i32> = (0..(batch * PROMPT) as i32).map(|i| i % 13 + 1).collect();
+    let lens = vec![PROMPT; batch];
+    let mut stream = Vec::with_capacity(DECODE_STEPS + 1);
+    let logits = engine.prefill(&tokens, PROMPT, &lens).unwrap();
+    stream.push(logits.data.iter().map(|x| x.to_bits()).collect());
+    for t in 0..DECODE_STEPS as i32 {
+        let toks: Vec<i32> = (0..batch as i32).map(|b| (t + b) % 7 + 1).collect();
+        let logits = engine.decode(&toks).unwrap();
+        stream.push(logits.data.iter().map(|x| x.to_bits()).collect());
+    }
+    stream
+}
+
+/// The tentpole contract of split-batch overlap (`engine/overlap.rs`): a
+/// chunked forward reproduces the unsplit schedule **bitwise** — every
+/// architecture, on both rank runtimes. Every kernel in a block is
+/// row-local, each chunk's AllReduce sums the same per-rank partials in the
+/// same rank order, and chunks are concatenated back in row order before
+/// the LM head.
+#[test]
+fn split_overlap_bitwise_identical_all_arches_both_runtimes() {
+    for arch in ALL_ARCHES {
+        for runtime in [RuntimeKind::Sequential, RuntimeKind::Threaded] {
+            let oracle = logits_stream_overlap(arch, runtime, Codec::Fp32, OverlapMode::None, 2);
+            for overlap in [OverlapMode::Split2, OverlapMode::Split4] {
+                assert_eq!(
+                    oracle,
+                    logits_stream_overlap(arch, runtime, Codec::Fp32, overlap, 2),
+                    "{} [{}/{}]: split logits diverge bitwise from the unsplit oracle",
+                    arch.name(),
+                    runtime.name(),
+                    overlap.name()
+                );
+            }
+        }
+    }
+}
+
+/// Split chunks stay codec-block aligned on the tiny config (hidden 64 ==
+/// `QUANT_BLOCK`), so the bitwise contract extends to the quantizing wire
+/// codecs: each chunk's message quantizes into exactly the blocks the
+/// unsplit message would.
+#[test]
+fn split_overlap_bitwise_identical_under_quantized_codecs() {
+    for codec in [Codec::Int8, Codec::Int4] {
+        for arch in ALL_ARCHES {
+            for runtime in [RuntimeKind::Sequential, RuntimeKind::Threaded] {
+                let oracle = logits_stream_overlap(arch, runtime, codec, OverlapMode::None, 2);
+                assert_eq!(
+                    oracle,
+                    logits_stream_overlap(arch, runtime, codec, OverlapMode::Split4, 2),
+                    "{} [{}/{}]: split4 diverges bitwise from the unsplit oracle",
+                    arch.name(),
+                    runtime.name(),
+                    codec.name()
+                );
+            }
+        }
+    }
+}
+
+/// Batch sizes that don't divide the chunk count exercise the remainder
+/// partition (leading chunks one row larger) and the degraded case where
+/// split4 yields fewer than 4 chunks.
+#[test]
+fn split_overlap_bitwise_identical_on_uneven_batches() {
+    for arch in [Arch::Standard, Arch::Ladder, Arch::Hybrid] {
+        for runtime in [RuntimeKind::Sequential, RuntimeKind::Threaded] {
+            let oracle = logits_stream_overlap(arch, runtime, Codec::Fp32, OverlapMode::None, 3);
+            for overlap in [OverlapMode::Split2, OverlapMode::Split4] {
+                assert_eq!(
+                    oracle,
+                    logits_stream_overlap(arch, runtime, Codec::Fp32, overlap, 3),
+                    "{} [{}/{}]: uneven-batch split diverges bitwise",
+                    arch.name(),
+                    runtime.name(),
+                    overlap.name()
+                );
+            }
+        }
+    }
+}
+
+/// Paged decode under split-batch overlap: each chunk carries its rows'
+/// slice of the page tables, and the result must still equal the slab
+/// oracle bitwise (chunked paged prefill is per-slot and therefore never
+/// split; the batched decode path is).
+#[test]
+fn split_overlap_paged_decode_bitwise_identical_to_slab() {
+    let paged_split_stream = |runtime: RuntimeKind| -> Vec<Vec<u32>> {
+        let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+        let weights = tiny_weights(&exec);
+        let mut engine = TpEngine::with_overlap(
+            exec,
+            &weights,
+            2,
+            Arch::Ladder,
+            2,
+            Interconnect::new(Fabric::Local),
+            runtime,
+            KvLayout::Paged { page_size: 8, pages: 64 },
+            Codec::Fp32,
+            OverlapMode::Split2,
+        )
+        .unwrap();
+        let max_pages = engine.kv_max_pages_per_seq();
+        let table = |slot: usize| -> Vec<u32> {
+            (0..max_pages as u32).map(|i| (slot * max_pages) as u32 + i).collect()
+        };
+        let tokens: Vec<i32> = (0..(2 * PROMPT) as i32).map(|i| i % 13 + 1).collect();
+        let mut stream = Vec::with_capacity(DECODE_STEPS + 1);
+        let row0 = engine.prefill_chunk_slot(0, &tokens[..PROMPT], 0, &table(0)).unwrap();
+        let row1 = engine
+            .prefill_chunk_slot(1, &tokens[PROMPT..2 * PROMPT], 0, &table(1))
+            .unwrap();
+        let mut bits: Vec<u32> = row0.iter().map(|x| x.to_bits()).collect();
+        bits.extend(row1.iter().map(|x| x.to_bits()));
+        stream.push(bits);
+        let mut tables = vec![-1i32; 2 * max_pages];
+        for slot in 0..2 {
+            for (i, pg) in table(slot).iter().enumerate() {
+                tables[slot * max_pages + i] = *pg as i32;
+            }
+        }
+        for t in 0..DECODE_STEPS as i32 {
+            let logits = engine
+                .decode_paged(&[t % 7 + 1, t % 5 + 2], &[true, true], tables.clone(), max_pages)
+                .unwrap();
+            stream.push(logits.data.iter().map(|x| x.to_bits()).collect());
+        }
+        stream
+    };
+    let slab = logits_stream(Arch::Ladder, RuntimeKind::Sequential);
+    for runtime in [RuntimeKind::Sequential, RuntimeKind::Threaded] {
+        let paged = paged_split_stream(runtime);
+        assert_eq!(slab.len(), paged.len());
+        for (step, (a, b)) in slab.iter().zip(&paged).enumerate() {
+            assert_eq!(
+                a,
+                b,
+                "split-paged[{}] step {step} diverges bitwise from the slab oracle",
                 runtime.name()
             );
         }
