@@ -6,10 +6,10 @@
 //! direct measure of how much latency the Ladder schedule hides (paper
 //! Fig. 6's NCCL-blocking-vs-overlapped story, as a number).
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::codec::Codec;
 use super::handle::CommHandle;
@@ -130,6 +130,24 @@ impl CollectiveEngine {
         self.codec
     }
 
+    /// Lock the stats ledger from a fallible collective, mapping a
+    /// poisoned mutex (a sibling rank panicked mid-collective) to an
+    /// error the serve loop can fail one request with — same contract as
+    /// `rendezvous::lock_or_err`, instead of a cascading panic.
+    fn stats_lock(&self) -> Result<MutexGuard<'_, CommStats>> {
+        self.stats
+            .lock()
+            .map_err(|_| anyhow!("comm stats mutex poisoned: a rank panicked mid-collective"))
+    }
+
+    /// Lock the stats ledger from an infallible accessor. The counters
+    /// are plain data (no invariant spans the panic point), so recovering
+    /// the guard is safe — the poison-recovery pattern of
+    /// `comm/rendezvous.rs`.
+    fn stats_recover(&self) -> MutexGuard<'_, CommStats> {
+        self.stats.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Build the worker-facing rendezvous collective sharing this engine's
     /// interconnect model, wire codec, and stats ledger.
     pub fn rendezvous(&self) -> Arc<SharedCollective> {
@@ -146,7 +164,9 @@ impl CollectiveEngine {
             bail!("allreduce got {} partials for tp={}", partials.len(), self.tp);
         }
         let mut iter = partials.into_iter();
-        let mut acc = iter.next().unwrap();
+        let Some(mut acc) = iter.next() else {
+            bail!("allreduce needs at least one partial (tp >= 1)");
+        };
         if self.tp > 1 {
             // tp=1 never touches a wire — the codec must not perturb it.
             self.codec.transport(&mut acc);
@@ -165,7 +185,7 @@ impl CollectiveEngine {
         let modeled = Duration::from_secs_f64(self.interconnect.allreduce_time(bytes, self.tp));
         let (intra, cross) = self.interconnect.allreduce_tier_bytes(bytes, self.tp);
         {
-            let mut s = self.stats.lock().unwrap();
+            let mut s = self.stats_lock()?;
             s.allreduce_count += 1;
             s.bytes_moved += bytes;
             s.bytes_raw += raw;
@@ -204,7 +224,10 @@ impl CollectiveEngine {
             }
         }
         let mut new_shape = shape;
-        *new_shape.last_mut().unwrap() = cols * self.tp;
+        *new_shape
+            .last_mut()
+            .ok_or_else(|| anyhow!("allgather shards must be shaped (rank >= 1)"))? =
+            cols * self.tp;
         let handle = if self.tp == 1 {
             CommHandle::ready(HostTensor::new(new_shape, out))
         } else {
@@ -212,7 +235,7 @@ impl CollectiveEngine {
         };
         let (t, exposed) = handle.wait();
         let (intra, cross) = self.interconnect.allgather_tier_bytes(bytes * self.tp, self.tp);
-        let mut s = self.stats.lock().unwrap();
+        let mut s = self.stats_lock()?;
         s.allgather_count += 1;
         s.bytes_moved += bytes * self.tp;
         s.bytes_raw += bytes * self.tp;
@@ -225,21 +248,21 @@ impl CollectiveEngine {
 
     /// Record the exposed wait time returned by a `CommHandle::wait`.
     pub fn record_exposed(&self, exposed: Duration) {
-        self.stats.lock().unwrap().charge_exposed(exposed);
+        self.stats_recover().charge_exposed(exposed);
     }
 
     /// Flip the phase marker collectives are attributed to (prefill/decode
     /// ledger slices). Called by the engine at the top of each forward.
     pub fn set_phase(&self, phase: CommPhase) {
-        self.stats.lock().unwrap().phase = phase;
+        self.stats_recover().phase = phase;
     }
 
     pub fn stats(&self) -> CommStats {
-        self.stats.lock().unwrap().clone()
+        self.stats_recover().clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.lock().unwrap() = CommStats::default();
+        *self.stats_recover() = CommStats::default();
     }
 }
 

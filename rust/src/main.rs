@@ -23,11 +23,13 @@ use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::perfmodel::tables;
 use ladder_infer::runtime::{BackendKind, Exec};
 use ladder_infer::server::{
-    api, router, Batcher, BatcherConfig, ReplicaFactory, Router, RouterConfig, RoutingPolicy,
+    api, router, Batcher, BatcherConfig, ReplicaFactory, ReplicaSlotConfig, ReplicaSpec, Router,
+    RouterConfig, RoutingPolicy,
 };
 use ladder_infer::tokenizer::Tokenizer;
 use ladder_infer::trainer::parity;
 use ladder_infer::util::args::Args;
+use ladder_infer::util::json::Json;
 
 fn main() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -245,6 +247,11 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
         "paged engines: per-replica radix-tree prefix cache (what affinity routing feeds)",
     )
     .opt("replicas", Some("2"), "independent engine replicas behind the router")
+    .multi(
+        "replica",
+        "per-slot config overlay (repeatable): key=value[,key=value..] over the base engine \
+         flags, e.g. arch=ladder,tp=2,page-size=8 — slot i takes the i-th spec",
+    )
     .opt("policy", Some("affinity"), "routing policy: affinity|round-robin")
     .opt(
         "spill-threshold",
@@ -272,32 +279,141 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
     let cfg = Exec::open(&model, backend)?.cfg().clone();
     let tok = Tokenizer::bytes_only(cfg.vocab);
     let page_size = args.get_usize("page-size")?;
-    if args.has_flag("prefix-cache") && page_size == 0 {
-        anyhow::bail!("--prefix-cache needs a paged KV layout (set --page-size > 0)");
+    // per-slot overlays: slot i takes the i-th --replica spec; slots past
+    // the spec list (and the whole fleet when none are given) run the base
+    let specs: Vec<ReplicaSpec> = args
+        .get_multi("replica")
+        .iter()
+        .map(|s| ReplicaSpec::parse(s))
+        .collect::<Result<Vec<_>>>()?;
+    let replicas = args.get_usize("replicas")?.max(specs.len()).max(1);
+    let mut slots = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        let spec = specs.get(i).cloned().unwrap_or_default();
+        slots.push(replica_slot(&args, &spec, &model, backend, &tok)?);
+    }
+    let policy = match args.get("policy")?.as_str() {
+        "affinity" => RoutingPolicy::Affinity,
+        "round-robin" | "rr" => RoutingPolicy::RoundRobin,
+        p => anyhow::bail!("unknown policy {p:?} (affinity|round-robin)"),
+    };
+    let router_config = RouterConfig {
+        replicas,
+        policy,
+        // affinity key = the first KV page of the *base* config, the unit
+        // the prefix cache shares; slab engines fall back to 16 tokens
+        affinity_tokens: if page_size > 0 { page_size } else { 16 },
+        spill_threshold: args.get_usize("spill-threshold")?,
+        max_retries: args.get_usize("max-retries")?,
+        retry_backoff: Duration::from_millis(args.get_usize("retry-backoff-ms")? as u64),
+        dispatch_timeout: Duration::from_millis(args.get_usize("dispatch-timeout-ms")? as u64),
+        auto_restart: !args.has_flag("no-auto-restart"),
+    };
+    let r = Router::new_fleet(slots, router_config)?;
+    let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
+    let io_timeout = Duration::from_millis(args.get_usize("client-io-timeout-ms")? as u64);
+    let (jobs, port) = api::spawn_listener_with(&addr, tok.clone(), io_timeout)?;
+    println!(
+        "routing {replicas} replicas of {model} [base {}] policy={} on 127.0.0.1:{port} — \
+         line-JSON protocol v2 (docs/API.md); {{\"stats\":true}} returns per-replica config, \
+         {{\"upgrade\":...}} rolls the fleet onto a new one",
+        args.get("arch")?,
+        args.get("policy")?
+    );
+    // wire upgrades resolve through the same overlay grammar as --replica:
+    // {"all": spec} or a bare spec applies one overlay fleet-wide,
+    // {"replicas": [spec, ...]} gives each slot its own
+    let build_upgrade = |upgrade_spec: &Json| -> Result<Vec<ReplicaSlotConfig>> {
+        let per_slot: Vec<ReplicaSpec> = if let Some(list) = upgrade_spec.opt("replicas") {
+            list.as_arr()?
+                .iter()
+                .map(ReplicaSpec::from_json)
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            let spec = match upgrade_spec.opt("all") {
+                Some(v) => ReplicaSpec::from_json(v)?,
+                None => ReplicaSpec::from_json(upgrade_spec)?,
+            };
+            vec![spec; replicas]
+        };
+        anyhow::ensure!(
+            per_slot.len() == replicas,
+            "upgrade lists {} replica specs but the fleet has {replicas}",
+            per_slot.len()
+        );
+        per_slot
+            .iter()
+            .map(|sp| replica_slot(&args, sp, &model, backend, &tok))
+            .collect()
+    };
+    router::route_forever(&r, jobs, args.get_usize("max-requests")?, Some(&build_upgrade))
+}
+
+/// Resolve one replica's recipe — the `--replica`-style overlay `spec`
+/// over the fleet-wide base flags — into a [`ReplicaSlotConfig`]: a
+/// factory the router (re)spawns the slot from, plus the stats-visible
+/// config description. Model, backend and seed stay fleet-wide so every
+/// replica tokenizes and samples bitwise identically.
+fn replica_slot(
+    args: &Args,
+    spec: &ReplicaSpec,
+    model: &str,
+    backend: BackendKind,
+    tok: &Tokenizer,
+) -> Result<ReplicaSlotConfig> {
+    let s = |key: &str| -> Result<String> {
+        match spec.get(key) {
+            Some(v) => Ok(v.to_string()),
+            None => args.get(key),
+        }
+    };
+    let n = |key: &str| -> Result<usize> {
+        let v = s(key)?;
+        v.parse().map_err(|e| anyhow::anyhow!("replica spec {key}={v}: {e}"))
+    };
+    let arch = Arch::parse(&s("arch")?)?;
+    let tp = n("tp")?;
+    let batch = n("batch")?;
+    let fabric = s("fabric")?;
+    let codec = Codec::parse(&s("codec")?)?;
+    let runtime = RuntimeKind::parse(&s("runtime")?)?;
+    let overlap = OverlapMode::parse(&s("overlap")?)?;
+    let page_size = n("page-size")?;
+    let kv_budget = n("kv-budget-mb")? << 20;
+    let prefix_cache = match spec.get("prefix-cache") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("replica spec prefix-cache={v}: expected true|false"))?,
+        None => args.has_flag("prefix-cache"),
+    };
+    if prefix_cache && page_size == 0 {
+        anyhow::bail!("prefix-cache needs a paged KV layout (set page-size > 0)");
     }
     let batcher_config = BatcherConfig {
-        decode_burst: args.get_usize("decode-burst")?,
-        kv_budget_bytes: args.get_usize("kv-budget-mb")? * (1 << 20),
-        prefill_chunk: args.get_usize("prefill-chunk")?,
-        prefix_cache: args.has_flag("prefix-cache"),
+        decode_burst: n("decode-burst")?,
+        kv_budget_bytes: kv_budget,
+        prefill_chunk: n("prefill-chunk")?,
+        prefix_cache,
     };
     let seed = args.get_usize("seed")? as u64;
-    let tp = args.get_usize("tp")?;
-    let arch = Arch::parse(&args.get("arch")?)?;
-    let batch = args.get_usize("batch")?;
-    let fabric = args.get("fabric")?;
-    let codec = Codec::parse(&args.get("codec")?)?;
-    let runtime = RuntimeKind::parse(&args.get("runtime")?)?;
-    let overlap = OverlapMode::parse(&args.get("overlap")?)?;
-    let kv_budget = args.get_usize("kv-budget-mb")? << 20;
-    let factory_tok = tok.clone();
-    let factory_model = model.clone();
+    let desc = Json::obj()
+        .set("arch", arch.name())
+        .set("tp", tp)
+        .set("batch", batch)
+        .set("fabric", fabric.as_str())
+        .set("codec", codec.name())
+        .set("runtime", runtime.name())
+        .set("overlap", overlap.name())
+        .set("page_size", page_size)
+        .set("prefix_cache", prefix_cache);
+    let model = model.to_string();
+    let tok = tok.clone();
     let factory: ReplicaFactory = Arc::new(move || {
-        let exec = Rc::new(Exec::open(&factory_model, backend)?);
+        let exec = Rc::new(Exec::open(&model, backend)?);
         let cfg = exec.cfg().clone();
         // same weight-selection rule as `build_engine`: every replica
         // (and every respawn) is bitwise the same model
-        let weights = match (factory_model.as_str(), exec.artifacts_opt()) {
+        let weights = match (model.as_str(), exec.artifacts_opt()) {
             ("tiny", Some(art)) => {
                 let flat = art.read_f32("testvec_weights.f32")?;
                 WeightStore::from_flat(&flat, art.packing()?, cfg.layers)?
@@ -321,39 +437,9 @@ fn cmd_router(argv: Vec<String>) -> Result<()> {
             codec,
             overlap,
         )?;
-        Ok(Batcher::with_tokenizer(engine, batcher_config.clone(), factory_tok.clone()))
+        Ok(Batcher::with_tokenizer(engine, batcher_config.clone(), tok.clone()))
     });
-    let policy = match args.get("policy")?.as_str() {
-        "affinity" => RoutingPolicy::Affinity,
-        "round-robin" | "rr" => RoutingPolicy::RoundRobin,
-        p => anyhow::bail!("unknown policy {p:?} (affinity|round-robin)"),
-    };
-    let router_config = RouterConfig {
-        replicas: args.get_usize("replicas")?,
-        policy,
-        // affinity key = the first KV page, the unit the prefix cache
-        // shares; slab engines fall back to the default head length
-        affinity_tokens: if page_size > 0 { page_size } else { 16 },
-        spill_threshold: args.get_usize("spill-threshold")?,
-        max_retries: args.get_usize("max-retries")?,
-        retry_backoff: Duration::from_millis(args.get_usize("retry-backoff-ms")? as u64),
-        dispatch_timeout: Duration::from_millis(args.get_usize("dispatch-timeout-ms")? as u64),
-        auto_restart: !args.has_flag("no-auto-restart"),
-    };
-    let replicas = router_config.replicas;
-    let r = Router::new(factory, router_config)?;
-    let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
-    let io_timeout = Duration::from_millis(args.get_usize("client-io-timeout-ms")? as u64);
-    let (jobs, port) = api::spawn_listener_with(&addr, tok, io_timeout)?;
-    println!(
-        "routing {replicas} replicas of {} [{}] tp={tp} codec={} policy={} on 127.0.0.1:{port} — \
-         line-JSON protocol v2 (docs/API.md); {{\"stats\":true}} returns the fleet snapshot",
-        model,
-        args.get("arch")?,
-        codec.name(),
-        args.get("policy")?
-    );
-    router::route_forever(&r, jobs, args.get_usize("max-requests")?)
+    Ok(ReplicaSlotConfig::with_desc(factory, desc))
 }
 
 fn cmd_tables(argv: Vec<String>) -> Result<()> {

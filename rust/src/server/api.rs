@@ -65,6 +65,12 @@ pub enum ApiJob {
     /// `prefix_hit_tokens` / `prefix_cached_pages` /
     /// `prefix_evicted_pages`; see docs/API.md).
     Stats { respond: Sender<crate::util::json::Json> },
+    /// `{"upgrade": ...}` — fleet-mode rolling upgrade: the spec names
+    /// one replica config overlay per slot (or one for all). A single
+    /// `serve` process (and a fleet booted without an upgrade builder)
+    /// rejects the frame with an `error` reply; the fleet keeps serving
+    /// either way (docs/API.md).
+    Upgrade { spec: crate::util::json::Json, respond: Sender<crate::util::json::Json> },
 }
 
 /// Spawn the TCP acceptor with the default dead-client timeout; returns
@@ -149,6 +155,26 @@ fn handle_conn(
                 // on a read forever
                 Err(_) => {
                     write_line(&w, &Json::obj().set("error", "stats timeout"));
+                }
+            });
+            continue;
+        }
+        if let Some(spec) = msg.opt("upgrade") {
+            let (utx, urx) = channel();
+            let job = ApiJob::Upgrade { spec: spec.clone(), respond: utx };
+            if tx.send(job).is_err() {
+                write_line(&writer, &Json::obj().set("error", "engine loop gone"));
+                return Ok(());
+            }
+            // replied from its own thread, like stats: the control loop's
+            // acknowledgement must not block this connection's reader
+            let w = writer.clone();
+            std::thread::spawn(move || match urx.recv_timeout(io_timeout) {
+                Ok(reply) => {
+                    write_line(&w, &reply);
+                }
+                Err(_) => {
+                    write_line(&w, &Json::obj().set("error", "upgrade timeout"));
                 }
             });
             continue;
@@ -339,17 +365,25 @@ fn render_done(r: &RequestResult, tok: &Tokenizer) -> Json {
 /// Feed one socket-side job into the batcher; returns how many requests
 /// reached a terminal state doing so. `started` anchors the wall clock the
 /// stats snapshot's throughput is computed over.
-fn apply_job(batcher: &mut Batcher, job: ApiJob, started: std::time::Instant) -> usize {
+fn apply_job(batcher: &mut Batcher, job: ApiJob, started: std::time::Instant) -> Result<usize> {
     match job {
         ApiJob::Submit { request, respond } => {
             batcher.submit_streaming(request, respond);
-            0
+            Ok(0)
         }
-        ApiJob::Cancel { id } => usize::from(batcher.cancel(id).is_some()),
+        ApiJob::Cancel { id } => Ok(usize::from(batcher.cancel(id)?.is_some())),
         ApiJob::Stats { respond } => {
             // a dropped receiver (client gone) is fine — nothing to clean up
             let _ = respond.send(batcher.stats_report(started.elapsed().as_secs_f64()));
-            0
+            Ok(0)
+        }
+        ApiJob::Upgrade { respond, .. } => {
+            // rolling upgrades are a fleet operation — a single batcher
+            // has no slot set to wave over
+            let _ = respond.send(
+                Json::obj().set("error", "upgrade requires fleet mode (the router subcommand)"),
+            );
+            Ok(0)
         }
     }
 }
@@ -369,7 +403,7 @@ pub fn serve_forever(
         // admit everything currently queued on the socket side
         loop {
             match jobs.try_recv() {
-                Ok(job) => served += apply_job(batcher, job, started),
+                Ok(job) => served += apply_job(batcher, job, started)?,
                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => return Ok(()),
             }
@@ -377,7 +411,7 @@ pub fn serve_forever(
         if batcher.pending() == 0 {
             // idle: block briefly for the next job
             match jobs.recv_timeout(Duration::from_millis(50)) {
-                Ok(job) => served += apply_job(batcher, job, started),
+                Ok(job) => served += apply_job(batcher, job, started)?,
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => return Ok(()),
             }

@@ -48,7 +48,7 @@ use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::metrics::ServerMetrics;
 use super::request::{itl_p50, FinishReason, GenerationEvent, Request, RequestResult};
@@ -133,6 +133,10 @@ pub struct Batcher {
     /// Draining: admission is closed and queued requests bounce with a
     /// retryable `Error` event; in-flight slots run to completion.
     draining: bool,
+    /// The last admission pass ended with the queue head blocked for lack
+    /// of KV pages — the backpressure signal the router folds into its
+    /// routing weights.
+    admission_stalled: bool,
 }
 
 /// Reason string on the `Error` event a draining batcher bounces queued
@@ -173,6 +177,7 @@ impl Batcher {
             sinks: HashMap::new(),
             tokenizer: None,
             draining: false,
+            admission_stalled: false,
         }
     }
 
@@ -262,6 +267,13 @@ impl Batcher {
         self.queue.len() + self.live()
     }
 
+    /// Did the last admission pass leave the queue head blocked on KV
+    /// pages? A router treats a stalled replica as backed up past its
+    /// spill threshold regardless of how few dispatches it holds.
+    pub fn admission_stalled(&self) -> bool {
+        self.admission_stalled
+    }
+
     /// Begin a graceful drain: admission closes permanently and every
     /// queued (not yet admitted) request is bounced immediately with a
     /// retryable `Error` event — another replica can serve it. Requests
@@ -301,8 +313,17 @@ impl Batcher {
     /// overlap fractions (docs/API.md).
     pub fn stats_report(&self, wall_secs: f64) -> crate::util::json::Json {
         let comm = self.engine.comm.stats();
+        let page_size = match self.engine.kv_layout() {
+            KvLayout::Slab => 0,
+            KvLayout::Paged { page_size, .. } => page_size,
+        };
         self.metrics
             .report(wall_secs)
+            .set("arch", self.engine.arch.name())
+            .set("tp", self.engine.tp)
+            .set("page_size", page_size)
+            .set("runtime", self.engine.runtime.name())
+            .set("overlap", self.engine.overlap.name())
             .set("codec", self.engine.codec().name())
             .set("comm_allreduces", comm.allreduce_count)
             .set("comm_bytes_moved", comm.bytes_moved)
@@ -375,19 +396,26 @@ impl Batcher {
     /// Abort an in-flight or queued request. The slot and its KV (slab
     /// region or pages) are freed immediately; the terminal `Finished`
     /// event (reason `Cancelled`, partial tokens) is routed to the sink and
-    /// returned. `None` if the id is unknown (already finished, or never
-    /// submitted).
-    pub fn cancel(&mut self, id: u64) -> Option<GenerationEvent> {
+    /// returned. `Ok(None)` if the id is unknown (already finished, or
+    /// never submitted); `Err` only on internal-state corruption (a live
+    /// slot without its page table), which the caller should treat as a
+    /// replica-fatal engine error.
+    pub fn cancel(&mut self, id: u64) -> Result<Option<GenerationEvent>> {
         if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
-            let request = self.queue.remove(pos).expect("position came from iter");
+            let Some(request) = self.queue.remove(pos) else {
+                return Ok(None); // raced: position came from this queue
+            };
             let queued = request.arrived.elapsed().as_secs_f64();
-            return Some(self.finish_unstarted(request, queued, FinishReason::Cancelled));
+            return Ok(Some(self.finish_unstarted(request, queued, FinishReason::Cancelled)));
         }
-        let slot = self
+        let Some(slot) = self
             .slots
             .iter()
-            .position(|s| s.as_ref().is_some_and(|st| st.request.id == id))?;
-        Some(self.finish_slot(slot, FinishReason::Cancelled))
+            .position(|s| s.as_ref().is_some_and(|st| st.request.id == id))
+        else {
+            return Ok(None);
+        };
+        Ok(Some(self.finish_slot(slot, FinishReason::Cancelled)?))
     }
 
     /// One scheduler iteration: admit waiting requests (into free slots,
@@ -412,6 +440,9 @@ impl Batcher {
     /// whole prompt inline, exactly as before; paged engines only claim the
     /// slot + reservation here and leave the prompt to `advance_prefills`.
     fn admit(&mut self, events: &mut Vec<GenerationEvent>) -> Result<()> {
+        // recomputed every pass: the stall flag reflects the *current*
+        // admission state, not a historical one
+        self.admission_stalled = false;
         if self.draining {
             // drained admission never reopens: late submissions bounce
             // with the same retryable error the drain itself issued
@@ -507,6 +538,7 @@ impl Batcher {
                     }
                     if !alloc.can_admit_chain(reserve, &chain) {
                         self.metrics.admission_blocked += 1;
+                        self.admission_stalled = true;
                         self.queue.push_front(request);
                         return Ok(());
                     }
@@ -579,7 +611,9 @@ impl Batcher {
                     // trailing-page copy-on-write: the final prompt token's
                     // KV row is re-prefilled into a private bitwise copy of
                     // the shared page
-                    let table = alloc.table(st.request.id).expect("just admitted");
+                    let table = alloc
+                        .table(st.request.id)
+                        .ok_or_else(|| anyhow!("admitted request lost its page table"))?;
                     self.engine.copy_page(src, table.pages[chain.len()])?;
                 }
                 if self.prefix.is_some() {
@@ -602,7 +636,7 @@ impl Batcher {
             self.metrics.prefill_tokens += plen;
             let logits = self.engine.prefill_slot(slot, &padded, bucket, plen)?;
             self.slots[slot] = Some(st);
-            self.complete_prefill(slot, logits, events);
+            self.complete_prefill(slot, logits, events)?;
         }
         Ok(())
     }
@@ -616,8 +650,10 @@ impl Batcher {
         slot: usize,
         logits: Vec<f32>,
         events: &mut Vec<GenerationEvent>,
-    ) {
-        let st = self.slots[slot].as_mut().expect("complete_prefill on empty slot");
+    ) -> Result<()> {
+        let st = self.slots[slot]
+            .as_mut()
+            .ok_or_else(|| anyhow!("complete_prefill on an empty slot"))?;
         let logits_t = HostTensor::new(vec![1, logits.len()], logits);
         let first = st.request.sampler.sample(&logits_t, &mut st.rng)[0];
         self.metrics.queued_secs.add(st.queued_secs);
@@ -627,7 +663,7 @@ impl Batcher {
         st.next_token = first;
         st.prefill_done = now;
         st.last_token_at = now;
-        self.push_token(slot, first, events);
+        self.push_token(slot, first, events)
     }
 
     /// Paged chunked prefill: every slot still consuming its prompt runs
@@ -656,19 +692,21 @@ impl Batcher {
             let table = self
                 .alloc
                 .as_ref()
-                .expect("paged mode")
+                .ok_or_else(|| anyhow!("chunked prefill without an allocator"))?
                 .table(id)
-                .expect("admitted request has a table")
+                .ok_or_else(|| anyhow!("admitted request lost its page table"))?
                 .pages
                 .clone();
             self.metrics.prefill_tokens += chunk;
             let logits = self.engine.prefill_chunk_slot(slot, &tokens, consumed, &table)?;
             if consumed + chunk < total {
-                let st = self.slots[slot].as_mut().expect("slot checked above");
+                let st = self.slots[slot]
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("prefilling slot emptied mid-chunk"))?;
                 st.phase = SlotPhase::Prefill { consumed: consumed + chunk };
                 continue;
             }
-            self.complete_prefill(slot, logits, events);
+            self.complete_prefill(slot, logits, events)?;
         }
         Ok(())
     }
@@ -742,7 +780,7 @@ impl Batcher {
                     );
                     st.request.sampler.sample(&row, &mut st.rng)[0]
                 };
-                self.push_token(slot, tok, events);
+                self.push_token(slot, tok, events)?;
             }
             if decoding(&self.slots) == 0 {
                 break;
@@ -753,9 +791,16 @@ impl Batcher {
 
     /// Record one sampled token into `slot`: emit its `Token` event, then
     /// finish the slot if a terminal condition (or a dead sink) is hit.
-    fn push_token(&mut self, slot: usize, tok: i32, events: &mut Vec<GenerationEvent>) {
+    fn push_token(
+        &mut self,
+        slot: usize,
+        tok: i32,
+        events: &mut Vec<GenerationEvent>,
+    ) -> Result<()> {
         let (id, index, text_delta, finish) = {
-            let st = self.slots[slot].as_mut().expect("push_token on empty slot");
+            let st = self.slots[slot]
+                .as_mut()
+                .ok_or_else(|| anyhow!("push_token on an empty slot"))?;
             let now = Instant::now();
             if !st.generated.is_empty() {
                 let gap = (now - st.last_token_at).as_secs_f64();
@@ -791,18 +836,21 @@ impl Batcher {
         events.push(ev);
         if !client_alive {
             // nobody is reading: free the slot instead of decoding on
-            events.push(self.finish_slot(slot, FinishReason::Cancelled));
+            events.push(self.finish_slot(slot, FinishReason::Cancelled)?);
         } else if let Some(reason) = finish {
-            events.push(self.finish_slot(slot, reason));
+            events.push(self.finish_slot(slot, reason)?);
         }
+        Ok(())
     }
 
     /// Terminate a live slot: publish the prompt's full pages to the
     /// prefix tree (when enabled), release its KV (unreferenced pages
     /// return to the free list immediately on paged engines), record
     /// metrics, route and return the `Finished` event.
-    fn finish_slot(&mut self, slot: usize, reason: FinishReason) -> GenerationEvent {
-        let st = self.slots[slot].take().expect("finish_slot on empty slot");
+    fn finish_slot(&mut self, slot: usize, reason: FinishReason) -> Result<GenerationEvent> {
+        let st = self.slots[slot]
+            .take()
+            .ok_or_else(|| anyhow!("finish_slot on an empty slot"))?;
         // publish before the allocator drops this request's references so
         // the tree can retain the pages instead of letting them free.
         // Cancelled requests publish what they actually wrote — a chunked
@@ -812,10 +860,11 @@ impl Batcher {
             let covered = written.min(st.request.prompt.len());
             let full = covered / tree.page_size();
             if full > 0 {
-                let table = alloc.table(st.request.id).expect("live paged slot has a table");
+                let table = alloc
+                    .table(st.request.id)
+                    .ok_or_else(|| anyhow!("live paged slot lost its page table"))?;
                 let pages = table.pages[..full].to_vec();
-                tree.insert(&st.request.prompt[..full * tree.page_size()], &pages, alloc)
-                    .expect("publish: pages are owned by the finishing request");
+                tree.insert(&st.request.prompt[..full * tree.page_size()], &pages, alloc)?;
             }
         }
         let now = Instant::now();
@@ -838,7 +887,7 @@ impl Batcher {
         let ev = GenerationEvent::Finished { result };
         self.route(&ev);
         self.sinks.remove(&ev.id());
-        ev
+        Ok(ev)
     }
 
     /// Terminate a request that never reached a slot with a `Finished`

@@ -1,0 +1,166 @@
+//! Per-replica configuration overlays for heterogeneous fleets.
+//!
+//! A fleet is described as a fleet-wide **base** (the ordinary engine
+//! flags: `--arch`, `--tp`, `--page-size`, ...) plus zero or more
+//! per-slot **overlays**, each a comma-separated `key=value` spec:
+//!
+//! ```text
+//! --replica arch=ladder,tp=2,page-size=8 --replica arch=standard
+//! ```
+//!
+//! Overlay keys reuse the CLI flag names, so a spec reads exactly like
+//! the flags it overrides. Only engine-shape keys are accepted — model,
+//! backend and seed stay fleet-wide (every replica must tokenize and
+//! sample identically, or the router's bitwise retry/upgrade oracle
+//! breaks). The same grammar arrives over the wire in the
+//! `{"upgrade": ...}` control frame, as either a spec string or a JSON
+//! object of scalars (see `docs/API.md`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Keys an overlay may override; everything else is fleet-wide.
+pub const REPLICA_KEYS: &[&str] = &[
+    "arch",
+    "tp",
+    "batch",
+    "fabric",
+    "codec",
+    "runtime",
+    "overlap",
+    "page-size",
+    "kv-budget-mb",
+    "prefill-chunk",
+    "prefix-cache",
+    "decode-burst",
+];
+
+/// One replica's configuration overlay: the subset of engine flags this
+/// slot overrides. An empty spec means "exactly the fleet-wide base".
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    overrides: BTreeMap<String, String>,
+}
+
+impl ReplicaSpec {
+    /// Parse a `key=value,key=value` spec string. A bare `key` (no `=`)
+    /// is shorthand for `key=true`, matching boolean flags like
+    /// `prefix-cache`.
+    pub fn parse(spec: &str) -> Result<ReplicaSpec> {
+        let mut overrides = BTreeMap::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("replica spec {spec:?} has an empty segment");
+            }
+            let (key, value) = match part.split_once('=') {
+                Some((k, v)) => (k.trim(), v.trim()),
+                None => (part, "true"),
+            };
+            if !REPLICA_KEYS.contains(&key) {
+                bail!(
+                    "replica spec key {key:?} is not overridable per-slot \
+                     (allowed: {})",
+                    REPLICA_KEYS.join(", ")
+                );
+            }
+            if value.is_empty() {
+                bail!("replica spec key {key:?} has an empty value");
+            }
+            if overrides.insert(key.to_string(), value.to_string()).is_some() {
+                bail!("replica spec sets {key:?} twice");
+            }
+        }
+        Ok(ReplicaSpec { overrides })
+    }
+
+    /// Parse a wire-side spec: either a spec string (`"arch=ladder,tp=2"`)
+    /// or an object of scalar overrides (`{"arch":"ladder","tp":2}`).
+    pub fn from_json(v: &Json) -> Result<ReplicaSpec> {
+        match v {
+            Json::Str(s) => ReplicaSpec::parse(s),
+            Json::Obj(map) => {
+                let mut flat = Vec::new();
+                for (key, val) in map {
+                    let rendered = match val {
+                        Json::Str(s) => s.clone(),
+                        Json::Bool(b) => b.to_string(),
+                        Json::Num(n) if n.fract() == 0.0 && n.is_finite() => {
+                            format!("{}", *n as i64)
+                        }
+                        Json::Num(n) => n.to_string(),
+                        other => bail!("replica spec key {key:?} has a non-scalar value {other:?}"),
+                    };
+                    flat.push(format!("{key}={rendered}"));
+                }
+                if flat.is_empty() {
+                    return Ok(ReplicaSpec::default());
+                }
+                ReplicaSpec::parse(&flat.join(","))
+            }
+            other => bail!("replica spec must be a string or object, got {other:?}"),
+        }
+    }
+
+    /// The overlay value for `key`, if this spec overrides it.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.overrides.get(key).map(String::as_str)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.overrides.is_empty()
+    }
+
+    /// Render the overlay as a JSON object (for stats/debug surfaces).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (k, v) in &self.overrides {
+            obj = obj.set(k, v.as_str());
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pairs_and_bare_flags() {
+        let s = ReplicaSpec::parse("arch=ladder, tp=2 ,prefix-cache").unwrap();
+        assert_eq!(s.get("arch"), Some("ladder"));
+        assert_eq!(s.get("tp"), Some("2"));
+        assert_eq!(s.get("prefix-cache"), Some("true"));
+        assert_eq!(s.get("page-size"), None);
+    }
+
+    #[test]
+    fn rejects_unknown_duplicate_and_empty() {
+        assert!(ReplicaSpec::parse("model=tiny").is_err());
+        assert!(ReplicaSpec::parse("tp=2,tp=4").is_err());
+        assert!(ReplicaSpec::parse("tp=").is_err());
+        assert!(ReplicaSpec::parse("arch=ladder,,tp=2").is_err());
+    }
+
+    #[test]
+    fn from_json_accepts_string_and_object() {
+        let s = ReplicaSpec::from_json(&Json::Str("arch=ladder".into())).unwrap();
+        assert_eq!(s.get("arch"), Some("ladder"));
+        let obj = Json::obj().set("tp", 4usize).set("prefix-cache", true);
+        let s = ReplicaSpec::from_json(&obj).unwrap();
+        assert_eq!(s.get("tp"), Some("4"));
+        assert_eq!(s.get("prefix-cache"), Some("true"));
+        assert!(ReplicaSpec::from_json(&Json::Num(3.0)).is_err());
+        assert!(ReplicaSpec::from_json(&Json::obj().set("model", "tiny")).is_err());
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let s = ReplicaSpec::parse("arch=standard,page-size=4").unwrap();
+        let back = ReplicaSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+    }
+}

@@ -21,11 +21,15 @@
 
 pub mod api;
 pub mod batcher;
+pub mod fleet;
 pub mod metrics;
 pub mod request;
 pub mod router;
 
 pub use batcher::{Batcher, BatcherConfig};
+pub use fleet::ReplicaSpec;
 pub use metrics::ServerMetrics;
 pub use request::{FinishReason, GenerationEvent, Request, RequestResult};
-pub use router::{ReplicaFactory, Router, RouterConfig, RoutingPolicy};
+pub use router::{
+    ReplicaFactory, ReplicaSlotConfig, Router, RouterConfig, RoutingPolicy, UpgradeBuilder,
+};

@@ -31,10 +31,24 @@
 //!   retires the thread. **Crash-restart** respawns a dead replica from
 //!   the factory (prefix cache cold) — automatic under
 //!   `auto_restart`, or explicit via [`Router::restart`].
-//! * Dispatch is bounded: per-request attempts are capped at
-//!   `max_retries`, redispatches back off linearly on `retry_backoff`,
-//!   and a request that cannot be placed within `dispatch_timeout` fails
-//!   with a retryable `Error` event instead of queueing forever.
+//! * Dispatch is bounded: every failed placement — replica loss, an
+//!   empty fleet, a raced replica death — funnels through one
+//!   [`Control::schedule_retry`] ledger, so per-request attempts are
+//!   capped at `max_retries`, redispatches back off linearly on
+//!   `retry_backoff` (attempt k waits k × base), and a request that
+//!   cannot be placed within `dispatch_timeout` fails with a retryable
+//!   `Error` event instead of queueing forever.
+//!
+//! The fleet is **heterogeneous**: each slot carries its own
+//! [`ReplicaSlotConfig`] — factory plus a JSON description of the config
+//! it realizes — so a ladder replica can serve next to a standard one
+//! under identical live traffic (the paper's fleet-level A/B). Routing
+//! weights each replica by **backpressure**, not just the router-side
+//! outstanding count: replica threads report their queue depth and
+//! admission-blocked flag, and a blocked replica always looks
+//! past-threshold to the spill rule. A **rolling upgrade**
+//! ([`Router::upgrade`]) swaps every slot's config in drain→respawn
+//! waves, one replica at a time, serving throughout.
 //!
 //! The control loop owns all routing state on one thread; replicas,
 //! forwarders and clients talk to it through one mpsc channel, so there
@@ -59,6 +73,33 @@ use crate::util::json::Json;
 /// is the respawn recipe too: a crash-restarted replica is bitwise a
 /// fresh one (same weights, cold prefix cache).
 pub type ReplicaFactory = Arc<dyn Fn() -> Result<Batcher> + Send + Sync>;
+
+/// One slot's replica recipe: the factory that builds (and respawns) it,
+/// plus a JSON description of the configuration the factory realizes —
+/// surfaced verbatim as the replica's `config` in the fleet stats
+/// snapshot so operators and the A/B harness can tell slots apart.
+#[derive(Clone)]
+pub struct ReplicaSlotConfig {
+    pub factory: ReplicaFactory,
+    pub desc: Json,
+}
+
+impl ReplicaSlotConfig {
+    /// A slot with no advertised description (`config: null` in stats).
+    pub fn new(factory: ReplicaFactory) -> ReplicaSlotConfig {
+        ReplicaSlotConfig { factory, desc: Json::Null }
+    }
+
+    pub fn with_desc(factory: ReplicaFactory, desc: Json) -> ReplicaSlotConfig {
+        ReplicaSlotConfig { factory, desc }
+    }
+}
+
+/// Builds the per-slot configs a `{"upgrade":...}` wire frame asks for.
+/// The CLI supplies one that resolves `--replica`-style spec overlays
+/// against its base engine flags; fleet servers booted without a builder
+/// reject the frame.
+pub type UpgradeBuilder<'a> = &'a dyn Fn(&Json) -> Result<Vec<ReplicaSlotConfig>>;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutingPolicy {
@@ -140,6 +181,12 @@ enum RouterMsg {
     Drain { replica: usize },
     Kill { replica: usize },
     Restart { replica: usize },
+    /// Replica thread: batcher-side load report (queue depth plus the
+    /// admission-blocked flag) feeding backpressure-weighted routing.
+    Load { replica: usize, epoch: u64, pending: usize, blocked: bool },
+    /// Begin a rolling upgrade: one drain→respawn-with-new-config wave
+    /// per replica, lowest index first, serving throughout.
+    Upgrade { slots: Vec<ReplicaSlotConfig>, respond: Sender<Json> },
     Stats { respond: Sender<Json> },
     Shutdown,
 }
@@ -153,11 +200,27 @@ pub struct Router {
 }
 
 impl Router {
+    /// A homogeneous fleet: every slot runs the same factory.
     pub fn new(factory: ReplicaFactory, config: RouterConfig) -> Result<Router> {
-        anyhow::ensure!(config.replicas > 0, "router needs at least one replica");
+        let slots = (0..config.replicas)
+            .map(|_| ReplicaSlotConfig::new(factory.clone()))
+            .collect();
+        Router::new_fleet(slots, config)
+    }
+
+    /// A heterogeneous fleet: slot i runs `slots[i]`'s factory and
+    /// advertises its description. `config.replicas` must match.
+    pub fn new_fleet(slots: Vec<ReplicaSlotConfig>, config: RouterConfig) -> Result<Router> {
+        anyhow::ensure!(!slots.is_empty(), "router needs at least one replica");
+        anyhow::ensure!(
+            slots.len() == config.replicas,
+            "fleet has {} replica configs but the router config says {}",
+            slots.len(),
+            config.replicas
+        );
         let (ctl_tx, ctl_rx) = channel();
         let completed = Arc::new(AtomicUsize::new(0));
-        let mut control = Control::new(factory, config, ctl_tx.clone(), completed.clone());
+        let mut control = Control::new(slots, config, ctl_tx.clone(), completed.clone());
         let thread = std::thread::spawn(move || control.run(ctl_rx));
         Ok(Router { ctl: ctl_tx, thread: Some(thread), completed })
     }
@@ -192,6 +255,23 @@ impl Router {
         let _ = self.ctl.send(RouterMsg::Restart { replica });
     }
 
+    /// Rolling upgrade: install one new [`ReplicaSlotConfig`] per slot in
+    /// drain→respawn waves, one replica at a time, so the fleet keeps
+    /// serving throughout. Returns the control loop's acknowledgement
+    /// (`{"upgrade":"started","waves":N}` or an `error` object — e.g. an
+    /// upgrade already in progress, or a config-count mismatch); progress
+    /// is observable via [`Router::stats`]'s top-level `upgrade` field. A
+    /// replica that is already down at its wave adopts the new config
+    /// without a forced respawn — it boots with it on its next restart.
+    pub fn upgrade(&self, slots: Vec<ReplicaSlotConfig>) -> Result<Json> {
+        let (tx, rx) = channel();
+        self.ctl
+            .send(RouterMsg::Upgrade { slots, respond: tx })
+            .map_err(|_| anyhow::anyhow!("router control loop gone"))?;
+        rx.recv_timeout(Duration::from_secs(30))
+            .map_err(|_| anyhow::anyhow!("router upgrade acknowledgement timeout"))
+    }
+
     /// Terminal events delivered to clients so far (completions, errors,
     /// duplicate rejections alike).
     pub fn completed(&self) -> usize {
@@ -221,14 +301,32 @@ impl Drop for Router {
 
 /// Bridge the TCP listener's job channel onto a router (the fleet-mode
 /// `serve_forever`). Runs until `max_requests` terminal events (0 =
-/// forever) or the listener goes away.
-pub fn route_forever(router: &Router, jobs: Receiver<ApiJob>, max_requests: usize) -> Result<()> {
+/// forever) or the listener goes away. `upgrade` turns `{"upgrade":...}`
+/// wire frames into per-slot configs; without one the frame is rejected
+/// with an `error` reply (the fleet still serves).
+pub fn route_forever(
+    router: &Router,
+    jobs: Receiver<ApiJob>,
+    max_requests: usize,
+    upgrade: Option<UpgradeBuilder>,
+) -> Result<()> {
     loop {
         match jobs.recv_timeout(Duration::from_millis(50)) {
             Ok(ApiJob::Submit { request, respond }) => router.submit(request, respond),
             Ok(ApiJob::Cancel { id }) => router.cancel(id),
             Ok(ApiJob::Stats { respond }) => {
                 let _ = respond.send(router.stats()?);
+            }
+            Ok(ApiJob::Upgrade { spec, respond }) => {
+                let reply = match upgrade {
+                    None => Json::obj()
+                        .set("error", "this fleet does not accept wire upgrades"),
+                    Some(build) => match build(&spec) {
+                        Ok(slots) => router.upgrade(slots)?,
+                        Err(e) => Json::obj().set("error", format!("bad upgrade spec: {e}")),
+                    },
+                };
+                let _ = respond.send(reply);
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => return Ok(()),
@@ -263,7 +361,9 @@ struct RouteRecord {
     last_loss: String,
 }
 
-/// One replica slot as the control loop sees it.
+/// One replica slot as the control loop sees it. The slot owns its own
+/// recipe (`factory`/`desc`): a respawn — automatic, explicit, or an
+/// upgrade wave — always boots whatever config the slot currently holds.
 struct Slot {
     jobs: Option<Sender<ReplicaJob>>,
     thread: Option<JoinHandle<()>>,
@@ -274,15 +374,33 @@ struct Slot {
     /// Dispatches routed here that have not settled (router-side load
     /// signal for spillover).
     outstanding: usize,
+    /// This slot's build recipe and its advertised description.
+    factory: ReplicaFactory,
+    desc: Json,
+    /// Last queue depth the replica thread reported (lags `outstanding`
+    /// slightly; the weight takes the max of the two).
+    reported_pending: usize,
+    /// The replica reported its queue head blocked on KV pages — the
+    /// admission-backpressure signal.
+    reported_blocked: bool,
+}
+
+/// A rolling upgrade in progress: one wave per replica, lowest index
+/// first. `pending[i]` holds replica i's new config until its wave runs.
+struct UpgradeState {
+    pending: Vec<Option<ReplicaSlotConfig>>,
+    /// Replica currently draining for its wave (None between waves).
+    draining: Option<usize>,
+    upgraded: usize,
 }
 
 struct Control {
     cfg: RouterConfig,
-    factory: ReplicaFactory,
     ctl: Sender<RouterMsg>,
     slots: Vec<Slot>,
     records: HashMap<u64, RouteRecord>,
     completed: Arc<AtomicUsize>,
+    upgrade: Option<UpgradeState>,
     rr_next: usize,
     routed: usize,
     spilled: usize,
@@ -295,21 +413,23 @@ struct Control {
 
 impl Control {
     fn new(
-        factory: ReplicaFactory,
+        slot_cfgs: Vec<ReplicaSlotConfig>,
         cfg: RouterConfig,
         ctl: Sender<RouterMsg>,
         completed: Arc<AtomicUsize>,
     ) -> Control {
-        let slots = (0..cfg.replicas)
-            .map(|i| spawn_replica(&factory, i, 0, ctl.clone()))
+        let slots = slot_cfgs
+            .into_iter()
+            .enumerate()
+            .map(|(i, sc)| spawn_replica(sc, i, 0, ctl.clone()))
             .collect();
         Control {
             cfg,
-            factory,
             ctl,
             slots,
             records: HashMap::new(),
             completed,
+            upgrade: None,
             rr_next: 0,
             routed: 0,
             spilled: 0,
@@ -433,8 +553,24 @@ impl Control {
                 }
                 self.slots[replica].up = false;
                 self.slots[replica].jobs = None;
+                self.slots[replica].reported_pending = 0;
+                self.slots[replica].reported_blocked = false;
                 if let Some(t) = self.slots[replica].thread.take() {
                     let _ = t.join();
+                }
+                // an upgrade wave completes on its target's retirement —
+                // drained or crashed mid-drain alike: the new config was
+                // installed when the wave started, so respawn it hot
+                // (upgrades respawn even with auto_restart off)
+                if self.upgrade.as_ref().is_some_and(|u| u.draining == Some(replica)) {
+                    self.slots[replica].draining = false;
+                    self.respawn(replica);
+                    if let Some(u) = self.upgrade.as_mut() {
+                        u.draining = None;
+                        u.upgraded += 1;
+                    }
+                    self.advance_upgrade();
+                    return;
                 }
                 if crashed && built && self.cfg.auto_restart && !self.slots[replica].draining {
                     self.respawn(replica);
@@ -469,6 +605,17 @@ impl Control {
                     self.respawn(replica);
                 }
             }
+            RouterMsg::Load { replica, epoch, pending, blocked } => {
+                let s = &mut self.slots[replica];
+                if s.epoch == epoch {
+                    s.reported_pending = pending;
+                    s.reported_blocked = blocked;
+                }
+            }
+            RouterMsg::Upgrade { slots, respond } => {
+                let reply = self.start_upgrade(slots);
+                let _ = respond.send(reply);
+            }
             RouterMsg::Stats { respond } => {
                 let stats = self.stats_json();
                 let _ = respond.send(stats);
@@ -492,9 +639,35 @@ impl Control {
             self.fail(rec, &format!("stream lost: {why}"));
             return;
         }
+        self.schedule_retry(id, rec);
+    }
+
+    /// One failed placement attempt — replica loss, an empty fleet, a
+    /// raced replica death — counted against the ledger, then either a
+    /// linear-backoff redispatch is scheduled or the request fails. All
+    /// redispatch sites funnel through here so "attempt k waits k ×
+    /// `retry_backoff`", the `max_retries` cap and the dispatch deadline
+    /// hold on every path (a flat backoff that skipped the ledger would
+    /// poll a fully-down fleet forever).
+    fn schedule_retry(&mut self, id: u64, mut rec: RouteRecord) {
+        rec.attempts += 1;
+        if rec.attempts > self.cfg.max_retries {
+            let msg = format!(
+                "retries exhausted after {} attempts: {}",
+                rec.attempts, rec.last_loss
+            );
+            self.fail(rec, &msg);
+            return;
+        }
+        let elapsed = rec.first_dispatch.elapsed();
+        let Some(wait) =
+            plan_retry(rec.attempts, self.cfg.retry_backoff, elapsed, self.cfg.dispatch_timeout)
+        else {
+            self.fail(rec, "dispatch timeout: no replica accepted the request");
+            return;
+        };
         self.retries += 1;
-        let backoff = self.cfg.retry_backoff * rec.attempts.max(1) as u32;
-        rec.retry_at = Some(Instant::now() + backoff);
+        rec.retry_at = Some(Instant::now() + wait);
         self.records.insert(id, rec);
     }
 
@@ -509,14 +682,6 @@ impl Control {
     fn dispatch(&mut self, id: u64) {
         let Some(mut rec) = self.records.remove(&id) else { return };
         rec.retry_at = None;
-        if rec.attempts > self.cfg.max_retries {
-            let msg = format!(
-                "retries exhausted after {} attempts: {}",
-                rec.attempts, rec.last_loss
-            );
-            self.fail(rec, &msg);
-            return;
-        }
         if rec.first_dispatch.elapsed() >= self.cfg.dispatch_timeout {
             self.fail(rec, "dispatch timeout: no replica accepted the request");
             return;
@@ -530,20 +695,24 @@ impl Control {
             .iter()
             .map(|s| s.up && !s.draining && s.jobs.is_some())
             .collect();
-        let outstanding: Vec<usize> = self.slots.iter().map(|s| s.outstanding).collect();
+        let weights: Vec<usize> = self
+            .slots
+            .iter()
+            .map(|s| slot_weight(s, self.cfg.spill_threshold))
+            .collect();
         let (target, spilled) = choose_replica(
             &rec.request.prompt[..key_len],
             &eligible,
-            &outstanding,
+            &weights,
             self.cfg.policy,
             &mut self.rr_next,
             self.cfg.spill_threshold,
         );
         let Some(target) = target else {
-            // nothing live right now (mid-restart?): back off and retry
-            // until the dispatch deadline says otherwise
-            rec.retry_at = Some(Instant::now() + self.cfg.retry_backoff);
-            self.records.insert(id, rec);
+            // nothing live right now (mid-restart?): a failed placement
+            // like any other — counted, linearly backed off, deadlined
+            rec.last_loss = "no live replica".to_string();
+            self.schedule_retry(id, rec);
             return;
         };
         let (rtx, rrx) = channel();
@@ -552,18 +721,18 @@ impl Control {
                 .is_ok()
         });
         if !sent {
-            // raced the replica's death: mark it down and back off (the
-            // forwarder was never spawned, so no Lost will race this)
+            // raced the replica's death: mark it down and retry through
+            // the same ledger (the forwarder was never spawned, so no
+            // Lost will race this)
             self.slots[target].up = false;
             self.slots[target].jobs = None;
-            rec.retry_at = Some(Instant::now() + self.cfg.retry_backoff);
-            self.records.insert(id, rec);
+            rec.last_loss = format!("replica {target} died before accepting the dispatch");
+            self.schedule_retry(id, rec);
             return;
         }
         if spilled {
             self.spilled += 1;
         }
-        rec.attempts += 1;
         rec.replica = target;
         self.slots[target].outstanding += 1;
         let suppress_admitted = rec.admitted;
@@ -585,18 +754,20 @@ impl Control {
     }
 
     fn cancel(&mut self, id: u64) {
-        let Some(rec) = self.records.get(&id) else { return };
-        if rec.retry_at.is_none() {
+        let in_flight = match self.records.get(&id) {
+            None => return,
+            Some(rec) => (rec.retry_at.is_none(), rec.replica),
+        };
+        if in_flight.0 {
             // an attempt is in flight: the replica's cancel produces the
             // terminal Finished{Cancelled} through the normal event path
-            let replica = rec.replica;
-            if let Some(jobs) = &self.slots[replica].jobs {
+            if let Some(jobs) = &self.slots[in_flight.1].jobs {
                 let _ = jobs.send(ReplicaJob::Cancel { id });
             }
             return;
         }
         // between attempts: no replica holds it — settle it ourselves
-        let rec = self.records.remove(&id).expect("checked above");
+        let Some(rec) = self.records.remove(&id) else { return };
         let waited = rec.request.arrived.elapsed().as_secs_f64();
         let result = RequestResult {
             id,
@@ -613,8 +784,78 @@ impl Control {
 
     fn respawn(&mut self, replica: usize) {
         let epoch = self.slots[replica].epoch + 1;
-        self.slots[replica] = spawn_replica(&self.factory, replica, epoch, self.ctl.clone());
+        let recipe = ReplicaSlotConfig {
+            factory: self.slots[replica].factory.clone(),
+            desc: self.slots[replica].desc.clone(),
+        };
+        self.slots[replica] = spawn_replica(recipe, replica, epoch, self.ctl.clone());
         self.restarts += 1;
+    }
+
+    /// Validate and begin a rolling upgrade; the reply goes back to the
+    /// caller of [`Router::upgrade`] (or onto the wire).
+    fn start_upgrade(&mut self, slots: Vec<ReplicaSlotConfig>) -> Json {
+        if self.upgrade.is_some() {
+            return Json::obj().set("error", "an upgrade is already in progress");
+        }
+        if slots.len() != self.slots.len() {
+            return Json::obj().set(
+                "error",
+                format!(
+                    "upgrade needs {} replica configs, got {}",
+                    self.slots.len(),
+                    slots.len()
+                ),
+            );
+        }
+        let waves = slots.len();
+        self.upgrade = Some(UpgradeState {
+            pending: slots.into_iter().map(Some).collect(),
+            draining: None,
+            upgraded: 0,
+        });
+        self.advance_upgrade();
+        Json::obj().set("upgrade", "started").set("waves", waves)
+    }
+
+    /// Drive the rolling upgrade forward: when no wave is in flight,
+    /// start the next one. A wave installs the slot's new config, drains
+    /// the replica, and completes on its `Retired` (which respawns it
+    /// with the new config). A replica that is already down just adopts
+    /// the config — the operator took it down on purpose, so it boots
+    /// upgraded on its next restart instead of being forced back up.
+    fn advance_upgrade(&mut self) {
+        loop {
+            let next = match &self.upgrade {
+                None => return,
+                Some(u) if u.draining.is_some() => return, // wave in flight
+                Some(u) => u.pending.iter().position(|p| p.is_some()),
+            };
+            let Some(next) = next else {
+                self.upgrade = None; // all waves done
+                return;
+            };
+            let Some(cfg) = self.upgrade.as_mut().and_then(|u| u.pending[next].take()) else {
+                return; // unreachable: position() just said Some
+            };
+            self.slots[next].factory = cfg.factory;
+            self.slots[next].desc = cfg.desc;
+            if !self.slots[next].up {
+                if let Some(u) = self.upgrade.as_mut() {
+                    u.upgraded += 1;
+                }
+                continue;
+            }
+            if let Some(u) = self.upgrade.as_mut() {
+                u.draining = Some(next);
+            }
+            self.slots[next].draining = true;
+            self.drains += 1;
+            if let Some(jobs) = &self.slots[next].jobs {
+                let _ = jobs.send(ReplicaJob::Drain);
+            }
+            return;
+        }
     }
 
     fn stats_json(&mut self) -> Json {
@@ -637,11 +878,22 @@ impl Control {
                     .set("up", slot.up)
                     .set("draining", slot.draining)
                     .set("outstanding", slot.outstanding)
+                    .set("pending", slot.reported_pending)
+                    .set("blocked", slot.reported_blocked)
+                    .set("config", slot.desc.clone())
                     .set("engine", engine.unwrap_or(Json::Null)),
             );
         }
+        let upgrade = match &self.upgrade {
+            None => Json::Null,
+            Some(u) => Json::obj()
+                .set("waves", u.pending.len())
+                .set("upgraded", u.upgraded)
+                .set("draining", u.draining.map_or(Json::Null, Json::from)),
+        };
         Json::obj()
             .set("replicas", Json::Arr(replicas))
+            .set("upgrade", upgrade)
             .set("routed", self.routed)
             .set("spilled", self.spilled)
             .set("retries", self.retries)
@@ -656,15 +908,15 @@ impl Control {
 }
 
 /// Start one replica incarnation: its thread builds the batcher from the
-/// factory and serves until drained, crashed or detached.
+/// slot's factory and serves until drained, crashed or detached.
 fn spawn_replica(
-    factory: &ReplicaFactory,
+    recipe: ReplicaSlotConfig,
     idx: usize,
     epoch: u64,
     ctl: Sender<RouterMsg>,
 ) -> Slot {
     let (jtx, jrx) = channel();
-    let f = factory.clone();
+    let f = recipe.factory.clone();
     let thread = std::thread::spawn(move || replica_main(idx, epoch, f, jrx, ctl));
     Slot {
         jobs: Some(jtx),
@@ -673,13 +925,54 @@ fn spawn_replica(
         up: true,
         draining: false,
         outstanding: 0,
+        factory: recipe.factory,
+        desc: recipe.desc,
+        reported_pending: 0,
+        reported_blocked: false,
     }
+}
+
+/// Backpressure weight of one replica for routing: the router-side
+/// outstanding count or the replica's own reported queue depth, whichever
+/// is larger (the replica's number lags, the router's leads), plus a
+/// penalty that pushes the weight past `spill_threshold` whenever the
+/// replica reported blocked admission — a replica out of KV pages always
+/// looks backed-up to the spill rule, even with few dispatches in flight.
+fn slot_weight(slot: &Slot, spill_threshold: usize) -> usize {
+    let depth = slot.outstanding.max(slot.reported_pending);
+    if slot.reported_blocked {
+        depth.saturating_add(spill_threshold.saturating_add(1))
+    } else {
+        depth
+    }
+}
+
+/// Linear-backoff planning, pure for unit tests: given the attempt count
+/// *including* the failure being recorded, the base backoff, the time
+/// since the first dispatch and the dispatch deadline, returns how long
+/// to wait before the next dispatch — clamped so the retry fires at the
+/// deadline rather than one backoff past it — or `None` when the
+/// deadline has already passed.
+fn plan_retry(
+    attempt: usize,
+    base: Duration,
+    elapsed: Duration,
+    timeout: Duration,
+) -> Option<Duration> {
+    if elapsed >= timeout {
+        return None;
+    }
+    let backoff = base.saturating_mul(attempt.min(u32::MAX as usize) as u32);
+    Some(backoff.min(timeout - elapsed))
 }
 
 /// What applying one replica job asks the serve loop to do next.
 enum Applied {
     Carry,
     Crash,
+    /// Internal batcher-state corruption: retire this replica like an
+    /// engine failure (in-flight sinks drop; the router retries).
+    Fail(String),
 }
 
 fn apply_replica_job(batcher: &mut Batcher, job: ReplicaJob, started: Instant) -> Applied {
@@ -688,10 +981,10 @@ fn apply_replica_job(batcher: &mut Batcher, job: ReplicaJob, started: Instant) -
             batcher.submit_streaming(request, sink);
             Applied::Carry
         }
-        ReplicaJob::Cancel { id } => {
-            batcher.cancel(id);
-            Applied::Carry
-        }
+        ReplicaJob::Cancel { id } => match batcher.cancel(id) {
+            Ok(_) => Applied::Carry,
+            Err(e) => Applied::Fail(format!("cancel failed: {e}")),
+        },
         ReplicaJob::Drain => {
             // bounce events route to the queued requests' sinks; the
             // forwarders turn them into resubmissions
@@ -730,16 +1023,31 @@ fn replica_main(
         Err(e) => return retire(true, false, format!("replica build failed: {e}")),
     };
     let mut detached = false;
+    let mut last_load: Option<(usize, bool)> = None;
     loop {
         while !detached {
             match jobs.try_recv() {
                 Ok(job) => match apply_replica_job(&mut batcher, job, started) {
                     Applied::Carry => {}
                     Applied::Crash => return retire(true, true, "killed".to_string()),
+                    Applied::Fail(e) => return retire(true, true, e),
                 },
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => detached = true,
             }
+        }
+        // backpressure report, sent only when it changes: the router
+        // folds queue depth + the admission-blocked flag into its
+        // routing weights
+        let load = (batcher.pending(), batcher.admission_stalled());
+        if last_load != Some(load) {
+            last_load = Some(load);
+            let _ = ctl.send(RouterMsg::Load {
+                replica: idx,
+                epoch,
+                pending: load.0,
+                blocked: load.1,
+            });
         }
         if batcher.drained() || (detached && batcher.pending() == 0) {
             return retire(false, true, String::new());
@@ -749,6 +1057,7 @@ fn replica_main(
                 Ok(job) => match apply_replica_job(&mut batcher, job, started) {
                     Applied::Carry => {}
                     Applied::Crash => return retire(true, true, "killed".to_string()),
+                    Applied::Fail(e) => return retire(true, true, e),
                 },
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => detached = true,
@@ -831,13 +1140,16 @@ fn fnv1a(tokens: &[i32]) -> u64 {
     h
 }
 
-/// Pure routing decision (unit-tested without threads). Returns the
+/// Pure routing decision (unit-tested without threads). `weights` is the
+/// per-replica backpressure weight (see [`slot_weight`]). Returns the
 /// chosen replica (None when nothing is eligible) and whether the choice
-/// spilled away from its affinity target.
+/// spilled away from its affinity target. Spill semantics are strict:
+/// the request moves only when the target is backed up strictly **past**
+/// `spill_threshold` — exactly-at-threshold stays home.
 fn choose_replica(
     key: &[i32],
     eligible: &[bool],
-    outstanding: &[usize],
+    weights: &[usize],
     policy: RoutingPolicy,
     rr_next: &mut usize,
     spill_threshold: usize,
@@ -867,11 +1179,11 @@ fn choose_replica(
             while !eligible[t] {
                 t = (t + 1) % n;
             }
-            let least = *live
-                .iter()
-                .min_by_key(|&&i| (outstanding[i], i))
-                .expect("live is non-empty");
-            if outstanding[t] > spill_threshold && outstanding[least] < outstanding[t] {
+            let least = live.iter().copied().min_by_key(|&i| (weights[i], i));
+            let Some(least) = least else {
+                return (Some(t), false); // live was non-empty; defensive
+            };
+            if weights[t] > spill_threshold && weights[least] < weights[t] {
                 return (Some(least), true);
             }
             (Some(t), false)
@@ -952,5 +1264,100 @@ mod tests {
         let (t, _) =
             choose_replica(&[1], &[false; 3], &[0; 3], RoutingPolicy::Affinity, &mut rr, 8);
         assert_eq!(t, None);
+    }
+
+    #[test]
+    fn spill_boundary_exactly_at_threshold_stays_home() {
+        // the documented contract: a request spills only when its target
+        // is backed up strictly PAST spill_threshold
+        let key = [5, 6, 7, 8];
+        let mut rr = 0;
+        let threshold = 3;
+        let (target, _) = choose_replica(
+            &key,
+            &[true; 3],
+            &[0; 3],
+            RoutingPolicy::Affinity,
+            &mut rr,
+            threshold,
+        );
+        let target = target.unwrap();
+        // exactly at the threshold: stay home, even with idle siblings
+        let mut load = [0usize; 3];
+        load[target] = threshold;
+        let (t, spilled) =
+            choose_replica(&key, &[true; 3], &load, RoutingPolicy::Affinity, &mut rr, threshold);
+        assert_eq!(t, Some(target), "weight == threshold must not spill");
+        assert!(!spilled);
+        // one past the threshold: spill to the least-loaded live replica
+        load[target] = threshold + 1;
+        let (t, spilled) =
+            choose_replica(&key, &[true; 3], &load, RoutingPolicy::Affinity, &mut rr, threshold);
+        assert!(spilled, "weight == threshold + 1 must spill");
+        let t = t.unwrap();
+        assert_ne!(t, target);
+        assert_eq!(load[t], 0);
+    }
+
+    #[test]
+    fn affinity_walks_to_the_sole_live_replica() {
+        let key = [9, 9, 9, 9];
+        let mut rr = 0;
+        for survivor in 0..4 {
+            let mut eligible = [false; 4];
+            eligible[survivor] = true;
+            let (t, spilled) =
+                choose_replica(&key, &eligible, &[0; 4], RoutingPolicy::Affinity, &mut rr, 8);
+            assert_eq!(t, Some(survivor), "the walk must reach the only live replica");
+            assert!(!spilled, "landing on the sole survivor is affinity, not spill");
+        }
+    }
+
+    #[test]
+    fn plan_retry_scales_linearly_and_honors_the_deadline() {
+        let base = Duration::from_millis(10);
+        let timeout = Duration::from_secs(30);
+        // attempt k waits k × base — the documented contract
+        for k in 1..=5 {
+            assert_eq!(
+                plan_retry(k, base, Duration::ZERO, timeout),
+                Some(base * k as u32),
+                "attempt {k}"
+            );
+        }
+        // at or past the deadline: no more retries
+        assert_eq!(plan_retry(1, base, timeout, timeout), None);
+        assert_eq!(plan_retry(1, base, timeout + base, timeout), None);
+        // near the deadline the wait clamps to it, so the next dispatch
+        // fires exactly at the deadline instead of one backoff later
+        let near = timeout - Duration::from_millis(3);
+        assert_eq!(plan_retry(4, base, near, timeout), Some(Duration::from_millis(3)));
+    }
+
+    #[test]
+    fn blocked_replicas_weigh_past_the_spill_threshold() {
+        let dead_factory: ReplicaFactory = Arc::new(|| anyhow::bail!("unused in this test"));
+        let mut slot = Slot {
+            jobs: None,
+            thread: None,
+            epoch: 0,
+            up: true,
+            draining: false,
+            outstanding: 2,
+            factory: dead_factory,
+            desc: Json::Null,
+            reported_pending: 5,
+            reported_blocked: false,
+        };
+        // unblocked: the weight is the larger of the two depth signals
+        assert_eq!(slot_weight(&slot, 8), 5);
+        slot.outstanding = 7;
+        assert_eq!(slot_weight(&slot, 8), 7);
+        // blocked admission always pushes the weight past the threshold
+        slot.reported_blocked = true;
+        assert!(slot_weight(&slot, 8) > 8);
+        slot.outstanding = 0;
+        slot.reported_pending = 0;
+        assert!(slot_weight(&slot, 8) > 8, "blocked alone must exceed the threshold");
     }
 }

@@ -14,6 +14,7 @@ pub struct Args {
     about: String,
     specs: Vec<Spec>,
     values: BTreeMap<String, String>,
+    multis: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positional: Vec<String>,
 }
@@ -24,6 +25,7 @@ struct Spec {
     help: String,
     default: Option<String>,
     is_flag: bool,
+    is_multi: bool,
 }
 
 impl Args {
@@ -42,6 +44,20 @@ impl Args {
             help: help.to_string(),
             default: default.map(str::to_string),
             is_flag: false,
+            is_multi: false,
+        });
+        self
+    }
+
+    /// Declare a repeatable `--name <value>` option; every occurrence is
+    /// collected in order and read back with [`Args::get_multi`].
+    pub fn multi(mut self, name: &str, help: &str) -> Args {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+            is_multi: true,
         });
         self
     }
@@ -53,6 +69,7 @@ impl Args {
             help: help.to_string(),
             default: None,
             is_flag: true,
+            is_multi: false,
         });
         self
     }
@@ -88,7 +105,11 @@ impl Args {
                             .next()
                             .ok_or_else(|| anyhow!("option --{key} needs a value"))?,
                     };
-                    self.values.insert(key, val);
+                    if spec.is_multi {
+                        self.multis.entry(key).or_default().push(val);
+                    } else {
+                        self.values.insert(key, val);
+                    }
                 }
             } else {
                 self.positional.push(arg);
@@ -106,6 +127,8 @@ impl Args {
         for spec in &self.specs {
             let head = if spec.is_flag {
                 format!("  --{}", spec.name)
+            } else if spec.is_multi {
+                format!("  --{} <v>..", spec.name)
             } else {
                 format!("  --{} <v>", spec.name)
             };
@@ -150,6 +173,12 @@ impl Args {
             .filter(|s| !s.is_empty())
             .map(|s| s.parse().map_err(|e| anyhow!("--{name}: {e}")))
             .collect()
+    }
+
+    /// All values given for a repeatable option, in command-line order
+    /// (empty when the option never appeared).
+    pub fn get_multi(&self, name: &str) -> Vec<String> {
+        self.multis.get(name).cloned().unwrap_or_default()
     }
 
     pub fn has_flag(&self, name: &str) -> bool {
@@ -201,6 +230,19 @@ mod tests {
     fn missing_required_is_error() {
         let a = Args::new("t", "").opt("x", None, "").parse(argv("")).unwrap();
         assert!(a.get("x").is_err());
+    }
+
+    #[test]
+    fn repeatable_option_collects_in_order() {
+        let a = Args::new("t", "")
+            .multi("replica", "")
+            .parse(argv("--replica arch=ladder --replica=arch=standard,tp=2"))
+            .unwrap();
+        assert_eq!(
+            a.get_multi("replica"),
+            vec!["arch=ladder".to_string(), "arch=standard,tp=2".to_string()]
+        );
+        assert!(a.get_multi("absent").is_empty());
     }
 
     #[test]

@@ -27,11 +27,22 @@
 //! (affinity pays one cold prefix per template; round-robin pays one per
 //! template per replica).
 //!
+//! The `fleet_ops_` scenarios exercise the heterogeneous-fleet tier on
+//! top of the same invariants: a **rolling upgrade** across all three
+//! replicas mid-workload (zero losses, bitwise-vs-oracle, every wave
+//! lands the new config), a **ladder-vs-standard A/B split** under
+//! identical seeded traffic (the ITL delta shows up on the replicas'
+//! engines, not in router-side queue time), and a **dead-fleet backoff**
+//! regression (linear backoff exhausts the retry ledger in bounded time;
+//! the dispatch deadline caps even a huge ledger). CI runs them as their
+//! own `--release` step (`-- fleet_ops_`).
+//!
 //! JSON reports go to `$FLEET_STRESS_REPORT` (CI) or
 //! `target/tmp/FLEET_STRESS.json`; the affinity comparison writes the
 //! sibling `FLEET_STRESS.affinity.json` so concurrent tests never race on
-//! one file. CI uploads the `FLEET_STRESS*.json` glob next to the other
-//! stress reports.
+//! one file, and the A/B split writes `$FLEET_AB_REPORT` (or
+//! `target/tmp/FLEET_AB.json`). CI uploads the `FLEET_STRESS*.json` and
+//! `FLEET_AB*.json` globs next to the other stress reports.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -45,8 +56,8 @@ use ladder_infer::engine::{KvLayout, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::Exec;
 use ladder_infer::server::{
-    Batcher, BatcherConfig, GenerationEvent, ReplicaFactory, Request, Router, RouterConfig,
-    RoutingPolicy,
+    Batcher, BatcherConfig, GenerationEvent, ReplicaFactory, ReplicaSlotConfig, Request, Router,
+    RouterConfig, RoutingPolicy,
 };
 use ladder_infer::util::json::Json;
 use ladder_infer::util::rng::Rng;
@@ -58,31 +69,43 @@ const PAGE: usize = 8;
 const TEMPLATE_TOKENS: usize = 2 * PAGE;
 const REPLICAS: usize = 3;
 
-/// The respawn recipe: every incarnation of every replica is bitwise the
-/// same engine (tiny config, fixed weight seed), differing only in cache
-/// state — exactly what the `router` CLI subcommand builds.
-fn replica_factory() -> ReplicaFactory {
-    Arc::new(|| {
+/// A parameterized respawn recipe: every incarnation built from the same
+/// call is bitwise the same engine (tiny config, fixed weight seed),
+/// differing only in cache state — what one `--replica` spec resolves to
+/// in the `router` CLI subcommand. Arch / page size / prefill chunk /
+/// fabric are the knobs the heterogeneous-fleet scenarios vary.
+fn configured_factory(
+    arch: Arch,
+    page_size: usize,
+    prefill_chunk: usize,
+    fabric: Fabric,
+) -> ReplicaFactory {
+    Arc::new(move || {
         let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
         let weights = WeightStore::random(exec.cfg(), 0xbeef);
         let engine = TpEngine::with_layout(
             exec,
             &weights,
             2,
-            Arch::Ladder,
+            arch,
             2,
-            Interconnect::new(Fabric::Local),
+            Interconnect::new(fabric),
             RuntimeKind::default(),
-            KvLayout::Paged { page_size: PAGE, pages: 64 },
+            KvLayout::Paged { page_size, pages: 64 },
         )
         .expect("tiny paged engine");
         let config = BatcherConfig {
-            prefill_chunk: 4,
+            prefill_chunk,
             prefix_cache: true,
             ..BatcherConfig::default()
         };
         Ok(Batcher::new(engine, config))
     })
+}
+
+/// The homogeneous baseline recipe the fault-injection scenarios use.
+fn replica_factory() -> ReplicaFactory {
+    configured_factory(Arch::Ladder, PAGE, 4, Fabric::Local)
 }
 
 /// Seeded shared-template workload: `templates` random 2-page prompt
@@ -430,5 +453,317 @@ fn affinity_routing_prefills_fewer_tokens_than_round_robin() {
             .set("workload", "6 templates x 6 requests, 3 replicas, sequential")
             .set("affinity_prefill_tokens", affinity)
             .set("round_robin_prefill_tokens", round_robin),
+    );
+}
+
+// --- heterogeneous-fleet operations scenarios (CI: their own release step) --
+
+/// A slot recipe for the heterogeneous scenarios: the factory plus the
+/// stats-visible description the router surfaces as `config`.
+fn described_slot(
+    arch: Arch,
+    page_size: usize,
+    prefill_chunk: usize,
+    fabric: Fabric,
+    rev: &str,
+) -> ReplicaSlotConfig {
+    ReplicaSlotConfig::with_desc(
+        configured_factory(arch, page_size, prefill_chunk, fabric),
+        Json::obj()
+            .set("arch", if matches!(arch, Arch::Ladder) { "ladder" } else { "standard" })
+            .set("page_size", page_size)
+            .set("prefill_chunk", prefill_chunk)
+            .set("rev", rev),
+    )
+}
+
+/// Poll until every replica reports down (a dead factory retires its
+/// replica shortly after its thread boots).
+fn wait_fleet_down(router: &Router) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while replica_loads(&router.stats().expect("stats")).iter().any(|(up, _)| *up) {
+        assert!(Instant::now() < deadline, "dead-factory replicas never retired");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn statf(obj: &Json, key: &str) -> f64 {
+    obj.get(key).unwrap().as_f64().unwrap()
+}
+
+/// Acceptance (a): a rolling upgrade across all three replicas
+/// mid-workload loses zero requests and duplicates none, with every
+/// stream bitwise-equal to the solo oracle. The v2 config halves the KV
+/// page size and prefill chunk — layout knobs, not semantics, so v1 and
+/// v2 replicas are output-identical and the drain→respawn waves are
+/// invisible to clients; afterwards every slot must both *advertise* and
+/// actually *run* the v2 engine.
+#[test]
+fn fleet_ops_rolling_upgrade_loses_nothing() {
+    let requests = workload(0x09A7, 6, 4, PAGE, 6, 90_000);
+    let reference = reference_outputs(&requests);
+    let cfg = RouterConfig {
+        replicas: REPLICAS,
+        policy: RoutingPolicy::Affinity,
+        affinity_tokens: PAGE,
+        spill_threshold: 64,
+        max_retries: 8,
+        retry_backoff: Duration::from_millis(2),
+        dispatch_timeout: Duration::from_secs(60),
+        auto_restart: true,
+    };
+    let v1 = (0..REPLICAS)
+        .map(|_| described_slot(Arch::Ladder, PAGE, 4, Fabric::Local, "v1"))
+        .collect();
+    let router = Router::new_fleet(v1, cfg).expect("router");
+    let mut rxs: Vec<(u64, Receiver<GenerationEvent>)> = Vec::new();
+    let mut submit_wave = |router: &Router, wave: &[Request]| {
+        for req in wave {
+            let (tx, rx) = channel();
+            rxs.push((req.id, rx));
+            router.submit(req.clone(), tx);
+        }
+    };
+    let waves: Vec<&[Request]> = requests.chunks(8).collect();
+    assert_eq!(waves.len(), 3);
+    // wave 1 in flight, then roll the whole fleet onto v2
+    submit_wave(&router, waves[0]);
+    let v2 = (0..REPLICAS)
+        .map(|_| described_slot(Arch::Ladder, PAGE / 2, 2, Fabric::Local, "v2"))
+        .collect();
+    let ack = router.upgrade(v2).expect("upgrade control roundtrip");
+    assert!(ack.opt("error").is_none(), "upgrade rejected: {ack:?}");
+    assert_eq!(stat(&ack, "waves"), REPLICAS);
+    // keep the workload flowing while the waves roll
+    submit_wave(&router, waves[1]);
+    submit_wave(&router, waves[2]);
+    let mut finished = 0usize;
+    for (id, rx) in &rxs {
+        let tokens = audit_stream(*id, rx).unwrap_or_else(|(_, reason)| {
+            panic!("request {id} errored during the rolling upgrade: {reason}")
+        });
+        assert_eq!(
+            &tokens, &reference[id],
+            "request {id}: output diverged from the solo oracle across the upgrade"
+        );
+        finished += 1;
+    }
+    assert_eq!(finished, requests.len(), "zero lost, zero duplicated");
+    // the upgrade keeps rolling after traffic stops; wait for the last
+    // wave to respawn its replica
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let stats = router.stats().expect("stats");
+        let all_up = replica_loads(&stats).iter().all(|(up, _)| *up);
+        if matches!(stats.get("upgrade"), Ok(Json::Null)) && all_up {
+            break;
+        }
+        assert!(Instant::now() < deadline, "rolling upgrade never completed");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.completed() < requests.len() {
+        assert!(Instant::now() < deadline, "router completed() never converged");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let stats = router.stats().expect("final stats");
+    assert_eq!(stat(&stats, "completed"), requests.len());
+    assert_eq!(stat(&stats, "failed"), 0, "a rolling upgrade must not fail requests");
+    assert_eq!(stat(&stats, "lost_streams"), 0, "drain waves must not lose streams");
+    assert_eq!(stat(&stats, "in_flight"), 0);
+    assert_eq!(stat(&stats, "drains"), REPLICAS, "one drain wave per replica");
+    assert_eq!(stat(&stats, "restarts"), REPLICAS, "one respawn per replica");
+    for rep in stats.get("replicas").unwrap().as_arr().unwrap() {
+        let config = rep.get("config").unwrap();
+        assert_eq!(config.get("rev").unwrap().as_str().unwrap(), "v2");
+        assert_eq!(config.get("page_size").unwrap().as_usize().unwrap(), PAGE / 2);
+        let engine = rep.get("engine").unwrap();
+        assert_eq!(
+            engine.get("page_size").unwrap().as_usize().unwrap(),
+            PAGE / 2,
+            "replica advertises v2 but its engine still runs the old page size"
+        );
+    }
+    write_report(
+        Some("upgrade"),
+        Json::obj()
+            .set("harness", "fleet_stress")
+            .set("scenario", "rolling upgrade, 3 waves mid-workload")
+            .set("requests", requests.len())
+            .set("finished", finished)
+            .set("drains", stat(&stats, "drains"))
+            .set("restarts", stat(&stats, "restarts"))
+            .set("retries", stat(&stats, "retries"))
+            .set(
+                "invariants",
+                "zero-failed, zero-lost, bitwise-vs-solo-oracle, config-and-engine-on-v2",
+            ),
+    );
+}
+
+/// Acceptance (b): a mixed ladder/standard fleet under identical seeded
+/// traffic shows the inter-token-latency delta on the replicas' engines
+/// — the ladder arch hides decode-phase collectives that the standard
+/// arch exposes — while router-side queue time stays far too small to
+/// explain the gap. The delta is the architecture, not the router.
+#[test]
+fn fleet_ops_ab_split_attributes_itl_to_the_arch() {
+    // the "slow" fabric preset: 3ms latency, 1 GB/s — exposed collective
+    // latency dominates decode, which is exactly the regime the paper's
+    // ladder-residual rewiring targets
+    let slow = Fabric::Custom(3000, 1);
+    let slots = vec![
+        described_slot(Arch::Ladder, PAGE, 4, slow, "ab"),
+        described_slot(Arch::Standard, PAGE, 4, slow, "ab"),
+    ];
+    let cfg = RouterConfig {
+        replicas: 2,
+        policy: RoutingPolicy::RoundRobin,
+        affinity_tokens: PAGE,
+        spill_threshold: 1_000, // sequential load never spills
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(2),
+        dispatch_timeout: Duration::from_secs(60),
+        auto_restart: true,
+    };
+    let router = Router::new_fleet(slots, cfg).expect("router");
+    // identical seeded traffic: each prompt is submitted twice back to
+    // back and settled before the next pair; round-robin over two live
+    // replicas alternates deterministically, so both replicas decode the
+    // same prompt sequence in the same order
+    let mut rng = Rng::new(0xab5eed);
+    let mut id = 70_000u64;
+    for _ in 0..8 {
+        let prompt: Vec<i32> = (0..TEMPLATE_TOKENS).map(|_| rng.below(200) as i32).collect();
+        for _ in 0..2 {
+            let req = Request::new(id, prompt.clone(), 6);
+            id += 1;
+            let (tx, rx) = channel();
+            router.submit(req.clone(), tx);
+            let tokens = audit_stream(req.id, &rx)
+                .unwrap_or_else(|(_, reason)| panic!("fault-free A/B run errored: {reason}"));
+            assert_eq!(tokens.len(), 6);
+        }
+    }
+    let stats = router.stats().expect("stats");
+    assert_eq!(stat(&stats, "failed"), 0);
+    let reps = stats.get("replicas").unwrap().as_arr().unwrap();
+    let ladder = reps[0].get("engine").unwrap();
+    let standard = reps[1].get("engine").unwrap();
+    assert_eq!(ladder.get("arch").unwrap().as_str().unwrap(), "ladder");
+    assert_eq!(standard.get("arch").unwrap().as_str().unwrap(), "standard");
+    // the split was fair: same requests, same tokens on each side
+    assert_eq!(stat(ladder, "completed"), 8);
+    assert_eq!(stat(standard, "completed"), 8);
+    assert_eq!(stat(ladder, "tokens_out"), stat(standard, "tokens_out"));
+    let itl_ladder = statf(ladder, "itl_p50_ms");
+    let itl_standard = statf(standard, "itl_p50_ms");
+    assert!(
+        itl_ladder < itl_standard,
+        "ladder replicas must decode faster than standard on a slow fabric \
+         (ladder {itl_ladder:.3}ms, standard {itl_standard:.3}ms)"
+    );
+    let hidden_ladder = statf(ladder, "comm_hidden_fraction_decode");
+    let hidden_standard = statf(standard, "comm_hidden_fraction_decode");
+    assert!(
+        hidden_ladder > hidden_standard,
+        "the ITL win must come from hidden decode communication \
+         (ladder {hidden_ladder:.3}, standard {hidden_standard:.3})"
+    );
+    // attribution: router-side queue time on both replicas is smaller
+    // than the ITL delta itself, so queueing cannot explain the gap
+    let delta = itl_standard - itl_ladder;
+    let queue_ladder = statf(ladder, "queue_p50_ms");
+    let queue_standard = statf(standard, "queue_p50_ms");
+    assert!(
+        queue_ladder < delta && queue_standard < delta,
+        "router-side queue time (ladder {queue_ladder:.3}ms, standard \
+         {queue_standard:.3}ms) is large enough to explain the ITL delta \
+         ({delta:.3}ms) — the A/B attribution is broken"
+    );
+    let path = std::env::var("FLEET_AB_REPORT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("FLEET_AB.json"));
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let report = Json::obj()
+        .set("harness", "fleet_stress")
+        .set("scenario", "ladder-vs-standard A/B, slow fabric, paired traffic")
+        .set("itl_p50_ms_ladder", itl_ladder)
+        .set("itl_p50_ms_standard", itl_standard)
+        .set("comm_hidden_fraction_decode_ladder", hidden_ladder)
+        .set("comm_hidden_fraction_decode_standard", hidden_standard)
+        .set("queue_p50_ms_ladder", queue_ladder)
+        .set("queue_p50_ms_standard", queue_standard);
+    std::fs::write(&path, report.to_string()).expect("write A/B report");
+}
+
+/// Acceptance (c) / backoff regression: a fully-dead fleet exhausts the
+/// retry ledger in bounded time — linear backoff (attempt k waits
+/// k × base) with every failed placement counted — instead of polling at
+/// a flat rate forever; and when the ledger is effectively unbounded, the
+/// dispatch deadline cuts the request off instead.
+#[test]
+fn fleet_ops_dead_fleet_exhausts_retries_within_the_deadline() {
+    let dead: ReplicaFactory = Arc::new(|| anyhow::bail!("injected build failure"));
+    let dead_slots =
+        |n: usize| (0..n).map(|_| ReplicaSlotConfig::new(dead.clone())).collect::<Vec<_>>();
+    // phase 1: the ledger trips first — max_retries=5 at base 5ms waits
+    // 5+10+15+20+25 = 75ms, nowhere near the 30s deadline
+    let cfg = RouterConfig {
+        replicas: 2,
+        policy: RoutingPolicy::Affinity,
+        affinity_tokens: PAGE,
+        spill_threshold: 8,
+        max_retries: 5,
+        retry_backoff: Duration::from_millis(5),
+        dispatch_timeout: Duration::from_secs(30),
+        auto_restart: false,
+    };
+    let router = Router::new_fleet(dead_slots(2), cfg.clone()).expect("router");
+    wait_fleet_down(&router);
+    let (tx, rx) = channel();
+    let t0 = Instant::now();
+    router.submit(Request::new(1, vec![1, 2, 3], 4), tx);
+    let (retryable, reason) = audit_stream(1, &rx).expect_err("a dead fleet cannot serve");
+    let elapsed = t0.elapsed();
+    assert!(retryable, "fleet-condition failures must be retryable");
+    assert!(reason.contains("retries exhausted"), "wrong failure: {reason}");
+    assert!(reason.contains("no live replica"), "last placement loss not surfaced: {reason}");
+    assert!(
+        elapsed >= Duration::from_millis(70),
+        "linear backoff must actually wait between attempts (elapsed {elapsed:?})"
+    );
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "a dead fleet must exhaust retries in bounded time (elapsed {elapsed:?})"
+    );
+    let stats = router.stats().expect("stats");
+    assert_eq!(stat(&stats, "retries"), 5, "exactly max_retries redispatches are scheduled");
+    assert_eq!(stat(&stats, "failed"), 1);
+    assert_eq!(stat(&stats, "in_flight"), 0);
+    drop(router);
+    // phase 2: the deadline trips first — an effectively unbounded
+    // ledger must still be cut off by dispatch_timeout
+    let cfg = RouterConfig {
+        max_retries: 100_000,
+        retry_backoff: Duration::from_millis(1),
+        dispatch_timeout: Duration::from_millis(250),
+        ..cfg
+    };
+    let router = Router::new_fleet(dead_slots(2), cfg).expect("router");
+    wait_fleet_down(&router);
+    let (tx, rx) = channel();
+    let t0 = Instant::now();
+    router.submit(Request::new(2, vec![1, 2, 3], 4), tx);
+    let (retryable, reason) = audit_stream(2, &rx).expect_err("a dead fleet cannot serve");
+    let elapsed = t0.elapsed();
+    assert!(retryable);
+    assert!(reason.contains("dispatch timeout"), "wrong failure: {reason}");
+    assert!(elapsed >= Duration::from_millis(250), "deadline fired early (elapsed {elapsed:?})");
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "the dispatch deadline must bound the wait (elapsed {elapsed:?})"
     );
 }

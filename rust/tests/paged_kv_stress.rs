@@ -173,7 +173,7 @@ fn drive(mut batcher: Batcher, jobs: &[Job], budget_bytes: usize) -> RunStats {
         // explicit cancels
         for job in jobs[..submitted].iter() {
             if job.cancel_at == Some(step) {
-                if let Some(ev) = batcher.cancel(job.id) {
+                if let Some(ev) = batcher.cancel(job.id).expect("cancel") {
                     record(vec![ev], &mut live_ids, &mut max_live);
                 }
             }

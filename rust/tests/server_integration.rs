@@ -11,14 +11,17 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::rc::Rc;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
 
 use ladder_infer::comm::{Fabric, Interconnect};
 use ladder_infer::engine::{KvLayout, RuntimeKind, Sampler, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::Exec;
 use ladder_infer::server::{
-    api, api::ApiJob, batcher::DRAIN_REASON, Batcher, BatcherConfig, FinishReason,
-    GenerationEvent, Request,
+    api, api::ApiJob, batcher::DRAIN_REASON, router, Batcher, BatcherConfig, FinishReason,
+    GenerationEvent, ReplicaFactory, ReplicaSlotConfig, Request, Router, RouterConfig,
+    RoutingPolicy,
 };
 use ladder_infer::tokenizer::Tokenizer;
 use ladder_infer::util::json::{parse, Json};
@@ -441,7 +444,7 @@ fn cancel_queued_and_inflight_frees_slots() {
         b.submit(Request::new(i, vec![1, 2, 3], 40));
     }
     // request 2 is still queued (2 slots): cancelling it must not prefill
-    let Some(GenerationEvent::Finished { result }) = b.cancel(2) else {
+    let Some(GenerationEvent::Finished { result }) = b.cancel(2).unwrap() else {
         panic!("queued cancel must produce a Finished event");
     };
     assert_eq!(result.finish_reason, FinishReason::Cancelled);
@@ -449,7 +452,7 @@ fn cancel_queued_and_inflight_frees_slots() {
     // request 0 gets a few tokens, then dies mid-flight
     b.step().unwrap();
     b.step().unwrap();
-    let Some(GenerationEvent::Finished { result }) = b.cancel(0) else {
+    let Some(GenerationEvent::Finished { result }) = b.cancel(0).unwrap() else {
         panic!("in-flight cancel must produce a Finished event");
     };
     assert_eq!(result.finish_reason, FinishReason::Cancelled);
@@ -462,7 +465,7 @@ fn cancel_queued_and_inflight_frees_slots() {
     ids.sort();
     assert_eq!(ids, vec![1, 9]);
     assert_eq!(b.metrics.cancelled, 2);
-    assert_eq!(b.cancel(777), None, "unknown id");
+    assert_eq!(b.cancel(777).unwrap(), None, "unknown id");
 }
 
 #[test]
@@ -654,23 +657,23 @@ fn tcp_cancel_mid_stream_reuses_slot() {
     let mut b = build_batcher_tok(Arch::Standard, 1);
     match jobs.recv().unwrap() {
         ApiJob::Submit { request, respond } => b.submit_streaming(request, respond),
-        ApiJob::Cancel { .. } => panic!("expected submit"),
+        _ => panic!("expected submit"),
     }
     b.step().unwrap(); // admit + first tokens stream out
     match jobs.recv().unwrap() {
         // blocks until the client has seen a token and cancelled: the
         // request is still occupying the slot at this instant
         ApiJob::Cancel { id } => {
-            let ev = b.cancel(id).expect("in-flight request must cancel");
+            let ev = b.cancel(id).unwrap().expect("in-flight request must cancel");
             let GenerationEvent::Finished { result } = ev else { panic!("not finished") };
             assert_eq!(result.finish_reason, FinishReason::Cancelled);
         }
-        ApiJob::Submit { .. } => panic!("expected cancel"),
+        _ => panic!("expected cancel"),
     }
     assert_eq!(b.pending(), 0, "cancel must free the only slot");
     match jobs.recv().unwrap() {
         ApiJob::Submit { request, respond } => b.submit_streaming(request, respond),
-        ApiJob::Cancel { .. } => panic!("expected submit"),
+        _ => panic!("expected submit"),
     }
     while b.pending() > 0 {
         b.step().unwrap();
@@ -737,6 +740,7 @@ fn tcp_rejects_bad_requests_without_dying() {
             "this is not json\n",
             "{\"prompt\":\"\"}\n",
             "{\"cancel\":\"nope\"}\n",
+            "{\"upgrade\":{\"all\":\"arch=ladder\"}}\n",
             "{\"prompt\":\"still works\",\"max_new_tokens\":2}\n",
         ] {
             stream.write_all(req.as_bytes()).unwrap();
@@ -754,7 +758,102 @@ fn tcp_rejects_bad_requests_without_dying() {
     assert!(replies[0].opt("error").is_some(), "bad json must error");
     assert!(replies[1].opt("error").is_some(), "empty prompt must error");
     assert!(replies[2].opt("error").is_some(), "non-numeric cancel must error");
-    assert_eq!(replies[3].get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    let upgrade_err = replies[3].get("error").unwrap().as_str().unwrap().to_string();
+    assert!(
+        upgrade_err.contains("fleet"),
+        "serve mode must reject upgrades, pointing at fleet mode: {upgrade_err}"
+    );
+    assert_eq!(replies[4].get("tokens").unwrap().as_arr().unwrap().len(), 2);
+}
+
+/// Fleet mode end-to-end over TCP: `{"stats":true}` must expose each
+/// replica's identity — the slot's `config` description plus the live
+/// engine's `arch`/`codec`/`page_size`/`admission_blocked` and the
+/// router-side `pending`/`blocked` backpressure fields — so the A/B
+/// harness can attribute deltas to the right replica. A fleet booted
+/// without an upgrade builder must reject `{"upgrade":...}` frames
+/// without dying.
+#[test]
+fn tcp_fleet_stats_expose_per_replica_config() {
+    let tok = Tokenizer::bytes_only(256);
+    let (jobs, port) = api::spawn_listener("127.0.0.1:0", tok).unwrap();
+
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        stream.write_all(b"{\"upgrade\":{\"all\":\"arch=ladder\"}}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let upgrade_reply = parse(&line).unwrap();
+        line.clear();
+        stream.write_all(b"{\"stats\":true}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let stats = parse(&line).unwrap();
+        line.clear();
+        // one real request lets route_forever hit its completion target
+        stream.write_all(b"{\"prompt\":\"hello\",\"max_new_tokens\":2}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        (upgrade_reply, stats, parse(&line).unwrap())
+    });
+
+    // a deliberately heterogeneous pair: ladder on paged KV vs standard
+    // on the legacy slab layout
+    let paged: ReplicaFactory = Arc::new(|| {
+        Ok(Batcher::with_tokenizer(
+            build_paged_engine(Arch::Ladder, 2, 8, 64),
+            BatcherConfig::default(),
+            Tokenizer::bytes_only(256),
+        ))
+    });
+    let slab: ReplicaFactory = Arc::new(|| {
+        Ok(Batcher::with_tokenizer(
+            build_engine(Arch::Standard, 2),
+            BatcherConfig::default(),
+            Tokenizer::bytes_only(256),
+        ))
+    });
+    let slots = vec![
+        ReplicaSlotConfig::with_desc(
+            paged,
+            Json::obj().set("arch", "ladder").set("page_size", 8usize),
+        ),
+        ReplicaSlotConfig::with_desc(
+            slab,
+            Json::obj().set("arch", "standard").set("page_size", 0usize),
+        ),
+    ];
+    let cfg = RouterConfig {
+        replicas: 2,
+        policy: RoutingPolicy::RoundRobin,
+        affinity_tokens: 8,
+        spill_threshold: 8,
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(2),
+        dispatch_timeout: Duration::from_secs(30),
+        auto_restart: true,
+    };
+    let r = Router::new_fleet(slots, cfg).unwrap();
+    router::route_forever(&r, jobs, 1, None).unwrap();
+
+    let (upgrade_reply, stats, reply) = client.join().unwrap();
+    let upgrade_err = upgrade_reply.get("error").unwrap().as_str().unwrap();
+    assert!(upgrade_err.contains("upgrade"), "{upgrade_reply:?}");
+    assert!(reply.opt("error").is_none(), "{reply:?}");
+    let reps = stats.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 2);
+    for (rep, (arch, page)) in reps.iter().zip([("ladder", 8usize), ("standard", 0usize)]) {
+        let config = rep.get("config").unwrap();
+        assert_eq!(config.get("arch").unwrap().as_str().unwrap(), arch);
+        assert_eq!(config.get("page_size").unwrap().as_usize().unwrap(), page);
+        let engine = rep.get("engine").unwrap();
+        assert_eq!(engine.get("arch").unwrap().as_str().unwrap(), arch);
+        assert_eq!(engine.get("codec").unwrap().as_str().unwrap(), "fp32");
+        assert_eq!(engine.get("page_size").unwrap().as_usize().unwrap(), page);
+        assert!(engine.opt("admission_blocked").is_some());
+        assert!(rep.get("pending").unwrap().as_usize().is_ok());
+        assert!(rep.get("blocked").unwrap().as_bool().is_ok());
+    }
+    assert!(matches!(stats.get("upgrade"), Ok(Json::Null)), "no upgrade in progress");
 }
 
 #[test]
