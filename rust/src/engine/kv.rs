@@ -325,6 +325,56 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Elements one page holds in one pool tensor (per layer, K or V).
+    fn page_stride(&self) -> usize {
+        self.kv_heads_l * self.page_size * self.head_dim
+    }
+
+    /// Read one page's full contents — every layer, K plane then V plane,
+    /// layer-major — as a flat f32 vector. This is the serialization order
+    /// the disk spill tier ([`super::SpillStore`]) stores verbatim, so
+    /// `write_page(read_page(p))` is bitwise-exact by construction.
+    pub fn read_page(&self, page: u32) -> Result<Vec<f32>> {
+        let p = page as usize;
+        if p >= self.pages {
+            bail!("read_page: page {p} out of range ({} pages)", self.pages);
+        }
+        let stride = self.page_stride();
+        let mut out = Vec::with_capacity(2 * self.k.len() * stride);
+        for layer in 0..self.k.len() {
+            out.extend_from_slice(&self.k[layer].data[p * stride..(p + 1) * stride]);
+            out.extend_from_slice(&self.v[layer].data[p * stride..(p + 1) * stride]);
+        }
+        Ok(out)
+    }
+
+    /// Overwrite one page from a flat f32 vector in [`read_page`]'s layout
+    /// (the disk tier's restore path).
+    ///
+    /// [`read_page`]: PagedKvCache::read_page
+    pub fn write_page(&mut self, page: u32, data: &[f32]) -> Result<()> {
+        let p = page as usize;
+        if p >= self.pages {
+            bail!("write_page: page {p} out of range ({} pages)", self.pages);
+        }
+        let stride = self.page_stride();
+        if data.len() != 2 * self.k.len() * stride {
+            bail!(
+                "write_page: {} elems for a {}-elem page",
+                data.len(),
+                2 * self.k.len() * stride
+            );
+        }
+        for layer in 0..self.k.len() {
+            let base = 2 * layer * stride;
+            self.k[layer].data[p * stride..(p + 1) * stride]
+                .copy_from_slice(&data[base..base + stride]);
+            self.v[layer].data[p * stride..(p + 1) * stride]
+                .copy_from_slice(&data[base + stride..base + 2 * stride]);
+        }
+        Ok(())
+    }
+
     /// Scatter freshly written K/V rows into the pool. `rows` is
     /// `[n, KVl, D]` flattened; `dst[i]` is the (page, in-page offset) each
     /// row lands at.
@@ -405,6 +455,17 @@ pub struct BlockAllocator {
     shared_active: usize,
     /// Pages referenced only by the tree (the evictable cache).
     cached_idle: usize,
+    /// Per-page eviction pin count: the batcher pins a matched chain (and
+    /// COW source) between `match_prefix` and `tree_retain`/`copy_page` so
+    /// a same-step shortfall eviction for a *different* admission cannot
+    /// free it mid-admit (the match→retain TOCTOU). Pins only ever sit on
+    /// tree-referenced pages and only block `tree_release`.
+    pins: Vec<u32>,
+    /// Per-page "backing allocated but bytes not landed yet": the disk
+    /// tier's async-restore state. A pending page is owned by exactly one
+    /// request (rc_req > 0, never tree-referenced) whose slot sits in the
+    /// load phase until every pending bit clears.
+    pending: Vec<bool>,
 }
 
 impl BlockAllocator {
@@ -423,6 +484,8 @@ impl BlockAllocator {
             tree_ref: vec![false; total_pages],
             shared_active: 0,
             cached_idle: 0,
+            pins: vec![0; total_pages],
+            pending: vec![false; total_pages],
         }
     }
 
@@ -583,6 +646,9 @@ impl BlockAllocator {
             let p = page as usize;
             self.rc_req[p] -= 1;
             if self.rc_req[p] == 0 {
+                // an aborted disk restore must not leave a stale pending
+                // bit on a recycled page
+                self.pending[p] = false;
                 if self.tree_ref[p] {
                     self.shared_active -= 1;
                     self.cached_idle += 1;
@@ -603,6 +669,73 @@ impl BlockAllocator {
     /// Is `page` referenced by the prefix tree?
     pub fn is_cached(&self, page: u32) -> bool {
         self.tree_ref[page as usize]
+    }
+
+    /// Pin a cached page against eviction for the match→retain window.
+    /// Only tree-referenced pages can be pinned (a private page is already
+    /// unevictable); pins nest.
+    pub fn pin(&mut self, page: u32) -> Result<()> {
+        let p = page as usize;
+        if p >= self.total_pages || !self.tree_ref[p] {
+            bail!("pin: page {page} is not a cached page");
+        }
+        self.pins[p] += 1;
+        Ok(())
+    }
+
+    /// Drop one eviction pin from `page`.
+    pub fn unpin(&mut self, page: u32) -> Result<()> {
+        let p = page as usize;
+        if p >= self.total_pages || self.pins[p] == 0 {
+            bail!("unpin: page {page} is not pinned");
+        }
+        self.pins[p] -= 1;
+        Ok(())
+    }
+
+    /// Eviction pins currently held on `page`.
+    pub fn pin_count(&self, page: u32) -> u32 {
+        self.pins[page as usize]
+    }
+
+    /// May the prefix tree evict `page` right now? (No request reference
+    /// and no admission-window pin.)
+    pub fn evictable(&self, page: u32) -> bool {
+        self.rc_req[page as usize] == 0 && self.pins[page as usize] == 0
+    }
+
+    /// Flag `page` as awaiting its bytes from the disk tier. The page must
+    /// be privately owned (rc_req > 0, not tree-referenced): the loading
+    /// request already holds its backing, only the contents are in flight.
+    pub fn mark_pending(&mut self, page: u32) -> Result<()> {
+        let p = page as usize;
+        if p >= self.total_pages {
+            bail!("mark_pending: page {page} out of range");
+        }
+        if self.rc_req[p] == 0 {
+            bail!("mark_pending: page {page} has no owner");
+        }
+        if self.tree_ref[p] {
+            bail!("mark_pending: page {page} is a cached page (its bytes already exist)");
+        }
+        self.pending[p] = true;
+        Ok(())
+    }
+
+    /// Clear the pending flag (the bytes landed, or the load was
+    /// abandoned for a cold prefill over the same page).
+    pub fn clear_pending(&mut self, page: u32) {
+        self.pending[page as usize] = false;
+    }
+
+    /// Is `page` still waiting for its disk bytes?
+    pub fn is_pending(&self, page: u32) -> bool {
+        self.pending[page as usize]
+    }
+
+    /// Pages currently awaiting disk bytes (stats / audits).
+    pub fn pending_pages(&self) -> usize {
+        self.pending.iter().filter(|&&b| b).count()
     }
 
     /// Take the prefix tree's reference on `page` (publish). The page must
@@ -635,6 +768,9 @@ impl BlockAllocator {
         }
         if self.rc_req[p] > 0 {
             bail!("tree_release: page {page} still has {} request refs", self.rc_req[p]);
+        }
+        if self.pins[p] > 0 {
+            bail!("tree_release: page {page} is pinned by an in-flight admission");
         }
         self.tree_ref[p] = false;
         self.cached_idle -= 1;
@@ -814,6 +950,22 @@ impl BlockAllocator {
                 self.shared_active,
                 self.total_pages
             );
+        }
+        for p in 0..self.total_pages {
+            if self.pins[p] > 0 && !self.tree_ref[p] {
+                bail!("page {p} is pinned ({} pins) but not tree-referenced", self.pins[p]);
+            }
+            if self.pending[p] {
+                if rc[p] == 0 {
+                    bail!("page {p} is pending a disk load with no owner");
+                }
+                if self.tree_ref[p] {
+                    bail!("page {p} is pending a disk load but already cached");
+                }
+                if free_seen[p] {
+                    bail!("page {p} is pending a disk load while on the free list");
+                }
+            }
         }
         Ok(())
     }
@@ -1140,5 +1292,76 @@ mod tests {
         assert_eq!(a.free_shortfall(2, 12), 0);
         assert_eq!(a.free_shortfall(2, 16), 1);
         assert_eq!(a.free_shortfall(9, 4), 0, "unknown owners have no table yet");
+    }
+
+    #[test]
+    fn page_read_write_roundtrip_is_bitwise() {
+        let (layers, kvl, p, d) = (2usize, 2usize, 4usize, 2usize);
+        let mut pool = PagedKvCache::new(layers, 3, kvl, p, d);
+        for (i, x) in pool.k[0].data.iter_mut().enumerate() {
+            *x = i as f32 + 0.5;
+        }
+        for (i, x) in pool.v[1].data.iter_mut().enumerate() {
+            *x = -(i as f32) - 0.25;
+        }
+        let blob = pool.read_page(1).unwrap();
+        assert_eq!(blob.len(), 2 * layers * kvl * p * d);
+        // restoring into a different page of a fresh pool reproduces the
+        // bytes exactly (the spill tier's whole contract)
+        let mut fresh = PagedKvCache::new(layers, 3, kvl, p, d);
+        fresh.write_page(2, &blob).unwrap();
+        let back = fresh.read_page(2).unwrap();
+        for (a, b) in back.iter().zip(&blob) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // pages outside the restored one stay zero
+        assert!(fresh.read_page(0).unwrap().iter().all(|&x| x == 0.0));
+        assert!(pool.read_page(9).is_err());
+        assert!(fresh.write_page(9, &blob).is_err());
+        assert!(fresh.write_page(0, &blob[1..]).is_err(), "short payload must be rejected");
+    }
+
+    #[test]
+    fn pins_block_tree_release_until_dropped() {
+        let mut a = BlockAllocator::new(4, 4, 1);
+        a.admit(1, 8, 8).unwrap();
+        let chain = a.table(1).unwrap().pages.clone();
+        a.tree_retain(chain[0]).unwrap();
+        a.tree_retain(chain[1]).unwrap();
+        a.free(1);
+        assert!(a.pin(3).is_err(), "only cached pages can be pinned");
+        a.pin(chain[0]).unwrap();
+        a.pin(chain[0]).unwrap(); // pins nest
+        a.check().unwrap();
+        assert!(!a.evictable(chain[0]));
+        assert!(a.evictable(chain[1]));
+        assert!(a.tree_release(chain[0]).is_err(), "pinned page must survive eviction");
+        a.unpin(chain[0]).unwrap();
+        assert!(a.tree_release(chain[0]).is_err(), "still one pin outstanding");
+        a.unpin(chain[0]).unwrap();
+        assert!(a.unpin(chain[0]).is_err(), "unbalanced unpin is a caller bug");
+        a.tree_release(chain[0]).unwrap();
+        a.check().unwrap();
+    }
+
+    #[test]
+    fn pending_pages_are_owned_and_cleared_on_free() {
+        let mut a = BlockAllocator::new(4, 4, 1);
+        assert!(a.mark_pending(0).is_err(), "a free page cannot be pending");
+        a.admit(1, 8, 8).unwrap();
+        let pages = a.table(1).unwrap().pages.clone();
+        a.mark_pending(pages[1]).unwrap();
+        assert!(a.is_pending(pages[1]));
+        assert_eq!(a.pending_pages(), 1);
+        a.check().unwrap();
+        // publishing a pending page is impossible by construction (the
+        // loading slot publishes only after the bytes land) but a cached
+        // page must reject mark_pending outright
+        a.tree_retain(pages[0]).unwrap();
+        assert!(a.mark_pending(pages[0]).is_err());
+        // an aborted load: freeing the owner clears the flag with the page
+        a.free(1);
+        assert!(!a.is_pending(pages[1]), "free must clear pending");
+        a.check().unwrap();
     }
 }

@@ -19,6 +19,7 @@ pub mod kv;
 pub mod overlap;
 pub mod prefix;
 pub mod rank;
+pub mod spill;
 pub mod threaded;
 pub mod tpengine;
 pub mod trace;
@@ -28,6 +29,7 @@ pub use kv::{BlockAllocator, KvCache, KvLayout, PageTable, PagedFwd, PagedKvCach
 pub use overlap::OverlapMode;
 pub use prefix::PrefixTree;
 pub use rank::{Embedder, RankKv, RankState, Rows};
+pub use spill::SpillStore;
 pub use threaded::ThreadedRuntime;
 pub use tpengine::{RuntimeKind, TpEngine};
 pub use trace::EngineTracer;

@@ -29,7 +29,7 @@
 //! orphan a path a live request is reading, and repeated eviction drains
 //! any fully idle subtree deepest-first.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use anyhow::{bail, Result};
 
@@ -58,6 +58,11 @@ pub struct PrefixTree {
     /// LRU clock: bumped once per lookup/insert, stamped onto touched nodes.
     clock: u64,
     cached_pages: usize,
+    /// `(last_used, idx)` over every live node — the eviction scan order.
+    /// Kept in lockstep with the arena (insert/touch/evict) so victim
+    /// selection is an ordered walk instead of an O(nodes) rescan per
+    /// evicted page.
+    order: BTreeSet<(u64, usize)>,
 }
 
 impl PrefixTree {
@@ -70,7 +75,18 @@ impl PrefixTree {
             root: HashMap::new(),
             clock: 0,
             cached_pages: 0,
+            order: BTreeSet::new(),
         }
+    }
+
+    /// Move a node to the current clock in both the arena and the ordered
+    /// index (the one place a stamp is allowed to change).
+    fn touch(&mut self, idx: usize) {
+        let node = self.nodes[idx].as_mut().expect("touched node is live");
+        let old = node.last_used;
+        node.last_used = self.clock;
+        self.order.remove(&(old, idx));
+        self.order.insert((self.clock, idx));
     }
 
     pub fn page_size(&self) -> usize {
@@ -100,7 +116,7 @@ impl PrefixTree {
             children = &node.children;
         }
         for idx in touched {
-            self.nodes[idx].as_mut().expect("touched above").last_used = self.clock;
+            self.touch(idx);
         }
         chain
     }
@@ -138,7 +154,7 @@ impl PrefixTree {
             };
             let idx = match existing {
                 Some(idx) => {
-                    self.nodes[idx].as_mut().expect("live child").last_used = self.clock;
+                    self.touch(idx);
                     idx
                 }
                 None => {
@@ -169,6 +185,7 @@ impl PrefixTree {
                             .insert(key.to_vec(), idx),
                     };
                     self.cached_pages += 1;
+                    self.order.insert((self.clock, idx));
                     added += 1;
                     idx
                 }
@@ -179,30 +196,52 @@ impl PrefixTree {
     }
 
     /// Evict up to `want` pages in LRU order, restricted to leaves whose
-    /// page no request references (evicting a leaf may expose its parent
-    /// for the next round, so an idle chain drains deepest-first). Returns
-    /// the evicted page ids — each is back on the allocator's free list.
+    /// page the allocator calls evictable — no request references and no
+    /// admission-window pin (evicting a leaf may expose its parent for the
+    /// next round, so an idle chain drains deepest-first). Returns the
+    /// evicted page ids — each is back on the allocator's free list.
     /// Fewer than `want` means nothing else is evictable right now.
     ///
-    /// Victim selection is a linear arena scan per evicted page — O(nodes)
-    /// each, and it only runs when the free list cannot cover a
-    /// reservation. At pool sizes where that scan shows up in profiles,
-    /// the upgrade is an ordered index over zero-ref leaves maintained on
-    /// retain/release/insert; the scan is kept here because it cannot
-    /// disagree with the refcounts it reads.
+    /// Victim selection walks the `(last_used, idx)` ordered index from a
+    /// cursor instead of rescanning the arena per evicted page — O(k log n)
+    /// for k evictions rather than O(k·n). The cursor never skips a valid
+    /// victim: entries behind it were inspected and rejected, and the only
+    /// rejection an eviction can undo is "has children" on the victim's own
+    /// parent — whose `(last_used, idx)` key the cursor rolls back to
+    /// (parents are stamped whenever a descendant is touched, so a parent's
+    /// stamp is never older than its children's; only the equal-stamp
+    /// smaller-index parent can sort before its child). The victim order is
+    /// therefore identical to a full min-scan per round, which the seeded
+    /// parity test below pins.
     pub fn evict(&mut self, want: usize, alloc: &mut BlockAllocator) -> Result<Vec<u32>> {
+        Ok(self.evict_with_keys(want, alloc)?.into_iter().map(|(page, _)| page).collect())
+    }
+
+    /// [`evict`](Self::evict), additionally reporting each victim's full
+    /// root-path token prefix — what the disk spill tier keys its file by.
+    /// The tokens are collected *before* the node is unlinked, so the pair
+    /// is exactly (page id, the page-aligned prompt prefix whose K/V rows
+    /// the page holds).
+    pub fn evict_with_keys(
+        &mut self,
+        want: usize,
+        alloc: &mut BlockAllocator,
+    ) -> Result<Vec<(u32, Vec<i32>)>> {
         let mut evicted = Vec::new();
+        let mut cursor: (u64, usize) = (0, 0);
         while evicted.len() < want {
-            // oldest zero-ref leaf; index tie-break keeps runs deterministic
-            let victim = self
-                .nodes
-                .iter()
-                .enumerate()
-                .filter_map(|(i, slot)| slot.as_ref().map(|n| (i, n)))
-                .filter(|(_, n)| n.children.is_empty() && alloc.req_refs(n.page) == 0)
-                .min_by_key(|(i, n)| (n.last_used, *i))
-                .map(|(i, _)| i);
-            let Some(idx) = victim else { break };
+            let mut victim = None;
+            for &(stamp, idx) in self.order.range(cursor..) {
+                let node = self.nodes[idx].as_ref().expect("ordered index tracks live nodes");
+                if node.children.is_empty() && alloc.evictable(node.page) {
+                    victim = Some((stamp, idx));
+                    break;
+                }
+            }
+            let Some((stamp, idx)) = victim else { break };
+            cursor = (stamp, idx + 1);
+            let tokens = self.path_tokens(idx);
+            self.order.remove(&(stamp, idx));
             let node = self.nodes[idx].take().expect("victim is live");
             let removed = match node.parent {
                 None => self.root.remove(&node.key),
@@ -216,9 +255,34 @@ impl PrefixTree {
             self.free_slots.push(idx);
             self.cached_pages -= 1;
             alloc.tree_release(node.page)?;
-            evicted.push(node.page);
+            evicted.push((node.page, tokens));
+            if let Some(p) = node.parent {
+                let parent = self.nodes[p].as_ref().expect("parent outlives child");
+                if parent.children.is_empty() {
+                    // the eviction exposed its parent as a leaf; its key can
+                    // sort before the cursor (equal stamp, smaller index),
+                    // so rewind far enough to reconsider it
+                    cursor = cursor.min((parent.last_used, p));
+                }
+            }
         }
         Ok(evicted)
+    }
+
+    /// The page-aligned token prefix ending at node `idx` (root-path keys
+    /// concatenated in order).
+    fn path_tokens(&self, idx: usize) -> Vec<i32> {
+        let mut rev: Vec<usize> = Vec::new();
+        let mut at = Some(idx);
+        while let Some(i) = at {
+            rev.push(i);
+            at = self.nodes[i].as_ref().expect("path nodes are live").parent;
+        }
+        let mut tokens = Vec::with_capacity(rev.len() * self.page_size);
+        for &i in rev.iter().rev() {
+            tokens.extend_from_slice(&self.nodes[i].as_ref().expect("live").key);
+        }
+        tokens
     }
 
     /// Evict everything evictable (drained server / tests). Each `evict`
@@ -231,6 +295,21 @@ impl PrefixTree {
     /// Every page the tree currently references (audits).
     pub fn pages(&self) -> Vec<u32> {
         self.nodes.iter().flatten().map(|n| n.page).collect()
+    }
+
+    /// Every cached chain as `(full token prefix, terminal page)` — one
+    /// entry per live node, so a root-to-leaf path of depth d yields d
+    /// page-granular entries. This is the engine `snapshot` walk: spilling
+    /// each entry persists the whole tree to the disk tier.
+    pub fn chains(&self) -> Vec<(Vec<i32>, u32)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| slot.is_some())
+            .map(|(idx, slot)| {
+                (self.path_tokens(idx), slot.as_ref().expect("filtered live").page)
+            })
+            .collect()
     }
 }
 
@@ -339,5 +418,120 @@ mod tests {
         assert_eq!(tree.flush(&mut alloc).unwrap(), 2);
         alloc.check().unwrap();
         assert_eq!(alloc.free_pages(), 16);
+    }
+
+    /// The old victim rule, verbatim: full arena min-scan over zero-ref
+    /// leaves with the `(last_used, idx)` tie-break. The ordered-walk
+    /// eviction must never disagree with it.
+    fn naive_victim(tree: &PrefixTree, alloc: &BlockAllocator) -> Option<u32> {
+        tree.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, slot)| slot.as_ref().map(|n| (i, n)))
+            .filter(|(_, n)| n.children.is_empty() && alloc.req_refs(n.page) == 0)
+            .min_by_key(|(i, n)| (n.last_used, *i))
+            .map(|(_, n)| n.page)
+    }
+
+    /// Seeded forest with forks, duplicate prefixes and scrambled recency
+    /// — the parity fixture for the ordered eviction walk.
+    fn seeded_forest() -> (PrefixTree, BlockAllocator) {
+        let mut alloc = BlockAllocator::new(64, 4, 1);
+        let mut tree = PrefixTree::new(4);
+        let a: Vec<i32> = (0..16).collect(); // 4-page chain
+        let mut b = a[..12].to_vec(); // forks off a at page 3
+        b[9] = 90;
+        let c: Vec<i32> = (100..112).collect(); // disjoint 3-page chain
+        let d: Vec<i32> = (0..8).collect(); // pure duplicate of a's head
+        for (owner, t) in [(1u64, &a), (2, &b), (3, &c), (4, &d)] {
+            let pages = prefill(&mut alloc, *owner, t);
+            tree.insert(t, &pages, &mut alloc).unwrap();
+            alloc.free(*owner);
+        }
+        // scramble LRU stamps: equal-stamp ties and interleaved recency
+        tree.match_prefix(&c);
+        tree.match_prefix(&a[..8]);
+        tree.match_prefix(&b);
+        alloc.check().unwrap();
+        (tree, alloc)
+    }
+
+    #[test]
+    fn ordered_eviction_matches_the_naive_scan_victim_order() {
+        // one-at-a-time: every evict(1) must take exactly the full-scan pick
+        let (mut t1, mut a1) = seeded_forest();
+        let mut order1 = Vec::new();
+        loop {
+            let expect = naive_victim(&t1, &a1);
+            let got = t1.evict(1, &mut a1).unwrap();
+            match expect {
+                Some(page) => assert_eq!(got, vec![page], "victim #{}", order1.len()),
+                None => {
+                    assert!(got.is_empty());
+                    break;
+                }
+            }
+            order1.push(got[0]);
+            a1.check().unwrap();
+        }
+        assert_eq!(t1.cached_pages(), 0);
+        assert!(!order1.is_empty());
+        // bulk drain under a single cursor produces the identical sequence
+        // (this is where the cursor-rollback-to-exposed-parent rule earns
+        // its keep: a's interior pages share stamps with smaller indices)
+        let (mut t2, mut a2) = seeded_forest();
+        let order2 = t2.evict(usize::MAX, &mut a2).unwrap();
+        assert_eq!(order2, order1, "single-cursor drain must match per-round rescans");
+        a2.check().unwrap();
+    }
+
+    #[test]
+    fn eviction_respects_admission_pins() {
+        let mut alloc = BlockAllocator::new(16, 4, 1);
+        let mut tree = PrefixTree::new(4);
+        let prompt: Vec<i32> = (0..8).collect();
+        let pages = prefill(&mut alloc, 1, &prompt);
+        tree.insert(&prompt, &pages, &mut alloc).unwrap();
+        alloc.free(1);
+        // a pinned leaf blocks itself and (leaf-only rule) its ancestors
+        alloc.pin(pages[1]).unwrap();
+        assert_eq!(tree.flush(&mut alloc).unwrap(), 0, "pinned chain must survive");
+        alloc.unpin(pages[1]).unwrap();
+        assert_eq!(tree.flush(&mut alloc).unwrap(), 2);
+        alloc.check().unwrap();
+    }
+
+    #[test]
+    fn evict_with_keys_reports_full_root_path_prefixes() {
+        let mut alloc = BlockAllocator::new(16, 4, 1);
+        let mut tree = PrefixTree::new(4);
+        let a: Vec<i32> = (0..12).collect();
+        let mut b = a[..8].to_vec();
+        b[5] = 50;
+        let pa = prefill(&mut alloc, 1, &a);
+        let pb = prefill(&mut alloc, 2, &b);
+        tree.insert(&a, &pa, &mut alloc).unwrap();
+        tree.insert(&b, &pb, &mut alloc).unwrap();
+        alloc.free(1);
+        alloc.free(2);
+        // chains() walks every node with its full prefix
+        let mut chains = tree.chains();
+        chains.sort();
+        let mut want = vec![
+            (a[..4].to_vec(), pa[0]),
+            (a[..8].to_vec(), pa[1]),
+            (a[..12].to_vec(), pa[2]),
+            (b[..8].to_vec(), pb[1]),
+        ];
+        want.sort();
+        assert_eq!(chains, want);
+        // each eviction reports the page together with the prefix that
+        // keys it on disk
+        let evicted = tree.evict_with_keys(usize::MAX, &mut alloc).unwrap();
+        let mut got: Vec<(Vec<i32>, u32)> =
+            evicted.into_iter().map(|(page, toks)| (toks, page)).collect();
+        got.sort();
+        assert_eq!(got, want);
+        alloc.check().unwrap();
     }
 }

@@ -178,6 +178,25 @@ impl RankState {
         }
     }
 
+    /// Serialize one pool page (paged layouts only) — the disk spill tier's
+    /// download path; see [`super::tpengine::TpEngine::read_page`].
+    pub fn read_page(&self, page: u32) -> Result<Vec<f32>> {
+        match &self.kv {
+            RankKv::Slab(_) => bail!("read_page on a slab-layout rank"),
+            RankKv::Paged(pool) => pool.read_page(page),
+        }
+    }
+
+    /// Restore one pool page from its serialized form (paged layouts only)
+    /// — the disk spill tier's upload path; see
+    /// [`super::tpengine::TpEngine::write_page`].
+    pub fn write_page(&mut self, page: u32, data: &[f32]) -> Result<()> {
+        match &mut self.kv {
+            RankKv::Slab(_) => bail!("write_page on a slab-layout rank"),
+            RankKv::Paged(pool) => pool.write_page(page, data),
+        }
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn block(
         &mut self,

@@ -1,0 +1,547 @@
+//! Disk tier for the prefix KV cache (`--kv-spill-dir`).
+//!
+//! The RAM tier (the radix [`PrefixTree`](super::PrefixTree) over the
+//! [`BlockAllocator`](super::BlockAllocator) page pool) forgets a chain the
+//! moment budget pressure evicts it; every re-arrival of that template then
+//! pays a full cold prefill. The spill store is a second, capacity-priced
+//! tier underneath it: when the batcher evicts a page it serializes that
+//! page's K/V bytes — together with the full token prefix that produced
+//! them — into one checksummed file, and a later admission that misses in
+//! RAM can probe the disk index, reload the bytes, and resume chunked
+//! prefill from the first truly-uncached token.
+//!
+//! ## On-disk format (one file per page-terminated chain, all little-endian)
+//!
+//! ```text
+//! offset  size        field
+//! 0       4           magic "LKVS"
+//! 4       4           format version (u32, currently 1)
+//! 8       8           config fingerprint (u64, FNV-1a over the engine's
+//!                     arch/tp/layer/head/page geometry string — a file
+//!                     written by a differently-shaped engine never loads)
+//! 16      4           n_tokens (u32): length of the full token prefix
+//! 20      4*n         token ids (i32 each)
+//! ..      4           n_ranks (u32)
+//! ..      8           per-rank payload length in f32 elements (u64)
+//! ..      4*r*l       payload: rank-major, each rank's page bytes exactly
+//!                     as `PagedKvCache::read_page` returns them
+//!                     (layer-major, K plane then V plane, f32)
+//! ..      4           CRC-32 (IEEE) over every preceding byte
+//! ```
+//!
+//! A file is keyed by `fnv1a64(token prefix)` and named
+//! `{key:016x}.kvp`. Loading re-verifies magic, version, fingerprint,
+//! the stored token prefix (a hash collision or truncated write must not
+//! serve wrong bytes) and the trailing CRC; any mismatch deletes the file
+//! and reports a miss — corruption degrades to a cold prefill, it is never
+//! served. `store` is write-to-temp-then-rename so a crash mid-spill
+//! leaves no half-written `.kvp` behind (the orphaned `.tmp` is swept on
+//! the next `open`).
+//!
+//! The store enforces `--kv-spill-budget-mb` itself: before admitting a
+//! new file it evicts least-recently-used files until the new total fits.
+//! `last_used` is process-local (rebuilt in deterministic filename order
+//! on `open`), which is enough — the budget is a disk-space valve, not a
+//! correctness surface.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"LKVS";
+const VERSION: u32 = 1;
+const EXT: &str = "kvp";
+
+/// FNV-1a 64-bit over the little-endian bytes of a token sequence. Used
+/// both to key spill files by token prefix and (over a config string) as
+/// the engine-geometry fingerprint.
+pub fn fnv1a64_tokens(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// FNV-1a 64-bit over raw bytes (config fingerprint strings).
+pub fn fnv1a64_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// CRC-32 (IEEE 802.3, reflected, init/final 0xFFFFFFFF) — table-driven,
+/// built once at first use.
+fn crc32(bytes: &[u8]) -> u32 {
+    fn table() -> [u32; 256] {
+        let mut t = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
+    }
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let t = TABLE.get_or_init(table);
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+struct IndexEntry {
+    path: PathBuf,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// The disk tier: an in-memory index over one directory of `.kvp` files.
+pub struct SpillStore {
+    dir: PathBuf,
+    /// 0 = unlimited.
+    budget_bytes: u64,
+    fingerprint: u64,
+    index: HashMap<u64, IndexEntry>,
+    clock: u64,
+}
+
+impl SpillStore {
+    /// Open (creating if needed) a spill directory. Existing `.kvp` files
+    /// are indexed by their filename key without reading their payloads —
+    /// full validation happens lazily on `load` (or eagerly via
+    /// [`validate_all`](Self::validate_all)). Orphaned `.tmp` files from a
+    /// crashed spill are removed.
+    pub fn open(dir: &Path, budget_bytes: u64, fingerprint: u64) -> Result<Self> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating kv spill dir {}", dir.display()))?;
+        let mut names: Vec<(u64, PathBuf, u64)> = Vec::new();
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("tmp") {
+                let _ = fs::remove_file(&path);
+                continue;
+            }
+            if path.extension().and_then(|e| e.to_str()) != Some(EXT) {
+                continue;
+            }
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
+            let Ok(key) = u64::from_str_radix(stem, 16) else { continue };
+            let bytes = entry.metadata()?.len();
+            names.push((key, path, bytes));
+        }
+        // deterministic recency seed: filename order (the budget valve
+        // only needs *an* order, and this one is reproducible)
+        names.sort_by_key(|(k, _, _)| *k);
+        let mut index = HashMap::new();
+        let mut clock = 0u64;
+        for (key, path, bytes) in names {
+            clock += 1;
+            index.insert(key, IndexEntry { path, bytes, last_used: clock });
+        }
+        Ok(Self { dir: dir.to_path_buf(), budget_bytes, fingerprint, index, clock })
+    }
+
+    /// Number of indexed spill files.
+    pub fn files(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Total indexed bytes on disk.
+    pub fn total_bytes(&self) -> u64 {
+        self.index.values().map(|e| e.bytes).sum()
+    }
+
+    fn path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.{EXT}"))
+    }
+
+    /// Does the index hold a chain for exactly this token prefix? (A
+    /// positive probe is a hint, not a promise — `load` still verifies.)
+    pub fn probe(&self, tokens: &[i32]) -> bool {
+        self.index.contains_key(&fnv1a64_tokens(tokens))
+    }
+
+    /// Serialize one page's per-rank K/V bytes under its full token
+    /// prefix. Returns the bytes written (0 when the store declined:
+    /// duplicate key, or a payload larger than the whole budget).
+    pub fn store(&mut self, tokens: &[i32], per_rank: &[Vec<f32>]) -> Result<u64> {
+        if tokens.is_empty() || per_rank.is_empty() {
+            bail!("spill store: empty chain or payload");
+        }
+        let rank_len = per_rank[0].len();
+        if per_rank.iter().any(|r| r.len() != rank_len) {
+            bail!("spill store: ragged per-rank payloads");
+        }
+        let key = fnv1a64_tokens(tokens);
+        if self.index.contains_key(&key) {
+            return Ok(0); // already spilled (dedup across repeated evictions)
+        }
+        let mut buf: Vec<u8> = Vec::with_capacity(
+            4 + 4 + 8 + 4 + 4 * tokens.len() + 4 + 8 + 4 * per_rank.len() * rank_len + 4,
+        );
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.fingerprint.to_le_bytes());
+        buf.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+        for t in tokens {
+            buf.extend_from_slice(&t.to_le_bytes());
+        }
+        buf.extend_from_slice(&(per_rank.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(rank_len as u64).to_le_bytes());
+        for rank in per_rank {
+            for v in rank {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+
+        let new_bytes = buf.len() as u64;
+        if self.budget_bytes > 0 {
+            if new_bytes > self.budget_bytes {
+                return Ok(0); // one chain bigger than the whole tier: skip
+            }
+            self.evict_until_fits(new_bytes);
+        }
+
+        let path = self.path_for(key);
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, &buf)
+            .with_context(|| format!("writing spill file {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing spill file {}", path.display()))?;
+        self.clock += 1;
+        self.index
+            .insert(key, IndexEntry { path, bytes: new_bytes, last_used: self.clock });
+        Ok(new_bytes)
+    }
+
+    /// Evict least-recently-used files until `incoming` more bytes fit
+    /// under the budget.
+    fn evict_until_fits(&mut self, incoming: u64) {
+        while self.total_bytes() + incoming > self.budget_bytes {
+            let Some((&victim, _)) =
+                self.index.iter().min_by_key(|(k, e)| (e.last_used, **k))
+            else {
+                return;
+            };
+            self.drop_entry(victim);
+        }
+    }
+
+    fn drop_entry(&mut self, key: u64) {
+        if let Some(entry) = self.index.remove(&key) {
+            let _ = fs::remove_file(&entry.path);
+        }
+    }
+
+    /// Load and fully verify the chain stored under this token prefix.
+    /// `Ok(None)` means miss — including any validation failure (bad
+    /// magic/version, foreign fingerprint, token mismatch, short file,
+    /// CRC mismatch), in which case the offending file is deleted so it
+    /// is never probed again. Only an I/O error on a healthy-looking
+    /// index is an `Err`.
+    pub fn load(&mut self, tokens: &[i32]) -> Result<Option<Vec<Vec<f32>>>> {
+        let key = fnv1a64_tokens(tokens);
+        let Some(entry) = self.index.get(&key) else { return Ok(None) };
+        let path = entry.path.clone();
+        let buf = match fs::read(&path) {
+            Ok(buf) => buf,
+            Err(_) => {
+                // file vanished under us (external cleanup): drop the entry
+                self.index.remove(&key);
+                return Ok(None);
+            }
+        };
+        match self.decode(tokens, &buf) {
+            Some(per_rank) => {
+                self.clock += 1;
+                if let Some(e) = self.index.get_mut(&key) {
+                    e.last_used = self.clock;
+                }
+                Ok(Some(per_rank))
+            }
+            None => {
+                self.drop_entry(key);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Strict decode of one spill file against an expected token prefix.
+    /// Returns `None` on any structural or integrity failure.
+    fn decode(&self, tokens: &[i32], buf: &[u8]) -> Option<Vec<Vec<f32>>> {
+        // header (fixed part) + trailing crc must fit
+        if buf.len() < 4 + 4 + 8 + 4 + 4 {
+            return None;
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let stored_crc = u32::from_le_bytes(crc_bytes.try_into().ok()?);
+        if crc32(body) != stored_crc {
+            return None;
+        }
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Option<&[u8]> {
+            let s = body.get(*off..*off + n)?;
+            *off += n;
+            Some(s)
+        };
+        if take(&mut off, 4)? != MAGIC {
+            return None;
+        }
+        if u32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?) != VERSION {
+            return None;
+        }
+        if u64::from_le_bytes(take(&mut off, 8)?.try_into().ok()?) != self.fingerprint {
+            return None;
+        }
+        let n_tokens = u32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?) as usize;
+        if n_tokens != tokens.len() {
+            return None;
+        }
+        for expect in tokens {
+            let got = i32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?);
+            if got != *expect {
+                return None;
+            }
+        }
+        let n_ranks = u32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?) as usize;
+        let rank_len = u64::from_le_bytes(take(&mut off, 8)?.try_into().ok()?) as usize;
+        if n_ranks == 0 || body.len() - off != 4 * n_ranks * rank_len {
+            return None;
+        }
+        let mut per_rank = Vec::with_capacity(n_ranks);
+        for _ in 0..n_ranks {
+            let mut rank = Vec::with_capacity(rank_len);
+            for _ in 0..rank_len {
+                rank.push(f32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?));
+            }
+            per_rank.push(rank);
+        }
+        Some(per_rank)
+    }
+
+    /// Eagerly verify every indexed file (the `restore` subcommand's
+    /// offline pass): re-reads each file, checks magic/version/
+    /// fingerprint/CRC and that the stored tokens hash to the filename
+    /// key. Returns `(kept, dropped)`; invalid files are deleted.
+    pub fn validate_all(&mut self) -> Result<(usize, usize)> {
+        let keys: Vec<u64> = self.index.keys().copied().collect();
+        let mut kept = 0usize;
+        let mut dropped = 0usize;
+        for key in keys {
+            let path = self.index[&key].path.clone();
+            let ok = match fs::read(&path) {
+                Ok(buf) => self.decode_any(&buf).is_some_and(|t| fnv1a64_tokens(&t) == key),
+                Err(_) => false,
+            };
+            if ok {
+                kept += 1;
+            } else {
+                self.drop_entry(key);
+                dropped += 1;
+            }
+        }
+        Ok((kept, dropped))
+    }
+
+    /// Like `decode` but without an expected token prefix: returns the
+    /// stored tokens when the file is structurally sound and
+    /// checksum/fingerprint-valid.
+    fn decode_any(&self, buf: &[u8]) -> Option<Vec<i32>> {
+        if buf.len() < 4 + 4 + 8 + 4 + 4 {
+            return None;
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        if crc32(body) != u32::from_le_bytes(crc_bytes.try_into().ok()?) {
+            return None;
+        }
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Option<&[u8]> {
+            let s = body.get(*off..*off + n)?;
+            *off += n;
+            Some(s)
+        };
+        if take(&mut off, 4)? != MAGIC {
+            return None;
+        }
+        if u32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?) != VERSION {
+            return None;
+        }
+        if u64::from_le_bytes(take(&mut off, 8)?.try_into().ok()?) != self.fingerprint {
+            return None;
+        }
+        let n_tokens = u32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?) as usize;
+        let mut tokens = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            tokens.push(i32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?));
+        }
+        let n_ranks = u32::from_le_bytes(take(&mut off, 4)?.try_into().ok()?) as usize;
+        let rank_len = u64::from_le_bytes(take(&mut off, 8)?.try_into().ok()?) as usize;
+        if n_ranks == 0 || body.len() - off != 4 * n_ranks * rank_len {
+            return None;
+        }
+        Some(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "lkvs_spill_{}_{}_{tag}_{n}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").replace("::", "_"),
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn payload(seed: f32) -> Vec<Vec<f32>> {
+        (0..2)
+            .map(|r| (0..64).map(|i| seed + r as f32 * 100.0 + i as f32 * 0.25).collect())
+            .collect()
+    }
+
+    #[test]
+    fn round_trip_is_bitwise_identical() {
+        let dir = scratch_dir("rt");
+        let mut s = SpillStore::open(&dir, 0, 0xF00D).unwrap();
+        let tokens: Vec<i32> = (1..=16).collect();
+        let data = payload(3.5);
+        let wrote = s.store(&tokens, &data).unwrap();
+        assert!(wrote > 0);
+        assert!(s.probe(&tokens));
+        let back = s.load(&tokens).unwrap().expect("stored chain must load");
+        assert_eq!(back.len(), data.len());
+        for (a, b) in back.iter().zip(&data) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "payload must survive bitwise");
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_rebuilds_the_index_from_disk() {
+        let dir = scratch_dir("reopen");
+        let tokens: Vec<i32> = vec![7; 8];
+        {
+            let mut s = SpillStore::open(&dir, 0, 42).unwrap();
+            s.store(&tokens, &payload(1.0)).unwrap();
+        }
+        let mut s = SpillStore::open(&dir, 0, 42).unwrap();
+        assert_eq!(s.files(), 1);
+        assert!(s.probe(&tokens));
+        assert!(s.load(&tokens).unwrap().is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_file_is_dropped_never_served() {
+        let dir = scratch_dir("corrupt");
+        let mut s = SpillStore::open(&dir, 0, 9).unwrap();
+        let tokens: Vec<i32> = (0..8).collect();
+        s.store(&tokens, &payload(2.0)).unwrap();
+        // flip one payload byte on disk
+        let path = dir.join(format!("{:016x}.{EXT}", fnv1a64_tokens(&tokens)));
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        assert!(s.load(&tokens).unwrap().is_none(), "corrupt chain must read as a miss");
+        assert!(!path.exists(), "corrupt file must be deleted");
+        assert!(!s.probe(&tokens), "index entry must be gone");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_fingerprint_is_rejected() {
+        let dir = scratch_dir("fp");
+        let tokens: Vec<i32> = (0..8).collect();
+        {
+            let mut a = SpillStore::open(&dir, 0, 1).unwrap();
+            a.store(&tokens, &payload(0.5)).unwrap();
+        }
+        // same dir, different engine geometry
+        let mut b = SpillStore::open(&dir, 0, 2).unwrap();
+        assert!(b.probe(&tokens), "index is fingerprint-blind until load");
+        assert!(b.load(&tokens).unwrap().is_none(), "foreign fingerprint must miss");
+        assert!(!b.probe(&tokens), "rejected file must leave the index");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_evicts_least_recently_used_files() {
+        let dir = scratch_dir("budget");
+        // each file: header 20 + 4*8 tokens + 12 + payload 2*64*4 + crc 4
+        // = 580 bytes; budget fits two.
+        let mut s = SpillStore::open(&dir, 1300, 5).unwrap();
+        let t1: Vec<i32> = (0..8).collect();
+        let t2: Vec<i32> = (100..108).collect();
+        let t3: Vec<i32> = (200..208).collect();
+        assert!(s.store(&t1, &payload(1.0)).unwrap() > 0);
+        assert!(s.store(&t2, &payload(2.0)).unwrap() > 0);
+        // touch t1 so t2 becomes the LRU victim
+        assert!(s.load(&t1).unwrap().is_some());
+        assert!(s.store(&t3, &payload(3.0)).unwrap() > 0);
+        assert_eq!(s.files(), 2);
+        assert!(s.probe(&t1), "recently-loaded chain survives");
+        assert!(!s.probe(&t2), "LRU chain is evicted for the newcomer");
+        assert!(s.probe(&t3));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_all_prunes_only_broken_files() {
+        let dir = scratch_dir("validate");
+        let mut s = SpillStore::open(&dir, 0, 77).unwrap();
+        let good: Vec<i32> = (0..8).collect();
+        let bad: Vec<i32> = (50..58).collect();
+        s.store(&good, &payload(1.0)).unwrap();
+        s.store(&bad, &payload(2.0)).unwrap();
+        let bad_path = dir.join(format!("{:016x}.{EXT}", fnv1a64_tokens(&bad)));
+        let mut bytes = fs::read(&bad_path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01; // break the CRC itself
+        fs::write(&bad_path, &bytes).unwrap();
+        let (kept, dropped) = s.validate_all().unwrap();
+        assert_eq!((kept, dropped), (1, 1));
+        assert!(s.probe(&good));
+        assert!(!s.probe(&bad));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_payload_is_declined_not_stored() {
+        let dir = scratch_dir("oversize");
+        let mut s = SpillStore::open(&dir, 64, 3).unwrap();
+        let tokens: Vec<i32> = (0..8).collect();
+        assert_eq!(s.store(&tokens, &payload(1.0)).unwrap(), 0);
+        assert_eq!(s.files(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -54,6 +54,16 @@ enum Cmd {
     /// the prefix cache's copy-on-write step). FIFO ordering puts the copy
     /// before any later `Forward` that reads `dst`.
     CopyPage(u32, u32),
+    /// Serialize one pool page and send it back on the dedicated reply
+    /// channel (the disk spill tier reading a page's bytes). Synchronous:
+    /// the coordinator blocks on the reply, so the page cannot change
+    /// under the read.
+    ReadPage { page: u32, reply: mpsc::Sender<Result<Vec<f32>>> },
+    /// Restore one pool page from its serialized bytes (the disk tier's
+    /// upload path). Fire-and-forget like `CopyPage`: FIFO ordering puts
+    /// the write before any later `Forward` that reads the page, and a
+    /// worker-side failure poisons the collective.
+    WritePage(u32, Arc<Vec<f32>>),
     Shutdown,
 }
 
@@ -191,6 +201,51 @@ impl ThreadedRuntime {
         }
         Ok(())
     }
+
+    /// Serialize pool page `page` on every rank, rank-ordered (the disk
+    /// spill tier's download path). Blocks until all ranks reply, so the
+    /// caller sees a consistent snapshot.
+    pub fn read_page(&self, page: u32) -> Result<Vec<Vec<f32>>> {
+        let mut pending = Vec::with_capacity(self.tp);
+        for (rank, tx) in self.cmds.iter().enumerate() {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Cmd::ReadPage { page, reply: rtx })
+                .map_err(|_| anyhow!("rank {rank} worker hung up"))?;
+            pending.push(rrx);
+        }
+        let mut out = Vec::with_capacity(self.tp);
+        let mut first_err: Option<anyhow::Error> = None;
+        for (rank, rrx) in pending.into_iter().enumerate() {
+            match rrx.recv() {
+                Ok(Ok(data)) => out.push(data),
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(anyhow!("rank {rank} read_page: {e}"));
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow!("rank {rank} worker died"));
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// Restore pool page `page` on every rank from per-rank serialized
+    /// bytes (the disk tier's upload path). Fire-and-forget like
+    /// `copy_page`: FIFO channel ordering lands the write before any later
+    /// `Forward`, and a worker-side failure poisons the collective.
+    pub fn write_page(&self, page: u32, per_rank: &[Vec<f32>]) -> Result<()> {
+        if per_rank.len() != self.tp {
+            anyhow::bail!("write_page: {} rank payloads for tp={}", per_rank.len(), self.tp);
+        }
+        for (rank, (tx, data)) in self.cmds.iter().zip(per_rank).enumerate() {
+            tx.send(Cmd::WritePage(page, Arc::new(data.clone())))
+                .map_err(|_| anyhow!("rank {rank} worker hung up"))?;
+        }
+        Ok(())
+    }
 }
 
 impl Drop for ThreadedRuntime {
@@ -260,7 +315,12 @@ fn worker_main(
                             break;
                         }
                     }
-                    Cmd::Release(..) | Cmd::CopyPage(..) => {}
+                    Cmd::Release(..) | Cmd::CopyPage(..) | Cmd::WritePage(..) => {}
+                    Cmd::ReadPage { reply, .. } => {
+                        // the coordinator blocks on this channel: answer
+                        // (or let the drop disconnect it) so it never hangs
+                        let _ = reply.send(Err(anyhow!(msg.clone())));
+                    }
                     Cmd::Shutdown => break,
                 }
             }
@@ -295,6 +355,16 @@ fn worker_main(
                     // validated coordinator-side, so this is a corrupt rank:
                     // fail the next collective rather than serve bad KV
                     ctx.coll.poison(&format!("rank {rank} copy_page: {e:#}"));
+                }
+            }
+            Cmd::ReadPage { page, reply } => {
+                if reply.send(ctx.state.read_page(page)).is_err() {
+                    break; // coordinator gone
+                }
+            }
+            Cmd::WritePage(page, data) => {
+                if let Err(e) = ctx.state.write_page(page, &data) {
+                    ctx.coll.poison(&format!("rank {rank} write_page: {e:#}"));
                 }
             }
             Cmd::Shutdown => break,

@@ -496,6 +496,73 @@ impl TpEngine {
         }
     }
 
+    /// Serialize one KV page on every rank, in rank order — all layers, K
+    /// plane then V plane per layer ([`PagedKvCache::read_page`]'s layout).
+    /// This is the disk spill tier's download path; it blocks until every
+    /// rank has answered, so the snapshot is consistent.
+    pub fn read_page(&self, page: u32) -> Result<Vec<Vec<f32>>> {
+        self.want_paged("read_page")?;
+        let KvLayout::Paged { pages, .. } = self.layout else { unreachable!() };
+        if page as usize >= pages {
+            bail!("read_page: page {page} out of range for a {pages}-page pool");
+        }
+        match self.runtime {
+            RuntimeKind::Sequential => {
+                self.ranks.iter().map(|rank| rank.read_page(page)).collect()
+            }
+            RuntimeKind::Threaded => {
+                self.threaded.as_ref().expect("threaded runtime").read_page(page)
+            }
+        }
+    }
+
+    /// Restore one KV page on every rank from per-rank serialized bytes —
+    /// the disk spill tier's upload path, bitwise-exact inverse of
+    /// [`TpEngine::read_page`]. Channel FIFO ordering on the threaded
+    /// runtime lands the write before any later forward reads the page.
+    pub fn write_page(&mut self, page: u32, per_rank: &[Vec<f32>]) -> Result<()> {
+        self.want_paged("write_page")?;
+        let KvLayout::Paged { pages, .. } = self.layout else { unreachable!() };
+        if page as usize >= pages {
+            bail!("write_page: page {page} out of range for a {pages}-page pool");
+        }
+        if per_rank.len() != self.tp {
+            bail!("write_page: {} rank payloads for tp={}", per_rank.len(), self.tp);
+        }
+        match self.runtime {
+            RuntimeKind::Sequential => {
+                for (rank, data) in self.ranks.iter_mut().zip(per_rank) {
+                    rank.write_page(page, data)?;
+                }
+                Ok(())
+            }
+            RuntimeKind::Threaded => {
+                self.threaded.as_ref().expect("threaded runtime").write_page(page, per_rank)
+            }
+        }
+    }
+
+    /// Geometry fingerprint for the disk spill tier: spill files carry it
+    /// in their header, and a store opened by a differently-shaped engine
+    /// (other arch, TP degree, layer/head/page geometry) rejects every
+    /// file instead of restoring bytes that would be misinterpreted.
+    pub fn kv_fingerprint(&self) -> u64 {
+        let page_size = match self.layout {
+            KvLayout::Slab => 0,
+            KvLayout::Paged { page_size, .. } => page_size,
+        };
+        let desc = format!(
+            "{}/tp{}/layers{}/kvh{}/hd{}/hidden{}/ps{page_size}/f32",
+            self.arch.name(),
+            self.tp,
+            self.cfg.layers,
+            self.cfg.kv_heads,
+            self.cfg.head_dim,
+            self.cfg.hidden,
+        );
+        super::spill::fnv1a64_bytes(desc.as_bytes())
+    }
+
     /// Release a slot (request finished/evicted). Slab layouts zero the
     /// slot's written prefix; paged layouts must **not** touch pool bytes —
     /// the batcher's allocator reclaims unreferenced pages, and pages still

@@ -7,6 +7,8 @@
 //!             a prefix-affinity router with drain/crash-restart)
 //!   tables    regenerate the paper's tables/figures from the perf model
 //!   train     run the quality-parity training experiments
+//!   snapshot  ask a running serve process to spill its prefix cache to disk
+//!   restore   offline audit of a --kv-spill-dir against an engine geometry
 //!
 //! Example:
 //!   ladder-infer serve --model small --arch ladder --tp 2 --port 8771
@@ -40,10 +42,13 @@ fn main() -> Result<()> {
         "router" => cmd_router(argv),
         "tables" => cmd_tables(argv),
         "train" => cmd_train(argv),
+        "snapshot" => cmd_snapshot(argv),
+        "restore" => cmd_restore(argv),
         _ => {
             println!(
                 "ladder-infer — Ladder-Residual TP inference framework\n\n\
-                 usage: ladder-infer <generate|serve|router|tables|train> [options]\n\
+                 usage: ladder-infer <generate|serve|router|tables|train|snapshot|restore> \
+                 [options]\n\
                  run any subcommand with --help for its options.\n\n\
                  see also: cargo run --release --example <quickstart|serve_e2e|\
                  train_parity|adapt_hybrid|paper_tables>"
@@ -91,6 +96,18 @@ fn engine_args(program: &str, about: &str) -> Args {
             "kv-budget-mb",
             Some("0"),
             "KV admission budget in MiB (0 = storage capacity is the only limit)",
+        )
+        .opt(
+            "kv-spill-dir",
+            Some(""),
+            "disk tier for the prefix cache: evicted chains spill here and are \
+             restored on later misses (empty = no tier; needs --prefix-cache)",
+        )
+        .opt(
+            "kv-spill-budget-mb",
+            Some("0"),
+            "byte budget for the spill dir in MiB; oldest files are deleted to \
+             stay under it (0 = unlimited)",
         )
 }
 
@@ -206,11 +223,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     if args.has_flag("prefix-cache") && !engine.kv_layout().is_paged() {
         anyhow::bail!("--prefix-cache needs a paged KV layout (set --page-size > 0)");
     }
+    if !args.get("kv-spill-dir")?.is_empty() && !args.has_flag("prefix-cache") {
+        anyhow::bail!("--kv-spill-dir needs --prefix-cache (the tier persists evicted chains)");
+    }
     let config = BatcherConfig {
         decode_burst: args.get_usize("decode-burst")?,
         kv_budget_bytes: args.get_usize("kv-budget-mb")? * (1 << 20),
         prefill_chunk: args.get_usize("prefill-chunk")?,
         prefix_cache: args.has_flag("prefix-cache"),
+        kv_spill_dir: args.get("kv-spill-dir")?,
+        kv_spill_budget_bytes: args.get_usize("kv-spill-budget-mb")? << 20,
     };
     let mut batcher = Batcher::with_tokenizer(engine, config, tok.clone());
     let addr = format!("127.0.0.1:{}", args.get_usize("port")?);
@@ -389,11 +411,16 @@ fn replica_slot(
     if prefix_cache && page_size == 0 {
         anyhow::bail!("prefix-cache needs a paged KV layout (set page-size > 0)");
     }
+    // a fleet may point several replicas at one spill dir: writes are
+    // tmp+rename atomic, files are content-keyed and checksummed, and a
+    // file deleted under a peer's index degrades to a cold-prefill miss
     let batcher_config = BatcherConfig {
         decode_burst: n("decode-burst")?,
         kv_budget_bytes: kv_budget,
         prefill_chunk: n("prefill-chunk")?,
         prefix_cache,
+        kv_spill_dir: s("kv-spill-dir")?,
+        kv_spill_budget_bytes: n("kv-spill-budget-mb")? << 20,
     };
     let seed = args.get_usize("seed")? as u64;
     let desc = Json::obj()
@@ -440,6 +467,62 @@ fn replica_slot(
         Ok(Batcher::with_tokenizer(engine, batcher_config.clone(), tok.clone()))
     });
     Ok(ReplicaSlotConfig::with_desc(factory, desc))
+}
+
+/// Ask a running `serve` process to spill its cached prefix chains to its
+/// disk tier ({"snapshot":true} over the line-JSON socket) and print the
+/// server's reply — `{"snapshot_files":..,"snapshot_bytes":..}` on
+/// success, an error object when the server has no tier configured.
+fn cmd_snapshot(argv: Vec<String>) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let args = Args::new(
+        "ladder-infer snapshot",
+        "spill a running server's prefix cache to its disk tier",
+    )
+    .opt("host", Some("127.0.0.1"), "serve host to contact")
+    .opt("port", Some("8771"), "serve port to contact")
+    .parse(argv)?;
+    let addr = format!("{}:{}", args.get("host")?, args.get_usize("port")?);
+    let mut stream = std::net::TcpStream::connect(&addr)?;
+    stream.write_all(b"{\"snapshot\": true}\n")?;
+    let mut line = String::new();
+    BufReader::new(stream.try_clone()?).read_line(&mut line)?;
+    anyhow::ensure!(!line.trim().is_empty(), "server closed the connection without a reply");
+    println!("{}", line.trim_end());
+    Ok(())
+}
+
+/// Offline spill-dir audit: open the disk tier against this engine
+/// geometry's fingerprint, re-verify every chain file (checksum, header,
+/// token key) and delete the broken ones — exactly what a warm restart
+/// would do lazily, done eagerly with a report.
+fn cmd_restore(argv: Vec<String>) -> Result<()> {
+    let args = engine_args(
+        "ladder-infer restore",
+        "offline spill-dir audit: validate every chain file against this engine geometry",
+    )
+    .parse(argv)?;
+    let dir = args.get("kv-spill-dir")?;
+    anyhow::ensure!(!dir.is_empty(), "restore needs --kv-spill-dir");
+    let (engine, _tok) = build_engine(&args)?;
+    anyhow::ensure!(
+        engine.kv_layout().is_paged(),
+        "restore needs a paged KV layout (set --page-size > 0)"
+    );
+    let mut store = ladder_infer::engine::SpillStore::open(
+        std::path::Path::new(&dir),
+        0, // audit never budget-evicts
+        engine.kv_fingerprint(),
+    )?;
+    let (kept, dropped) = store.validate_all()?;
+    let report = Json::obj()
+        .set("dir", dir)
+        .set("kept", kept)
+        .set("dropped", dropped)
+        .set("files", store.files())
+        .set("bytes", store.total_bytes() as usize);
+    println!("{}", report.to_pretty());
+    Ok(())
 }
 
 fn cmd_tables(argv: Vec<String>) -> Result<()> {

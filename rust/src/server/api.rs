@@ -65,6 +65,12 @@ pub enum ApiJob {
     /// `prefix_hit_tokens` / `prefix_cached_pages` /
     /// `prefix_evicted_pages`; see docs/API.md).
     Stats { respond: Sender<crate::util::json::Json> },
+    /// `{"snapshot": true}` — spill every cached prefix chain to the disk
+    /// tier without evicting it, so a restarted engine pointed at the same
+    /// `--kv-spill-dir` serves the cache warm. Replies
+    /// `{"snapshot_files":.., "snapshot_bytes":..}`, or an `error` object
+    /// when no spill dir (or no prefix cache) is configured (docs/API.md).
+    Snapshot { respond: Sender<crate::util::json::Json> },
     /// `{"upgrade": ...}` — fleet-mode rolling upgrade: the spec names
     /// one replica config overlay per slot (or one for all). A single
     /// `serve` process (and a fleet booted without an upgrade builder)
@@ -155,6 +161,25 @@ fn handle_conn(
                 // on a read forever
                 Err(_) => {
                     write_line(&w, &Json::obj().set("error", "stats timeout"));
+                }
+            });
+            continue;
+        }
+        if msg.opt("snapshot").is_some_and(|v| v.as_bool().unwrap_or(false)) {
+            let (stx, srx) = channel();
+            if tx.send(ApiJob::Snapshot { respond: stx }).is_err() {
+                write_line(&writer, &Json::obj().set("error", "engine loop gone"));
+                return Ok(());
+            }
+            // replied from its own thread, like stats: a long spill must
+            // not block this connection's reader
+            let w = writer.clone();
+            std::thread::spawn(move || match srx.recv_timeout(io_timeout) {
+                Ok(reply) => {
+                    write_line(&w, &reply);
+                }
+                Err(_) => {
+                    write_line(&w, &Json::obj().set("error", "snapshot timeout"));
                 }
             });
             continue;
@@ -375,6 +400,16 @@ fn apply_job(batcher: &mut Batcher, job: ApiJob, started: std::time::Instant) ->
         ApiJob::Stats { respond } => {
             // a dropped receiver (client gone) is fine — nothing to clean up
             let _ = respond.send(batcher.stats_report(started.elapsed().as_secs_f64()));
+            Ok(0)
+        }
+        ApiJob::Snapshot { respond } => {
+            let reply = match batcher.snapshot_cache() {
+                Ok((files, bytes)) => Json::obj()
+                    .set("snapshot_files", files)
+                    .set("snapshot_bytes", bytes as usize),
+                Err(e) => Json::obj().set("error", e.to_string()),
+            };
+            let _ = respond.send(reply);
             Ok(0)
         }
         ApiJob::Upgrade { respond, .. } => {

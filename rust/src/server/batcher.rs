@@ -52,7 +52,7 @@ use anyhow::{anyhow, Result};
 
 use super::metrics::ServerMetrics;
 use super::request::{itl_p50, FinishReason, GenerationEvent, Request, RequestResult};
-use crate::engine::{BlockAllocator, KvLayout, PrefixTree, TpEngine};
+use crate::engine::{BlockAllocator, KvLayout, PrefixTree, SpillStore, TpEngine};
 use crate::model::HostTensor;
 use crate::tokenizer::{DecodeStream, Tokenizer};
 use crate::util::rng::Rng;
@@ -70,6 +70,13 @@ pub struct BatcherConfig {
     /// Paged engines: enable shared-prefix KV reuse (the radix-tree prefix
     /// cache over full prompt pages). Ignored on slab engines.
     pub prefix_cache: bool,
+    /// Disk tier for the prefix cache (`--kv-spill-dir`): LRU-evicted
+    /// chains are serialized here and restored on later misses. Empty =
+    /// disabled. Requires `prefix_cache`.
+    pub kv_spill_dir: String,
+    /// Byte budget for the spill directory (`--kv-spill-budget-mb`); 0 =
+    /// unlimited. The store LRU-evicts files to stay under it.
+    pub kv_spill_budget_bytes: usize,
 }
 
 impl Default for BatcherConfig {
@@ -79,15 +86,28 @@ impl Default for BatcherConfig {
             kv_budget_bytes: 0,
             prefill_chunk: 0,
             prefix_cache: false,
+            kv_spill_dir: String::new(),
+            kv_spill_budget_bytes: 0,
         }
     }
 }
 
 /// Where a live slot is in its request's lifecycle.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 enum SlotPhase {
     /// Chunked prefill in progress: this many prompt tokens are in KV.
     Prefill { consumed: usize },
+    /// Disk-tier restore in progress: spilled pages planned at admission
+    /// land one per scheduler iteration before prefill starts.
+    Load {
+        /// Remaining loads: (index into the request's page table, the full
+        /// root-path token prefix keying the spill file).
+        loads: VecDeque<(usize, Vec<i32>)>,
+        /// Prompt tokens already durable in KV (RAM chain + restored
+        /// pages): the prefill start once the plan drains, and the
+        /// fall-back start if a load fails verification.
+        consumed: usize,
+    },
     /// Prefill finished; the slot advances one token per decode step.
     Decode,
 }
@@ -126,6 +146,10 @@ pub struct Batcher {
     alloc: Option<BlockAllocator>,
     /// Shared-prefix radix tree (paged engines with `prefix_cache` on).
     prefix: Option<PrefixTree>,
+    /// Disk tier for evicted prefix chains (`kv_spill_dir` set): victims
+    /// are spilled on eviction, probed on a RAM miss at admission, and
+    /// restored page-wise while the slot sits in its `Load` phase.
+    spill: Option<SpillStore>,
     /// Per-request event sinks (streaming submissions only).
     sinks: HashMap<u64, Sender<GenerationEvent>>,
     /// Tokenizer for `text_delta`s; without one, deltas are empty strings.
@@ -166,6 +190,23 @@ impl Batcher {
             (Some(a), true) => Some(PrefixTree::new(a.page_size())),
             _ => None,
         };
+        // the disk tier rides on the prefix cache (it persists evicted
+        // chains); a store that fails to open degrades to no tier rather
+        // than refusing to serve
+        let spill = match (&prefix, config.kv_spill_dir.is_empty()) {
+            (Some(_), false) => match SpillStore::open(
+                std::path::Path::new(&config.kv_spill_dir),
+                config.kv_spill_budget_bytes as u64,
+                engine.kv_fingerprint(),
+            ) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    eprintln!("kv spill tier disabled ({}): {e:#}", config.kv_spill_dir);
+                    None
+                }
+            },
+            _ => None,
+        };
         Batcher {
             engine,
             config,
@@ -174,6 +215,7 @@ impl Batcher {
             slots,
             alloc,
             prefix,
+            spill,
             sinks: HashMap::new(),
             tokenizer: None,
             draining: false,
@@ -317,7 +359,8 @@ impl Batcher {
             KvLayout::Slab => 0,
             KvLayout::Paged { page_size, .. } => page_size,
         };
-        self.metrics
+        let report = self
+            .metrics
             .report(wall_secs)
             .set("arch", self.engine.arch.name())
             .set("tp", self.engine.tp)
@@ -332,7 +375,13 @@ impl Batcher {
             .set("comm_bytes_cross", comm.bytes_cross)
             .set("comm_hidden_fraction", comm.hidden_fraction())
             .set("comm_hidden_fraction_prefill", comm.hidden_fraction_prefill())
-            .set("comm_hidden_fraction_decode", comm.hidden_fraction_decode())
+            .set("comm_hidden_fraction_decode", comm.hidden_fraction_decode());
+        match &self.spill {
+            Some(s) => report
+                .set("spill_files", s.files())
+                .set("spill_bytes", s.total_bytes() as usize),
+            None => report,
+        }
     }
 
     /// The paged page-table bookkeeping, when this batcher runs a paged
@@ -347,6 +396,40 @@ impl Batcher {
         self.prefix.as_ref()
     }
 
+    /// The disk spill tier, when configured (tests inspect its ledger).
+    pub fn spill_store(&self) -> Option<&SpillStore> {
+        self.spill.as_ref()
+    }
+
+    /// Spill every cached chain page to the disk tier without evicting it
+    /// — the warm-restart snapshot behind the `snapshot` subcommand and
+    /// the `{"snapshot":true}` API frame. Cached pages are full and
+    /// immutable, so reading them mid-serve is safe; pages whose chain is
+    /// already on disk are skipped by the store's duplicate check.
+    /// Returns (files written, bytes written).
+    pub fn snapshot_cache(&mut self) -> Result<(usize, u64)> {
+        let Some(tree) = self.prefix.as_ref() else {
+            return Err(anyhow!("snapshot: prefix cache is not enabled"));
+        };
+        if self.spill.is_none() {
+            return Err(anyhow!("snapshot: no --kv-spill-dir configured"));
+        }
+        let chains = tree.chains();
+        let mut files = 0usize;
+        let mut bytes = 0u64;
+        for (tokens, page) in chains {
+            let per_rank = self.engine.read_page(page)?;
+            let spill = self.spill.as_mut().expect("checked above");
+            let wrote = spill.store(&tokens, &per_rank)?;
+            if wrote > 0 {
+                files += 1;
+                bytes += wrote;
+                self.metrics.prefix_spilled_pages += 1;
+            }
+        }
+        Ok((files, bytes))
+    }
+
     /// Evict every zero-reference cached chain (drained server / tests:
     /// afterwards a drained batcher's whole pool is back on the free
     /// list). Returns the pages freed.
@@ -358,6 +441,33 @@ impl Batcher {
         self.metrics.prefix_evicted_pages += n;
         self.metrics.prefix_cached_pages = alloc.cached_pages();
         self.metrics.kv_pages_in_use = alloc.pages_in_use();
+        Ok(n)
+    }
+
+    /// Evict up to `want` LRU idle chain pages, spilling each victim's
+    /// bytes to the disk tier first (when one is configured). Reading the
+    /// page AFTER `tree_release` is safe: a freed page is only rewritten
+    /// once a later reservation hands it out and a forward pass runs, and
+    /// both happen after this call returns. Disk write failures are
+    /// tolerated — the tier is best-effort; eviction itself never rolls
+    /// back. Returns the number of pages evicted.
+    fn evict_and_spill(&mut self, want: usize) -> Result<usize> {
+        let (Some(alloc), Some(tree)) = (self.alloc.as_mut(), self.prefix.as_mut()) else {
+            return Ok(0);
+        };
+        let victims = tree.evict_with_keys(want, alloc)?;
+        let n = victims.len();
+        self.metrics.prefix_evicted_pages += n;
+        if let Some(spill) = self.spill.as_mut() {
+            for (page, tokens) in &victims {
+                let per_rank = self.engine.read_page(*page)?;
+                match spill.store(tokens, &per_rank) {
+                    Ok(bytes) if bytes > 0 => self.metrics.prefix_spilled_pages += 1,
+                    Ok(_) => {}  // duplicate chain or over-budget payload: skipped
+                    Err(_) => {} // disk trouble: the tier degrades, serving continues
+                }
+            }
+        }
         Ok(n)
     }
 
@@ -426,6 +536,7 @@ impl Batcher {
     pub fn step(&mut self) -> Result<Vec<GenerationEvent>> {
         let mut events = Vec::new();
         self.admit(&mut events)?;
+        self.advance_loads()?;
         self.advance_prefills(&mut events)?;
         self.decode_burst(&mut events)?;
         if let Some(alloc) = &self.alloc {
@@ -508,8 +619,10 @@ impl Batcher {
                 let mut chain: Vec<u32> = Vec::new();
                 let mut cow_src: Option<u32> = None;
                 let mut start = 0usize;
-                if let Some(alloc) = &self.alloc {
+                let mut disk_prefixes: Vec<Vec<i32>> = Vec::new();
+                if self.alloc.is_some() {
                     let reserve = self.reserve_tokens(&request);
+                    let alloc = self.alloc.as_mut().expect("checked above");
                     // a reservation larger than the whole pool can never be
                     // admitted: fail it alone, never the loop (its id is
                     // unique — checked above — so sink routing is safe)
@@ -536,7 +649,39 @@ impl Batcher {
                             start = request.prompt.len() - 1;
                         }
                     }
+                    // pin the matched chain (and the COW source) for the
+                    // rest of this admission: the shortfall eviction between
+                    // here and `admit_shared` must not be able to free — and
+                    // now spill — pages this request is about to share. LRU
+                    // stamps made that unlikely; pins make it impossible.
+                    for &p in &chain {
+                        alloc.pin(p)?;
+                    }
+                    if let Some(src) = cow_src {
+                        alloc.pin(src)?;
+                    }
+                    // on a RAM miss past the chain, probe the disk tier for
+                    // contiguous follow-on pages; capped one token short of
+                    // the prompt so at least one position always prefills
+                    // (disk hits therefore never need the COW path)
+                    if cow_src.is_none() {
+                        if let Some(spill) = &self.spill {
+                            let ps = alloc.page_size();
+                            let plen = request.prompt.len();
+                            let mut m = chain.len() + 1;
+                            while m * ps < plen && spill.probe(&request.prompt[..m * ps]) {
+                                disk_prefixes.push(request.prompt[..m * ps].to_vec());
+                                m += 1;
+                            }
+                        }
+                    }
                     if !alloc.can_admit_chain(reserve, &chain) {
+                        for &p in &chain {
+                            alloc.unpin(p)?;
+                        }
+                        if let Some(src) = cow_src {
+                            alloc.unpin(src)?;
+                        }
                         self.metrics.admission_blocked += 1;
                         self.admission_stalled = true;
                         self.queue.push_front(request);
@@ -545,15 +690,25 @@ impl Batcher {
                 }
                 let ev = GenerationEvent::Admitted { id: request.id, queued_secs: queued };
                 if !self.route(&ev) {
-                    // client vanished while queued: skip the prefill entirely
+                    // client vanished while queued: skip the prefill
+                    // entirely (dropping the admission pins first)
+                    if let Some(alloc) = self.alloc.as_mut() {
+                        for &p in &chain {
+                            alloc.unpin(p)?;
+                        }
+                        if let Some(src) = cow_src {
+                            alloc.unpin(src)?;
+                        }
+                    }
                     let ev = self.finish_unstarted(request, queued, FinishReason::Cancelled);
                     events.push(ev);
                     continue;
                 }
                 events.push(ev);
-                break Some((request, queued, bucket, chain, cow_src, start));
+                break Some((request, queued, bucket, chain, cow_src, start, disk_prefixes));
             };
-            let Some((request, queued, bucket, chain, mut cow_src, mut start)) = admitted
+            let Some((request, queued, bucket, chain, mut cow_src, mut start, disk_prefixes)) =
+                admitted
             else {
                 break;
             };
@@ -572,49 +727,65 @@ impl Batcher {
                 itl: Vec::new(),
                 rng,
             };
-            if let Some(alloc) = &mut self.alloc {
+            if self.alloc.is_some() {
                 // reservation guarantees the request can always grow to
                 // prompt + max_new tokens — no deadlock, no preemption;
                 // the uncached prompt suffix runs chunk-wise in
                 // advance_prefills, starting at the first uncached position
                 let plen = st.request.prompt.len();
+                let mut cow_pinned = cow_src.is_some();
                 // physical room for the suffix backing: the admission rule
                 // counted evictable cached pages as available, so evict LRU
-                // idle chains to make the free list whole. Chain pages were
-                // just LRU-touched by the match, so eviction (oldest-first)
-                // reaches them last — and the no-deadlock invariant says it
-                // never needs to.
-                let grow = alloc.pages_for(plen).saturating_sub(chain.len());
-                let short = grow.saturating_sub(alloc.free_pages());
+                // idle chains (spilling each victim to the disk tier) to
+                // make the free list whole. The matched chain is pinned, so
+                // eviction can never consume a page this request is about
+                // to share — a guarantee the old LRU-stamp argument only
+                // approximated.
+                let short = {
+                    let alloc = self.alloc.as_ref().expect("checked above");
+                    let grow = alloc.pages_for(plen).saturating_sub(chain.len());
+                    grow.saturating_sub(alloc.free_pages())
+                };
                 if short > 0 {
-                    if let Some(tree) = &mut self.prefix {
-                        let evicted = tree.evict(short, alloc)?;
-                        self.metrics.prefix_evicted_pages += evicted.len();
+                    let evicted = self.evict_and_spill(short)?;
+                    if evicted < short && cow_pinned {
+                        // the only pinned evictable candidate is the COW
+                        // source: release it and let eviction take it — the
+                        // fall-back below re-prefills that page cold
+                        let src = cow_src.expect("cow_pinned implies cow_src");
+                        self.alloc.as_mut().expect("checked above").unpin(src)?;
+                        cow_pinned = false;
+                        self.evict_and_spill(short - evicted)?;
                     }
                 }
-                // Chain pages cannot have been evicted just now: they are
-                // counted by the admission invariant (so the shortfall is
-                // covered by other idle pages) and carry the newest LRU
-                // stamp (so eviction, oldest-first, reaches them last).
-                // The popped COW source enjoys neither protection — when
-                // it was the last evictable leaf the eviction above
-                // legitimately consumed it, so fall back to re-prefilling
-                // that whole trailing page cold instead of copying a page
-                // that is gone (or about to be reallocated as the copy's
-                // own destination).
+                let alloc = self.alloc.as_mut().expect("checked above");
+                // The popped COW source may have been sacrificed just above
+                // when it was the last evictable leaf — fall back to
+                // re-prefilling that whole trailing page cold instead of
+                // copying a page that is gone (or about to be reallocated
+                // as the copy's own destination).
                 if cow_src.is_some_and(|src| !alloc.is_cached(src)) {
                     cow_src = None;
                     start = chain.len() * alloc.page_size();
                 }
                 alloc.admit_shared(st.request.id, plen, reserve, &chain)?;
+                // the request's own references now hold the chain: the
+                // admission-window pins retire
+                for &p in &chain {
+                    alloc.unpin(p)?;
+                }
                 if let Some(src) = cow_src {
                     // trailing-page copy-on-write: the final prompt token's
                     // KV row is re-prefilled into a private bitwise copy of
                     // the shared page
-                    let table = alloc
+                    let dst = alloc
                         .table(st.request.id)
-                        .ok_or_else(|| anyhow!("admitted request lost its page table"))?;
-                    self.engine.copy_page(src, table.pages[chain.len()])?;
+                        .ok_or_else(|| anyhow!("admitted request lost its page table"))?
+                        .pages[chain.len()];
+                    self.engine.copy_page(src, dst)?;
+                    if cow_pinned {
+                        self.alloc.as_mut().expect("checked above").unpin(src)?;
+                    }
                 }
                 if self.prefix.is_some() {
                     // counted at admission — not per blocked retry — so
@@ -625,7 +796,28 @@ impl Batcher {
                         self.metrics.prefix_hit_tokens += start;
                     }
                 }
-                st.phase = SlotPhase::Prefill { consumed: start };
+                if disk_prefixes.is_empty() {
+                    st.phase = SlotPhase::Prefill { consumed: start };
+                } else {
+                    // disk-tier hit: the backing pages for the spilled
+                    // prefix are already reserved (private, this request's
+                    // own) — mark them pending so the allocator can audit
+                    // that un-restored bytes are never treated as cached,
+                    // and restore them page-wise in `advance_loads`
+                    let alloc = self.alloc.as_mut().expect("checked above");
+                    let table = alloc
+                        .table(st.request.id)
+                        .ok_or_else(|| anyhow!("admitted request lost its page table"))?
+                        .pages
+                        .clone();
+                    let mut loads = VecDeque::new();
+                    for (i, prefix) in disk_prefixes.into_iter().enumerate() {
+                        let idx = chain.len() + i;
+                        alloc.mark_pending(table[idx])?;
+                        loads.push_back((idx, prefix));
+                    }
+                    st.phase = SlotPhase::Load { loads, consumed: start };
+                }
                 self.slots[slot] = Some(st);
                 continue;
             }
@@ -664,6 +856,89 @@ impl Batcher {
         st.prefill_done = now;
         st.last_token_at = now;
         self.push_token(slot, first, events)
+    }
+
+    /// Disk-tier restore pump: each slot in its `Load` phase lands one
+    /// spilled page per scheduler iteration, so restores interleave with
+    /// decode bursts exactly like chunked prefill. A page that fails
+    /// verification — bad checksum, foreign fingerprint, token mismatch,
+    /// or a file the spill budget evicted since the admission probe —
+    /// aborts the slot's remaining loads and falls the prefill start back
+    /// to the last durable position: corrupt bytes are never served, the
+    /// suffix is recomputed cold.
+    fn advance_loads(&mut self) -> Result<()> {
+        if self.spill.is_none() {
+            return Ok(());
+        }
+        for slot in 0..self.slots.len() {
+            let (id, page_idx, prefix) = {
+                let Some(st) = self.slots[slot].as_mut() else { continue };
+                let SlotPhase::Load { loads, consumed } = &mut st.phase else { continue };
+                match loads.pop_front() {
+                    Some((idx, prefix)) => (st.request.id, idx, prefix),
+                    None => {
+                        // defensive: an empty plan degenerates to prefill
+                        let consumed = *consumed;
+                        st.phase = SlotPhase::Prefill { consumed };
+                        continue;
+                    }
+                }
+            };
+            let alloc = self
+                .alloc
+                .as_mut()
+                .ok_or_else(|| anyhow!("disk restore without an allocator"))?;
+            let ps = alloc.page_size();
+            let pages = alloc
+                .table(id)
+                .ok_or_else(|| anyhow!("loading slot lost its page table"))?
+                .pages
+                .clone();
+            let page = pages[page_idx];
+            let spill = self
+                .spill
+                .as_mut()
+                .ok_or_else(|| anyhow!("disk restore without a spill store"))?;
+            // an I/O error here is indistinguishable from a miss: either
+            // way the bytes cannot be trusted, so both fall back cold
+            let restored = spill.load(&prefix).unwrap_or(None);
+            match restored {
+                Some(per_rank) => {
+                    let bytes: usize = per_rank.iter().map(|r| r.len() * 4).sum();
+                    self.engine.write_page(page, &per_rank)?;
+                    let alloc = self.alloc.as_mut().expect("checked above");
+                    alloc.clear_pending(page);
+                    self.metrics.prefix_disk_hits += 1;
+                    self.metrics.prefix_hit_tokens += ps;
+                    self.metrics.prefix_restore_bytes += bytes;
+                    let st = self.slots[slot].as_mut().expect("checked above");
+                    let SlotPhase::Load { loads, consumed } = &mut st.phase else {
+                        return Err(anyhow!("loading slot changed phase mid-restore"));
+                    };
+                    *consumed += ps;
+                    if loads.is_empty() {
+                        let consumed = *consumed;
+                        st.phase = SlotPhase::Prefill { consumed };
+                    }
+                }
+                None => {
+                    self.metrics.prefix_disk_rejected += 1;
+                    let st = self.slots[slot].as_mut().expect("checked above");
+                    let SlotPhase::Load { loads, consumed } = &mut st.phase else {
+                        return Err(anyhow!("loading slot changed phase mid-restore"));
+                    };
+                    let consumed = *consumed;
+                    let aborted: Vec<usize> = loads.drain(..).map(|(idx, _)| idx).collect();
+                    st.phase = SlotPhase::Prefill { consumed };
+                    let alloc = self.alloc.as_mut().expect("checked above");
+                    alloc.clear_pending(page);
+                    for idx in aborted {
+                        alloc.clear_pending(pages[idx]);
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Paged chunked prefill: every slot still consuming its prompt runs
@@ -737,34 +1012,42 @@ impl Batcher {
                     _ => 0,
                 })
                 .collect();
-            let logits = match &mut self.alloc {
-                None => self.engine.decode(&tokens)?,
-                Some(alloc) => {
-                    // grow each active request's backing for the incoming
-                    // token (evicting idle cached chains when the free list
-                    // alone cannot feed the reservation), then hand the
-                    // engine the page-table matrix
-                    let max_pages = self.engine.kv_max_pages_per_seq();
-                    let mut tables = vec![-1i32; self.slots.len() * max_pages];
-                    for (slot, st) in self.slots.iter().enumerate() {
-                        let Some(st) = st else { continue };
+            let logits = if self.alloc.is_none() {
+                self.engine.decode(&tokens)?
+            } else {
+                // grow each active request's backing for the incoming
+                // token (evicting — and spilling — idle cached chains when
+                // the free list alone cannot feed the reservation), then
+                // hand the engine the page-table matrix
+                let max_pages = self.engine.kv_max_pages_per_seq();
+                let mut tables = vec![-1i32; self.slots.len() * max_pages];
+                let work: Vec<(usize, u64, usize)> = self
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(slot, s)| {
+                        let st = s.as_ref()?;
                         if st.phase != SlotPhase::Decode {
-                            continue;
+                            return None;
                         }
-                        let new_len = self.engine.lens[slot] as usize + 1;
-                        let short = alloc.free_shortfall(st.request.id, new_len);
-                        if short > 0 {
-                            if let Some(tree) = &mut self.prefix {
-                                let evicted = tree.evict(short, alloc)?;
-                                self.metrics.prefix_evicted_pages += evicted.len();
-                            }
-                        }
-                        alloc.ensure(st.request.id, new_len)?;
-                        let row = &mut tables[slot * max_pages..(slot + 1) * max_pages];
-                        alloc.fill_table_row(st.request.id, row)?;
+                        Some((slot, st.request.id, self.engine.lens[slot] as usize + 1))
+                    })
+                    .collect();
+                for (slot, id, new_len) in work {
+                    let short = self
+                        .alloc
+                        .as_ref()
+                        .expect("checked above")
+                        .free_shortfall(id, new_len);
+                    if short > 0 {
+                        self.evict_and_spill(short)?;
                     }
-                    self.engine.decode_paged(&tokens, &active, tables, max_pages)?
+                    let alloc = self.alloc.as_mut().expect("checked above");
+                    alloc.ensure(id, new_len)?;
+                    let row = &mut tables[slot * max_pages..(slot + 1) * max_pages];
+                    alloc.fill_table_row(id, row)?;
                 }
+                self.engine.decode_paged(&tokens, &active, tables, max_pages)?
             };
             self.metrics.decode_steps += 1;
             let v = logits.shape[1];
@@ -854,8 +1137,14 @@ impl Batcher {
         // publish before the allocator drops this request's references so
         // the tree can retain the pages instead of letting them free.
         // Cancelled requests publish what they actually wrote — a chunked
-        // prefill may have covered only part of the prompt.
-        if let (Some(alloc), Some(tree)) = (self.alloc.as_mut(), self.prefix.as_mut()) {
+        // prefill may have covered only part of the prompt. A slot still in
+        // its Load phase publishes nothing: no forward has run (engine.lens
+        // is zero) and its pending pages must never reach the tree; `free`
+        // below clears their pending bits as the refcounts drop.
+        let mid_load = matches!(st.phase, SlotPhase::Load { .. });
+        if let (Some(alloc), Some(tree), false) =
+            (self.alloc.as_mut(), self.prefix.as_mut(), mid_load)
+        {
             let written = self.engine.lens[slot].max(0) as usize;
             let covered = written.min(st.request.prompt.len());
             let full = covered / tree.page_size();

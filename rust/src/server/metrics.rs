@@ -38,6 +38,16 @@ pub struct ServerMetrics {
     /// Cached pages evicted (LRU, zero-reference chains only) to feed page
     /// reservations.
     pub prefix_evicted_pages: usize,
+    /// Pages restored from the disk spill tier into a request's backing.
+    pub prefix_disk_hits: usize,
+    /// Evicted (or snapshotted) pages serialized to the disk tier.
+    pub prefix_spilled_pages: usize,
+    /// Bytes read back from the disk tier by successful restores.
+    pub prefix_restore_bytes: usize,
+    /// Spill files rejected at restore time (bad checksum, foreign
+    /// geometry fingerprint, token mismatch, or vanished file) — each one
+    /// fell back to cold prefill instead of serving untrusted bytes.
+    pub prefix_disk_rejected: usize,
     pub queued_secs: Summary,
     pub ttft_secs: Summary,
     /// Inter-token latency samples (one per decode-phase token) — the
@@ -81,6 +91,10 @@ impl ServerMetrics {
             .set("prefix_hit_tokens", self.prefix_hit_tokens)
             .set("prefix_cached_pages", self.prefix_cached_pages)
             .set("prefix_evicted_pages", self.prefix_evicted_pages)
+            .set("prefix_disk_hits", self.prefix_disk_hits)
+            .set("prefix_spilled_pages", self.prefix_spilled_pages)
+            .set("prefix_restore_bytes", self.prefix_restore_bytes)
+            .set("prefix_disk_rejected", self.prefix_disk_rejected)
             .set("throughput_tok_per_s", self.tokens_out as f64 / wall_secs.max(1e-9))
             .set("ttft_p50_ms", self.ttft_secs.p50() * 1e3)
             .set("ttft_p99_ms", self.ttft_secs.p99() * 1e3)
@@ -163,6 +177,24 @@ mod tests {
             ("prefix_hit_tokens", 300),
             ("prefix_cached_pages", 12),
             ("prefix_evicted_pages", 3),
+        ] {
+            assert_eq!(rep.get(key).unwrap().as_usize().unwrap(), want, "{key}");
+        }
+    }
+
+    #[test]
+    fn disk_tier_counters_reach_the_report() {
+        let mut m = ServerMetrics::default();
+        m.prefix_disk_hits = 4;
+        m.prefix_spilled_pages = 9;
+        m.prefix_restore_bytes = 4096;
+        m.prefix_disk_rejected = 1;
+        let rep = m.report(1.0);
+        for (key, want) in [
+            ("prefix_disk_hits", 4usize),
+            ("prefix_spilled_pages", 9),
+            ("prefix_restore_bytes", 4096),
+            ("prefix_disk_rejected", 1),
         ] {
             assert_eq!(rep.get(key).unwrap().as_usize().unwrap(), want, "{key}");
         }

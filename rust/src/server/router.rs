@@ -317,6 +317,15 @@ pub fn route_forever(
             Ok(ApiJob::Stats { respond }) => {
                 let _ = respond.send(router.stats()?);
             }
+            Ok(ApiJob::Snapshot { respond }) => {
+                // replica batchers live on their own threads; a fleet-wide
+                // cache snapshot is not wired up — single-process `serve`
+                // owns its batcher and handles this frame
+                let _ = respond.send(Json::obj().set(
+                    "error",
+                    "snapshot requires a single-replica server (the serve subcommand)",
+                ));
+            }
             Ok(ApiJob::Upgrade { spec, respond }) => {
                 let reply = match upgrade {
                     None => Json::obj()

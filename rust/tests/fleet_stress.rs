@@ -456,6 +456,88 @@ fn affinity_routing_prefills_fewer_tokens_than_round_robin() {
     );
 }
 
+/// Regression (queue-time accounting): a request that sits waiting while
+/// the only replica is down — being redispatched by the retry loop the
+/// whole time — must report the *full* wall-clock wait in `queued_secs`,
+/// on both its `Admitted` frame and its terminal result. The router
+/// re-dispatches a clone of the original request, whose arrival stamp was
+/// set exactly once at submission; a retry that rebuilt the request (or
+/// otherwise restarted its clock) would make post-outage queue
+/// percentiles look healthy while clients were in fact waiting out the
+/// whole outage.
+#[test]
+fn router_retries_preserve_queue_time_across_replica_outage() {
+    let cfg = RouterConfig {
+        replicas: 1,
+        policy: RoutingPolicy::RoundRobin,
+        affinity_tokens: PAGE,
+        spill_threshold: 1_000,
+        max_retries: 10_000,
+        retry_backoff: Duration::from_millis(5),
+        dispatch_timeout: Duration::from_secs(60),
+        auto_restart: false,
+    };
+    let router = Router::new(replica_factory(), cfg).expect("router");
+    // take the only replica down and let the router notice
+    router.kill(0);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while replica_loads(&router.stats().expect("stats"))[0].0 {
+        assert!(Instant::now() < deadline, "killed replica never went down");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // submit into the outage: the request can only wait and be retried
+    let (tx, rx) = channel();
+    let t0 = Instant::now();
+    router.submit(Request::new(4242, vec![3, 1, 4, 1, 5, 9, 2, 6], 4), tx);
+    let outage = Duration::from_millis(250);
+    std::thread::sleep(outage);
+    router.restart(0);
+    // raw event loop rather than `audit_stream`: queued_secs is the point
+    let mut admitted_queued: Option<f64> = None;
+    let mut result_queued: Option<f64> = None;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while result_queued.is_none() {
+        let remain = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(remain).expect("request lost during the outage") {
+            GenerationEvent::Admitted { id, queued_secs } => {
+                assert_eq!(id, 4242);
+                assert!(admitted_queued.is_none(), "duplicate Admitted after retries");
+                admitted_queued = Some(queued_secs);
+            }
+            GenerationEvent::Token { .. } => {}
+            GenerationEvent::Finished { result } => {
+                assert_eq!(result.tokens.len(), 4);
+                result_queued = Some(result.queued_secs);
+            }
+            GenerationEvent::Error { reason, .. } => {
+                panic!("request failed instead of waiting out the outage: {reason}")
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let admitted_queued = admitted_queued.expect("finished without an Admitted frame");
+    let result_queued = result_queued.unwrap();
+    let floor = outage.as_secs_f64();
+    assert!(
+        admitted_queued >= floor,
+        "Admitted queued_secs {admitted_queued:.3}s forgot the outage wait \
+         (>= {floor:.3}s expected): a retry reset the queue clock"
+    );
+    assert!(
+        result_queued >= floor,
+        "result queued_secs {result_queued:.3}s forgot the outage wait \
+         (>= {floor:.3}s expected): a retry reset the queue clock"
+    );
+    assert!(
+        admitted_queued <= elapsed && result_queued <= elapsed,
+        "queued_secs ({admitted_queued:.3}s / {result_queued:.3}s) exceeds the \
+         request's whole lifetime ({elapsed:.3}s)"
+    );
+    let stats = router.stats().expect("stats");
+    assert!(stat(&stats, "retries") > 0, "the outage never exercised the retry path");
+    assert_eq!(stat(&stats, "failed"), 0);
+}
+
 // --- heterogeneous-fleet operations scenarios (CI: their own release step) --
 
 /// A slot recipe for the heterogeneous scenarios: the factory plus the

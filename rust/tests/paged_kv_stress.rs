@@ -36,6 +36,7 @@ use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver};
 
 use ladder_infer::comm::{Fabric, Interconnect};
+use ladder_infer::engine::spill::fnv1a64_tokens;
 use ladder_infer::engine::{KvLayout, RuntimeKind, TpEngine};
 use ladder_infer::model::{Arch, WeightStore};
 use ladder_infer::runtime::Exec;
@@ -117,6 +118,13 @@ struct RunStats {
     prefix_hit_tokens: usize,
     /// Cached pages evicted over the run.
     prefix_evicted: usize,
+    /// Pages restored from the disk spill tier.
+    prefix_disk_hits: usize,
+    /// Spill files rejected at restore time (checksum/geometry/token
+    /// mismatch) — each fell back to cold prefill.
+    prefix_disk_rejected: usize,
+    /// Bytes read back from the disk tier by successful restores.
+    prefix_restore_bytes: usize,
 }
 
 /// Drive `jobs` through a batcher step by step, auditing the allocator
@@ -237,6 +245,9 @@ fn drive(mut batcher: Batcher, jobs: &[Job], budget_bytes: usize) -> RunStats {
         prefill_tokens: batcher.metrics.prefill_tokens,
         prefix_hit_tokens: batcher.metrics.prefix_hit_tokens,
         prefix_evicted: batcher.metrics.prefix_evicted_pages,
+        prefix_disk_hits: batcher.metrics.prefix_disk_hits,
+        prefix_disk_rejected: batcher.metrics.prefix_disk_rejected,
+        prefix_restore_bytes: batcher.metrics.prefix_restore_bytes,
     }
 }
 
@@ -490,6 +501,7 @@ fn drive_on_off(jobs: &[Job], page_size: usize, budget_pages: usize) -> (RunStat
             kv_budget_bytes: budget_bytes,
             prefill_chunk: 16,
             prefix_cache,
+            ..BatcherConfig::default()
         };
         drive(Batcher::new(engine, config), jobs, budget_bytes)
     };
@@ -606,6 +618,7 @@ fn multi_turn_resubmission_reuses_grown_histories() {
             kv_budget_bytes: 0,
             prefill_chunk: 16,
             prefix_cache,
+            ..BatcherConfig::default()
         };
         let mut batcher = Batcher::new(engine, config);
         let mut rng = Rng::new(0x7a1e);
@@ -781,4 +794,342 @@ fn full_prompt_hit_survives_cow_source_eviction_on_a_full_pool() {
     // the first full page survives as a hit; the popped trailing page was
     // evicted to back the suffix, so exactly one page is re-prefilled
     assert_eq!(hit_tokens, 8, "fallback should keep the untouched prefix cached");
+}
+
+/// Regression for the match->retain window: on a pool where the cached
+/// working set alone fills every page, *every* admission runs a shortfall
+/// eviction while it is still holding an unretained `match_prefix` result.
+/// The admission pins must keep each matched chain alive through its own
+/// eviction (and release the pins on every exit path — a leaked pin would
+/// wedge eviction and trip the per-step `check()` or the end-of-run
+/// flush). Four 4-page templates on a 16-page budget: once all four chains
+/// are published the free list is empty, so two same-step admissions per
+/// scheduler step cross the window under maximum eviction pressure.
+#[test]
+fn tight_pool_same_step_admissions_keep_matched_chains_served() {
+    let templates: Vec<Vec<i32>> = (0..4usize)
+        .map(|k| (0..32usize).map(|t| ((k * 19 + t * 5 + 3) % 256) as i32).collect())
+        .collect();
+    let jobs: Vec<Job> = (0..40u64)
+        .map(|i| {
+            let mut prompt = templates[(i % 4) as usize].clone();
+            prompt.extend([(i % 250) as i32 + 1, 7, 9]);
+            Job {
+                id: i,
+                prompt,
+                max_new: 3,
+                cancel_at: None,
+                drop_sink_at: None,
+                arrive_at: (i / 2) as usize,
+            }
+        })
+        .collect();
+    let (on, off) = drive_on_off(&jobs, 8, 16);
+    assert_outcomes(&jobs, &on);
+    assert_outcomes(&jobs, &off);
+    assert_bitwise_replay(&jobs, &on, &off);
+    assert!(on.prefix_hit_tokens > 0, "matched chains must keep serving hits");
+    assert!(
+        on.prefix_evicted > 0,
+        "the four chains must overflow the 16-page budget, or the window was never stressed"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// disk-tier workloads (the spill/restore proof obligations; `kv_tier` in
+// the name routes these to their own CI step)
+// ---------------------------------------------------------------------------
+
+/// A fresh scratch directory for one test's spill tier.
+fn spill_scratch(tag: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("kv_tier_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create spill scratch dir");
+    dir
+}
+
+/// One location rule for the disk-tier reports: `$KV_TIER_REPORT` (CI) or
+/// the cargo tmpdir; `suffix` maps concurrent tests onto sibling files
+/// (CI uploads the `KV_TIER_STRESS*.json` glob).
+fn write_kv_tier_report(suffix: Option<&str>, report: Json) {
+    let path = std::env::var("KV_TIER_REPORT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("KV_TIER_STRESS.json")
+    });
+    let path = match suffix {
+        Some(s) => path.with_extension(format!("{s}.json")),
+        None => path,
+    };
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(&path, report.to_string()).expect("write kv-tier report");
+}
+
+/// Four 64-token templates (8 full pages at page size 8) with short random
+/// user tails — the restartable analogue of `template_workload`, with the
+/// template tokens reproducible from outside so a test can corrupt a
+/// specific chain's spill file.
+fn tier_templates() -> Vec<Vec<i32>> {
+    (0..4usize)
+        .map(|k| (0..64usize).map(|t| ((k * 37 + t * 3 + 11) % 256) as i32).collect())
+        .collect()
+}
+
+fn tier_workload(seed: u64, base_id: u64, n: usize) -> Vec<Job> {
+    let templates = tier_templates();
+    let mut rng = Rng::new(seed);
+    let mut arrive = 0usize;
+    (0..n)
+        .map(|i| {
+            arrive += rng.below(2);
+            let mut prompt = templates[i % templates.len()].clone();
+            let tail = rng.range(1, 7);
+            prompt.extend((0..tail).map(|_| rng.below(256) as i32));
+            Job {
+                id: base_id + i as u64,
+                prompt,
+                max_new: rng.range(1, 6),
+                cancel_at: None,
+                drop_sink_at: None,
+                arrive_at: arrive,
+            }
+        })
+        .collect()
+}
+
+/// Drive `jobs` until `finish_target` of them have finished, auditing the
+/// allocator after every step, then stop — in-flight slots, queued
+/// requests and the RAM cache are simply abandoned when the caller drops
+/// the batcher, simulating a crash mid-batch.
+fn run_until(batcher: &mut Batcher, jobs: &[Job], finish_target: usize) {
+    let mut submitted = 0usize;
+    let mut finished = 0usize;
+    let mut step = 0usize;
+    while finished < finish_target {
+        assert!(step < 100_000, "failed to reach {finish_target} finishes after {step} steps");
+        while submitted < jobs.len() && jobs[submitted].arrive_at <= step {
+            let job = &jobs[submitted];
+            batcher.submit(Request::new(job.id, job.prompt.clone(), job.max_new));
+            submitted += 1;
+        }
+        for ev in batcher.step().expect("batcher step") {
+            if matches!(ev, GenerationEvent::Finished { .. }) {
+                finished += 1;
+            }
+        }
+        batcher
+            .allocator()
+            .expect("paged batcher")
+            .check()
+            .unwrap_or_else(|e| panic!("step {step}: {e}"));
+        step += 1;
+    }
+}
+
+/// The snapshot/restart micro-oracle: a donor warms the cache, `snapshot`
+/// persists it, the server restarts with an empty pool, and a follower's
+/// prompt is served page by page from disk — bitwise identical to a fully
+/// cold run, with only the fresh tail prefilled.
+#[test]
+fn kv_tier_snapshot_restart_restores_pages_bitwise() {
+    let page_size = 8usize;
+    let dir = spill_scratch("snapshot");
+    let donor: Vec<i32> = (0..24).map(|i| ((i * 7 + 3) % 256) as i32).collect();
+    let mut follower = donor.clone();
+    follower.extend([9, 8]);
+    let spill_config = || BatcherConfig {
+        prefix_cache: true,
+        kv_spill_dir: dir.to_string_lossy().into_owned(),
+        ..BatcherConfig::default()
+    };
+    // turn 1: the donor publishes three full pages, snapshot spills them
+    let mut b =
+        Batcher::new(build_engine(KvLayout::Paged { page_size, pages: 32 }), spill_config());
+    b.submit(Request::new(1, donor.clone(), 2));
+    while b.pending() > 0 {
+        b.step().unwrap();
+    }
+    let (snap_files, snap_bytes) = b.snapshot_cache().unwrap();
+    assert_eq!(snap_files, 3, "three full donor pages must spill");
+    assert!(snap_bytes > 0);
+    drop(b);
+    // turn 2: a fresh engine (empty pool, empty tree) over the same dir
+    let mut b =
+        Batcher::new(build_engine(KvLayout::Paged { page_size, pages: 32 }), spill_config());
+    b.submit(Request::new(2, follower.clone(), 4));
+    let mut warm = Vec::new();
+    while b.pending() > 0 {
+        for ev in b.step().unwrap() {
+            if let GenerationEvent::Finished { result } = ev {
+                warm = result.tokens;
+            }
+        }
+        b.allocator().unwrap().check().unwrap();
+    }
+    assert_eq!(b.metrics.prefix_disk_hits, 3, "all three donor pages must restore from disk");
+    assert_eq!(b.metrics.prefix_hit_tokens, 24);
+    assert_eq!(b.metrics.prefill_tokens, 2, "only the fresh tail should prefill");
+    assert!(b.metrics.prefix_restore_bytes > 0);
+    assert_eq!(b.metrics.prefix_disk_rejected, 0);
+    drop(b);
+    // the cold oracle: no cache, no disk
+    let mut b = Batcher::new(
+        build_engine(KvLayout::Paged { page_size, pages: 32 }),
+        BatcherConfig::default(),
+    );
+    b.submit(Request::new(2, follower, 4));
+    let mut cold = Vec::new();
+    while b.pending() > 0 {
+        for ev in b.step().unwrap() {
+            if let GenerationEvent::Finished { result } = ev {
+                cold = result.tokens;
+            }
+        }
+    }
+    assert_eq!(warm, cold, "disk-restored pages must decode bitwise-identically to cold");
+    write_kv_tier_report(
+        Some("snapshot"),
+        Json::obj()
+            .set("workload", "snapshot_restart_micro")
+            .set("snapshot_files", snap_files)
+            .set("snapshot_bytes", snap_bytes as usize)
+            .set("invariants", "bitwise-vs-cold, tail-only-prefill, no-rejections"),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The restart-mid-workload acceptance test. Turn 1 runs on a spill-backed
+/// batcher and is killed mid-batch (35 of 50 requests finished, the rest
+/// abandoned with the process); `snapshot_cache` persists the live cache
+/// first, as a shutting-down server would. One spill file is then
+/// corrupted on disk. Turn 2 replays a same-template workload three ways —
+/// warm restart over the spill dir, cold restart with a fresh cache, and
+/// no cache at all — asserting: all three streams bitwise identical, the
+/// warm restart prefills >= 2x less than cold *and* strictly less than
+/// the cold restart, the corrupted chain is rejected (its file deleted)
+/// and falls back to cold prefill, and the per-step allocator audits stay
+/// green throughout (pending-page accounting included).
+#[test]
+fn kv_tier_restart_mid_workload_restores_warm_and_drops_corruption() {
+    let page_size = 8usize;
+    let pages = 48usize;
+    let dir = spill_scratch("restart");
+    let turn1 = tier_workload(0x0d15c0, 0, 50);
+    let turn2 = tier_workload(0x0d15c1, 1000, 50);
+    let spill_config = || BatcherConfig {
+        decode_burst: 1,
+        prefill_chunk: 16,
+        prefix_cache: true,
+        kv_spill_dir: dir.to_string_lossy().into_owned(),
+        ..BatcherConfig::default()
+    };
+
+    // turn 1, killed mid-batch: only the disk tier survives the drop
+    let mut b = Batcher::new(build_engine(KvLayout::Paged { page_size, pages }), spill_config());
+    run_until(&mut b, &turn1, 35);
+    let (snap_files, snap_bytes) = b.snapshot_cache().expect("snapshot");
+    assert!(snap_files > 0 && snap_bytes > 0, "snapshot must persist the live cache");
+    let spilled_turn1 = b.metrics.prefix_spilled_pages;
+    assert!(spilled_turn1 >= snap_files, "snapshot pages count as spills");
+    drop(b); // the crash: no drain, no flush
+
+    // poison template 0's first page: the restart must reject the bad
+    // checksum and re-prefill that chain cold, never serving these bytes
+    let key = fnv1a64_tokens(&tier_templates()[0][..page_size]);
+    let corrupt_path = dir.join(format!("{key:016x}.kvp"));
+    assert!(corrupt_path.exists(), "template 0's first page must be on disk");
+    let mut raw = std::fs::read(&corrupt_path).unwrap();
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0x55;
+    std::fs::write(&corrupt_path, &raw).unwrap();
+
+    // turn 2, replayed three ways with the full per-step audits
+    let warm = drive(
+        Batcher::new(build_engine(KvLayout::Paged { page_size, pages }), spill_config()),
+        &turn2,
+        0,
+    );
+    let coldstart = drive(
+        Batcher::new(
+            build_engine(KvLayout::Paged { page_size, pages }),
+            BatcherConfig {
+                decode_burst: 1,
+                prefill_chunk: 16,
+                prefix_cache: true,
+                ..BatcherConfig::default()
+            },
+        ),
+        &turn2,
+        0,
+    );
+    let nocache = drive(
+        Batcher::new(
+            build_engine(KvLayout::Paged { page_size, pages }),
+            BatcherConfig { decode_burst: 1, prefill_chunk: 16, ..BatcherConfig::default() },
+        ),
+        &turn2,
+        0,
+    );
+    assert_outcomes(&turn2, &warm);
+    assert_outcomes(&turn2, &coldstart);
+    assert_outcomes(&turn2, &nocache);
+    assert_bitwise_replay(&turn2, &warm, &nocache);
+    assert_bitwise_replay(&turn2, &coldstart, &nocache);
+
+    // the acceptance number: a warm restart prefills under half of cold...
+    assert!(
+        warm.prefill_tokens * 2 <= nocache.prefill_tokens,
+        "warm restart saved too little prefill: {} tokens vs {} cold",
+        warm.prefill_tokens,
+        nocache.prefill_tokens
+    );
+    // ...and strictly less than a cold *restart*: the disk tier is what
+    // covers each template's first post-restart request
+    assert!(
+        warm.prefill_tokens < coldstart.prefill_tokens,
+        "disk restores saved nothing over a cold restart: {} vs {}",
+        warm.prefill_tokens,
+        coldstart.prefill_tokens
+    );
+    assert!(
+        warm.prefix_disk_hits >= 8,
+        "at least one full template should restore from disk, got {} pages",
+        warm.prefix_disk_hits
+    );
+    assert!(warm.prefix_restore_bytes > 0);
+    assert!(
+        warm.prefix_disk_rejected >= 1,
+        "the corrupted page must be rejected, not served"
+    );
+    assert!(!corrupt_path.exists(), "a rejected spill file must be deleted from disk");
+    assert_eq!(coldstart.prefix_disk_hits, 0);
+
+    write_kv_tier_report(
+        None,
+        Json::obj()
+            .set("harness", "kv_tier_stress")
+            .set("workload", "4_templates_restart_mid_batch")
+            .set("page_size", page_size)
+            .set("turn1_requests", turn1.len())
+            .set("turn2_requests", turn2.len())
+            .set("snapshot_files", snap_files)
+            .set("snapshot_bytes", snap_bytes as usize)
+            .set("spilled_pages_turn1", spilled_turn1)
+            .set("prefill_tokens_warm", warm.prefill_tokens)
+            .set("prefill_tokens_cold_restart", coldstart.prefill_tokens)
+            .set("prefill_tokens_no_cache", nocache.prefill_tokens)
+            .set(
+                "warm_vs_cold_reduction",
+                nocache.prefill_tokens as f64 / warm.prefill_tokens.max(1) as f64,
+            )
+            .set("disk_hit_pages", warm.prefix_disk_hits)
+            .set("disk_rejected", warm.prefix_disk_rejected)
+            .set("restore_bytes", warm.prefix_restore_bytes)
+            .set(
+                "invariants",
+                "per-step-audits, bitwise-replay-3way, corrupt-file-dropped-never-served",
+            ),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -363,6 +363,108 @@ fn prefix_cache_hits_bitwise_equal_cold_prefill_with_split_overlap() {
     }
 }
 
+/// The disk-tier restore contract (`engine/spill.rs`): pages serialized
+/// through the on-disk spill format and written back into a **fresh**
+/// engine must be bitwise-indistinguishable from the cold-prefilled
+/// original — the suffix prefill over the restored pages and every decode
+/// step after it reproduce the cold engine's logits exactly. Anything
+/// less (a float rounded through serialization, a plane ordered
+/// differently, a rank swapped) shows up here as a bit flip.
+fn assert_spill_roundtrip_bitwise(arch: Arch, runtime: RuntimeKind) {
+    use ladder_infer::engine::SpillStore;
+    let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join(format!(
+        "spill_determinism_{}_{}_{}",
+        arch.name(),
+        runtime.name(),
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let build = || {
+        let exec = Rc::new(Exec::native_named("tiny").expect("native tiny config"));
+        let weights = tiny_weights(&exec);
+        TpEngine::with_codec(
+            exec,
+            &weights,
+            2,
+            arch,
+            2,
+            Interconnect::new(Fabric::Local),
+            runtime,
+            KvLayout::Paged { page_size: 8, pages: 64 },
+            Codec::Fp32,
+        )
+        .unwrap()
+    };
+    let prompt: Vec<i32> = (0..21).map(|i| i % 13 + 1).collect();
+    let table: Vec<u32> = vec![0, 1, 2];
+    // cold engine: prefill the two full pages, then the suffix
+    let mut cold = build();
+    cold.prefill_chunk_slot(0, &prompt[..16], 0, &table).unwrap();
+    let cold_suffix = cold.prefill_chunk_slot(0, &prompt[16..], 16, &table).unwrap();
+    // spill both full pages through the on-disk format
+    let mut store = SpillStore::open(&dir, 0, cold.kv_fingerprint()).unwrap();
+    for m in 1..=2usize {
+        let per_rank = cold.read_page((m - 1) as u32).unwrap();
+        let wrote = store.store(&prompt[..m * 8], &per_rank).unwrap();
+        assert!(wrote > 0, "{}/{}: page {m} did not spill", arch.name(), runtime.name());
+    }
+    drop(store);
+    // fresh engine: restore the pages from disk, prefill only the suffix
+    let mut warm = build();
+    let mut store = SpillStore::open(&dir, 0, warm.kv_fingerprint()).unwrap();
+    for m in 1..=2usize {
+        let per_rank = store.load(&prompt[..m * 8]).unwrap().unwrap_or_else(|| {
+            panic!("{}/{}: page {m} missing from the spill dir", arch.name(), runtime.name())
+        });
+        warm.write_page((m - 1) as u32, &per_rank).unwrap();
+    }
+    let warm_suffix = warm.prefill_chunk_slot(0, &prompt[16..], 16, &table).unwrap();
+    let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+    assert_eq!(
+        bits(&cold_suffix),
+        bits(&warm_suffix),
+        "{}/{}: suffix prefill over restored pages diverges bitwise",
+        arch.name(),
+        runtime.name()
+    );
+    // decode over the restored pages must track the cold engine bitwise
+    let max_pages = cold.kv_max_pages_per_seq();
+    let mut tables = vec![-1i32; 2 * max_pages];
+    for (i, &p) in table.iter().enumerate() {
+        tables[i] = p as i32;
+    }
+    for t in 0..4i32 {
+        let a = cold
+            .decode_paged(&[t % 7 + 1, 0], &[true, false], tables.clone(), max_pages)
+            .unwrap();
+        let b = warm
+            .decode_paged(&[t % 7 + 1, 0], &[true, false], tables.clone(), max_pages)
+            .unwrap();
+        assert_eq!(
+            bits(&a.data),
+            bits(&b.data),
+            "{}/{}: decode step {t} diverges bitwise after the restore",
+            arch.name(),
+            runtime.name()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spill_tier_restores_bitwise_identical_pages_sequential() {
+    for arch in ALL_ARCHES {
+        assert_spill_roundtrip_bitwise(arch, RuntimeKind::Sequential);
+    }
+}
+
+#[test]
+fn spill_tier_restores_bitwise_identical_pages_threaded() {
+    for arch in ALL_ARCHES {
+        assert_spill_roundtrip_bitwise(arch, RuntimeKind::Threaded);
+    }
+}
+
 /// The codec half of the determinism contract (`comm/codec.rs`): a
 /// quantizing wire codec applies the same elementwise transform to each
 /// partial before the same rank-order reduction on both runtimes, so the
